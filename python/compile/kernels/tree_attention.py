@@ -1,0 +1,176 @@
+"""L1 Pallas kernel: flash-style tree attention over a KV cache.
+
+This is the verification/decode hot-spot of CAS-Spec: every engine step is a
+single call of this kernel per layer, with T in-flight "tree" tokens (T=1 for
+autoregressive decode, T=8/16 for draft/target tree verification, T=64 for
+chunked prefill) attending to the committed KV cache plus their tree
+ancestors.
+
+Hardware adaptation (paper targets H100; see DESIGN.md §Hardware-Adaptation):
+the GPU formulation tiles Q×KV across threadblocks with the tree mask applied
+inside a FlashAttention inner loop.  Here the same insight is expressed
+TPU-style:
+
+  * the KV cache is streamed HBM->VMEM in `(BLOCK_S, dh)` blocks via the
+    Pallas grid + BlockSpec (the role threadblock scheduling plays on GPU);
+  * an online-softmax accumulator lives in revisited output blocks (VMEM
+    residency across sequential grid steps — the scratchpad, not shared mem);
+  * the final grid step handles the T×T tree block with the ancestor mask.
+
+The kernel must be lowered with interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); correctness vs kernels/ref.py is the build-time gate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Default KV-cache streaming block. 64×dh(32) f32 = 8 KiB per block per
+# head-slice; with q/o/acc blocks the working set stays well under one
+# TPU core's ~16 MiB VMEM for every shipped model scale (see DESIGN.md §Perf).
+DEFAULT_BLOCK_S = 64
+
+
+def _kernel(pos_ref, q_ref, kn_ref, vn_ref, kc_ref, vc_ref, mask_ref,
+            o_ref, m_ref, l_ref, *, ns, block_s, scale):
+    """Grid = (H, ns + 1); head-major, cache blocks inner, tree block last.
+
+    Block views (leading head axis squeezed by BlockSpec):
+      q_ref  (T, dh)        kn_ref/vn_ref (T, dh)
+      kc_ref/vc_ref (block_s, dh)          mask_ref (T, T)
+      o_ref  (T, dh) unnormalized accumulator, normalized at the last step
+      m_ref  (T,) running max   l_ref (T,) running denominator
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale  # (T, dh); f32 accumulation
+
+    is_tree = j == ns
+
+    def scores_and_values():
+        # Select the KV block: a cache block for j < ns, the in-flight tree
+        # tokens for j == ns. Both branches are evaluated (cheap at these
+        # block sizes) and selected; this keeps the kernel a single fused
+        # loop body, which is what the sequential-grid accumulator needs.
+        k_cache = kc_ref[...].astype(jnp.float32)  # garbage on the last step
+        v_cache = vc_ref[...].astype(jnp.float32)
+        s_cache = q @ k_cache.T  # (T, block_s)
+        idx = j * block_s + jax.lax.broadcasted_iota(jnp.int32, s_cache.shape, 1)
+        valid = idx < pos_ref[0]
+        s_cache = jnp.where(valid, s_cache, NEG_INF)
+
+        k_tree = kn_ref[...].astype(jnp.float32)  # (T, dh)
+        v_tree = vn_ref[...].astype(jnp.float32)
+        s_tree = q @ k_tree.T  # (T, T)
+        s_tree = jnp.where(mask_ref[...] > 0.5, s_tree, NEG_INF)
+
+        T = q.shape[0]
+        if s_tree.shape[1] < s_cache.shape[1]:
+            padn = s_cache.shape[1] - T
+            s_tree = jnp.pad(s_tree, ((0, 0), (0, padn)), constant_values=NEG_INF)
+            v_tree = jnp.pad(v_tree, ((0, padn), (0, 0)))
+        elif s_tree.shape[1] > s_cache.shape[1]:
+            padn = T - s_cache.shape[1]
+            s_cache = jnp.pad(s_cache, ((0, 0), (0, padn)), constant_values=NEG_INF)
+            v_cache = jnp.pad(v_cache, ((0, padn), (0, 0)))
+        s = jnp.where(is_tree, s_tree, s_cache)
+        v = jnp.where(is_tree, v_tree, v_cache)
+        return s, v
+
+    s, v = scores_and_values()  # (T, W), (W, dh)
+
+    # online softmax update
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (all NEG_INF): keep m at NEG_INF, contribute 0
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.exp(m_prev - m_new)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    o_new = o_ref[...] * alpha[:, None] + p @ v
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == ns)
+    def _finalize():
+        denom = jnp.where(l_new == 0.0, 1.0, l_new)
+        o_ref[...] = (o_new / denom[:, None]).astype(o_ref.dtype)
+
+    @pl.when(j < ns)
+    def _accumulate():
+        o_ref[...] = o_new.astype(o_ref.dtype)
+
+
+def tree_attention(q, k_new, v_new, k_cache, v_cache, tree_mask, pos,
+                   block_s: int = DEFAULT_BLOCK_S, interpret: bool = True):
+    """Tree attention over (cache ++ tree tokens). See kernels/ref.py oracle.
+
+    Args:
+      q, k_new, v_new: (T, H, dh) f32.
+      k_cache, v_cache: (H, S, dh) f32, S % block_s == 0.
+      tree_mask: (T, T) f32 0/1 ancestor mask (diagonal 1).
+      pos: scalar int32, number of valid cache slots.
+    Returns:
+      (T, H, dh) f32.
+    """
+    T, H, dh = q.shape
+    S = k_cache.shape[1]
+    assert S % block_s == 0, f"cache length {S} not a multiple of {block_s}"
+    ns = S // block_s
+    scale = 1.0 / (dh ** 0.5)
+
+    pos_arr = jnp.reshape(pos.astype(jnp.int32), (1,))
+
+    grid = (H, ns + 1)
+    kernel = functools.partial(_kernel, ns=ns, block_s=block_s, scale=scale)
+
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, j: (0,)),                    # pos
+            pl.BlockSpec((T, None, dh), lambda h, j: (0, h, 0)),      # q
+            pl.BlockSpec((T, None, dh), lambda h, j: (0, h, 0)),      # k_new
+            pl.BlockSpec((T, None, dh), lambda h, j: (0, h, 0)),      # v_new
+            # clamp j on the final (tree) step: block unused there
+            pl.BlockSpec((None, block_s, dh),
+                         lambda h, j, ns=ns: (h, jnp.minimum(j, ns - 1), 0)),  # k_cache
+            pl.BlockSpec((None, block_s, dh),
+                         lambda h, j, ns=ns: (h, jnp.minimum(j, ns - 1), 0)),  # v_cache
+            pl.BlockSpec((T, T), lambda h, j: (0, 0)),                # tree_mask
+        ],
+        out_specs=[
+            pl.BlockSpec((T, None, dh), lambda h, j: (0, h, 0)),      # o
+            pl.BlockSpec((T, None), lambda h, j: (0, h)),             # m
+            pl.BlockSpec((T, None), lambda h, j: (0, h)),             # l
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, H, dh), q.dtype),
+            jax.ShapeDtypeStruct((T, H), jnp.float32),
+            jax.ShapeDtypeStruct((T, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k_new, v_new, k_cache, v_cache, tree_mask)
+    return out
+
+
+def vmem_estimate_bytes(T: int, dh: int, block_s: int = DEFAULT_BLOCK_S) -> int:
+    """Estimated per-step VMEM working set of the kernel (f32), used by the
+    §Perf roofline notes: q/kn/vn/o blocks (T×dh each), one cache KV block
+    pair (block_s×dh each), mask (T×T), and the m/l accumulators."""
+    f = 4
+    return f * (4 * T * dh + 2 * block_s * dh + T * T + 2 * T)

@@ -1,0 +1,340 @@
+"""L2: the JAX transformer and its DSIA draft variants.
+
+A pre-LN, learned-absolute-position, tied-embedding decoder transformer.
+Two implementations share the same parameters:
+
+  * `forward_train`  — pure-jnp full-sequence forward with an auxiliary
+    early-exit head; differentiable, used once by pretrain.py.
+  * `make_step_fn`   — the serving graph (calls the L1 Pallas kernels):
+    one *step* processes T in-flight tokens (T=1 decode, T=8/16 tree verify,
+    T=64 chunked prefill) against a variant-local KV cache. This is what
+    aot.py lowers to HLO text for the Rust runtime.
+
+DSIA variants (Sec. 4.1 of the paper) are *parameter subsets* of the target:
+
+  * `target` — all L layers.
+  * `ls40` / `ls60` — layer sparsity 0.4 / 0.6 (keep 60% / 40% of layers,
+    evenly spaced, first and last always kept), following SWIFT.
+  * `ee` — early exit after E layers through a small adapter + the shared
+    final LN / LM head, following Kangaroo (the adapter is trained jointly
+    by pretrain.py with a 0.3-weight auxiliary loss — our stand-in for
+    Kangaroo's released adapter weights, see DESIGN.md §Substitutions).
+  * activation quantization (QSpec-style W-A8 QDQ) is available through
+    `act_quant=True` for Mixing-DSIA experiments; per Appendix C of the
+    paper it is not part of the main configuration.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_mlp import fused_mlp
+from .kernels.ref import fused_mlp_ref, gelu, tree_attention_ref
+from .kernels.tree_attention import tree_attention
+
+VOCAB_SIZE = 512
+
+# Step shapes lowered to artifacts: decode / draft-verify / target-verify /
+# prefill-chunk. Must match rust/src/runtime/mod.rs::STEP_SHAPES.
+STEP_SHAPES = (1, 8, 16, 64)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    s_max: int = 384
+    vocab: int = VOCAB_SIZE
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_hidden(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def early_exit_layer(self) -> int:
+        return max(2, round(self.n_layers / 3))
+
+
+SCALES: Dict[str, ModelConfig] = {
+    "small": ModelConfig("small", n_layers=6, d_model=128, n_heads=4),
+    "base": ModelConfig("base", n_layers=8, d_model=192, n_heads=6),
+    "large": ModelConfig("large", n_layers=12, d_model=256, n_heads=8),
+}
+
+
+def keep_set(n_layers: int, keep_n: int) -> List[int]:
+    """Evenly spaced kept-layer indices, first and last always kept."""
+    if keep_n >= n_layers:
+        return list(range(n_layers))
+    if keep_n == 1:
+        return [n_layers - 1]
+    idx = [round(i * (n_layers - 1) / (keep_n - 1)) for i in range(keep_n)]
+    # de-dup while preserving order (rounding can collide for small L)
+    out: List[int] = []
+    for i in idx:
+        if i not in out:
+            out.append(i)
+    return out
+
+
+def variant_layers(cfg: ModelConfig, variant: str) -> List[int]:
+    """Layer indices a DSIA variant runs, in execution order."""
+    L = cfg.n_layers
+    if variant == "target":
+        return list(range(L))
+    if variant == "ls40":  # sparsity 0.4 -> keep 60%
+        return keep_set(L, math.ceil(0.6 * L))
+    if variant == "ls60":  # sparsity 0.6 -> keep 40%
+        return keep_set(L, math.ceil(0.4 * L))
+    if variant == "ee":
+        return list(range(cfg.early_exit_layer))
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+VARIANTS = ("target", "ls40", "ls60", "ee")
+
+LAYER_PARAM_NAMES = (
+    "ln1_g", "ln1_b", "wqkv", "bqkv", "wo", "bo",
+    "ln2_g", "ln2_b", "wi", "bi", "wo2", "bo2",
+)
+
+
+def param_names(cfg: ModelConfig, variant: str = "target") -> List[str]:
+    """Flat parameter order for a variant — the artifact calling convention
+    (mirrored in rust/src/model/mod.rs)."""
+    names = ["emb", "pos"]
+    for li in variant_layers(cfg, variant):
+        names += [f"l{li}.{p}" for p in LAYER_PARAM_NAMES]
+    if variant == "ee":
+        names += ["ee.ln_g", "ee.ln_b", "ee.w", "ee.b"]
+    names += ["lnf_g", "lnf_b"]
+    return names
+
+
+def all_param_names(cfg: ModelConfig) -> List[str]:
+    """Every parameter of the full model incl. the early-exit adapter."""
+    names = ["emb", "pos"]
+    for li in range(cfg.n_layers):
+        names += [f"l{li}.{p}" for p in LAYER_PARAM_NAMES]
+    names += ["ee.ln_g", "ee.ln_b", "ee.w", "ee.b", "lnf_g", "lnf_b"]
+    return names
+
+
+def param_shape(cfg: ModelConfig, name: str) -> Tuple[int, ...]:
+    D, V, S, Dh = cfg.d_model, cfg.vocab, cfg.s_max, cfg.d_hidden
+    if name == "emb":
+        return (V, D)
+    if name == "pos":
+        return (S, D)
+    if name in ("lnf_g", "lnf_b", "ee.ln_g", "ee.ln_b", "ee.b"):
+        return (D,)
+    if name == "ee.w":
+        return (D, D)
+    base = name.split(".", 1)[1]
+    return {
+        "ln1_g": (D,), "ln1_b": (D,), "wqkv": (D, 3 * D), "bqkv": (3 * D,),
+        "wo": (D, D), "bo": (D,), "ln2_g": (D,), "ln2_b": (D,),
+        "wi": (D, Dh), "bi": (Dh,), "wo2": (Dh, D), "bo2": (D,),
+    }[base]
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by 1/sqrt(2L)."""
+    params: Dict[str, jnp.ndarray] = {}
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    for name in all_param_names(cfg):
+        shape = param_shape(cfg, name)
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g", "ln_g")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "ln_b")) or name.endswith((".bqkv", ".bi", ".bo", ".bo2")) or name == "ee.b":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            std = 0.02
+            if name.endswith((".wo", ".wo2")) or name == "ee.w":
+                std *= resid_scale
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def qdq_int8(x):
+    """Per-tensor dynamic activation quantize-dequantize (QSpec-style A8)."""
+    s = jnp.maximum(jnp.abs(x).max(), 1e-6) / 127.0
+    return jnp.round(x / s).clip(-127, 127) * s
+
+
+# --------------------------------------------------------------------------
+# Training forward (pure jnp, full sequence, batched)
+# --------------------------------------------------------------------------
+
+def forward_train(params: Dict[str, jnp.ndarray], cfg: ModelConfig, tokens):
+    """tokens (B, S) int32 -> (logits (B,S,V), logits_ee (B,S,V))."""
+    B, S = tokens.shape
+    h = params["emb"][tokens] + params["pos"][:S][None]
+    causal = jnp.tril(jnp.ones((S, S), jnp.float32))
+    h_ee = None
+    for li in range(cfg.n_layers):
+        p = {k.split(".", 1)[1]: v for k, v in params.items() if k.startswith(f"l{li}.")}
+        hn = layer_norm(h, p["ln1_g"], p["ln1_b"])
+        qkv = hn @ p["wqkv"] + p["bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+        k = k.reshape(B, S, cfg.n_heads, cfg.d_head)
+        v = v.reshape(B, S, cfg.n_heads, cfg.d_head)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(cfg.d_head)
+        sc = jnp.where(causal[None, None] > 0.5, sc, -1e30)
+        att = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, cfg.d_model)
+        h = h + o @ p["wo"] + p["bo"]
+        hn2 = layer_norm(h, p["ln2_g"], p["ln2_b"])
+        h = h + gelu(hn2 @ p["wi"] + p["bi"]) @ p["wo2"] + p["bo2"]
+        if li == cfg.early_exit_layer - 1:
+            h_ee = h
+    lnf = lambda x: layer_norm(x, params["lnf_g"], params["lnf_b"])  # noqa: E731
+    logits = lnf(h) @ params["emb"].T
+    adapted = h_ee + layer_norm(h_ee, params["ee.ln_g"], params["ee.ln_b"]) @ params["ee.w"] + params["ee.b"]
+    logits_ee = lnf(adapted) @ params["emb"].T
+    return logits, logits_ee
+
+
+# --------------------------------------------------------------------------
+# Serving step graph (per-variant; lowered by aot.py)
+# --------------------------------------------------------------------------
+
+def _step_impl(cfg: ModelConfig, variant: str, flat_params: Sequence[jnp.ndarray],
+               kv, pos, tokens, mask, depths, *, use_pallas: bool, act_quant: bool):
+    """One serving step of T in-flight tokens for a DSIA variant.
+
+    Args:
+      flat_params: arrays in `param_names(cfg, variant)` order.
+      kv: (nl, 2, H, S, dh) variant-local KV cache (nl = len(variant layers)).
+      pos: scalar int32 — number of committed cache slots.
+      tokens: (T,) int32.
+      mask: (T, T) f32 tree ancestor mask (row i = slots token i attends).
+      depths: (T,) int32 — tree depth of each slot; position id = pos+depth.
+    Returns:
+      logits (T, V), kv' with the T tree tokens written at slots pos..pos+T.
+    """
+    names = param_names(cfg, variant)
+    p = dict(zip(names, flat_params))
+    layers = variant_layers(cfg, variant)
+    T = tokens.shape[0]
+    H, dh = cfg.n_heads, cfg.d_head
+
+    pos_ids = jnp.clip(pos + depths, 0, cfg.s_max - 1)
+    h = p["emb"][tokens] + p["pos"][pos_ids]
+
+    new_kv = kv
+    for vi, li in enumerate(layers):
+        lp = {k: p[f"l{li}.{k}"] for k in LAYER_PARAM_NAMES}
+        hn = layer_norm(h, lp["ln1_g"], lp["ln1_b"])
+        if act_quant:
+            hn = qdq_int8(hn)
+        qkv = hn @ lp["wqkv"] + lp["bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(T, H, dh)
+        k = k.reshape(T, H, dh)
+        v = v.reshape(T, H, dh)
+        kc, vc = kv[vi, 0], kv[vi, 1]
+        if use_pallas:
+            attn = tree_attention(q, k, v, kc, vc, mask, pos)
+        else:
+            attn = tree_attention_ref(q, k, v, kc, vc, mask, pos)
+        h = h + attn.reshape(T, cfg.d_model) @ lp["wo"] + lp["bo"]
+        hn2 = layer_norm(h, lp["ln2_g"], lp["ln2_b"])
+        if act_quant:
+            hn2 = qdq_int8(hn2)
+        if use_pallas:
+            h = fused_mlp(h, hn2, lp["wi"], lp["bi"], lp["wo2"], lp["bo2"],
+                          block_h=cfg.d_model)
+        else:
+            h = fused_mlp_ref(h, hn2, lp["wi"], lp["bi"], lp["wo2"], lp["bo2"])
+        # write this layer's tree KV at slots pos..pos+T (junk slots are
+        # compacted away by `commit`; never attended past `pos`).
+        k_t = jnp.transpose(k, (1, 0, 2))  # (H, T, dh)
+        v_t = jnp.transpose(v, (1, 0, 2))
+        new_kv = jax.lax.dynamic_update_slice(new_kv, k_t[None, None], (vi, 0, 0, pos, 0))
+        new_kv = jax.lax.dynamic_update_slice(new_kv, v_t[None, None], (vi, 1, 0, pos, 0))
+        kv = new_kv
+
+    if variant == "ee":
+        h = h + layer_norm(h, p["ee.ln_g"], p["ee.ln_b"]) @ p["ee.w"] + p["ee.b"]
+    h = layer_norm(h, p["lnf_g"], p["lnf_b"])
+    logits = h @ p["emb"].T
+    return logits, new_kv
+
+
+def make_step_fn(cfg: ModelConfig, variant: str, T: int, *,
+                 use_pallas: bool = True, act_quant: bool = False):
+    """Build the step callable with the flat-argument AOT signature:
+    fn(*params, kv, pos, tokens, mask, depths) -> (logits, kv')."""
+    n_params = len(param_names(cfg, variant))
+
+    def fn(*args):
+        flat_params = args[:n_params]
+        kv, pos, tokens, mask, depths = args[n_params:]
+        return _step_impl(cfg, variant, flat_params, kv, pos, tokens, mask,
+                          depths, use_pallas=use_pallas, act_quant=act_quant)
+
+    return fn
+
+
+def kv_shape(cfg: ModelConfig, variant: str) -> Tuple[int, ...]:
+    return (len(variant_layers(cfg, variant)), 2, cfg.n_heads, cfg.s_max, cfg.d_head)
+
+
+def step_arg_specs(cfg: ModelConfig, variant: str, T: int):
+    """ShapeDtypeStructs for lowering a stepT graph."""
+    specs = [jax.ShapeDtypeStruct(param_shape(cfg, n), jnp.float32)
+             for n in param_names(cfg, variant)]
+    specs += [
+        jax.ShapeDtypeStruct(kv_shape(cfg, variant), jnp.float32),  # kv
+        jax.ShapeDtypeStruct((), jnp.int32),                        # pos
+        jax.ShapeDtypeStruct((T,), jnp.int32),                      # tokens
+        jax.ShapeDtypeStruct((T, T), jnp.float32),                  # mask
+        jax.ShapeDtypeStruct((T,), jnp.int32),                      # depths
+    ]
+    return specs
+
+
+# --------------------------------------------------------------------------
+# KV commit: compact accepted tree slots into contiguous cache positions
+# --------------------------------------------------------------------------
+
+def commit(kv, src_idx, pos):
+    """Gather cache slots `src_idx` (absolute, length T) and write them
+    contiguously at pos..pos+T.  Padding slots must self-reference
+    (src_idx[i] = pos+i) so they round-trip unchanged."""
+    gathered = jnp.take(kv, src_idx, axis=3)  # (nl, 2, H, T, dh)
+    return jax.lax.dynamic_update_slice(kv, gathered, (0, 0, 0, pos, 0))
+
+
+def make_commit_fn(T: int):
+    def fn(kv, src_idx, pos):
+        return commit(kv, src_idx, pos)
+    return fn
+
+
+def commit_arg_specs(cfg: ModelConfig, variant: str, T: int):
+    return [
+        jax.ShapeDtypeStruct(kv_shape(cfg, variant), jnp.float32),
+        jax.ShapeDtypeStruct((T,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]

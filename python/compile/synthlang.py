@@ -1,0 +1,276 @@
+"""Synthetic multi-task language shared between the Python build path and the
+Rust serving path.
+
+The corpus plays the role of Spec-Bench's six task categories (MT-Bench,
+Translation, Summarization, QA, Math, RAG).  Each category is designed so that
+its *n-gram repetitiveness* and *model-predictability* profile mirrors the
+corresponding Spec-Bench column in the paper (e.g. Summarization/RAG copy
+verbatim spans from the prompt, which is what makes PLD strong there;
+Translation does not, which is why every method is weak there).
+
+Everything random is derived from a SplitMix64 stream so the Rust
+`workload::synthlang` module can reproduce the exact same language tables and
+check samples (see `emit_check_samples`, cross-validated by a Rust test
+against artifacts/synthlang_check.json).
+
+Token space (V = 512):
+    0 PAD   1 BOS   2 EOS   3 SEP   4 QUERY   5 PERIOD   6 ANSWER
+    7 PLUS  8 MINUS 9 TIMES 10 EQUALS 11 COMMA  12..15 reserved
+    16..25  digits 0..9
+    26..265  region-A content tokens (240)   -- the "source language"
+    266..505 region-B content tokens (240)   -- the "target language"
+    506..511 reserved
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+M64 = (1 << 64) - 1
+
+PAD, BOS, EOS, SEP, QUERY, PERIOD, ANSWER = 0, 1, 2, 3, 4, 5, 6
+PLUS, MINUS, TIMES, EQUALS, COMMA = 7, 8, 9, 10, 11
+DIGIT0 = 16  # digits are DIGIT0 + d
+A_BASE, A_SIZE = 26, 240
+B_BASE, B_SIZE = 266, 240
+VOCAB_SIZE = 512
+
+CATEGORIES = ["mtbench", "translation", "summary", "qa", "math", "rag"]
+
+
+class SplitMix64:
+    """SplitMix64 PRNG — bit-identical to rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & M64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return z ^ (z >> 31)
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_below(self, n: int) -> int:
+        """Uniform integer in [0, n). Uses the high-bits modulo-free method."""
+        return (self.next_u64() * n) >> 64 & M64 if False else self._mul_shift(n)
+
+    def _mul_shift(self, n: int) -> int:
+        # (u64 * n) >> 64, exact in python big ints; matches rust
+        # ((x as u128 * n as u128) >> 64) as u64.
+        return (self.next_u64() * n) >> 64
+
+    def choice_weighted(self, cum_weights: List[float]) -> int:
+        """Index from cumulative weights summing to 1.0."""
+        r = self.next_f64()
+        for i, c in enumerate(cum_weights):
+            if r < c:
+                return i
+        return len(cum_weights) - 1
+
+
+# Successor distribution for the order-1 Markov chain: 4 candidates with a
+# sharp head so a small trained model's greedy decode is predictable enough
+# for layer-skip drafts to agree with the full model.
+SUCC_K = 4
+SUCC_CUM = [0.70, 0.85, 0.95, 1.0]
+
+
+@dataclass
+class Language:
+    """The synthetic language tables, fully determined by `seed`."""
+
+    seed: int
+    succ: List[List[int]] = field(default_factory=list)  # [A_SIZE][SUCC_K], A-relative
+    perm: List[int] = field(default_factory=list)  # translation map, A-rel -> B-rel
+
+    @staticmethod
+    def build(seed: int) -> "Language":
+        lang = Language(seed=seed)
+        rng = SplitMix64(seed)
+        # successor table over region A
+        for _ in range(A_SIZE):
+            row = [rng.next_below(A_SIZE) for _ in range(SUCC_K)]
+            lang.succ.append(row)
+        # translation permutation: Fisher-Yates over 0..A_SIZE
+        perm = list(range(A_SIZE))
+        for i in range(A_SIZE - 1, 0, -1):
+            j = rng.next_below(i + 1)
+            perm[i], perm[j] = perm[j], perm[i]
+        lang.perm = perm
+        return lang
+
+    # ---- base samplers -------------------------------------------------
+
+    def markov_next(self, rng: SplitMix64, cur_rel: int) -> int:
+        """Next A-relative token from the chain."""
+        k = rng.choice_weighted(SUCC_CUM)
+        return self.succ[cur_rel][k]
+
+    def markov_seq(self, rng: SplitMix64, n: int) -> List[int]:
+        """n A-region tokens (absolute ids)."""
+        cur = rng.next_below(A_SIZE)
+        out = [A_BASE + cur]
+        for _ in range(n - 1):
+            cur = self.markov_next(rng, cur)
+            out.append(A_BASE + cur)
+        return out
+
+    def sentence(self, rng: SplitMix64, lo: int = 6, hi: int = 12) -> List[int]:
+        n = lo + rng.next_below(hi - lo + 1)
+        return self.markov_seq(rng, n) + [PERIOD]
+
+    def translate(self, toks: List[int]) -> List[int]:
+        out = []
+        for t in toks:
+            if A_BASE <= t < A_BASE + A_SIZE:
+                out.append(B_BASE + self.perm[t - A_BASE])
+            else:
+                out.append(t)
+        return out
+
+
+def _digits_of(n: int) -> List[int]:
+    return [DIGIT0 + int(c) for c in str(n)]
+
+
+@dataclass
+class Sample:
+    category: str
+    prompt: List[int]
+    target: List[int]  # training continuation (the behaviour we teach)
+
+
+def gen_sample(lang: Language, category: str, rng: SplitMix64) -> Sample:
+    """One (prompt, continuation) pair of the given category.
+
+    Prompt always starts with BOS; continuation ends with EOS.  Continuations
+    are the *training targets*; at serving time the model generates greedily
+    and the losslessness invariant only compares engines against AR greedy.
+    """
+    if category == "summary":
+        # Passage of sentences; the summary is a verbatim copy of the first
+        # and the last sentence (a learnable positional-copy rule; verbatim
+        # copy is what makes PLD strong on Summarization in the paper).
+        nsent = 6 + rng.next_below(5)
+        sents = [lang.sentence(rng) for _ in range(nsent)]
+        prompt = [BOS]
+        for s in sents:
+            prompt += s
+        prompt += [SEP]
+        target = sents[0] + sents[-1] + [EOS]
+        return Sample(category, prompt, target)
+
+    if category == "rag":
+        # Three passages; the query gives the first 3 tokens of one sentence,
+        # the answer continues/copies that sentence and then the following
+        # sentence of the same passage (prompt-lookup structure).
+        passages = []
+        for _ in range(3):
+            passages.append([lang.sentence(rng) for _ in range(2 + rng.next_below(2))])
+        prompt = [BOS]
+        for p in passages:
+            for s in p:
+                prompt += s
+            prompt += [COMMA]
+        pi = rng.next_below(3)
+        si = rng.next_below(len(passages[pi]) - 1)
+        key = passages[pi][si][:3]
+        prompt += [QUERY] + key + [SEP]
+        target = passages[pi][si] + passages[pi][si + 1] + [EOS]
+        return Sample(category, prompt, target)
+
+    if category == "qa":
+        # Fact list (x COMMA y PERIOD); query an x, answer ANSWER y PERIOD
+        # followed by a copy of the matching fact (short answers => small
+        # speculative gains, matching the paper's weak QA column).
+        nfacts = 5 + rng.next_below(3)
+        facts = []
+        for _ in range(nfacts):
+            x = A_BASE + rng.next_below(A_SIZE)
+            y = A_BASE + rng.next_below(A_SIZE)
+            facts.append((x, y))
+        prompt = [BOS]
+        for x, y in facts:
+            prompt += [x, COMMA, y, PERIOD]
+        qi = rng.next_below(nfacts)
+        prompt += [QUERY, facts[qi][0], SEP]
+        x, y = facts[qi]
+        target = [ANSWER, y, PERIOD, x, COMMA, y, PERIOD, EOS]
+        return Sample(category, prompt, target)
+
+    if category == "translation":
+        # Token-level mapping A->B. Low n-gram overlap with the prompt and a
+        # hard task for a small model => weak column for every method.
+        n = 24 + rng.next_below(25)
+        src = lang.markov_seq(rng, n)
+        prompt = [BOS] + src + [SEP]
+        target = lang.translate(src) + [EOS]
+        return Sample(category, prompt, target)
+
+    if category == "math":
+        # Template-structured multi-problem addition. Heavy template reuse
+        # (moderate PLD, good draft acceptance).
+        nprob = 3 + rng.next_below(2)
+        probs = []
+        for _ in range(nprob):
+            a = 10 + rng.next_below(90)
+            b = 10 + rng.next_below(90)
+            probs.append((a, b))
+        prompt = [BOS, QUERY]
+        for a, b in probs:
+            prompt += _digits_of(a) + [PLUS] + _digits_of(b) + [COMMA]
+        prompt += [SEP]
+        target = []
+        for a, b in probs:
+            target += (
+                _digits_of(a) + [PLUS] + _digits_of(b) + [EQUALS] + _digits_of(a + b) + [PERIOD]
+            )
+        target += [EOS]
+        return Sample(category, prompt, target)
+
+    if category == "mtbench":
+        # Conversation-like: markov text where ~a third of the reply copies a
+        # phrase from the prompt (mixed profile).
+        nsent = 4 + rng.next_below(3)
+        sents = [lang.sentence(rng) for _ in range(nsent)]
+        prompt = [BOS]
+        for s in sents:
+            prompt += s
+        prompt += [SEP]
+        target = []
+        ncopy = 1 + rng.next_below(2)
+        for i in range(ncopy):
+            target += sents[rng.next_below(nsent)]
+        target += lang.sentence(rng)
+        target += [EOS]
+        return Sample(category, prompt, target)
+
+    raise ValueError(f"unknown category {category!r}")
+
+
+def emit_check_samples(lang: Language, seed: int = 1234) -> dict:
+    """Deterministic cross-language fixture: Rust reproduces these exactly."""
+    out = {"seed": lang.seed, "sample_seed": seed, "samples": {}}
+    for cat in CATEGORIES:
+        rng = SplitMix64(seed ^ hash_category(cat))
+        s = gen_sample(lang, cat, rng)
+        out["samples"][cat] = {"prompt": s.prompt, "target": s.target}
+    # raw rng check values (hex strings: u64 does not fit in json f64)
+    rng = SplitMix64(seed)
+    out["rng_check"] = [f"{rng.next_u64():016x}" for _ in range(8)]
+    out["succ_row0"] = lang.succ[0]
+    out["perm_head"] = lang.perm[:16]
+    return out
+
+
+def hash_category(cat: str) -> int:
+    """FNV-1a 64 of the category name — mirrored in Rust."""
+    h = 0xCBF29CE484222325
+    for ch in cat.encode():
+        h = ((h ^ ch) * 0x100000001B3) & M64
+    return h

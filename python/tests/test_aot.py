@@ -1,0 +1,62 @@
+"""AOT pipeline: manifest correctness and HLO-text lowering sanity."""
+
+import json
+
+import pytest
+
+from compile import aot
+from compile.model import SCALES, STEP_SHAPES, param_names, variant_layers
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def man(self):
+        return aot.build_manifest(["small"])
+
+    def test_scale_block(self, man):
+        sc = man["scales"]["small"]
+        cfg = SCALES["small"]
+        assert sc["n_layers"] == cfg.n_layers
+        assert sc["d_model"] == cfg.d_model
+        assert sc["weights"] == "weights_small.bin"
+
+    def test_variants_complete(self, man):
+        sc = man["scales"]["small"]
+        assert set(sc["variants"]) == {"target", "ls40", "ls60", "ee"}
+        for v, blk in sc["variants"].items():
+            assert blk["layers"] == variant_layers(SCALES["small"], v)
+            assert blk["params"] == param_names(SCALES["small"], v)
+            assert set(blk["steps"]) == {str(t) for t in STEP_SHAPES}
+
+    def test_kv_shapes(self, man):
+        sc = man["scales"]["small"]
+        cfg = SCALES["small"]
+        for v, blk in sc["variants"].items():
+            nl = len(variant_layers(cfg, v))
+            assert blk["kv_shape"] == [nl, 2, cfg.n_heads, cfg.s_max, cfg.d_head]
+
+    def test_synthlang_fixture_embedded(self, man):
+        chk = man["synthlang_check"]
+        assert len(chk["rng_check"]) == 8
+        assert len(chk["samples"]) == 6
+
+    def test_json_serializable(self, man):
+        json.dumps(man)
+
+
+class TestLowering:
+    def test_step_lowers_to_hlo_text(self):
+        text = aot.lower_step(SCALES["small"], "ls60", 1)
+        assert "ENTRY" in text and "HloModule" in text
+        # logits (T,V) and kv' must both appear in the root tuple
+        assert "f32[1,512]" in text
+
+    def test_commit_lowers(self):
+        text = aot.lower_commit(SCALES["small"], "target", 16)
+        assert "ENTRY" in text
+
+    def test_step_has_no_custom_calls(self):
+        """interpret=True must lower Pallas to plain HLO (a Mosaic
+        custom-call would be unexecutable on the CPU PJRT client)."""
+        text = aot.lower_step(SCALES["small"], "ee", 8)
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower()

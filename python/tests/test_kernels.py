@@ -1,0 +1,171 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, cache fill levels, tree-mask topologies and dtypes;
+assert_allclose against kernels/ref.py is the core build-time gate for the
+serving artifacts (the same kernel code is what aot.py lowers into them).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_mlp import fused_mlp, vmem_estimate_bytes as mlp_vmem
+from compile.kernels.ref import fused_mlp_ref, tree_attention_ref
+from compile.kernels.tree_attention import (
+    tree_attention,
+    vmem_estimate_bytes as attn_vmem,
+)
+
+
+def rand(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+def random_tree_mask(rng, T):
+    """Random forest-of-chains ancestor mask (what DyTC actually builds):
+    each node's parent is an earlier node or a root; mask[i] = ancestors+self."""
+    mask = np.zeros((T, T), np.float32)
+    parent = np.full(T, -1)
+    for i in range(T):
+        if i > 0 and rng.random() < 0.8:
+            parent[i] = rng.integers(0, i)
+        mask[i, i] = 1.0
+        j = parent[i]
+        while j >= 0:
+            mask[i, j] = 1.0
+            j = parent[j]
+    return jnp.asarray(mask)
+
+
+class TestTreeAttention:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t=st.sampled_from([1, 2, 8, 16]),
+        h=st.sampled_from([1, 2, 4]),
+        dh=st.sampled_from([8, 32]),
+        nsb=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, t, h, dh, nsb, seed):
+        rng = np.random.default_rng(seed)
+        S = 64 * nsb
+        pos = int(rng.integers(0, S + 1))
+        q = rand(rng, (t, h, dh))
+        kn = rand(rng, (t, h, dh))
+        vn = rand(rng, (t, h, dh))
+        kc = rand(rng, (h, S, dh))
+        vc = rand(rng, (h, S, dh))
+        mask = random_tree_mask(rng, t)
+        posj = jnp.asarray(pos, jnp.int32)
+        got = tree_attention(q, kn, vn, kc, vc, mask, posj)
+        want = tree_attention_ref(q, kn, vn, kc, vc, mask, posj)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_empty_cache(self):
+        rng = np.random.default_rng(0)
+        t, h, dh, S = 4, 2, 16, 64
+        args = [rand(rng, (t, h, dh)) for _ in range(3)]
+        kc, vc = rand(rng, (h, S, dh)), rand(rng, (h, S, dh))
+        mask = jnp.asarray(np.tril(np.ones((t, t), np.float32)))
+        pos = jnp.asarray(0, jnp.int32)
+        got = tree_attention(*args, kc, vc, mask, pos)
+        want = tree_attention_ref(*args, kc, vc, mask, pos)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_full_cache(self):
+        rng = np.random.default_rng(1)
+        t, h, dh, S = 8, 2, 16, 128
+        args = [rand(rng, (t, h, dh)) for _ in range(3)]
+        kc, vc = rand(rng, (h, S, dh)), rand(rng, (h, S, dh))
+        mask = random_tree_mask(rng, t)
+        pos = jnp.asarray(S, jnp.int32)
+        got = tree_attention(*args, kc, vc, mask, pos)
+        want = tree_attention_ref(*args, kc, vc, mask, pos)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_diagonal_only_mask(self):
+        """Slots that attend only themselves (padding slots) are well-defined."""
+        rng = np.random.default_rng(2)
+        t, h, dh, S = 4, 2, 16, 64
+        args = [rand(rng, (t, h, dh)) for _ in range(3)]
+        kc, vc = rand(rng, (h, S, dh)), rand(rng, (h, S, dh))
+        mask = jnp.eye(t, dtype=jnp.float32)
+        pos = jnp.asarray(0, jnp.int32)
+        got = tree_attention(*args, kc, vc, mask, pos)
+        want = tree_attention_ref(*args, kc, vc, mask, pos)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+        assert np.isfinite(np.asarray(got)).all()
+
+    def test_block_size_invariance(self):
+        """The streaming block size is a pure performance knob."""
+        rng = np.random.default_rng(3)
+        t, h, dh, S = 8, 2, 16, 128
+        args = [rand(rng, (t, h, dh)) for _ in range(3)]
+        kc, vc = rand(rng, (h, S, dh)), rand(rng, (h, S, dh))
+        mask = random_tree_mask(rng, t)
+        pos = jnp.asarray(77, jnp.int32)
+        a = tree_attention(*args, kc, vc, mask, pos, block_s=64)
+        b = tree_attention(*args, kc, vc, mask, pos, block_s=32)
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(4)
+        t, h, dh, S = 4, 2, 16, 64
+        args = [rand(rng, (t, h, dh), jnp.bfloat16) for _ in range(3)]
+        kc, vc = rand(rng, (h, S, dh), jnp.bfloat16), rand(rng, (h, S, dh), jnp.bfloat16)
+        mask = random_tree_mask(rng, t)
+        pos = jnp.asarray(30, jnp.int32)
+        got = tree_attention(*args, kc, vc, mask, pos).astype(jnp.float32)
+        want = tree_attention_ref(*args, kc, vc, mask, pos).astype(jnp.float32)
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+    def test_vmem_estimate_within_budget(self):
+        """All shipped (T, dh) combos fit one TPU core's VMEM comfortably."""
+        for t in (1, 8, 16, 64):
+            assert attn_vmem(t, 32) < 16 * 1024 * 1024
+
+
+class TestFusedMlp:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t=st.sampled_from([1, 8, 16, 64]),
+        d=st.sampled_from([64, 128, 192]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, t, d, seed):
+        rng = np.random.default_rng(seed)
+        r = rand(rng, (t, d))
+        x = rand(rng, (t, d))
+        wi = rand(rng, (d, 4 * d), scale=0.05)
+        bi = rand(rng, (4 * d,), scale=0.05)
+        wo = rand(rng, (4 * d, d), scale=0.05)
+        bo = rand(rng, (d,), scale=0.05)
+        got = fused_mlp(r, x, wi, bi, wo, bo, block_h=d)
+        want = fused_mlp_ref(r, x, wi, bi, wo, bo)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_block_size_invariance(self):
+        rng = np.random.default_rng(5)
+        t, d = 8, 128
+        r, x = rand(rng, (t, d)), rand(rng, (t, d))
+        wi, bi = rand(rng, (d, 4 * d), scale=0.05), rand(rng, (4 * d,), scale=0.05)
+        wo, bo = rand(rng, (4 * d, d), scale=0.05), rand(rng, (d,), scale=0.05)
+        a = fused_mlp(r, x, wi, bi, wo, bo, block_h=128)
+        b = fused_mlp(r, x, wi, bi, wo, bo, block_h=256)
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    def test_residual_passthrough(self):
+        """Zero weights => out == r + bo exactly."""
+        t, d = 4, 64
+        rng = np.random.default_rng(6)
+        r, x = rand(rng, (t, d)), rand(rng, (t, d))
+        z = jnp.zeros((d, 4 * d)), jnp.zeros((4 * d,)), jnp.zeros((4 * d, d))
+        bo = rand(rng, (d,))
+        got = fused_mlp(r, x, *z, bo, block_h=64)
+        np.testing.assert_allclose(got, r + bo, rtol=1e-6, atol=1e-6)
+
+    def test_vmem_estimate_within_budget(self):
+        for t in (1, 8, 16, 64):
+            assert mlp_vmem(t, 256) < 16 * 1024 * 1024

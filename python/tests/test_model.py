@@ -1,0 +1,225 @@
+"""L2 model: serving step graphs vs the training forward, DSIA variants,
+KV commit semantics, and the activation-quantization path."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = M.SCALES["small"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def flat(params, cfg, variant):
+    return [params[n] for n in M.param_names(cfg, variant)]
+
+
+def tri(t):
+    return jnp.asarray(np.tril(np.ones((t, t), np.float32)))
+
+
+def depths(t):
+    return jnp.arange(t, dtype=jnp.int32)
+
+
+class TestParamLayout:
+    def test_param_names_target_covers_all_layers(self, small):
+        cfg, _ = small
+        names = M.param_names(cfg, "target")
+        assert names[0] == "emb" and names[1] == "pos"
+        assert names[-2:] == ["lnf_g", "lnf_b"]
+        assert len(names) == 2 + 12 * cfg.n_layers + 2
+
+    def test_variant_layer_sets(self, small):
+        cfg, _ = small
+        t = M.variant_layers(cfg, "target")
+        l40 = M.variant_layers(cfg, "ls40")
+        l60 = M.variant_layers(cfg, "ls60")
+        ee = M.variant_layers(cfg, "ee")
+        assert set(l40) < set(t) and set(l60) < set(l40) or set(l60) < set(t)
+        assert len(l40) > len(l60)
+        assert 0 in l40 and cfg.n_layers - 1 in l40
+        assert ee == list(range(cfg.early_exit_layer))
+
+    def test_keep_set_properties(self):
+        for L in (4, 6, 8, 12, 16, 32):
+            for k in range(2, L + 1):
+                ks = M.keep_set(L, k)
+                assert ks[0] == 0 and ks[-1] == L - 1
+                assert ks == sorted(set(ks))
+
+    def test_ee_params_include_adapter(self, small):
+        cfg, _ = small
+        names = M.param_names(cfg, "ee")
+        for n in ("ee.ln_g", "ee.ln_b", "ee.w", "ee.b"):
+            assert n in names
+
+
+class TestStepVsTrain:
+    def test_chunked_prefill_matches_train(self, small):
+        cfg, params = small
+        S = 32
+        toks = np.array((np.arange(S) * 37) % cfg.vocab, np.int32)
+        lt, _ = M.forward_train(params, cfg, jnp.asarray(toks[None]))
+        kv = jnp.zeros(M.kv_shape(cfg, "target"), jnp.float32)
+        step = M.make_step_fn(cfg, "target", 16)
+        fp = flat(params, cfg, "target")
+        pos = jnp.asarray(0, jnp.int32)
+        outs = []
+        for c in range(2):
+            lg, kv = step(*fp, kv, pos, jnp.asarray(toks[c * 16:(c + 1) * 16]),
+                          tri(16), depths(16))
+            outs.append(lg)
+            pos = pos + 16
+        np.testing.assert_allclose(jnp.concatenate(outs), lt[0], rtol=2e-4, atol=2e-4)
+
+    def test_decode_matches_train(self, small):
+        cfg, params = small
+        toks = np.array((np.arange(16) * 11) % cfg.vocab, np.int32)
+        kv = jnp.zeros(M.kv_shape(cfg, "target"), jnp.float32)
+        fp = flat(params, cfg, "target")
+        step16 = M.make_step_fn(cfg, "target", 16)
+        _, kv = step16(*fp, kv, jnp.asarray(0, jnp.int32), jnp.asarray(toks),
+                       tri(16), depths(16))
+        step1 = M.make_step_fn(cfg, "target", 1)
+        lg, _ = step1(*fp, kv, jnp.asarray(16, jnp.int32), jnp.asarray([42], jnp.int32),
+                      jnp.ones((1, 1), jnp.float32), jnp.zeros((1,), jnp.int32))
+        full = np.concatenate([toks, [42]]).astype(np.int32)
+        lt, _ = M.forward_train(params, cfg, jnp.asarray(full[None]))
+        np.testing.assert_allclose(lg[0], lt[0, -1], rtol=2e-4, atol=2e-4)
+
+    def test_ee_step_matches_train_ee_head(self, small):
+        cfg, params = small
+        toks = np.array((np.arange(8) * 7 + 30) % cfg.vocab, np.int32)
+        _, lt_ee = M.forward_train(params, cfg, jnp.asarray(toks[None]))
+        kv = jnp.zeros(M.kv_shape(cfg, "ee"), jnp.float32)
+        step = M.make_step_fn(cfg, "ee", 8)
+        lg, _ = step(*flat(params, cfg, "ee"), kv, jnp.asarray(0, jnp.int32),
+                     jnp.asarray(toks), tri(8), depths(8))
+        np.testing.assert_allclose(lg, lt_ee[0], rtol=2e-4, atol=2e-4)
+
+    def test_tree_step_equals_linear_replay(self, small):
+        """A chain laid out as a 'tree' (parent = previous slot) must produce
+        the same logits as plain causal decoding of the chain."""
+        cfg, params = small
+        fp = flat(params, cfg, "target")
+        prompt = np.array([1, 30, 40, 50, 60, 70, 80, 90], np.int32)
+        kv = jnp.zeros(M.kv_shape(cfg, "target"), jnp.float32)
+        step8 = M.make_step_fn(cfg, "target", 8)
+        _, kv = step8(*fp, kv, jnp.asarray(0, jnp.int32), jnp.asarray(prompt),
+                      tri(8), depths(8))
+        chain = np.array([100, 110, 120, 130], np.int32)
+        # as a "tree": slots 0..3, each parent = previous
+        mask = np.tril(np.ones((8, 8), np.float32))
+        lg_tree, _ = M.make_step_fn(cfg, "target", 8)(
+            *fp, kv, jnp.asarray(8, jnp.int32),
+            jnp.asarray(np.concatenate([chain, np.zeros(4, np.int32)])),
+            jnp.asarray(mask), depths(8))
+        # as sequential decode
+        step1 = M.make_step_fn(cfg, "target", 1)
+        kv2, pos = kv, 8
+        lgs = []
+        for t in chain:
+            lg, kv2 = step1(*fp, kv2, jnp.asarray(pos, jnp.int32),
+                            jnp.asarray([t], jnp.int32),
+                            jnp.ones((1, 1), jnp.float32), jnp.zeros((1,), jnp.int32))
+            lgs.append(lg[0])
+            pos += 1
+        np.testing.assert_allclose(lg_tree[:4], jnp.stack(lgs), rtol=3e-4, atol=3e-4)
+
+    def test_branching_tree_isolation(self, small):
+        """Two sibling branches must not see each other's tokens."""
+        cfg, params = small
+        fp = flat(params, cfg, "target")
+        kv = jnp.zeros(M.kv_shape(cfg, "target"), jnp.float32)
+        step8 = M.make_step_fn(cfg, "target", 8)
+        prompt = np.array([1, 30, 40, 50, 60, 70, 80, 90], np.int32)
+        _, kv = step8(*fp, kv, jnp.asarray(0, jnp.int32), jnp.asarray(prompt),
+                      tri(8), depths(8))
+        # slots: 0 root-child A, 1 root-child B (siblings, depth 0)
+        mask = np.eye(8, dtype=np.float32)
+        dep = np.zeros(8, np.int32)
+        toks = np.array([100, 200, 0, 0, 0, 0, 0, 0], np.int32)
+        lg, _ = step8(*fp, kv, jnp.asarray(8, jnp.int32), jnp.asarray(toks),
+                      jnp.asarray(mask), jnp.asarray(dep))
+        # each branch must equal its own sequential decode
+        step1 = M.make_step_fn(cfg, "target", 1)
+        for slot, tok in ((0, 100), (1, 200)):
+            lg1, _ = step1(*fp, kv, jnp.asarray(8, jnp.int32),
+                           jnp.asarray([tok], jnp.int32),
+                           jnp.ones((1, 1), jnp.float32), jnp.zeros((1,), jnp.int32))
+            np.testing.assert_allclose(lg[slot], lg1[0], rtol=3e-4, atol=3e-4)
+
+
+class TestCommit:
+    def test_commit_moves_accepted_slots(self, small):
+        cfg, _ = small
+        nl, _, H, S, dh = M.kv_shape(cfg, "target")
+        rng = np.random.default_rng(0)
+        kv = jnp.asarray(rng.standard_normal((nl, 2, H, S, dh)), jnp.float32)
+        pos = 10
+        # accepted tree slots 0, 2, 5 -> absolute 10, 12, 15
+        src = np.arange(16, dtype=np.int32) + pos
+        src[:3] = [10, 12, 15]
+        out = M.commit(kv, jnp.asarray(src), jnp.asarray(pos, jnp.int32))
+        out = np.asarray(out)
+        kvn = np.asarray(kv)
+        np.testing.assert_array_equal(out[:, :, :, 10], kvn[:, :, :, 10])
+        np.testing.assert_array_equal(out[:, :, :, 11], kvn[:, :, :, 12])
+        np.testing.assert_array_equal(out[:, :, :, 12], kvn[:, :, :, 15])
+        # untouched regions
+        np.testing.assert_array_equal(out[:, :, :, :10], kvn[:, :, :, :10])
+        np.testing.assert_array_equal(out[:, :, :, 26:], kvn[:, :, :, 26:])
+
+    def test_commit_identity(self, small):
+        cfg, _ = small
+        nl, _, H, S, dh = M.kv_shape(cfg, "ls60")
+        rng = np.random.default_rng(1)
+        kv = jnp.asarray(rng.standard_normal((nl, 2, H, S, dh)), jnp.float32)
+        pos = 33
+        src = jnp.asarray(np.arange(16, dtype=np.int32) + pos)
+        out = M.commit(kv, src, jnp.asarray(pos, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(kv))
+
+
+class TestActQuant:
+    def test_qdq_bounded_error(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((16, 64)) * 3, jnp.float32)
+        y = M.qdq_int8(x)
+        s = float(jnp.abs(x).max()) / 127.0
+        assert float(jnp.abs(y - x).max()) <= s * 0.5 + 1e-6
+
+    def test_aq_step_runs_and_differs(self, small):
+        cfg, params = small
+        fp = flat(params, cfg, "target")
+        kv = jnp.zeros(M.kv_shape(cfg, "target"), jnp.float32)
+        toks = jnp.asarray(np.arange(8, dtype=np.int32) + 30)
+        a, _ = M.make_step_fn(cfg, "target", 8)(*fp, kv, jnp.asarray(0, jnp.int32),
+                                                toks, tri(8), depths(8))
+        b, _ = M.make_step_fn(cfg, "target", 8, act_quant=True)(
+            *fp, kv, jnp.asarray(0, jnp.int32), toks, tri(8), depths(8))
+        # numerically close but not identical; argmax mostly agrees
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+        agree = (np.argmax(a, -1) == np.argmax(b, -1)).mean()
+        assert agree >= 0.5
+
+
+class TestRefPath:
+    def test_ref_and_pallas_step_agree(self, small):
+        cfg, params = small
+        fp = flat(params, cfg, "ls40")
+        kv = jnp.zeros(M.kv_shape(cfg, "ls40"), jnp.float32)
+        toks = jnp.asarray(np.arange(8, dtype=np.int32) + 40)
+        a, kva = M.make_step_fn(cfg, "ls40", 8, use_pallas=True)(
+            *fp, kv, jnp.asarray(0, jnp.int32), toks, tri(8), depths(8))
+        b, kvb = M.make_step_fn(cfg, "ls40", 8, use_pallas=False)(
+            *fp, kv, jnp.asarray(0, jnp.int32), toks, tri(8), depths(8))
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(kva, kvb, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,146 @@
+"""Synthetic language: determinism, token-range validity, category profiles,
+and the cross-language fixture consumed by the Rust test suite."""
+
+import numpy as np
+import pytest
+
+from compile import synthlang as sl
+
+
+@pytest.fixture(scope="module")
+def lang():
+    return sl.Language.build(20250711)
+
+
+class TestSplitMix64:
+    def test_known_vector(self):
+        # Reference values for seed 0 (cross-checked against the canonical
+        # splitmix64; rust/src/util/rng.rs reproduces these bit-for-bit).
+        r = sl.SplitMix64(0)
+        vals = [r.next_u64() for _ in range(3)]
+        assert vals[0] == 0xE220A8397B1DCDAF
+        assert vals[1] == 0x6E789E6AA1B965F4
+        assert vals[2] == 0x06C45D188009454F
+
+    def test_f64_in_unit_interval(self):
+        r = sl.SplitMix64(42)
+        for _ in range(1000):
+            f = r.next_f64()
+            assert 0.0 <= f < 1.0
+
+    def test_next_below_uniformish(self):
+        r = sl.SplitMix64(7)
+        counts = np.zeros(10)
+        for _ in range(10000):
+            counts[r.next_below(10)] += 1
+        assert counts.min() > 800 and counts.max() < 1200
+
+    def test_determinism(self):
+        a = sl.SplitMix64(123)
+        b = sl.SplitMix64(123)
+        assert [a.next_u64() for _ in range(10)] == [b.next_u64() for _ in range(10)]
+
+
+class TestLanguage:
+    def test_build_deterministic(self):
+        a = sl.Language.build(1)
+        b = sl.Language.build(1)
+        assert a.succ == b.succ and a.perm == b.perm
+
+    def test_perm_is_bijection(self, lang):
+        assert sorted(lang.perm) == list(range(sl.A_SIZE))
+
+    def test_succ_in_range(self, lang):
+        for row in lang.succ:
+            assert len(row) == sl.SUCC_K
+            for s in row:
+                assert 0 <= s < sl.A_SIZE
+
+    def test_markov_seq_in_region_a(self, lang):
+        rng = sl.SplitMix64(9)
+        seq = lang.markov_seq(rng, 100)
+        assert all(sl.A_BASE <= t < sl.A_BASE + sl.A_SIZE for t in seq)
+
+    def test_translate_maps_to_region_b(self, lang):
+        rng = sl.SplitMix64(10)
+        src = lang.markov_seq(rng, 50)
+        out = lang.translate(src)
+        assert all(sl.B_BASE <= t < sl.B_BASE + sl.B_SIZE for t in out)
+        # injective on this sample
+        assert len(set(out)) == len(set(src))
+
+
+class TestSamples:
+    @pytest.mark.parametrize("cat", sl.CATEGORIES)
+    def test_tokens_in_vocab(self, lang, cat):
+        rng = sl.SplitMix64(77)
+        for _ in range(20):
+            s = sl.gen_sample(lang, cat, rng)
+            assert all(0 <= t < sl.VOCAB_SIZE for t in s.prompt + s.target)
+            assert s.prompt[0] == sl.BOS
+            assert s.target[-1] == sl.EOS
+
+    def test_summary_copies_verbatim(self, lang):
+        """The summary continuation must appear verbatim in the prompt —
+        the property that makes PLD strong on this category."""
+        rng = sl.SplitMix64(5)
+        for _ in range(10):
+            s = sl.gen_sample(lang, "summary", rng)
+            body = s.target[:-1]  # strip EOS
+            p = "," .join(map(str, s.prompt))
+            # first copied sentence is a contiguous prompt substring
+            first_period = body.index(sl.PERIOD)
+            frag = ",".join(map(str, body[: first_period + 1]))
+            assert frag in p
+
+    def test_translation_no_prompt_overlap(self, lang):
+        rng = sl.SplitMix64(6)
+        s = sl.gen_sample(lang, "translation", rng)
+        assert not (set(s.target) - {sl.EOS}) & set(s.prompt)
+
+    def test_rag_answer_from_prompt(self, lang):
+        rng = sl.SplitMix64(8)
+        for _ in range(10):
+            s = sl.gen_sample(lang, "rag", rng)
+            p = ",".join(map(str, s.prompt))
+            frag = ",".join(map(str, s.target[:-1]))
+            assert frag in p
+
+    def test_math_sums_correct(self, lang):
+        rng = sl.SplitMix64(11)
+        s = sl.gen_sample(lang, "math", rng)
+        # parse target: a PLUS b EQUALS c PERIOD ...
+        toks = s.target[:-1]
+        i = 0
+        nchecked = 0
+        while i < len(toks):
+            j = toks.index(sl.PERIOD, i)
+            seg = toks[i:j]
+            plus, eq = seg.index(sl.PLUS), seg.index(sl.EQUALS)
+            num = lambda ds: int("".join(str(d - sl.DIGIT0) for d in ds))  # noqa: E731
+            assert num(seg[:plus]) + num(seg[plus + 1:eq]) == num(seg[eq + 1:])
+            nchecked += 1
+            i = j + 1
+        assert nchecked >= 3
+
+    def test_prompt_lengths_bounded(self, lang):
+        """Prompts must fit the serving budget (see rust config: prompt<=224)."""
+        rng = sl.SplitMix64(13)
+        for cat in sl.CATEGORIES:
+            for _ in range(50):
+                s = sl.gen_sample(lang, cat, rng)
+                assert len(s.prompt) <= 224, (cat, len(s.prompt))
+
+
+class TestCheckFixture:
+    def test_emit_stable(self, lang):
+        a = sl.emit_check_samples(lang)
+        b = sl.emit_check_samples(lang)
+        assert a == b
+        assert set(a["samples"]) == set(sl.CATEGORIES)
+
+    def test_fnv_hash(self):
+        # FNV-1a 64 of "mtbench" — fixed reference for the rust mirror
+        assert sl.hash_category("") == 0xCBF29CE484222325
+        h = sl.hash_category("a")
+        assert h == ((0xCBF29CE484222325 ^ 0x61) * 0x100000001B3) % (1 << 64)

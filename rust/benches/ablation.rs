@@ -1,0 +1,73 @@
+//! Ablations over DyTC's design choices (DESIGN.md §6 experiment index):
+//! the Eq.-5 horizon term's hyper-parameters and the draft-config set.
+//!
+//!   * k_max  — max draft length per expansion (paper default 5)
+//!   * t_min  — expansion stop threshold (paper default 1.1)
+//!   * config set — PLD-only vs +ls60 vs +ls40 vs full (+VC composites)
+//!
+//! Losslessness is invariant to all of these (asserted by tests/lossless);
+//! only throughput moves. Usage:
+//!   cargo bench --bench ablation [-- --scale base --n 1 --max-new 48]
+
+use cas_spec::engine::EngineOpts;
+use cas_spec::harness::run_suite;
+use cas_spec::model::Variant;
+use cas_spec::runtime::Runtime;
+use cas_spec::util::cli::Args;
+use cas_spec::util::table::Table;
+use cas_spec::workload::{Language, Suite};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.str_or("scale", "base").to_string();
+    let n = args.usize_or("n", 1)?;
+    let max_new = args.usize_or("max-new", 32)?;
+
+    let rt = Runtime::open(&Runtime::default_dir())?;
+    let srt = rt.load_scale(&scale, &Variant::ALL)?;
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, args.u64_or("seed", 42)?, n, max_new);
+    let engines = vec!["cas-spec".to_string()];
+
+    let mut t = Table::new(
+        &format!("DyTC ablations — overall speedup vs AR (scale={scale})"),
+        &["knob", "value", "speedup"],
+    );
+
+    for k_max in [1usize, 5, 8] {
+        let mut opts = EngineOpts::default();
+        opts.dytc.k_max = k_max;
+        let run = run_suite(&srt, &suite, &engines, &opts, false, false)?;
+        t.row(vec![
+            "k_max".into(),
+            k_max.to_string(),
+            format!("{:.3}", run.overall_speedup("cas-spec").unwrap_or(0.0)),
+        ]);
+    }
+    for t_min in [0.5f64, 1.1, 3.0] {
+        let mut opts = EngineOpts::default();
+        opts.dytc.t_min = t_min;
+        let run = run_suite(&srt, &suite, &engines, &opts, false, false)?;
+        t.row(vec![
+            "t_min".into(),
+            format!("{t_min}"),
+            format!("{:.3}", run.overall_speedup("cas-spec").unwrap_or(0.0)),
+        ]);
+    }
+    for m_tree in [4usize, 16] {
+        let mut opts = EngineOpts::default();
+        opts.dytc.m_tree_max = m_tree;
+        let run = run_suite(&srt, &suite, &engines, &opts, false, false)?;
+        t.row(vec![
+            "M_tree_max".into(),
+            m_tree.to_string(),
+            format!("{:.3}", run.overall_speedup("cas-spec").unwrap_or(0.0)),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!(
+        "(config-set ablation: compare `pld` vs `cas-spec` vs `cas-spec+` in table1 —\n\
+         the engine names ARE the config-set ladder: PLD-only / +ls40+ls60+VC / +ee)"
+    );
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Figures 1b/1c: theoretical effective bounds for an intermediate draft
+//! model in a vertical (1b) / horizontal (1c) cascade over a near-free
+//! statistical bottom draft, plus measured SWIFT-style (α, c) operating
+//! points from this stack overlaid against the bound.
+//!
+//! The borderline is max c(M_t, M_d1) such that the cascade still beats SD
+//! with the bottom model alone, both at optimal integer hyper-parameters
+//! (Eq. 3 — solved numerically, as in the paper). Points *above* the curve
+//! (cost too high for their acceptance rate) do not help a naive cascade —
+//! which is where the paper finds SWIFT, motivating DyTC.
+//!
+//! Usage: cargo bench --bench fig1bc [-- --alpha-d2 0.3 --points 10
+//!         --measure --scale small]
+
+use cas_spec::analytic::{greedy_counterexample, sweep};
+use cas_spec::engine::EngineOpts;
+use cas_spec::harness::run_suite;
+use cas_spec::model::Variant;
+use cas_spec::runtime::Runtime;
+use cas_spec::util::cli::Args;
+use cas_spec::util::table::Table;
+use cas_spec::workload::{Language, Suite, CATEGORIES};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let c_d2 = args.f64_or("c-d2", 0.01)?;
+    let points = args.usize_or("points", 10)?;
+
+    for alpha_d2 in [0.2, 0.3, 0.4] {
+        let mut t = Table::new(
+            &format!("Fig. 1b/1c — effective bound on c_d1 (alpha_d2={alpha_d2}, c_d2={c_d2})"),
+            &["alpha(Mt,Md1)", "max c_d1 VC (1b)", "max c_d1 HC (1c)"],
+        );
+        for p in sweep(alpha_d2, c_d2, points) {
+            t.row(vec![
+                format!("{:.3}", p.alpha_t_d1),
+                format!("{:.4}", p.c_d1_max_vc),
+                format!("{:.4}", p.c_d1_max_hc),
+            ]);
+        }
+        println!("{}", t.to_text());
+    }
+
+    let (greedy, hc) = greedy_counterexample();
+    println!(
+        "§4.2 greedy-choice counterexample: greedy EWIF {greedy:.3} < cascade EWIF {hc:.3}\n"
+    );
+
+    // ---- measured SWIFT-style operating points (the Fig. 1b scatter) ----
+    if args.has("measure") {
+        let scale = args.str_or("scale", "small").to_string();
+        let rt = Runtime::open(&Runtime::default_dir())?;
+        let srt = rt.load_scale(&scale, &[Variant::Target, Variant::Ls40])?;
+        let lang = Language::build(rt.manifest.lang_seed);
+        let suite = Suite::spec_bench(&lang, 42, 2, 40);
+        let run = run_suite(
+            &srt,
+            &suite,
+            &["swift".to_string()],
+            &EngineOpts::default(),
+            false,
+            false,
+        )?;
+        // c from runtime counters; α from per-category round acceptance
+        let tc = srt.counters(Variant::Target);
+        let dc = srt.counters(Variant::Ls40);
+        let c = (dc.time.as_secs_f64() / dc.steps.max(1) as f64)
+            / (tc.time.as_secs_f64() / tc.steps.max(1) as f64);
+        let mut t = Table::new(
+            &format!("measured ls40 operating points (scale={scale}, c≈{c:.3})"),
+            &["category", "alpha (first-token)", "c", "above VC bound?"],
+        );
+        let rep = &run.reports["swift"];
+        for cat in CATEGORIES {
+            // first-token acceptance ≈ fraction of rounds accepting ≥ 1
+            // drafted token (beyond the bonus)
+            let (mut hits, mut rounds) = (0usize, 0usize);
+            for r in rep.records.iter().filter(|r| r.category == cat) {
+                for &n in &r.stats.tokens_per_round {
+                    rounds += 1;
+                    if n >= 2 {
+                        hits += 1;
+                    }
+                }
+            }
+            let alpha = hits as f64 / rounds.max(1) as f64;
+            let bound = cas_spec::analytic::vc_borderline(alpha, 0.3, 0.01);
+            t.row(vec![
+                cat.to_string(),
+                format!("{alpha:.3}"),
+                format!("{c:.3}"),
+                if c > bound { "ABOVE (cascade won't pay off)" } else { "below" }
+                    .to_string(),
+            ]);
+        }
+        println!("{}", t.to_text());
+    } else {
+        println!("(pass --measure to overlay measured SWIFT operating points)");
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Figure 3: speedup of the cascade/tree ablations relative to AR, with the
+//! AR (1.0) and PLD reference lines — the DyTC-vs-static-scheduling story.
+//!
+//! Paper reference (Vicuna-7B): LS ≈ 1.02, VC ≈ 1.1, HC ≈ 1.15,
+//! VC+HC ≈ 1.21, Tr ≈ 1.42, Tr+VC ≈ 1.51, DyTC ≈ 2.09; PLD line at 1.54.
+//! Headline deltas: DyTC +47% over Tr(SWIFT), +73% over VC+HC.
+//!
+//! Usage: cargo bench --bench fig3 [-- --scale small --n 2 --max-new 48]
+
+use cas_spec::engine::EngineOpts;
+use cas_spec::harness::run_suite;
+use cas_spec::model::Variant;
+use cas_spec::runtime::Runtime;
+use cas_spec::util::cli::Args;
+use cas_spec::util::table::Table;
+use cas_spec::workload::{Language, Suite};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.str_or("scale", "base").to_string();
+    let n = args.usize_or("n", 1)?;
+    let max_new = args.usize_or("max-new", 48)?;
+
+    // LS = swift (layer-sparse chain, no tree); the Fig. 3 ablation ladder
+    let engines: Vec<String> =
+        ["pld", "swift", "vc", "hc", "vchc", "tr", "trvc", "cas-spec"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+
+    let rt = Runtime::open(&Runtime::default_dir())?;
+    let srt = rt.load_scale(&scale, &Variant::ALL)?;
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, args.u64_or("seed", 42)?, n, max_new);
+    let run = run_suite(&srt, &suite, &engines, &EngineOpts::default(), false, false)?;
+
+    let label = |e: &'static str| -> &'static str { match e {
+        "swift" => "LS (SWIFT)",
+        "vc" => "VC",
+        "hc" => "HC",
+        "vchc" => "VC+HC",
+        "tr" => "Tr",
+        "trvc" => "Tr+VC",
+        "cas-spec" => "DyTC (CAS-Spec)",
+        "pld" => "PLD (reference)",
+        other => other,
+    }};
+    let mut t = Table::new(
+        &format!("Fig. 3 — speedup relative to AR (scale={scale})"),
+        &["Method", "Speedup", "Bar"],
+    );
+    t.row(vec!["AR (baseline)".into(), "1.000".into(), bar(1.0)]);
+    let order = ["pld", "swift", "vc", "hc", "vchc", "tr", "trvc", "cas-spec"];
+    let mut dytc = 0.0;
+    let mut tr = 0.0;
+    let mut vchc = 0.0;
+    for e in order {
+        let s = run.overall_speedup(e).unwrap_or(0.0);
+        match e {
+            "cas-spec" => dytc = s,
+            "tr" => tr = s,
+            "vchc" => vchc = s,
+            _ => {}
+        }
+        t.row(vec![label(e).into(), format!("{s:.3}"), bar(s)]);
+    }
+    println!("{}", t.to_text());
+    if tr > 0.0 && vchc > 0.0 {
+        println!(
+            "DyTC vs Tr (tree baseline):   {:+.1}%  (paper: +47%)",
+            (dytc / tr - 1.0) * 100.0
+        );
+        println!(
+            "DyTC vs VC+HC (cascade base): {:+.1}%  (paper: +73%)",
+            (dytc / vchc - 1.0) * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn bar(x: f64) -> String {
+    "#".repeat((x * 20.0).round().max(0.0) as usize)
+}

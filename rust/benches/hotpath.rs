@@ -1,0 +1,138 @@
+//! Hot-path microbenchmarks: per-(variant, step-shape) step latency, commit
+//! latency, PLD matcher throughput, and the L3 overhead split.
+//!
+//! This is the measurement harness behind EXPERIMENTS.md §Perf: it tells us
+//! where a step's time goes (XLA compute vs KV shuttle vs host bookkeeping)
+//! and what the realized cost coefficients ĉ(variant) are — the quantity
+//! the whole paper's economics runs on.
+//!
+//! Usage: cargo bench --bench hotpath [-- --scale base --reps 30]
+
+use std::time::Instant;
+
+use cas_spec::model::Variant;
+use cas_spec::pld::PldMatcher;
+use cas_spec::runtime::{Runtime, STEP_SHAPES};
+use cas_spec::spec::DraftTree;
+use cas_spec::util::cli::Args;
+use cas_spec::util::rng::SplitMix64;
+use cas_spec::util::table::Table;
+use cas_spec::workload::Language;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.str_or("scale", "small").to_string();
+    let reps = args.usize_or("reps", 12)?;
+
+    let rt = Runtime::open(&Runtime::default_dir())?;
+    let srt = rt.load_scale(&scale, &Variant::ALL)?;
+
+    // ---- step latency per (variant, T) ----
+    let mut t = Table::new(
+        &format!("step latency (ms) — scale={scale}, reps={reps}"),
+        &["variant", "T=1", "T=8", "T=16", "T=64", "c (T=1 vs target)"],
+    );
+    let mut target_t1 = 0.0;
+    for v in Variant::ALL {
+        let mut row = vec![v.key().to_string()];
+        let mut t1 = 0.0;
+        for t_shape in STEP_SHAPES {
+            let mut kv = srt.new_kv(v)?;
+            // put some context in the cache so attention is realistic
+            let warm: Vec<u32> = (0..128u32).map(|i| 26 + (i * 7) % 240).collect();
+            feed(&srt, &mut kv, &warm)?;
+            let tree = DraftTree::chain(1, &vec![30; t_shape - 1], t_shape.max(1));
+            let (toks, mask, depths) = tree.serialize(t_shape, 0);
+            // warmup
+            for _ in 0..3 {
+                let pos0 = kv.pos;
+                srt.step(&mut kv, t_shape, &toks, &mask, &depths)?;
+                srt.rollback(&mut kv, pos0);
+            }
+            let start = Instant::now();
+            for _ in 0..reps {
+                let pos0 = kv.pos;
+                srt.step(&mut kv, t_shape, &toks, &mask, &depths)?;
+                srt.rollback(&mut kv, pos0);
+            }
+            let ms = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+            if t_shape == 1 {
+                t1 = ms;
+                if v == Variant::Target {
+                    target_t1 = ms;
+                }
+            }
+            row.push(format!("{ms:.2}"));
+        }
+        row.push(format!("{:.3}", t1 / target_t1.max(1e-9)));
+        t.row(row);
+    }
+    println!("{}", t.to_text());
+
+    // ---- commit (gather) latency ----
+    let mut t = Table::new("commit16 latency (ms)", &["variant", "gather", "fast-path"]);
+    for v in Variant::ALL {
+        let mut kv = srt.new_kv(v)?;
+        let warm: Vec<u32> = (0..64u32).map(|i| 26 + (i * 5) % 240).collect();
+        feed(&srt, &mut kv, &warm)?;
+        let tree = DraftTree::chain(1, &[30; 15], 16);
+        let (toks, mask, depths) = tree.serialize(16, 0);
+        let start = Instant::now();
+        for _ in 0..reps {
+            let pos0 = kv.pos;
+            srt.step(&mut kv, 16, &toks, &mask, &depths)?;
+            srt.commit(&mut kv, 16, &[0, 2, 3])?; // non-contiguous -> gather
+            srt.rollback(&mut kv, pos0);
+        }
+        let gather = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let start = Instant::now();
+        for _ in 0..reps {
+            let pos0 = kv.pos;
+            srt.step(&mut kv, 16, &toks, &mask, &depths)?;
+            srt.commit(&mut kv, 16, &[0, 1, 2])?; // contiguous fast path
+            srt.rollback(&mut kv, pos0);
+        }
+        let fast = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        t.row(vec![v.key().into(), format!("{gather:.2}"), format!("{fast:.2}")]);
+    }
+    println!("{}", t.to_text());
+
+    // ---- PLD matcher throughput ----
+    let lang = Language::build(rt.manifest.lang_seed);
+    let mut rng = SplitMix64::new(7);
+    let sample = cas_spec::workload::gen_sample(&lang, "summary", &mut rng);
+    let start = Instant::now();
+    let mut proposals = 0usize;
+    let n_iters = 2000;
+    for i in 0..n_iters {
+        let mut m = PldMatcher::new(&sample.prompt);
+        m.extend(&sample.target[..sample.target.len().min(1 + i % 16)]);
+        if m.propose(15).is_some() {
+            proposals += 1;
+        }
+    }
+    let us = start.elapsed().as_secs_f64() * 1e6 / n_iters as f64;
+    println!(
+        "PLD: build+extend+propose {us:.1} µs/round ({proposals}/{n_iters} hits) \
+         -> c_dn ≈ {:.5} of a target step\n",
+        us / 1e3 / target_t1.max(1e-9)
+    );
+    Ok(())
+}
+
+/// Minimal chain feed (mirrors VariantSession::feed without logits copies).
+fn feed(
+    srt: &cas_spec::runtime::ScaleRuntime,
+    kv: &mut cas_spec::runtime::KvCache,
+    tokens: &[u32],
+) -> anyhow::Result<()> {
+    for chunk in tokens.chunks(64) {
+        let t_shape = if chunk.len() == 64 { 64 } else { 16 };
+        let tree = DraftTree::chain(chunk[0], &chunk[1..], t_shape.max(chunk.len()));
+        let (toks, mask, depths) = tree.serialize(t_shape, 0);
+        srt.step(kv, t_shape, &toks, &mask, &depths)?;
+        let slots: Vec<usize> = (0..chunk.len()).collect();
+        srt.commit(kv, t_shape, &slots)?;
+    }
+    Ok(())
+}

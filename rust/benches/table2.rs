@@ -1,0 +1,126 @@
+//! Table 2: training-free methods (measured on the real stack) vs trained
+//! comparators (discrete-event simulation at their published operating
+//! points — we cannot train Medusa/EAGLE heads here; see DESIGN.md
+//! §Substitutions). Columns: #Mean accepted tokens, Speedup.
+//!
+//! Paper reference (Vicuna-7B): PLD 1.75/1.54x, SWIFT 3.01/1.06x,
+//! CAS-Spec 3.43/1.58x, SD(68m) 2.27/1.44x, Medusa 2.39/1.69x,
+//! EAGLE 3.57/2.05x, EAGLE2 4.36/2.21x.
+//!
+//! For each trained row the draft-head acceptance α is *calibrated* so the
+//! simulated mean-accepted-tokens matches the published value; the speedup
+//! then EMERGES from the simulation and is validated against the published
+//! number (printed side by side).
+//!
+//! Usage: cargo bench --bench table2 [-- --scale small --n 2 --max-new 48]
+
+use cas_spec::analytic::{simulate, Scheme};
+use cas_spec::engine::EngineOpts;
+use cas_spec::harness::run_suite;
+use cas_spec::model::Variant;
+use cas_spec::runtime::Runtime;
+use cas_spec::util::cli::Args;
+use cas_spec::util::table::Table;
+use cas_spec::workload::{Language, Suite};
+
+/// Published operating points of the trained comparators:
+/// (name, draft shape, per-call draft cost, published MAT, published speedup).
+struct TrainedRow {
+    name: &'static str,
+    depth: usize,
+    paths: usize,
+    c_total: f64,
+    published_mat: f64,
+    published_speedup: f64,
+}
+
+const TRAINED: [TrainedRow; 4] = [
+    // vanilla SD with a 68m draft: chain of 5, cost ≈ 5 × 1%
+    TrainedRow { name: "SD (Vicuna 68m) [sim]", depth: 5, paths: 1, c_total: 0.28,
+                 published_mat: 2.27, published_speedup: 1.44 },
+    // Medusa: 4 heads, ~64-candidate tree, heads ≈ free but wide verify
+    TrainedRow { name: "Medusa [sim]", depth: 4, paths: 8, c_total: 0.40,
+                 published_mat: 2.39, published_speedup: 1.69 },
+    // EAGLE: autoregressive feature head, deeper tree
+    TrainedRow { name: "EAGLE [sim]", depth: 6, paths: 4, c_total: 0.72,
+                 published_mat: 3.57, published_speedup: 2.05 },
+    // EAGLE-2: dynamic draft tree
+    TrainedRow { name: "EAGLE2 [sim]", depth: 7, paths: 6, c_total: 0.95,
+                 published_mat: 4.36, published_speedup: 2.21 },
+];
+
+/// Bisect the per-token acceptance α so the simulated mean accepted tokens
+/// matches `target_mat`.
+fn calibrate_alpha(depth: usize, paths: usize, c_total: f64, target_mat: f64) -> f64 {
+    let (mut lo, mut hi) = (0.01f64, 0.995f64);
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        let mat = simulate(
+            Scheme::Tree { alpha: mid, c_total, depth, paths },
+            30_000,
+            99,
+        )
+        .mean_accepted;
+        if mat < target_mat {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.str_or("scale", "base").to_string();
+    let n = args.usize_or("n", 1)?;
+    let max_new = args.usize_or("max-new", 48)?;
+
+    // ---- measured rows (real execution) ----
+    let rt = Runtime::open(&Runtime::default_dir())?;
+    let srt = rt.load_scale(&scale, &Variant::ALL)?;
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, args.u64_or("seed", 42)?, n, max_new);
+    let engines: Vec<String> =
+        ["pld", "swift", "cas-spec"].iter().map(|s| s.to_string()).collect();
+    let run = run_suite(&srt, &suite, &engines, &EngineOpts::default(), false, false)?;
+
+    let mut t = Table::new(
+        &format!("Table 2 — training-free (measured, scale={scale}) vs trained (simulated)"),
+        &["Method", "Training-Free", "#Mean accepted", "Speedup", "paper MAT", "paper speedup"],
+    );
+    let paper = [("pld", 1.75, 1.54), ("swift", 3.01, 1.06), ("cas-spec", 3.43, 1.58)];
+    for (e, pm, ps) in paper {
+        let rep = &run.reports[e];
+        let s = run.overall_speedup(e).unwrap_or(0.0);
+        t.row(vec![
+            e.to_string(),
+            "Yes".into(),
+            format!("{:.2}", rep.mean_accepted()),
+            format!("{s:.2}x"),
+            format!("{pm:.2}"),
+            format!("{ps:.2}x"),
+        ]);
+    }
+
+    // ---- simulated trained rows ----
+    for row in &TRAINED {
+        let alpha = calibrate_alpha(row.depth, row.paths, row.c_total, row.published_mat);
+        let sim = simulate(
+            Scheme::Tree { alpha, c_total: row.c_total, depth: row.depth, paths: row.paths },
+            60_000,
+            7,
+        );
+        t.row(vec![
+            row.name.into(),
+            "No".into(),
+            format!("{:.2}", sim.mean_accepted),
+            format!("{:.2}x", sim.speedup),
+            format!("{:.2}", row.published_mat),
+            format!("{:.2}x", row.published_speedup),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!("{}", t.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Theoretical effective bounds for cascade speculative decoding
+//! (paper §3, Fig. 1b/1c).
+//!
+//! Question answered: given a bottom draft M_d2 (retrieval-based,
+//! c_d2 ≈ 0.01), how expensive may an intermediate draft M_d1 be (cost
+//! coefficient c_d1) before cascading it stops beating SD with M_d2 alone?
+//! Both sides are compared at their *optimal* integer hyper-parameters
+//! (Eq. 3) — no closed form exists, so the borderline is found numerically
+//! by bisection on c_d1, exactly like the paper's simulation.
+
+use super::ewif::{t_hc_opt, t_sd_opt, t_vc_opt};
+
+/// Hyper-parameter grid caps for the Eq. 3 maximizations.
+pub const N_CAP: usize = 8;
+pub const K_CAP: usize = 16;
+
+/// Borderline c_d1 for the *vertical* cascade (Fig. 1b): the largest cost
+/// coefficient at which max_{n,k} T_VC still matches max_k0 T_SD(M_d2).
+/// The paper assumes α(M_t, M_d2) = α(M_d1, M_d2) = `alpha_d2`.
+pub fn vc_borderline(alpha_t_d1: f64, alpha_d2: f64, c_d2: f64) -> f64 {
+    let baseline = t_sd_opt(alpha_d2, c_d2, K_CAP).0;
+    bisect(|c1| t_vc_opt(alpha_t_d1, alpha_d2, c1, c_d2, N_CAP, K_CAP) - baseline)
+}
+
+/// Borderline c_d1 for the *horizontal* cascade (Fig. 1c).
+pub fn hc_borderline(alpha_t_d1: f64, alpha_d2: f64, c_d2: f64) -> f64 {
+    let baseline = t_sd_opt(alpha_d2, c_d2, K_CAP).0;
+    bisect(|c1| t_hc_opt(alpha_t_d1, alpha_d2, c1, c_d2, K_CAP) - baseline)
+}
+
+/// Find the largest c1 in (0, 1] where f(c1) >= 0 (f decreasing in c1).
+fn bisect(f: impl Fn(f64) -> f64) -> f64 {
+    if f(1.0) >= 0.0 {
+        return 1.0;
+    }
+    if f(1e-4) < 0.0 {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (1e-4, 1.0);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) >= 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// One point of the Fig. 1b/1c curves.
+#[derive(Debug, Clone)]
+pub struct BoundPoint {
+    pub alpha_t_d1: f64,
+    pub c_d1_max_vc: f64,
+    pub c_d1_max_hc: f64,
+}
+
+/// Sweep α(M_t, M_d1) over a grid and compute both borderlines.
+pub fn sweep(alpha_d2: f64, c_d2: f64, points: usize) -> Vec<BoundPoint> {
+    (0..points)
+        .map(|i| {
+            let a = 0.05 + 0.9 * i as f64 / (points - 1) as f64;
+            BoundPoint {
+                alpha_t_d1: a,
+                c_d1_max_vc: vc_borderline(a, alpha_d2, c_d2),
+                c_d1_max_hc: hc_borderline(a, alpha_d2, c_d2),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn borderline_monotone_in_alpha() {
+        // a better intermediate draft tolerates a higher cost
+        let lo = vc_borderline(0.4, 0.3, 0.01);
+        let hi = vc_borderline(0.9, 0.3, 0.01);
+        assert!(hi > lo, "vc: {hi} !> {lo}");
+        let lo = hc_borderline(0.4, 0.3, 0.01);
+        let hi = hc_borderline(0.9, 0.3, 0.01);
+        assert!(hi > lo, "hc: {hi} !> {lo}");
+    }
+
+    #[test]
+    fn borderline_in_unit_interval() {
+        for a in [0.1, 0.5, 0.9] {
+            for b in [vc_borderline(a, 0.3, 0.01), hc_borderline(a, 0.3, 0.01)] {
+                assert!((0.0..=1.0).contains(&b));
+            }
+        }
+    }
+
+    #[test]
+    fn weak_intermediate_must_be_nearly_free() {
+        // α(M_t, M_d1) barely above the bottom's: tolerated cost is small
+        let b = vc_borderline(0.32, 0.3, 0.01);
+        assert!(b < 0.2, "b={b}");
+    }
+
+    #[test]
+    fn bound_is_tight() {
+        // just inside the borderline the cascade wins; just outside it loses
+        use crate::analytic::ewif::{t_sd_opt, t_vc_opt};
+        let (a, a2, c2) = (0.8, 0.3, 0.01);
+        let b = vc_borderline(a, a2, c2);
+        if b > 0.01 && b < 0.99 {
+            let base = t_sd_opt(a2, c2, K_CAP).0;
+            assert!(t_vc_opt(a, a2, b * 0.9, c2, N_CAP, K_CAP) >= base * 0.999);
+            assert!(t_vc_opt(a, a2, b * 1.1, c2, N_CAP, K_CAP) <= base * 1.001);
+        }
+    }
+
+    #[test]
+    fn sweep_has_requested_points() {
+        let pts = sweep(0.3, 0.01, 5);
+        assert_eq!(pts.len(), 5);
+        assert!(pts.windows(2).all(|w| w[0].alpha_t_d1 < w[1].alpha_t_d1));
+    }
+}

@@ -1,0 +1,194 @@
+//! Expected walltime improvement factor (EWIF) — closed forms and a
+//! Monte-Carlo cross-check (paper §3, Eq. 1–3; CS-Drafting Thm. 4.2/4.5).
+//!
+//! Conventions (matching the paper):
+//!   * `alpha` — expected acceptance rate, i.i.d. Bernoulli per token;
+//!   * `c` — cost coefficient: draft forward time / target forward time;
+//!   * one target forward per verification round costs 1.
+//!
+//! Every closed form is property-tested against the simulator in
+//! `analytic::sim` (they must agree to MC error), which is also the
+//! machinery behind the Fig. 1b/1c bounds and the Table 2 trained-method
+//! rows.
+
+/// EWIF of vanilla speculative decoding with draft length k:
+/// (1 − α^{k+1}) / ((1 − α)(ck + 1)).
+pub fn t_sd(alpha: f64, c: f64, k: usize) -> f64 {
+    let a = alpha.clamp(1e-9, 1.0 - 1e-9);
+    (1.0 - a.powi(k as i32 + 1)) / ((1.0 - a) * (c * k as f64 + 1.0))
+}
+
+/// Expected tokens per SD round (accepted + bonus): (1-α^{k+1})/(1-α).
+pub fn sd_tokens_per_round(alpha: f64, k: usize) -> f64 {
+    let a = alpha.clamp(1e-9, 1.0 - 1e-9);
+    (1.0 - a.powi(k as i32 + 1)) / (1.0 - a)
+}
+
+/// Probability-generating function of the token count of ONE inner SD round
+/// (accepted ~ min(Geom(α), k), +1 bonus): φ(x) = Σ_m P(m) x^m, m ∈ 1..=k+1.
+pub fn round_pgf(alpha_inner: f64, k: usize, x: f64) -> f64 {
+    let a = alpha_inner.clamp(0.0, 1.0);
+    let mut out = 0.0;
+    for m in 1..=k {
+        // m tokens = (m-1) accepted then a reject, +1 bonus
+        out += a.powi(m as i32 - 1) * (1.0 - a) * x.powi(m as i32);
+    }
+    out += a.powi(k as i32) * x.powi(k as i32 + 1); // all k accepted, +1 bonus
+    out
+}
+
+/// EWIF of a two-level vertical cascade (Eq. 1): the intermediate draft
+/// M_d1 runs n inner SD rounds (drafting with M_d2, inner length k) to
+/// build the chain the target verifies.
+///
+/// T_VC = (1 − α·φ(α)^n) / ((1 − α)(1 + n·c_d1 + n·k·c_d2))
+/// with α = α(M_t, M_d1) and φ the inner-round token pgf.
+pub fn t_vc(alpha_t_d1: f64, alpha_d1_d2: f64, c_d1: f64, c_d2: f64, n: usize, k: usize) -> f64 {
+    let a = alpha_t_d1.clamp(1e-9, 1.0 - 1e-9);
+    let phi = round_pgf(alpha_d1_d2, k, a);
+    (1.0 - a * phi.powi(n as i32))
+        / ((1.0 - a) * (1.0 + n as f64 * c_d1 + (n * k) as f64 * c_d2))
+}
+
+/// EWIF of a two-model horizontal cascade (Eq. 2): first k1 chain tokens
+/// from M_d1, the next k2 from M_d2; one target verification.
+pub fn t_hc(
+    alpha_d1: f64,
+    alpha_d2: f64,
+    c_d1: f64,
+    c_d2: f64,
+    k1: usize,
+    k2: usize,
+) -> f64 {
+    let a1 = alpha_d1.clamp(1e-9, 1.0 - 1e-9);
+    let a2 = alpha_d2.clamp(1e-9, 1.0 - 1e-9);
+    let head = (1.0 - a1.powi(k1 as i32 + 1)) / (1.0 - a1);
+    let tail = a1.powi(k1 as i32) * a2 * (1.0 - a2.powi(k2 as i32)) / (1.0 - a2);
+    (head + tail) / (1.0 + k1 as f64 * c_d1 + k2 as f64 * c_d2)
+}
+
+/// max_k T_SD over k ∈ 1..=k_cap (Eq. 3 RHS).
+pub fn t_sd_opt(alpha: f64, c: f64, k_cap: usize) -> (f64, usize) {
+    let mut best = (f64::NEG_INFINITY, 1);
+    for k in 1..=k_cap {
+        let v = t_sd(alpha, c, k);
+        if v > best.0 {
+            best = (v, k);
+        }
+    }
+    best
+}
+
+/// max_{n,k} T_VC (Eq. 3 LHS, vertical).
+pub fn t_vc_opt(
+    alpha_t_d1: f64,
+    alpha_d1_d2: f64,
+    c_d1: f64,
+    c_d2: f64,
+    n_cap: usize,
+    k_cap: usize,
+) -> f64 {
+    let mut best = f64::NEG_INFINITY;
+    for n in 1..=n_cap {
+        for k in 1..=k_cap {
+            best = best.max(t_vc(alpha_t_d1, alpha_d1_d2, c_d1, c_d2, n, k));
+        }
+    }
+    best
+}
+
+/// max_{k1,k2} T_HC (Eq. 3 LHS, horizontal).
+pub fn t_hc_opt(
+    alpha_d1: f64,
+    alpha_d2: f64,
+    c_d1: f64,
+    c_d2: f64,
+    k_cap: usize,
+) -> f64 {
+    let mut best = f64::NEG_INFINITY;
+    for k1 in 1..=k_cap {
+        for k2 in 0..=k_cap {
+            let v = if k2 == 0 {
+                t_sd(alpha_d1, c_d1, k1)
+            } else {
+                t_hc(alpha_d1, alpha_d2, c_d1, c_d2, k1, k2)
+            };
+            best = best.max(v);
+        }
+    }
+    best
+}
+
+/// The §4.2 worked example: greedy per-step choice is suboptimal.
+/// Returns (greedy_ewif, hc_ewif) for M1(α=.9,c=.4), M2(α=.8,c=.3).
+pub fn greedy_counterexample() -> (f64, f64) {
+    // Greedy picks M2 every step (local speedup 2.67 > 2.25); its EWIF at
+    // its own best k is below the horizontal cascade of M1 then M2.
+    let greedy = t_sd_opt(0.8, 0.3, 10).0;
+    let hc = t_hc_opt(0.9, 0.8, 0.4, 0.3, 10);
+    (greedy, hc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t_sd_known_values() {
+        // α=0.8, c=0.1, k=4: (1-0.8^5)/(0.2*1.4) = 0.67232/0.28
+        assert!((t_sd(0.8, 0.1, 4) - 0.67232 / 0.28).abs() < 1e-9);
+        // k=0 degenerates to 1 (just the bonus token per step)
+        assert!((t_sd(0.5, 0.3, 0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pgf_is_probability_at_one() {
+        for a in [0.1, 0.5, 0.9] {
+            for k in [1, 3, 8] {
+                assert!((round_pgf(a, k, 1.0) - 1.0).abs() < 1e-9, "a={a} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn pgf_mean_matches_expected_tokens() {
+        // φ'(1) = E[m]; finite-difference check
+        let (a, k) = (0.7, 5);
+        let h = 1e-6;
+        let deriv = (round_pgf(a, k, 1.0 + h) - round_pgf(a, k, 1.0 - h)) / (2.0 * h);
+        assert!((deriv - sd_tokens_per_round(a, k)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn hc_reduces_to_sd_when_tail_free() {
+        // k2=0 handled in t_hc_opt; direct: with α2 -> 0 the tail adds 0
+        // acceptance but k2·c2 cost, so HC ≤ SD at equal k1.
+        let sd = t_sd(0.8, 0.2, 4);
+        let hc = t_hc(0.8, 1e-9, 0.2, 0.05, 4, 3);
+        assert!(hc < sd);
+    }
+
+    #[test]
+    fn vc_beats_sd_with_cheap_good_bottom() {
+        // A free, decent bottom draft should help a mid-cost intermediate.
+        let sd = t_sd_opt(0.8, 0.01, 16).0; // PLD alone (α 0.8 here)
+        let vc = t_vc_opt(0.9, 0.8, 0.1, 0.01, 8, 8);
+        assert!(vc > sd * 0.9, "vc={vc} sd={sd}");
+    }
+
+    #[test]
+    fn greedy_counterexample_direction() {
+        let (greedy, hc) = greedy_counterexample();
+        assert!(
+            hc > greedy,
+            "horizontal cascade must beat greedy single-model: {hc} vs {greedy}"
+        );
+    }
+
+    #[test]
+    fn optima_within_grid() {
+        let (v, k) = t_sd_opt(0.9, 0.05, 32);
+        assert!(k > 1 && k <= 32);
+        assert!(v > 1.0);
+    }
+}

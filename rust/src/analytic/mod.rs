@@ -1,0 +1,13 @@
+//! Analytic machinery for the paper's theory section: EWIF closed forms
+//! (Eq. 1–2), optimal-hyperparameter comparisons (Eq. 3), the Fig. 1b/1c
+//! effective-bound solver, and the Monte-Carlo simulator used both to
+//! validate the formulas and to position the trained comparators of
+//! Table 2.
+
+pub mod bounds;
+pub mod ewif;
+pub mod sim;
+
+pub use bounds::{hc_borderline, sweep, vc_borderline, BoundPoint};
+pub use ewif::{greedy_counterexample, t_hc, t_hc_opt, t_sd, t_sd_opt, t_vc, t_vc_opt};
+pub use sim::{simulate, Scheme, SimResult};

@@ -1,0 +1,175 @@
+//! Monte-Carlo speculative-decoding simulator.
+//!
+//! Two jobs:
+//!   1. cross-validate the closed-form EWIF expressions (property tests);
+//!   2. reproduce Table 2's *trained* comparator rows (Medusa, EAGLE/2,
+//!      Vicuna-68m SD): we cannot train those draft heads here, so their
+//!      published operating points (α, c, draft shape) drive this simulator
+//!      instead — see DESIGN.md §Substitutions.
+//!
+//! The simulator models acceptance as i.i.d. Bernoulli(α) per draft token
+//! (the paper's own modeling assumption for its theory section).
+
+use crate::util::rng::SplitMix64;
+
+#[derive(Debug, Clone, Copy)]
+pub enum Scheme {
+    /// Vanilla SD: chain of k drafts, cost c each.
+    Sd { alpha: f64, c: f64, k: usize },
+    /// Horizontal cascade: k1 from (α1,c1), then k2 from (α2,c2).
+    Hc { a1: f64, c1: f64, k1: usize, a2: f64, c2: f64, k2: usize },
+    /// Vertical cascade: n inner SD rounds (inner draft (α_in, c2, k)),
+    /// intermediate cost c1 per inner round verification.
+    Vc { a_t: f64, a_in: f64, c1: f64, c2: f64, n: usize, k: usize },
+    /// Tree draft with fixed per-node acceptance and node count / depth:
+    /// models Medusa/EAGLE-style tree heads: `paths` root-to-leaf chains of
+    /// depth `depth`, all drafted in one cheap call of cost c_total.
+    Tree { alpha: f64, c_total: f64, depth: usize, paths: usize },
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    /// Expected wall-time improvement vs autoregressive decoding.
+    pub speedup: f64,
+    /// Mean tokens emitted per verification round (accepted + bonus) —
+    /// Table 2's "#Mean accepted tokens".
+    pub mean_accepted: f64,
+}
+
+/// Simulate `rounds` verification rounds of a scheme.
+pub fn simulate(scheme: Scheme, rounds: usize, seed: u64) -> SimResult {
+    let mut rng = SplitMix64::new(seed);
+    let mut tokens = 0f64;
+    let mut cost = 0f64;
+    let mut per_round = 0f64;
+    for _ in 0..rounds {
+        let (t, c) = sim_round(scheme, &mut rng);
+        tokens += t as f64;
+        per_round += t as f64;
+        cost += c;
+    }
+    SimResult { speedup: tokens / cost, mean_accepted: per_round / rounds as f64 }
+}
+
+fn bern(rng: &mut SplitMix64, p: f64) -> bool {
+    rng.next_f64() < p
+}
+
+/// One verification round: returns (tokens emitted, cost in target-steps).
+fn sim_round(scheme: Scheme, rng: &mut SplitMix64) -> (usize, f64) {
+    match scheme {
+        Scheme::Sd { alpha, c, k } => {
+            let mut acc = 0;
+            while acc < k && bern(rng, alpha) {
+                acc += 1;
+            }
+            (acc + 1, c * k as f64 + 1.0)
+        }
+        Scheme::Hc { a1, c1, k1, a2, c2, k2 } => {
+            let mut acc = 0;
+            let mut alive = true;
+            for _ in 0..k1 {
+                if alive && bern(rng, a1) {
+                    acc += 1;
+                } else {
+                    alive = false;
+                }
+            }
+            for _ in 0..k2 {
+                if alive && bern(rng, a2) {
+                    acc += 1;
+                } else {
+                    alive = false;
+                }
+            }
+            (acc + 1, k1 as f64 * c1 + k2 as f64 * c2 + 1.0)
+        }
+        Scheme::Vc { a_t, a_in, c1, c2, n, k } => {
+            // inner: n SD rounds of the intermediate draft build the chain
+            let mut chain = 0usize;
+            for _ in 0..n {
+                let mut acc = 0;
+                while acc < k && bern(rng, a_in) {
+                    acc += 1;
+                }
+                chain += acc + 1;
+            }
+            // outer: target verifies the chain
+            let mut acc = 0;
+            while acc < chain && bern(rng, a_t) {
+                acc += 1;
+            }
+            (
+                acc + 1,
+                n as f64 * c1 + (n * k) as f64 * c2 + 1.0,
+            )
+        }
+        Scheme::Tree { alpha, c_total, depth, paths } => {
+            // best-of-`paths` chains of length `depth`; path acceptances are
+            // positively correlated through the shared first token — model
+            // independently per path (optimistic for large `paths`, matching
+            // the strong published numbers of tree heads).
+            let mut best = 0;
+            for _ in 0..paths {
+                let mut acc = 0;
+                while acc < depth && bern(rng, alpha) {
+                    acc += 1;
+                }
+                best = best.max(acc);
+            }
+            (best + 1, c_total + 1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::ewif::{t_hc, t_sd, t_vc};
+
+    const ROUNDS: usize = 60_000;
+
+    #[test]
+    fn sd_matches_closed_form() {
+        for (a, c, k) in [(0.6, 0.2, 4), (0.9, 0.05, 8), (0.3, 0.01, 15)] {
+            let sim = simulate(Scheme::Sd { alpha: a, c, k }, ROUNDS, 7).speedup;
+            let th = t_sd(a, c, k);
+            assert!((sim - th).abs() / th < 0.02, "a={a} c={c} k={k}: {sim} vs {th}");
+        }
+    }
+
+    #[test]
+    fn hc_matches_closed_form() {
+        let (a1, c1, k1, a2, c2, k2) = (0.85, 0.3, 3, 0.5, 0.02, 6);
+        let sim =
+            simulate(Scheme::Hc { a1, c1, k1, a2, c2, k2 }, ROUNDS, 9).speedup;
+        let th = t_hc(a1, a2, c1, c2, k1, k2);
+        assert!((sim - th).abs() / th < 0.02, "{sim} vs {th}");
+    }
+
+    #[test]
+    fn vc_matches_closed_form() {
+        let (a_t, a_in, c1, c2, n, k) = (0.85, 0.6, 0.25, 0.01, 2, 4);
+        let sim =
+            simulate(Scheme::Vc { a_t, a_in, c1, c2, n, k }, ROUNDS, 11).speedup;
+        let th = t_vc(a_t, a_in, c1, c2, n, k);
+        assert!((sim - th).abs() / th < 0.025, "{sim} vs {th}");
+    }
+
+    #[test]
+    fn tree_beats_chain_at_equal_cost() {
+        let chain = simulate(Scheme::Sd { alpha: 0.7, c: 0.02, k: 5 }, ROUNDS, 13);
+        let tree = simulate(
+            Scheme::Tree { alpha: 0.7, c_total: 0.1, depth: 5, paths: 4 },
+            ROUNDS,
+            13,
+        );
+        assert!(tree.mean_accepted > chain.mean_accepted);
+    }
+
+    #[test]
+    fn mean_accepted_at_least_one() {
+        let r = simulate(Scheme::Sd { alpha: 0.01, c: 0.5, k: 3 }, 1000, 1);
+        assert!(r.mean_accepted >= 1.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Runtime configuration: JSON config file + CLI overrides.
+//!
+//! Precedence: built-in defaults < `--config file.json` < command-line
+//! flags. The same structure drives the CLI, the benches and the server.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::dytc::DytcParams;
+use crate::engine::EngineOpts;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// artifacts/ directory (manifest + weights + HLO).
+    pub artifacts: PathBuf,
+    /// Model scale to load (small/base/large).
+    pub scale: String,
+    /// Engines to run (bench) or serve.
+    pub engines: Vec<String>,
+    /// Prompts per task category.
+    pub n_per_category: usize,
+    /// New tokens per request.
+    pub max_new: usize,
+    /// Workload seed.
+    pub seed: u64,
+    /// Serving address.
+    pub addr: String,
+    pub opts: EngineOpts,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: crate::runtime::Runtime::default_dir(),
+            scale: "base".into(),
+            engines: vec!["ar".into(), "pld".into(), "cas-spec".into()],
+            n_per_category: 3,
+            max_new: 64,
+            seed: 42,
+            addr: "127.0.0.1:7599".into(),
+            opts: EngineOpts::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply a JSON config object on top of `self`.
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("config must be an object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "artifacts" => self.artifacts = v.as_str().ok_or_else(bad(k))?.into(),
+                "scale" => self.scale = v.as_str().ok_or_else(bad(k))?.into(),
+                "engines" => self.engines = v.str_arr()?,
+                "n_per_category" => self.n_per_category = v.as_usize().ok_or_else(bad(k))?,
+                "max_new" => self.max_new = v.as_usize().ok_or_else(bad(k))?,
+                "seed" => self.seed = v.as_u64().ok_or_else(bad(k))?,
+                "addr" => self.addr = v.as_str().ok_or_else(bad(k))?.into(),
+                "draft_k" => self.opts.draft_k = v.as_usize().ok_or_else(bad(k))?,
+                "conf_stop" => self.opts.conf_stop = v.as_f64().ok_or_else(bad(k))?,
+                "dytc" => apply_dytc(&mut self.opts.dytc, v)?,
+                other => return Err(anyhow!("unknown config key {other:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply CLI flags on top of `self`.
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(p) = a.str_opt("artifacts") {
+            self.artifacts = p.into();
+        }
+        if let Some(s) = a.str_opt("scale") {
+            self.scale = s.into();
+        }
+        if a.str_opt("engines").is_some() {
+            self.engines = a.list_or("engines", "");
+        }
+        if let Some(e) = a.str_opt("engine") {
+            self.engines = vec![e.to_string()];
+        }
+        self.n_per_category = a.usize_or("n", self.n_per_category)?;
+        self.max_new = a.usize_or("max-new", self.max_new)?;
+        self.seed = a.u64_or("seed", self.seed)?;
+        if let Some(addr) = a.str_opt("addr") {
+            self.addr = addr.into();
+        }
+        self.opts.draft_k = a.usize_or("draft-k", self.opts.draft_k)?;
+        self.opts.conf_stop = a.f64_or("conf-stop", self.opts.conf_stop)?;
+        self.opts.dytc.k_max = a.usize_or("k-max", self.opts.dytc.k_max)?;
+        self.opts.dytc.t_min = a.f64_or("t-min", self.opts.dytc.t_min)?;
+        self.opts.dytc.m_tree_max = a.usize_or("tree-max", self.opts.dytc.m_tree_max)?;
+        Ok(())
+    }
+
+    /// defaults <- optional --config file <- CLI flags.
+    pub fn from_args(a: &Args) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(path) = a.str_opt("config") {
+            cfg.apply_file(Path::new(path))?;
+        }
+        cfg.apply_args(a)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        self.apply_json(&j)
+    }
+}
+
+fn apply_dytc(d: &mut DytcParams, v: &Json) -> Result<()> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("dytc must be an object"))?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "lambda" => d.lambda = v.as_f64().ok_or_else(bad(k))?,
+            "window" => d.window = v.as_usize().ok_or_else(bad(k))?,
+            "k_max" => d.k_max = v.as_usize().ok_or_else(bad(k))?,
+            "t_min" => d.t_min = v.as_f64().ok_or_else(bad(k))?,
+            "m_tree_max" => d.m_tree_max = v.as_usize().ok_or_else(bad(k))?,
+            "top_k_siblings" => d.top_k_siblings = v.as_usize().ok_or_else(bad(k))?,
+            "p_tree" => d.p_tree = v.as_f64().ok_or_else(bad(k))?,
+            other => return Err(anyhow!("unknown dytc key {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+fn bad(k: &str) -> impl Fn() -> anyhow::Error + '_ {
+    move || anyhow!("bad value for config key {k:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn defaults_then_cli() {
+        let cfg = RunConfig::from_args(&args("--scale small --max-new 32 --engines ar,pld")).unwrap();
+        assert_eq!(cfg.scale, "small");
+        assert_eq!(cfg.max_new, 32);
+        assert_eq!(cfg.engines, vec!["ar", "pld"]);
+        assert_eq!(cfg.n_per_category, 3); // default preserved
+    }
+
+    #[test]
+    fn json_layer() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"scale":"large","dytc":{"k_max":3,"t_min":1.5},"draft_k":7}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.scale, "large");
+        assert_eq!(cfg.opts.dytc.k_max, 3);
+        assert!((cfg.opts.dytc.t_min - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.opts.draft_k, 7);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"typo_key":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cli_overrides_json() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"max_new":100}"#).unwrap()).unwrap();
+        cfg.apply_args(&args("--max-new 11")).unwrap();
+        assert_eq!(cfg.max_new, 11);
+    }
+}

@@ -1,0 +1,149 @@
+//! Online acceptance-rate estimation (paper §4.2, Eq. 4).
+//!
+//! For each draft configuration, DyTC keeps an EMA over a local history
+//! window of *first-draft-token* outcomes:
+//!
+//!   α̂_new = λ · α̂_prev + (1 − λ) · α̂_recent,
+//!   α̂_recent = mean of the most recent H ∈ {0,1} outcomes.
+//!
+//! The paper uses H = 20 and λ = 0.7. Estimates of inactive configurations
+//! are preserved (Appendix D: no decay); cold starts are seeded with a
+//! heuristic prior based on the DSIA strategy's aggressiveness.
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct AcceptanceEstimator {
+    pub lambda: f64,
+    pub window: usize,
+    alpha: f64,
+    history: VecDeque<bool>,
+    /// Outcomes observed since the last `roll()`.
+    pending: Vec<bool>,
+    pub observations: u64,
+}
+
+impl AcceptanceEstimator {
+    /// `prior` is the cold-start α̂ (Appendix D heuristic prior).
+    pub fn new(prior: f64, lambda: f64, window: usize) -> Self {
+        Self {
+            lambda,
+            window,
+            alpha: prior.clamp(0.01, 0.99),
+            history: VecDeque::with_capacity(window),
+            pending: Vec::new(),
+            observations: 0,
+        }
+    }
+
+    pub fn with_defaults(prior: f64) -> Self {
+        Self::new(prior, 0.7, 20)
+    }
+
+    /// Record one first-token outcome for this configuration.
+    pub fn observe(&mut self, accepted: bool) {
+        self.pending.push(accepted);
+        self.observations += 1;
+    }
+
+    /// Fold pending outcomes into the EMA (called once per decoding round,
+    /// matching the per-step update of Eq. 4). No-op when nothing pending.
+    pub fn roll(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        for &o in &self.pending {
+            if self.history.len() == self.window {
+                self.history.pop_front();
+            }
+            self.history.push_back(o);
+        }
+        self.pending.clear();
+        let recent = self.history.iter().filter(|o| **o).count() as f64
+            / self.history.len() as f64;
+        self.alpha = self.lambda * self.alpha + (1.0 - self.lambda) * recent;
+    }
+
+    /// Current α̂ estimate, clamped away from {0, 1} so EWIF formulas stay
+    /// finite.
+    pub fn alpha(&self) -> f64 {
+        self.alpha.clamp(0.01, 0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn converges_to_bernoulli_rate() {
+        let mut est = AcceptanceEstimator::with_defaults(0.5);
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..500 {
+            est.observe(rng.next_f64() < 0.8);
+            est.roll();
+        }
+        assert!((est.alpha() - 0.8).abs() < 0.12, "alpha={}", est.alpha());
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        let mut est = AcceptanceEstimator::with_defaults(0.9);
+        for _ in 0..100 {
+            est.observe(true);
+            est.roll();
+        }
+        assert!(est.alpha() <= 0.99);
+        let mut est = AcceptanceEstimator::with_defaults(0.1);
+        for _ in 0..100 {
+            est.observe(false);
+            est.roll();
+        }
+        assert!(est.alpha() >= 0.01);
+    }
+
+    #[test]
+    fn adapts_to_regime_change() {
+        let mut est = AcceptanceEstimator::with_defaults(0.5);
+        for _ in 0..100 {
+            est.observe(true);
+            est.roll();
+        }
+        let high = est.alpha();
+        assert!(high > 0.9);
+        for _ in 0..40 {
+            est.observe(false);
+            est.roll();
+        }
+        assert!(est.alpha() < high - 0.5, "should adapt quickly down");
+    }
+
+    #[test]
+    fn inactive_estimates_preserved() {
+        let mut est = AcceptanceEstimator::with_defaults(0.5);
+        est.observe(true);
+        est.roll();
+        let a = est.alpha();
+        // many rounds without observations: roll() is a no-op
+        for _ in 0..50 {
+            est.roll();
+        }
+        assert_eq!(est.alpha(), a);
+    }
+
+    #[test]
+    fn window_limits_memory() {
+        let mut est = AcceptanceEstimator::new(0.5, 0.0, 4); // λ=0: pure recent
+        for _ in 0..10 {
+            est.observe(false);
+        }
+        est.roll();
+        for _ in 0..4 {
+            est.observe(true);
+        }
+        est.roll();
+        // window=4 fully refilled with `true`
+        assert!(est.alpha() > 0.98);
+    }
+}

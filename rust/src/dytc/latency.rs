@@ -1,0 +1,166 @@
+//! Hardware-aware latency prediction (paper §4.2, "ĉ").
+//!
+//! DyTC predicts the cost coefficient ĉ of each draft configuration with a
+//! Bayesian linear regression over online step-time measurements:
+//!
+//!   latency(variant, T) ≈ β₀ + β₁·T        (per variant)
+//!
+//! with a conjugate Normal prior on (β₀, β₁) and known-ish noise — the
+//! posterior mean is ridge regression, and the posterior tightens as
+//! measurements accumulate. This mirrors the paper's "roofline latency of
+//! the hardware platform with Bayesian linear regression": the intercept is
+//! the per-call overhead (kernel launch / KV shuttle) and the slope the
+//! per-token marginal cost, both hardware properties learned at runtime.
+
+/// Bayesian linear regression y = β₀ + β₁·x with prior N(0, τ²I) and unit
+/// observation noise (scale folds into τ). Closed-form posterior over the
+/// 2×2 precision matrix.
+#[derive(Debug, Clone)]
+pub struct BayesLinReg {
+    /// Posterior precision Λ = X'X + I/τ² (row-major 2×2).
+    lam: [f64; 4],
+    /// X'y accumulator.
+    xty: [f64; 2],
+    prior_precision: f64,
+    pub n_obs: u64,
+}
+
+impl BayesLinReg {
+    pub fn new(prior_precision: f64) -> Self {
+        Self {
+            lam: [prior_precision, 0.0, 0.0, prior_precision],
+            xty: [0.0, 0.0],
+            prior_precision,
+            n_obs: 0,
+        }
+    }
+
+    pub fn observe(&mut self, x: f64, y: f64) {
+        // design row (1, x)
+        self.lam[0] += 1.0;
+        self.lam[1] += x;
+        self.lam[2] += x;
+        self.lam[3] += x * x;
+        self.xty[0] += y;
+        self.xty[1] += x * y;
+        self.n_obs += 1;
+    }
+
+    /// Posterior mean (β₀, β₁).
+    pub fn posterior_mean(&self) -> (f64, f64) {
+        let [a, b, c, d] = self.lam;
+        let det = a * d - b * c;
+        if det.abs() < 1e-12 {
+            return (0.0, 0.0);
+        }
+        let b0 = (d * self.xty[0] - b * self.xty[1]) / det;
+        let b1 = (-c * self.xty[0] + a * self.xty[1]) / det;
+        (b0, b1)
+    }
+
+    pub fn predict(&self, x: f64) -> f64 {
+        let (b0, b1) = self.posterior_mean();
+        b0 + b1 * x
+    }
+
+    /// Predictive variance at x (up to the noise scale): (1,x) Λ⁻¹ (1,x)'.
+    pub fn predictive_var(&self, x: f64) -> f64 {
+        let [a, b, c, d] = self.lam;
+        let det = a * d - b * c;
+        if det.abs() < 1e-12 {
+            return 1.0 / self.prior_precision;
+        }
+        let inv = [d / det, -b / det, -c / det, a / det];
+        let v0 = inv[0] + inv[1] * x;
+        let v1 = inv[2] + inv[3] * x;
+        v0 + v1 * x
+    }
+}
+
+/// Per-configuration latency tracking: one regression per executable family
+/// plus a scalar EMA for non-neural drafts (PLD), normalized against the
+/// target's single-token step latency to produce cost coefficients ĉ.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// One regression per tracked family, keyed by caller-chosen id.
+    regs: Vec<BayesLinReg>,
+}
+
+impl LatencyModel {
+    pub fn new(n_families: usize) -> Self {
+        Self { regs: vec![BayesLinReg::new(1e-3); n_families] }
+    }
+
+    pub fn observe(&mut self, family: usize, t_shape: usize, seconds: f64) {
+        self.regs[family].observe(t_shape as f64, seconds);
+    }
+
+    /// Predicted seconds for a step of `t_shape` in-flight tokens.
+    pub fn predict(&self, family: usize, t_shape: usize) -> f64 {
+        self.regs[family].predict(t_shape as f64).max(1e-9)
+    }
+
+    /// Cost coefficient ĉ(family) = family single-token step latency over
+    /// the reference (target) single-token step latency.
+    pub fn cost_coefficient(&self, family: usize, reference_family: usize) -> f64 {
+        let c = self.predict(family, 1) / self.predict(reference_family, 1);
+        c.clamp(1e-4, 10.0)
+    }
+
+    pub fn observations(&self, family: usize) -> u64 {
+        self.regs[family].n_obs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn recovers_linear_relation() {
+        let mut r = BayesLinReg::new(1e-3);
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..200 {
+            let x = 1.0 + rng.next_below(64) as f64;
+            let noise = (rng.next_f64() - 0.5) * 0.01;
+            r.observe(x, 0.5 + 0.125 * x + noise);
+        }
+        let (b0, b1) = r.posterior_mean();
+        assert!((b0 - 0.5).abs() < 0.05, "b0={b0}");
+        assert!((b1 - 0.125).abs() < 0.01, "b1={b1}");
+    }
+
+    #[test]
+    fn variance_shrinks_with_data() {
+        let mut r = BayesLinReg::new(1e-3);
+        let v0 = r.predictive_var(8.0);
+        for i in 0..50 {
+            r.observe((i % 16) as f64, 1.0);
+        }
+        assert!(r.predictive_var(8.0) < v0 / 10.0);
+    }
+
+    #[test]
+    fn prior_dominates_when_unobserved() {
+        let r = BayesLinReg::new(1e-3);
+        assert_eq!(r.posterior_mean(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn cost_coefficient_ratio() {
+        let mut m = LatencyModel::new(2);
+        for _ in 0..50 {
+            m.observe(0, 1, 0.010); // target: 10ms
+            m.observe(1, 1, 0.004); // draft: 4ms
+        }
+        let c = m.cost_coefficient(1, 0);
+        assert!((c - 0.4).abs() < 0.05, "c={c}");
+    }
+
+    #[test]
+    fn predict_is_positive() {
+        let m = LatencyModel::new(1);
+        assert!(m.predict(0, 16) > 0.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Plain autoregressive greedy decoding — the 1.0× baseline every speedup
+//! in the paper is measured against, and the ground truth for the
+//! losslessness invariant.
+
+use anyhow::Result;
+
+use crate::model::Variant;
+use crate::runtime::{argmax, ScaleRuntime};
+use crate::spec::VariantSession;
+use crate::tokenizer::EOS;
+
+use super::{Engine, GenStats, Generation};
+
+pub struct ArEngine<'rt> {
+    rt: &'rt ScaleRuntime,
+    name: String,
+}
+
+impl<'rt> ArEngine<'rt> {
+    pub fn new(rt: &'rt ScaleRuntime) -> Result<Self> {
+        Ok(ArEngine { rt, name: "ar".into() })
+    }
+}
+
+impl Engine for ArEngine<'_> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
+        let mut target = VariantSession::new(self.rt, Variant::Target)?;
+        let mut stats = GenStats::default();
+
+        let t0 = std::time::Instant::now();
+        target.feed(prompt)?;
+        stats.prefill = t0.elapsed();
+
+        let t0 = std::time::Instant::now();
+        let mut out = Vec::with_capacity(max_new);
+        let mut next = argmax(target.last_logits().unwrap());
+        out.push(next);
+        while out.len() < max_new && next != EOS && target.capacity_left() > 1 {
+            let logits = target.decode_one(next)?;
+            stats.target_calls += 1;
+            next = argmax(logits);
+            out.push(next);
+            stats.rounds += 1;
+            stats.tokens_per_round.push(1);
+        }
+        stats.wall = t0.elapsed();
+        Ok(Generation { tokens: out, stats })
+    }
+}

@@ -1,0 +1,150 @@
+//! Static cascade baselines (CS-Drafting, Chen et al. 2024), built from the
+//! same DSIA draft + PLD ingredients CAS-Spec uses — but with *fixed*
+//! scheduling, no online adaptation:
+//!
+//!   * `vc`   — vertical cascade: the layer-sparse draft's own chain
+//!              drafting is accelerated by PLD underneath (M_t ← M_d1 ← M_dn).
+//!   * `hc`   — horizontal cascade: early chain tokens from the (slower,
+//!              higher-α) model draft, later tokens from PLD.
+//!   * `vchc` — both (the full CS-Drafting configuration of Fig. 3).
+//!
+//! These are the baselines DyTC's +47%/+73% improvements are measured
+//! against (Fig. 3 / §5.2).
+
+use anyhow::Result;
+
+use crate::model::Variant;
+use crate::pld::PldMatcher;
+use crate::runtime::ScaleRuntime;
+use crate::spec::VariantSession;
+
+use super::common::{draft_chain, draft_chain_vc, verify_chain_round, BranchCache, GenState};
+use super::{Engine, EngineOpts, Generation};
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Vc,
+    Hc,
+    VcHc,
+}
+
+pub struct CascadeEngine<'rt> {
+    rt: &'rt ScaleRuntime,
+    mode: Mode,
+    /// model-draft segment length (HC/VCHC) or total VC chain length
+    k_model: usize,
+    /// PLD tail segment length (HC/VCHC)
+    k_pld: usize,
+    /// inner PLD proposal size inside VC drafting
+    inner_k: usize,
+    name: &'static str,
+}
+
+impl<'rt> CascadeEngine<'rt> {
+    pub fn new_vc(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
+        Ok(Self { rt, mode: Mode::Vc, k_model: 12, k_pld: 0, inner_k: 7, name: "vc" })
+    }
+
+    pub fn new_hc(rt: &'rt ScaleRuntime, opts: &EngineOpts) -> Result<Self> {
+        Ok(Self { rt, mode: Mode::Hc, k_model: opts.draft_k.min(5), k_pld: 8, inner_k: 7, name: "hc" })
+    }
+
+    pub fn new_vchc(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
+        Ok(Self { rt, mode: Mode::VcHc, k_model: 6, k_pld: 7, inner_k: 7, name: "vchc" })
+    }
+}
+
+impl Engine for CascadeEngine<'_> {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
+        let mut target = VariantSession::new(self.rt, Variant::Target)?;
+        let mut draft = VariantSession::new(self.rt, Variant::Ls40)?;
+
+        let mut st = GenState::start(&mut target, prompt, max_new)?;
+        let t0 = std::time::Instant::now();
+
+        let mut matcher = PldMatcher::new(prompt);
+        draft.feed(prompt)?;
+        st.stats.draft_calls += 1;
+        let mut bc = BranchCache::new(draft.pos());
+
+        while !st.done && target.capacity_left() > crate::runtime::VERIFY_T {
+            let max_chain = crate::runtime::VERIFY_T - 1;
+            let budget = max_chain.min(st.max_new.saturating_sub(st.out.len()));
+            if budget == 0 || draft.capacity_left() < max_chain + 2 {
+                break;
+            }
+            let root = st.root;
+            let committed_len = matcher.len();
+            matcher.extend(&[root]); // root commits this round regardless
+            let committed: Vec<u32> = st.committed_except_root().to_vec();
+            bc.ensure(&mut draft, &committed, &[], &mut st.stats)?;
+
+            // ---- build the draft chain (speculative; matcher rolls back) --
+            #[allow(unused_assignments)]
+            let mut chain: Vec<u32> = Vec::new();
+            match self.mode {
+                Mode::Vc => {
+                    let (toks, _p, entered) = draft_chain_vc(
+                        &mut draft, &mut matcher, root, self.k_model.min(budget),
+                        self.inner_k, &mut st.stats,
+                    )?;
+                    bc.advanced(&entered);
+                    chain = toks;
+                }
+                Mode::Hc => {
+                    let cd = draft_chain(
+                        &mut draft, root, self.k_model.min(budget), None, &mut st.stats,
+                    )?;
+                    bc.advanced(&[root]);
+                    if cd.tokens.len() > 1 {
+                        bc.advanced(&cd.tokens[..cd.tokens.len() - 1]);
+                    }
+                    chain = cd.tokens;
+                    matcher.extend(&chain);
+                    if chain.len() < budget && chain.last() != Some(&crate::tokenizer::EOS) {
+                        if let Some(p) = matcher.propose(self.k_pld.min(budget - chain.len())) {
+                            chain.extend_from_slice(&p.tokens);
+                        }
+                        st.stats.pld_proposals += 1;
+                    }
+                }
+                Mode::VcHc => {
+                    let (head, _p, entered) = draft_chain_vc(
+                        &mut draft, &mut matcher, root, self.k_model.min(budget),
+                        self.inner_k, &mut st.stats,
+                    )?;
+                    bc.advanced(&entered);
+                    chain = head;
+                    if chain.len() < budget && chain.last() != Some(&crate::tokenizer::EOS) {
+                        if let Some(p) = matcher.propose(self.k_pld.min(budget - chain.len())) {
+                            chain.extend_from_slice(&p.tokens);
+                        }
+                        st.stats.pld_proposals += 1;
+                    }
+                }
+            }
+            chain.truncate(budget);
+
+            // ---- target verification ----
+            let (accepted, bonus) =
+                verify_chain_round(&mut target, root, &chain, &mut st.stats)?;
+
+            // ---- roll speculative state back to committed truth ----
+            // (draft cache syncs lazily on the next round's ensure)
+            matcher.truncate(committed_len);
+            matcher.extend(&[root]);
+            matcher.extend(&accepted);
+
+            let mut emitted = accepted;
+            emitted.push(bonus);
+            st.emit(&emitted);
+        }
+
+        st.stats.wall = t0.elapsed();
+        Ok(Generation { tokens: st.out, stats: st.stats })
+    }
+}

@@ -1,0 +1,344 @@
+//! Shared machinery for the speculative engines: generation bookkeeping,
+//! chain-verification rounds, and draft-chain generation.
+
+use anyhow::Result;
+
+use crate::pld::PldMatcher;
+use crate::runtime::{argmax, softmax_prob};
+use crate::spec::{verify_greedy, DraftTree, VariantSession};
+use crate::tokenizer::EOS;
+
+use super::GenStats;
+
+/// Output accumulator shared by all engines. Tracks the emitted tokens,
+/// the current root (= newest emitted token whose KV is not yet in the
+/// target cache), and EOS/budget termination.
+pub struct GenState {
+    pub out: Vec<u32>,
+    pub root: u32,
+    pub done: bool,
+    pub max_new: usize,
+    pub stats: GenStats,
+}
+
+impl GenState {
+    /// Prefill the target with `prompt` and emit the first greedy token.
+    pub fn start(target: &mut VariantSession, prompt: &[u32], max_new: usize) -> Result<Self> {
+        let t0 = std::time::Instant::now();
+        target.feed(prompt)?;
+        let prefill = t0.elapsed();
+        let first = argmax(target.last_logits().unwrap());
+        let mut s = GenState {
+            out: vec![first],
+            root: first,
+            done: first == EOS || max_new <= 1,
+            max_new,
+            stats: GenStats { prefill, ..Default::default() },
+        };
+        s.stats.target_calls = 0; // prefill counted separately
+        Ok(s)
+    }
+
+    /// Emit verified tokens (accepted + bonus), respecting EOS and budget.
+    /// Returns how many were actually emitted.
+    pub fn emit(&mut self, tokens: &[u32]) -> usize {
+        let mut n = 0;
+        for &t in tokens {
+            if self.done {
+                break;
+            }
+            self.out.push(t);
+            self.root = t;
+            n += 1;
+            if t == EOS || self.out.len() >= self.max_new {
+                self.done = true;
+            }
+        }
+        if n > 0 {
+            self.stats.tokens_per_round.push(n);
+            self.stats.rounds += 1;
+        }
+        n
+    }
+
+    /// Tokens committed so far that verification rounds may rely on:
+    /// everything except the root (whose KV is not yet in the caches).
+    pub fn committed_except_root(&self) -> &[u32] {
+        &self.out[..self.out.len() - 1]
+    }
+}
+
+/// One chain-verification round against the target:
+/// verify `root ++ chain`, commit the accepted prefix (contiguous — the
+/// commit fast path), and return (accepted_tokens, bonus).
+pub fn verify_chain_round(
+    target: &mut VariantSession,
+    root: u32,
+    chain: &[u32],
+    stats: &mut GenStats,
+) -> Result<(Vec<u32>, u32)> {
+    let t_shape = chain_step_shape(chain.len() + 1);
+    let tree = DraftTree::chain(root, chain, t_shape);
+    let out = target.verify_tree(&tree, t_shape)?;
+    stats.target_calls += 1;
+    let vocab = target.vocab();
+    let v = verify_greedy(&tree, &out.logits, vocab);
+    // accepted slots on a chain are exactly 0..=n — contiguous fast path
+    target.commit_slots(t_shape, &v.accepted_slots)?;
+    let last = *v.accepted_slots.last().unwrap();
+    target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
+    Ok((v.accepted_tokens, v.bonus))
+}
+
+/// Smallest lowered step shape that fits `n` chain slots.
+pub fn chain_step_shape(n: usize) -> usize {
+    for s in crate::runtime::STEP_SHAPES {
+        if s >= n {
+            return s;
+        }
+    }
+    panic!("chain of {n} exceeds largest step shape");
+}
+
+/// Draft a greedy chain of up to `k` tokens with a DSIA model draft.
+///
+/// The draft session must hold exactly the committed context; the caller
+/// restores it afterwards (rollback + catch-up). Optionally stops early
+/// when the draft's confidence drops below `conf_stop` (Kangaroo's
+/// early-exit drafting policy).
+///
+/// Returns the drafted tokens, their draft confidences, and the runner-up
+/// token at the *first* position (the TOP-2 sibling candidate for tree
+/// engines) with its confidence.
+pub struct ChainDraft {
+    pub tokens: Vec<u32>,
+    pub probs: Vec<f64>,
+    pub sibling: Option<(u32, f64)>,
+}
+
+pub fn draft_chain(
+    draft: &mut VariantSession,
+    root: u32,
+    k: usize,
+    conf_stop: Option<f64>,
+    stats: &mut GenStats,
+) -> Result<ChainDraft> {
+    let mut toks = Vec::with_capacity(k);
+    let mut probs = Vec::with_capacity(k);
+    let mut sibling = None;
+    let mut cur = root;
+    for i in 0..k {
+        let logits = draft.decode_one(cur)?;
+        stats.draft_calls += 1;
+        let t = argmax(logits);
+        let p = softmax_prob(logits, t as usize);
+        if i == 0 {
+            sibling = runner_up(logits, t);
+        }
+        if let Some(thresh) = conf_stop {
+            if !toks.is_empty() && p < thresh {
+                break;
+            }
+        }
+        toks.push(t);
+        probs.push(p);
+        if t == EOS {
+            break;
+        }
+        cur = t;
+    }
+    Ok(ChainDraft { tokens: toks, probs, sibling })
+}
+
+/// Second-best token of a logits row (and its softmax probability).
+pub fn runner_up(logits: &[f32], best: u32) -> Option<(u32, f64)> {
+    let mut bi = usize::MAX;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, v) in logits.iter().enumerate() {
+        if i as u32 != best && *v > bv {
+            bv = *v;
+            bi = i;
+        }
+    }
+    (bi != usize::MAX).then(|| (bi as u32, softmax_prob(logits, bi)))
+}
+
+/// Lazy branch-aware cache tracker for draft sessions.
+///
+/// A draft session's KV cache logically holds `prompt ++ committed[..base]
+/// ++ suffix` where `committed` is the globally emitted token sequence
+/// (minus the in-flight root) and `suffix` is whatever speculative branch
+/// the session last drafted. `ensure` moves the cache to `prompt ++
+/// committed ++ extra` reusing the longest common prefix — so when the
+/// target accepts exactly what the draft proposed (the common case at high
+/// acceptance), the per-round catch-up degenerates to a free rollback, and
+/// sessions not used for several rounds sync up lazily in one chunked feed.
+pub struct BranchCache {
+    prompt_pos: usize,
+    /// Number of committed (post-prompt) tokens the cache holds.
+    base: usize,
+    /// Speculative tokens in the cache above `base`.
+    suffix: Vec<u32>,
+}
+
+impl BranchCache {
+    /// `prompt_pos` = session.pos() right after the prompt was fed.
+    pub fn new(prompt_pos: usize) -> Self {
+        BranchCache { prompt_pos, base: 0, suffix: Vec::new() }
+    }
+
+    /// Make the session's cache hold exactly `prompt ++ committed ++ extra`.
+    pub fn ensure(
+        &mut self,
+        sess: &mut VariantSession,
+        committed: &[u32],
+        extra: &[u32],
+        stats: &mut GenStats,
+    ) -> Result<()> {
+        debug_assert!(self.base <= committed.len(), "cache ahead of committed");
+        let tail: Vec<u32> = committed[self.base..]
+            .iter()
+            .chain(extra)
+            .copied()
+            .collect();
+        let lcp = self
+            .suffix
+            .iter()
+            .zip(&tail)
+            .take_while(|(a, b)| a == b)
+            .count();
+        sess.rollback(self.prompt_pos + self.base + lcp);
+        if lcp < tail.len() {
+            sess.feed(&tail[lcp..])?;
+            stats.draft_calls += 1;
+        }
+        self.base = committed.len();
+        self.suffix = extra.to_vec();
+        Ok(())
+    }
+
+    /// Record tokens the session itself advanced over while drafting.
+    pub fn advanced(&mut self, tokens: &[u32]) {
+        self.suffix.extend_from_slice(tokens);
+    }
+}
+
+/// Catch a draft session up to the globally committed sequence:
+/// rollback to `ctx_pos`, then feed `root ++ accepted` (the tokens the
+/// target just committed). Afterwards the draft cache is exactly the
+/// committed context again. (Engines that track a [`BranchCache`] use
+/// `commit_round` instead, which skips the re-feed when the cache already
+/// holds the accepted tokens.)
+pub fn draft_catch_up(
+    draft: &mut VariantSession,
+    ctx_pos: usize,
+    root: u32,
+    accepted: &[u32],
+    stats: &mut GenStats,
+) -> Result<()> {
+    draft.rollback(ctx_pos);
+    let mut toks = Vec::with_capacity(accepted.len() + 1);
+    toks.push(root);
+    toks.extend_from_slice(accepted);
+    draft.feed(&toks)?;
+    stats.draft_calls += 1;
+    Ok(())
+}
+
+/// Vertical-cascade drafting: build a chain of up to `k` tokens with
+/// `draft`, accelerating the draft itself with PLD proposals verified by
+/// the draft (CS-Drafting's vertical cascade with a statistical bottom).
+///
+/// `matcher` must reflect the committed context ++ root; it is extended
+/// with the drafted chain and truncated back by the caller.
+/// Returns (chain, per-token confidences, tokens entered into the draft's
+/// cache — for [`BranchCache::advanced`] bookkeeping).
+pub fn draft_chain_vc(
+    draft: &mut VariantSession,
+    matcher: &mut PldMatcher,
+    root: u32,
+    k: usize,
+    inner_k: usize,
+    stats: &mut GenStats,
+) -> Result<(Vec<u32>, Vec<f64>, Vec<u32>)> {
+    let mut chain: Vec<u32> = Vec::with_capacity(k);
+    let mut probs: Vec<f64> = Vec::with_capacity(k);
+    let mut entered: Vec<u32> = Vec::with_capacity(k + 1);
+    let mut inner_root = root;
+    while chain.len() < k {
+        let want = (k - chain.len()).min(inner_k);
+        let proposal = matcher.propose(want);
+        stats.pld_proposals += 1;
+        match proposal {
+            Some(p) if !p.tokens.is_empty() => {
+                // draft-verify the PLD proposal as a chain
+                let t_shape = chain_step_shape(p.tokens.len() + 1);
+                let tree = DraftTree::chain(inner_root, &p.tokens, t_shape);
+                let out = draft.verify_tree(&tree, t_shape)?;
+                stats.draft_calls += 1;
+                let vocab = draft.vocab();
+                let v = verify_greedy(&tree, &out.logits, vocab);
+                draft.commit_slots(t_shape, &v.accepted_slots)?;
+                let last = *v.accepted_slots.last().unwrap();
+                draft.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
+                entered.push(inner_root);
+                entered.extend_from_slice(&v.accepted_tokens);
+                let added_from = chain.len();
+                for &t in &v.accepted_tokens {
+                    chain.push(t);
+                    probs.push(0.9); // PLD tokens the draft itself confirmed
+                }
+                if chain.len() < k {
+                    let p_bonus =
+                        softmax_prob(draft.last_logits().unwrap(), v.bonus as usize);
+                    chain.push(v.bonus);
+                    probs.push(p_bonus);
+                }
+                if chain.len() == added_from {
+                    // nothing accepted and no room for the bonus: give up
+                    break;
+                }
+                matcher.extend(&chain[added_from..]);
+                if *chain.last().unwrap() == EOS {
+                    break;
+                }
+                inner_root = *chain.last().unwrap();
+            }
+            _ => {
+                // no lookup hit: single draft decode
+                entered.push(inner_root);
+                let logits = draft.decode_one(inner_root)?;
+                stats.draft_calls += 1;
+                let t = argmax(logits);
+                probs.push(softmax_prob(logits, t as usize));
+                chain.push(t);
+                matcher.extend(&[t]);
+                if t == EOS {
+                    break;
+                }
+                inner_root = t;
+            }
+        }
+    }
+    Ok((chain, probs, entered))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_step_shape_picks_smallest() {
+        assert_eq!(chain_step_shape(1), 1);
+        assert_eq!(chain_step_shape(2), 8);
+        assert_eq!(chain_step_shape(8), 8);
+        assert_eq!(chain_step_shape(9), 16);
+        assert_eq!(chain_step_shape(17), 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn chain_step_shape_overflow() {
+        chain_step_shape(65);
+    }
+}

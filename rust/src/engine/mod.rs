@@ -1,0 +1,149 @@
+//! Decoding engines: one per method in the paper's evaluation.
+//!
+//! Every engine implements [`Engine::generate`] with *identical greedy
+//! semantics*: its output must equal plain autoregressive greedy decoding
+//! token-for-token (losslessness, checked by `tests/lossless.rs`). Engines
+//! differ only in how many expensive target-model calls they need:
+//!
+//! | name        | paper row          | drafting                         |
+//! |-------------|--------------------|----------------------------------|
+//! | `ar`        | AR baseline (1.0×) | none                             |
+//! | `pld`       | PLD                | prompt-lookup chain              |
+//! | `swift`     | SWIFT / "LS"       | layer-sparse draft chain         |
+//! | `kangaroo`  | Kangaroo           | early-exit draft w/ conf. stop   |
+//! | `lade`      | Lookahead (Lade)   | n-gram pool (Jacobi-style)       |
+//! | `vc`        | Fig. 3 "VC"        | vertical cascade (ls40 ← PLD)    |
+//! | `hc`        | Fig. 3 "HC"        | horizontal cascade (ls40 → PLD)  |
+//! | `vchc`      | Fig. 3 "VC+HC"     | both (CS-Drafting)               |
+//! | `tr`        | Fig. 3 "Tr"        | static draft tree (SWIFT+tree)   |
+//! | `trvc`      | Fig. 3 "Tr+VC"     | static tree, VC-drafted chains   |
+//! | `cas-spec`  | CAS-Spec           | DyTC over {ls40, ls60, PLD, VC}  |
+//! | `cas-spec+` | CAS-Spec†          | DyTC adding the Kangaroo draft   |
+
+pub mod ar;
+pub mod cascade;
+pub mod common;
+pub mod dytc;
+pub mod lookahead;
+pub mod sd;
+pub mod tree_static;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::dytc::DytcParams;
+use crate::model::Variant;
+use crate::runtime::ScaleRuntime;
+
+/// Per-generation statistics.
+#[derive(Debug, Clone, Default)]
+pub struct GenStats {
+    /// Wall-clock of the whole generation (excludes prompt prefill).
+    pub wall: Duration,
+    /// Prefill wall-clock (reported separately; all engines pay the same).
+    pub prefill: Duration,
+    /// Target-model step calls (decode + verify).
+    pub target_calls: u64,
+    /// Draft-model step calls (all DSIA variants).
+    pub draft_calls: u64,
+    /// PLD proposals issued.
+    pub pld_proposals: u64,
+    /// Verification rounds.
+    pub rounds: u64,
+    /// Tokens emitted per round (accepted + bonus) — mean of this is the
+    /// "#Mean accepted tokens" column of Table 2.
+    pub tokens_per_round: Vec<usize>,
+}
+
+impl GenStats {
+    pub fn mean_accepted(&self) -> f64 {
+        if self.tokens_per_round.is_empty() {
+            return 0.0;
+        }
+        self.tokens_per_round.iter().sum::<usize>() as f64
+            / self.tokens_per_round.len() as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Generation {
+    /// Generated tokens (prompt excluded), truncated at EOS.
+    pub tokens: Vec<u32>,
+    pub stats: GenStats,
+}
+
+/// A decoding method. Engines are single-stream and reusable across
+/// requests (each `generate` starts from fresh KV caches).
+pub trait Engine {
+    fn name(&self) -> &str;
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation>;
+}
+
+/// Tunables shared by the engines (paper §5.1 and App. E defaults).
+#[derive(Debug, Clone)]
+pub struct EngineOpts {
+    /// Chain draft length per round for the SD-family engines.
+    pub draft_k: usize,
+    /// Kangaroo-style early stop: stop drafting when the draft's confidence
+    /// in its next token falls below this.
+    pub conf_stop: f64,
+    /// DyTC hyper-parameters.
+    pub dytc: DytcParams,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { draft_k: 5, conf_stop: 0.4, dytc: DytcParams::default() }
+    }
+}
+
+/// All engine names, in the order they appear in the paper's tables.
+pub const ENGINES: [&str; 12] = [
+    "ar", "lade", "pld", "swift", "kangaroo", "vc", "hc", "vchc", "tr", "trvc",
+    "cas-spec", "cas-spec+",
+];
+
+/// DSIA variants an engine needs loaded (besides the target).
+pub fn required_variants(kind: &str) -> Vec<Variant> {
+    let mut v = vec![Variant::Target];
+    match kind {
+        "ar" | "pld" | "lade" => {}
+        "swift" | "vc" | "hc" | "vchc" | "tr" | "trvc" => v.push(Variant::Ls40),
+        "kangaroo" => v.push(Variant::Ee),
+        "cas-spec" => {
+            v.push(Variant::Ls40);
+            v.push(Variant::Ls60);
+        }
+        "cas-spec+" => {
+            v.push(Variant::Ls40);
+            v.push(Variant::Ls60);
+            v.push(Variant::Ee);
+        }
+        other => panic!("unknown engine {other:?}"),
+    }
+    v
+}
+
+/// Build an engine by name over a loaded scale runtime.
+pub fn build_engine<'rt>(
+    kind: &str,
+    rt: &'rt ScaleRuntime,
+    opts: &EngineOpts,
+) -> Result<Box<dyn Engine + 'rt>> {
+    Ok(match kind {
+        "ar" => Box::new(ar::ArEngine::new(rt)?),
+        "pld" => Box::new(sd::SdEngine::new_pld(rt, opts)?),
+        "swift" => Box::new(sd::SdEngine::new_model(rt, Variant::Ls40, false, opts)?),
+        "kangaroo" => Box::new(sd::SdEngine::new_model(rt, Variant::Ee, true, opts)?),
+        "lade" => Box::new(lookahead::LookaheadEngine::new(rt, opts)?),
+        "vc" => Box::new(cascade::CascadeEngine::new_vc(rt, opts)?),
+        "hc" => Box::new(cascade::CascadeEngine::new_hc(rt, opts)?),
+        "vchc" => Box::new(cascade::CascadeEngine::new_vchc(rt, opts)?),
+        "tr" => Box::new(tree_static::TreeEngine::new(rt, false, opts)?),
+        "trvc" => Box::new(tree_static::TreeEngine::new(rt, true, opts)?),
+        "cas-spec" => Box::new(dytc::DytcEngine::new(rt, false, opts)?),
+        "cas-spec+" => Box::new(dytc::DytcEngine::new(rt, true, opts)?),
+        other => anyhow::bail!("unknown engine {other:?}"),
+    })
+}

@@ -1,0 +1,151 @@
+//! Vanilla speculative decoding with a single draft source.
+//!
+//! Instantiations:
+//!   * `pld`      — draft = Prompt Lookup Decoding (the paper's strongest
+//!                  training-free baseline; also the bottom model M_dn).
+//!   * `swift`    — draft = layer-sparse DSIA variant (SWIFT-style "LS").
+//!   * `kangaroo` — draft = early-exit DSIA variant with Kangaroo's
+//!                  confidence-based drafting stop.
+//!
+//! Round: draft a chain of ≤ k tokens from the current root, verify it with
+//! one target step, commit the accepted prefix, emit accepted + bonus, then
+//! catch the draft back up to the committed sequence.
+
+use anyhow::Result;
+
+use crate::model::Variant;
+use crate::pld::PldMatcher;
+use crate::runtime::ScaleRuntime;
+use crate::spec::VariantSession;
+
+use super::common::{draft_chain, verify_chain_round, BranchCache, GenState};
+use super::{Engine, EngineOpts, Generation};
+
+enum Draft<'rt> {
+    Pld,
+    Model { sess: VariantSession<'rt>, conf_stop: Option<f64> },
+}
+
+pub struct SdEngine<'rt> {
+    rt: &'rt ScaleRuntime,
+    draft_kind: DraftKind,
+    conf_stop: Option<f64>,
+    k: usize,
+    name: String,
+}
+
+#[derive(Clone, Copy)]
+enum DraftKind {
+    Pld,
+    Model(Variant),
+}
+
+impl<'rt> SdEngine<'rt> {
+    pub fn new_pld(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
+        Ok(SdEngine {
+            rt,
+            draft_kind: DraftKind::Pld,
+            conf_stop: None,
+            // PLD costs nothing: give it the full verify width
+            k: crate::runtime::VERIFY_T - 1,
+            name: "pld".into(),
+        })
+    }
+
+    pub fn new_model(
+        rt: &'rt ScaleRuntime,
+        variant: Variant,
+        kangaroo_stop: bool,
+        opts: &EngineOpts,
+    ) -> Result<Self> {
+        Ok(SdEngine {
+            rt,
+            draft_kind: DraftKind::Model(variant),
+            conf_stop: kangaroo_stop.then_some(opts.conf_stop),
+            k: opts.draft_k,
+            name: match (variant, kangaroo_stop) {
+                (Variant::Ee, _) => "kangaroo".into(),
+                (v, _) => format!("sd-{}", v.key()),
+            },
+        })
+    }
+}
+
+impl Engine for SdEngine<'_> {
+    fn name(&self) -> &str {
+        if matches!(self.draft_kind, DraftKind::Model(Variant::Ls40)) {
+            "swift"
+        } else {
+            &self.name
+        }
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
+        let mut target = VariantSession::new(self.rt, Variant::Target)?;
+        let mut draft: Draft = match self.draft_kind {
+            DraftKind::Pld => Draft::Pld,
+            DraftKind::Model(v) => Draft::Model {
+                sess: VariantSession::new(self.rt, v)?,
+                conf_stop: self.conf_stop,
+            },
+        };
+
+        let mut st = GenState::start(&mut target, prompt, max_new)?;
+        let t0 = std::time::Instant::now();
+
+        // PLD corpus / draft cache both start at the committed prompt.
+        let mut matcher = PldMatcher::new(prompt);
+        let mut bc = BranchCache::new(0);
+        if let Draft::Model { sess, .. } = &mut draft {
+            sess.feed(prompt)?;
+            st.stats.draft_calls += 1;
+            bc = BranchCache::new(sess.pos());
+        }
+
+        while !st.done && target.capacity_left() > crate::runtime::VERIFY_T {
+            let budget = (self.k).min(st.max_new.saturating_sub(st.out.len()));
+            if budget == 0 {
+                break;
+            }
+            let root = st.root;
+            // The root is committed by this round unconditionally; the PLD
+            // corpus may condition on it right away.
+            matcher.extend(&[root]);
+
+            // ---- draft ----
+            let committed: Vec<u32> = st.committed_except_root().to_vec();
+            let chain: Vec<u32> = match &mut draft {
+                Draft::Pld => {
+                    st.stats.pld_proposals += 1;
+                    matcher.propose(budget).map(|p| p.tokens).unwrap_or_default()
+                }
+                Draft::Model { sess, conf_stop } => {
+                    bc.ensure(sess, &committed, &[], &mut st.stats)?;
+                    if sess.capacity_left() < budget + 2 {
+                        Vec::new()
+                    } else {
+                        let cd = draft_chain(sess, root, budget, *conf_stop, &mut st.stats)?;
+                        bc.advanced(&[root]);
+                        if cd.tokens.len() > 1 {
+                            bc.advanced(&cd.tokens[..cd.tokens.len() - 1]);
+                        }
+                        cd.tokens
+                    }
+                }
+            };
+
+            // ---- verify (a bare root step when the draft had nothing) ----
+            let (accepted, bonus) =
+                verify_chain_round(&mut target, root, &chain, &mut st.stats)?;
+
+            // ---- bookkeeping (draft cache syncs lazily next round) ----
+            matcher.extend(&accepted);
+            let mut emitted = accepted;
+            emitted.push(bonus);
+            st.emit(&emitted);
+        }
+
+        st.stats.wall = t0.elapsed();
+        Ok(Generation { tokens: st.out, stats: st.stats })
+    }
+}

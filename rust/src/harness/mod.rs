@@ -1,0 +1,132 @@
+//! Bench harness: run engines over the synthetic Spec-Bench suite, compute
+//! speedups vs autoregressive decoding, and render the paper's tables.
+//!
+//! Used by `cas-spec bench`, every `rust/benches/*` target, and the
+//! examples. The AR baseline runs first; losslessness (engine output ==
+//! AR output token-for-token) can be asserted on every item.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{build_engine, EngineOpts};
+use crate::metrics::{speedups, EngineReport, Record};
+use crate::runtime::ScaleRuntime;
+use crate::util::table::Table;
+use crate::workload::{Suite, CATEGORIES};
+
+/// Result of a full suite run.
+pub struct SuiteRun {
+    pub scale: String,
+    pub reports: BTreeMap<String, EngineReport>,
+    /// AR reference outputs per item id (losslessness ground truth).
+    pub ar_outputs: BTreeMap<usize, Vec<u32>>,
+}
+
+/// Run `engines` (must include "ar" or it is added) over `suite`.
+///
+/// `check_lossless`: panic-free verification that every engine reproduces
+/// the AR output exactly; mismatches are returned as an error.
+pub fn run_suite(
+    rt: &ScaleRuntime,
+    suite: &Suite,
+    engines: &[String],
+    opts: &EngineOpts,
+    check_lossless: bool,
+    verbose: bool,
+) -> Result<SuiteRun> {
+    let mut names: Vec<String> = Vec::new();
+    if !engines.iter().any(|e| e == "ar") {
+        names.push("ar".into());
+    }
+    names.extend(engines.iter().cloned());
+
+    let mut reports: BTreeMap<String, EngineReport> = BTreeMap::new();
+    let mut ar_outputs: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+
+    for name in &names {
+        let mut eng = build_engine(name, rt, opts)?;
+        let mut rep = EngineReport { engine: name.clone(), records: Vec::new() };
+        for item in &suite.items {
+            let gen = eng.generate(&item.prompt, item.max_new)?;
+            if name == "ar" {
+                ar_outputs.insert(item.id, gen.tokens.clone());
+            } else if check_lossless {
+                let want = &ar_outputs[&item.id];
+                if &gen.tokens != want {
+                    return Err(anyhow!(
+                        "LOSSLESSNESS VIOLATION: engine {name} item {} ({}):\n  ar: {:?}\n  {}: {:?}",
+                        item.id, item.category, want, name, gen.tokens
+                    ));
+                }
+            }
+            if verbose {
+                eprintln!(
+                    "[{name}] {} #{}: {} tokens in {:.1} ms ({:.1} tok/s, {:.2} tok/round)",
+                    item.category,
+                    item.id,
+                    gen.tokens.len(),
+                    gen.stats.wall.as_secs_f64() * 1e3,
+                    gen.tokens.len() as f64 / gen.stats.wall.as_secs_f64().max(1e-9),
+                    gen.stats.mean_accepted(),
+                );
+            }
+            rep.records.push(Record {
+                engine: name.clone(),
+                category: item.category,
+                item_id: item.id,
+                tokens: gen.tokens.len(),
+                stats: gen.stats,
+            });
+        }
+        reports.insert(name.clone(), rep);
+    }
+
+    Ok(SuiteRun { scale: rt.info.name.clone(), reports, ar_outputs })
+}
+
+impl SuiteRun {
+    /// The Table 1 layout: one row per engine, one column per category plus
+    /// the overall speedup.
+    pub fn speedup_table(&self, title: &str) -> Table {
+        let mut headers: Vec<&str> = vec!["Method"];
+        headers.extend(CATEGORIES);
+        headers.push("Overall");
+        let mut t = Table::new(title, &headers);
+        let ar = &self.reports["ar"];
+        for (name, rep) in &self.reports {
+            let (per, overall) = speedups(ar, rep, &CATEGORIES);
+            let mut row = vec![name.clone()];
+            for cat in CATEGORIES {
+                row.push(format!("{:.3}", per[cat]));
+            }
+            row.push(format!("{overall:.3}"));
+            t.row(row);
+        }
+        t
+    }
+
+    /// Table 2 layout: mean accepted tokens + overall speedup per engine.
+    pub fn accepted_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["Method", "#Mean accepted tokens", "Speedup"]);
+        let ar = &self.reports["ar"];
+        for (name, rep) in &self.reports {
+            if name == "ar" {
+                continue;
+            }
+            let (_, overall) = speedups(ar, rep, &CATEGORIES);
+            t.row(vec![
+                name.clone(),
+                format!("{:.2}", rep.mean_accepted()),
+                format!("{overall:.2}x"),
+            ]);
+        }
+        t
+    }
+
+    pub fn overall_speedup(&self, engine: &str) -> Option<f64> {
+        let ar = self.reports.get("ar")?;
+        let rep = self.reports.get(engine)?;
+        Some(speedups(ar, rep, &CATEGORIES).1)
+    }
+}

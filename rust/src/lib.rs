@@ -1,0 +1,36 @@
+//! # CAS-Spec — Cascade Adaptive Self-Speculative Decoding
+//!
+//! A Rust + JAX + Pallas reproduction of *"CAS-Spec: Cascade Adaptive
+//! Self-Speculative Decoding for On-the-Fly Lossless Inference Acceleration
+//! of LLMs"* (Ning et al., 2025).
+//!
+//! Three-layer architecture (Python never runs at serving time):
+//!
+//! * **L1** — Pallas tree-attention / fused-MLP kernels
+//!   (`python/compile/kernels/`), lowered once into the serving graphs.
+//! * **L2** — JAX transformer + DSIA draft variants
+//!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: the serving coordinator. PJRT runtime
+//!   ([`runtime`]), speculative-decoding core ([`spec`], [`pld`]), the
+//!   paper's DyTC scheduler ([`dytc`], [`engine::dytc`]), every baseline
+//!   engine ([`engine`]), the analytic EWIF machinery ([`analytic`]), the
+//!   synthetic Spec-Bench workload ([`workload`]), a threaded serving
+//!   front-end ([`server`]) and the bench harness ([`harness`]).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod analytic;
+pub mod config;
+pub mod dytc;
+pub mod engine;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod pld;
+pub mod runtime;
+pub mod server;
+pub mod spec;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,205 @@
+//! cas-spec — CLI for the CAS-Spec serving stack.
+//!
+//! Subcommands:
+//!   info                     summarize artifacts/manifest.json
+//!   run       [flags]        generate one request per category, print stats
+//!   bench     [flags]        suite run -> Table-1-style speedup table
+//!   check     [flags]        losslessness verification across engines
+//!   serve     [flags]        start the TCP serving front-end
+//!   analytic  [flags]        Fig. 1b/1c effective bounds + EWIF tables
+//!
+//! Common flags: --artifacts DIR --scale small|base|large
+//!   --engine X | --engines a,b,c --n N --max-new N --seed N --config F.json
+
+use anyhow::Result;
+
+use cas_spec::analytic;
+use cas_spec::config::RunConfig;
+use cas_spec::engine::{build_engine, required_variants, ENGINES};
+use cas_spec::harness::run_suite;
+use cas_spec::model::Variant;
+use cas_spec::runtime::Runtime;
+use cas_spec::tokenizer;
+use cas_spec::util::cli::Args;
+use cas_spec::util::table::Table;
+use cas_spec::workload::{Language, Suite};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match dispatch(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => info(args),
+        "run" => run(args),
+        "bench" => bench(args),
+        "check" => check(args),
+        "serve" => serve(args),
+        "analytic" => analytic_cmd(args),
+        "help" | _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = r#"cas-spec — Cascade Adaptive Self-Speculative Decoding
+
+USAGE: cas-spec <info|run|bench|check|serve|analytic> [flags]
+
+FLAGS
+  --artifacts DIR     artifacts directory (default: ./artifacts)
+  --scale NAME        small | base | large        (default: base)
+  --engine NAME       single engine               (run/serve)
+  --engines A,B,C     engine list                 (bench/check)
+  --n N               prompts per category        (default: 3)
+  --max-new N         tokens to generate          (default: 64)
+  --seed N            workload seed               (default: 42)
+  --config FILE       JSON config (see config/mod.rs)
+  --markdown          emit tables as markdown
+  --verbose           per-request progress lines
+
+ENGINES
+  ar lade pld swift kangaroo vc hc vchc tr trvc cas-spec cas-spec+
+"#;
+
+fn info(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::open(&cfg.artifacts)?;
+    let m = &rt.manifest;
+    println!("artifacts: {}", m.dir.display());
+    println!("lang_seed: {}  vocab: {}", m.lang_seed, m.vocab);
+    println!("step shapes: {:?}  commit shapes: {:?}", m.step_shapes, m.commit_shapes);
+    for (name, sc) in &m.scales {
+        println!(
+            "scale {name}: L={} d={} H={} s_max={} ee_layer={}",
+            sc.n_layers, sc.d_model, sc.n_heads, sc.s_max, sc.early_exit_layer
+        );
+        for (v, vi) in &sc.variants {
+            println!(
+                "  {:8} layers={:?} kv={:?} params={} artifacts={}",
+                v.key(),
+                vi.layers,
+                vi.kv_shape,
+                vi.params.len(),
+                vi.steps.len() + vi.commits.len(),
+            );
+        }
+    }
+    println!("engines: {}", ENGINES.join(" "));
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let engine_name = cfg.engines.first().cloned().unwrap_or_else(|| "cas-spec".into());
+    let rt = Runtime::open(&cfg.artifacts)?;
+    let srt = rt.load_scale(&cfg.scale, &required_variants(&engine_name))?;
+    let mut eng = build_engine(&engine_name, &srt, &cfg.opts)?;
+
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, cfg.seed, 1, cfg.max_new);
+    for item in &suite.items {
+        let gen = eng.generate(&item.prompt, item.max_new)?;
+        println!(
+            "[{}] {} tokens, {:.1} ms decode ({:.1} tok/s), {:.2} tok/round, {} target calls",
+            item.category,
+            gen.tokens.len(),
+            gen.stats.wall.as_secs_f64() * 1e3,
+            gen.tokens.len() as f64 / gen.stats.wall.as_secs_f64().max(1e-9),
+            gen.stats.mean_accepted(),
+            gen.stats.target_calls,
+        );
+        println!("  {}", tokenizer::render(&gen.tokens));
+    }
+    Ok(())
+}
+
+fn load_for_engines(rt: &Runtime, scale: &str, engines: &[String]) -> Result<cas_spec::runtime::ScaleRuntime> {
+    let mut vars = vec![Variant::Target];
+    for e in engines {
+        for v in required_variants(e) {
+            if !vars.contains(&v) {
+                vars.push(v);
+            }
+        }
+    }
+    rt.load_scale(scale, &vars)
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::open(&cfg.artifacts)?;
+    let srt = load_for_engines(&rt, &cfg.scale, &cfg.engines)?;
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);
+    let run = run_suite(&srt, &suite, &cfg.engines, &cfg.opts, false, args.has("verbose"))?;
+    let t = run.speedup_table(&format!(
+        "speedup vs AR — scale={} n={} max_new={}",
+        cfg.scale, cfg.n_per_category, cfg.max_new
+    ));
+    if args.has("markdown") {
+        println!("{}", t.to_markdown());
+    } else {
+        println!("{}", t.to_text());
+    }
+    Ok(())
+}
+
+fn check(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::from_args(args)?;
+    if !args.has("engines") {
+        cfg.engines = ENGINES.iter().map(|s| s.to_string()).collect();
+    }
+    let rt = Runtime::open(&cfg.artifacts)?;
+    let srt = load_for_engines(&rt, &cfg.scale, &cfg.engines)?;
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);
+    run_suite(&srt, &suite, &cfg.engines, &cfg.opts, true, args.has("verbose"))?;
+    println!(
+        "lossless ✓ — {} engines × {} prompts × {} tokens identical to AR",
+        cfg.engines.len(),
+        suite.len(),
+        cfg.max_new
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    cas_spec::server::serve(&cfg)
+}
+
+fn analytic_cmd(args: &Args) -> Result<()> {
+    let alpha_d2 = args.f64_or("alpha-d2", 0.3)?;
+    let c_d2 = args.f64_or("c-d2", 0.01)?;
+    let points = args.usize_or("points", 10)?;
+
+    let mut t = Table::new(
+        &format!("Fig. 1b/1c effective bounds (alpha_d2={alpha_d2}, c_d2={c_d2})"),
+        &["alpha(Mt,Md1)", "max c_d1 (VC)", "max c_d1 (HC)"],
+    );
+    for p in analytic::sweep(alpha_d2, c_d2, points) {
+        t.row(vec![
+            format!("{:.3}", p.alpha_t_d1),
+            format!("{:.4}", p.c_d1_max_vc),
+            format!("{:.4}", p.c_d1_max_hc),
+        ]);
+    }
+    println!("{}", t.to_text());
+
+    let (greedy, hc) = analytic::greedy_counterexample();
+    println!(
+        "greedy-choice counterexample (§4.2): greedy EWIF {greedy:.3} < cascade EWIF {hc:.3}"
+    );
+    Ok(())
+}

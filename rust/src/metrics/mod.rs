@@ -1,0 +1,200 @@
+//! Measurement aggregation: per-category speedups, acceptance statistics,
+//! latency summaries — the numbers the paper's tables are made of.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::engine::GenStats;
+
+/// One completed generation measurement.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub engine: String,
+    pub category: &'static str,
+    pub item_id: usize,
+    pub tokens: usize,
+    pub stats: GenStats,
+}
+
+impl Record {
+    pub fn decode_secs(&self) -> f64 {
+        self.stats.wall.as_secs_f64()
+    }
+
+    /// Decode throughput in tokens/s.
+    pub fn tps(&self) -> f64 {
+        self.tokens as f64 / self.decode_secs().max(1e-9)
+    }
+}
+
+/// Aggregates records from one engine across a suite.
+#[derive(Debug, Default, Clone)]
+pub struct EngineReport {
+    pub engine: String,
+    pub records: Vec<Record>,
+}
+
+impl EngineReport {
+    /// Total decode seconds for a category (the paper's speedup basis:
+    /// total wall of AR / total wall of the method, per task).
+    pub fn category_secs(&self, cat: &str) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.category == cat)
+            .map(|r| r.decode_secs())
+            .sum()
+    }
+
+    pub fn category_tokens(&self, cat: &str) -> usize {
+        self.records
+            .iter()
+            .filter(|r| r.category == cat)
+            .map(|r| r.tokens)
+            .sum()
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.records.iter().map(|r| r.decode_secs()).sum()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.records.iter().map(|r| r.tokens).sum()
+    }
+
+    /// Mean accepted tokens per verification round (Table 2 column).
+    pub fn mean_accepted(&self) -> f64 {
+        let (mut tok, mut rounds) = (0usize, 0usize);
+        for r in &self.records {
+            tok += r.stats.tokens_per_round.iter().sum::<usize>();
+            rounds += r.stats.tokens_per_round.len();
+        }
+        if rounds == 0 {
+            0.0
+        } else {
+            tok as f64 / rounds as f64
+        }
+    }
+
+    pub fn total_target_calls(&self) -> u64 {
+        self.records.iter().map(|r| r.stats.target_calls).sum()
+    }
+
+    pub fn total_draft_calls(&self) -> u64 {
+        self.records.iter().map(|r| r.stats.draft_calls).sum()
+    }
+}
+
+/// Speedup of `eng` vs the AR baseline, per category and overall.
+/// Speedups are time-per-token ratios so that engines emitting slightly
+/// different token counts (EOS truncation never differs under losslessness,
+/// but budget rounding can) stay comparable.
+pub fn speedups(
+    baseline: &EngineReport,
+    eng: &EngineReport,
+    categories: &[&'static str],
+) -> (BTreeMap<&'static str, f64>, f64) {
+    let mut per = BTreeMap::new();
+    for cat in categories {
+        let bt = baseline.category_tokens(cat).max(1) as f64;
+        let et = eng.category_tokens(cat).max(1) as f64;
+        let b = baseline.category_secs(cat) / bt;
+        let e = eng.category_secs(cat) / et;
+        per.insert(*cat, if e > 0.0 { b / e } else { 0.0 });
+    }
+    let b = baseline.total_secs() / baseline.total_tokens().max(1) as f64;
+    let e = eng.total_secs() / eng.total_tokens().max(1) as f64;
+    (per, if e > 0.0 { b / e } else { 0.0 })
+}
+
+/// Latency percentile summary (for the serving example).
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub p99: Duration,
+}
+
+pub fn latency_summary(mut durs: Vec<Duration>) -> LatencySummary {
+    if durs.is_empty() {
+        return LatencySummary {
+            n: 0,
+            mean: Duration::ZERO,
+            p50: Duration::ZERO,
+            p90: Duration::ZERO,
+            p99: Duration::ZERO,
+        };
+    }
+    durs.sort();
+    let total: Duration = durs.iter().sum();
+    // nearest-rank percentile: ceil(q·n) - 1
+    let pick = |q: f64| {
+        let idx = ((durs.len() as f64 * q).ceil() as usize).max(1) - 1;
+        durs[idx.min(durs.len() - 1)]
+    };
+    LatencySummary {
+        n: durs.len(),
+        mean: total / durs.len() as u32,
+        p50: pick(0.50),
+        p90: pick(0.90),
+        p99: pick(0.99),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(engine: &str, cat: &'static str, secs: f64, tokens: usize, per_round: Vec<usize>) -> Record {
+        Record {
+            engine: engine.into(),
+            category: cat,
+            item_id: 0,
+            tokens,
+            stats: GenStats {
+                wall: Duration::from_secs_f64(secs),
+                tokens_per_round: per_round,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn speedup_math() {
+        let ar = EngineReport {
+            engine: "ar".into(),
+            records: vec![rec("ar", "math", 2.0, 100, vec![1; 100])],
+        };
+        let fast = EngineReport {
+            engine: "x".into(),
+            records: vec![rec("x", "math", 1.0, 100, vec![4; 25])],
+        };
+        let (per, overall) = speedups(&ar, &fast, &["math"]);
+        assert!((per["math"] - 2.0).abs() < 1e-9);
+        assert!((overall - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_accepted() {
+        let r = EngineReport {
+            engine: "x".into(),
+            records: vec![rec("x", "qa", 1.0, 10, vec![2, 4, 4])],
+        };
+        assert!((r.mean_accepted() - 10.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let durs: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        let s = latency_summary(durs);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.p50, Duration::from_millis(50));
+        assert_eq!(s.p99, Duration::from_millis(99));
+    }
+
+    #[test]
+    fn empty_latency() {
+        assert_eq!(latency_summary(vec![]).n, 0);
+    }
+}

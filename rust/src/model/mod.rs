@@ -1,0 +1,256 @@
+//! Model metadata: the artifact manifest written by `python/compile/aot.py`.
+//!
+//! The manifest is the contract between the build path and the serving path:
+//! model dimensions, the DSIA variant layer sets, the flat parameter order
+//! of every serving graph, and the artifact file names per step shape.
+
+pub mod weights;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// DSIA variant identifiers (Sec. 4.1 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Variant {
+    /// The full target model.
+    Target,
+    /// Layer sparsity 0.4 (keep 60% of layers) — SWIFT-style.
+    Ls40,
+    /// Layer sparsity 0.6 (keep 40% of layers) — SWIFT-style, faster.
+    Ls60,
+    /// Early exit + adapter — Kangaroo-style.
+    Ee,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 4] = [Variant::Target, Variant::Ls40, Variant::Ls60, Variant::Ee];
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            Variant::Target => "target",
+            Variant::Ls40 => "ls40",
+            Variant::Ls60 => "ls60",
+            Variant::Ee => "ee",
+        }
+    }
+
+    pub fn from_key(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "target" => Variant::Target,
+            "ls40" => Variant::Ls40,
+            "ls60" => Variant::Ls60,
+            "ee" => Variant::Ee,
+            _ => return Err(anyhow!("unknown variant {s:?}")),
+        })
+    }
+}
+
+/// Per-variant artifact metadata.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub variant: Variant,
+    /// Layer indices of the target model this variant executes.
+    pub layers: Vec<usize>,
+    /// KV cache shape (nl, 2, H, S, dh).
+    pub kv_shape: [usize; 5],
+    /// Flat parameter order of the step graphs.
+    pub params: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    /// step-shape T -> artifact file name
+    pub steps: BTreeMap<usize, String>,
+    /// commit-shape T -> artifact file name
+    pub commits: BTreeMap<usize, String>,
+}
+
+/// One model scale (small/base/large — stand-ins for Vicuna 7B/13B/33B).
+#[derive(Debug, Clone)]
+pub struct ScaleInfo {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub s_max: usize,
+    pub vocab: usize,
+    pub early_exit_layer: usize,
+    pub weights_file: String,
+    pub variants: BTreeMap<Variant, VariantInfo>,
+}
+
+/// The parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub lang_seed: u64,
+    pub step_shapes: Vec<usize>,
+    pub commit_shapes: Vec<usize>,
+    pub vocab: usize,
+    pub scales: BTreeMap<String, ScaleInfo>,
+    /// Raw synthlang fixture (consumed by the cross-language test).
+    pub synthlang_check: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Manifest> {
+        let scales_j = j.req("scales")?.as_obj().ok_or_else(|| anyhow!("scales not obj"))?;
+        let mut scales = BTreeMap::new();
+        for (name, sj) in scales_j {
+            let mut variants = BTreeMap::new();
+            let vj = sj.req("variants")?.as_obj().ok_or_else(|| anyhow!("variants"))?;
+            for (vk, vv) in vj {
+                let variant = Variant::from_key(vk)?;
+                let kv: Vec<usize> = vv.req("kv_shape")?.usize_arr()?;
+                let mut steps = BTreeMap::new();
+                for (t, f) in vv.req("steps")?.as_obj().ok_or_else(|| anyhow!("steps"))? {
+                    steps.insert(
+                        t.parse::<usize>().context("step shape key")?,
+                        f.as_str().ok_or_else(|| anyhow!("step file"))?.to_string(),
+                    );
+                }
+                let mut commits = BTreeMap::new();
+                for (t, f) in vv.req("commits")?.as_obj().ok_or_else(|| anyhow!("commits"))? {
+                    commits.insert(
+                        t.parse::<usize>().context("commit shape key")?,
+                        f.as_str().ok_or_else(|| anyhow!("commit file"))?.to_string(),
+                    );
+                }
+                let mut param_shapes = BTreeMap::new();
+                for (pn, ps) in vv
+                    .req("param_shapes")?
+                    .as_obj()
+                    .ok_or_else(|| anyhow!("param_shapes"))?
+                {
+                    param_shapes.insert(pn.clone(), ps.usize_arr()?);
+                }
+                variants.insert(
+                    variant,
+                    VariantInfo {
+                        variant,
+                        layers: vv.req("layers")?.usize_arr()?,
+                        kv_shape: kv
+                            .try_into()
+                            .map_err(|_| anyhow!("kv_shape must have 5 dims"))?,
+                        params: vv.req("params")?.str_arr()?,
+                        param_shapes,
+                        steps,
+                        commits,
+                    },
+                );
+            }
+            scales.insert(
+                name.clone(),
+                ScaleInfo {
+                    name: name.clone(),
+                    n_layers: sj.req("n_layers")?.as_usize().unwrap(),
+                    d_model: sj.req("d_model")?.as_usize().unwrap(),
+                    n_heads: sj.req("n_heads")?.as_usize().unwrap(),
+                    d_head: sj.req("d_head")?.as_usize().unwrap(),
+                    s_max: sj.req("s_max")?.as_usize().unwrap(),
+                    vocab: sj.req("vocab")?.as_usize().unwrap(),
+                    early_exit_layer: sj.req("early_exit_layer")?.as_usize().unwrap(),
+                    weights_file: sj.req("weights")?.as_str().unwrap().to_string(),
+                    variants,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            lang_seed: j.req("lang_seed")?.as_u64().ok_or_else(|| anyhow!("lang_seed"))?,
+            step_shapes: j.req("step_shapes")?.usize_arr()?,
+            commit_shapes: j.req("commit_shapes")?.usize_arr()?,
+            vocab: j.req("vocab")?.as_usize().ok_or_else(|| anyhow!("vocab"))?,
+            scales,
+            synthlang_check: j.req("synthlang_check")?.clone(),
+        })
+    }
+
+    pub fn scale(&self, name: &str) -> Result<&ScaleInfo> {
+        self.scales
+            .get(name)
+            .ok_or_else(|| anyhow!("scale {name:?} not in manifest (have: {:?})",
+                self.scales.keys().collect::<Vec<_>>()))
+    }
+}
+
+impl ScaleInfo {
+    pub fn variant(&self, v: Variant) -> Result<&VariantInfo> {
+        self.variants
+            .get(&v)
+            .ok_or_else(|| anyhow!("variant {:?} missing for scale {}", v, self.name))
+    }
+
+    /// Total f32 elements of one KV cache for a variant.
+    pub fn kv_elems(&self, v: Variant) -> usize {
+        self.variants[&v].kv_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> Json {
+        Json::parse(
+            r#"{
+          "format": 1, "lang_seed": 20250711, "vocab": 512,
+          "step_shapes": [1, 8, 16, 64], "commit_shapes": [16],
+          "synthlang_check": {"rng_check": []},
+          "scales": {
+            "tiny": {
+              "n_layers": 2, "d_model": 8, "n_heads": 2, "d_head": 4,
+              "s_max": 64, "vocab": 512, "early_exit_layer": 1,
+              "weights": "weights_tiny.bin",
+              "variants": {
+                "target": {
+                  "layers": [0, 1], "kv_shape": [2, 2, 2, 64, 4],
+                  "params": ["emb", "pos"],
+                  "param_shapes": {"emb": [512, 8], "pos": [64, 8]},
+                  "steps": {"1": "tiny_target_step1.hlo.txt"},
+                  "commits": {"16": "tiny_target_commit16.hlo.txt"}
+                }
+              }
+            }
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::from_json(Path::new("/tmp"), &mini_manifest_json()).unwrap();
+        assert_eq!(m.lang_seed, 20250711);
+        let sc = m.scale("tiny").unwrap();
+        assert_eq!(sc.n_layers, 2);
+        let v = sc.variant(Variant::Target).unwrap();
+        assert_eq!(v.kv_shape, [2, 2, 2, 64, 4]);
+        assert_eq!(v.steps[&1], "tiny_target_step1.hlo.txt");
+        assert_eq!(sc.kv_elems(Variant::Target), 2 * 2 * 2 * 64 * 4);
+    }
+
+    #[test]
+    fn missing_scale_is_error() {
+        let m = Manifest::from_json(Path::new("/tmp"), &mini_manifest_json()).unwrap();
+        assert!(m.scale("huge").is_err());
+    }
+
+    #[test]
+    fn variant_keys_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::from_key(v.key()).unwrap(), v);
+        }
+        assert!(Variant::from_key("bogus").is_err());
+    }
+}

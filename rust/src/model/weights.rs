@@ -1,0 +1,155 @@
+//! Reader for the `weights_{scale}.bin` tensor container written by
+//! `python/compile/pretrain.py`.
+//!
+//! Format: magic `CASW0001` | u32 LE header length | JSON header | raw data.
+//! Header: `{"tensors": {name: {"shape": [...], "dtype": "f32",
+//! "offset": bytes-into-data-section, "nbytes": n}}}`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// All tensors of one model scale, keyed by parameter name.
+#[derive(Debug, Default)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Weights> {
+        if bytes.len() < 12 || &bytes[..8] != b"CASW0001" {
+            return Err(anyhow!("bad magic (not a CASW0001 container)"));
+        }
+        let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let header_end = 12 + hlen;
+        if bytes.len() < header_end {
+            return Err(anyhow!("truncated header"));
+        }
+        let header = std::str::from_utf8(&bytes[12..header_end]).context("header utf-8")?;
+        let j = Json::parse(header).map_err(|e| anyhow!("header json: {e}"))?;
+        let data = &bytes[header_end..];
+
+        let mut tensors = BTreeMap::new();
+        let tj = j.req("tensors")?.as_obj().ok_or_else(|| anyhow!("tensors not obj"))?;
+        for (name, t) in tj {
+            let dtype = t.req("dtype")?.as_str().unwrap_or("?");
+            if dtype != "f32" {
+                return Err(anyhow!("tensor {name}: unsupported dtype {dtype}"));
+            }
+            let shape = t.req("shape")?.usize_arr()?;
+            let offset = t.req("offset")?.as_usize().ok_or_else(|| anyhow!("offset"))?;
+            let nbytes = t.req("nbytes")?.as_usize().ok_or_else(|| anyhow!("nbytes"))?;
+            let end = offset
+                .checked_add(nbytes)
+                .filter(|e| *e <= data.len())
+                .ok_or_else(|| anyhow!("tensor {name}: out of bounds"))?;
+            let expected: usize = shape.iter().product::<usize>() * 4;
+            if nbytes != expected {
+                return Err(anyhow!(
+                    "tensor {name}: nbytes {nbytes} != shape size {expected}"
+                ));
+            }
+            let raw = &data[offset..end];
+            let mut vals = vec![0f32; nbytes / 4];
+            for (i, c) in raw.chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes(c.try_into().unwrap());
+            }
+            tensors.insert(name.clone(), Tensor { shape, data: vals });
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing tensor {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a container in-memory (mirrors pretrain.write_weights).
+    fn container(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut header = String::from("{\"tensors\":{");
+        let mut data = Vec::new();
+        for (i, (name, shape, vals)) in tensors.iter().enumerate() {
+            if i > 0 {
+                header.push(',');
+            }
+            let off = data.len();
+            for v in *vals {
+                data.extend_from_slice(&v.to_le_bytes());
+            }
+            header.push_str(&format!(
+                "\"{name}\":{{\"shape\":{:?},\"dtype\":\"f32\",\"offset\":{off},\"nbytes\":{}}}",
+                shape,
+                vals.len() * 4
+            ));
+        }
+        header.push_str("}}");
+        let mut out = Vec::new();
+        out.extend_from_slice(b"CASW0001");
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&data);
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = container(&[
+            ("emb", &[2, 3], &[1., 2., 3., 4., 5., 6.]),
+            ("lnf_g", &[3], &[0.5, -0.5, 9.0]),
+        ]);
+        let w = Weights::from_bytes(&bytes).unwrap();
+        assert_eq!(w.get("emb").unwrap().shape, vec![2, 3]);
+        assert_eq!(w.get("emb").unwrap().data[4], 5.0);
+        assert_eq!(w.get("lnf_g").unwrap().data, vec![0.5, -0.5, 9.0]);
+        assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Weights::from_bytes(b"NOTMAGIC....").is_err());
+    }
+
+    #[test]
+    fn rejects_size_mismatch() {
+        let mut bytes = container(&[("x", &[4], &[1., 2., 3., 4.])]);
+        // corrupt: claim shape [5] in header
+        let s = String::from_utf8(bytes.clone()).unwrap_or_default();
+        drop(s);
+        bytes = container(&[("x", &[5], &[1., 2., 3., 4.])]);
+        assert!(Weights::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_oob_offset() {
+        let mut b = container(&[("x", &[1], &[1.0])]);
+        let n = b.len();
+        b.truncate(n - 2); // cut into the data section
+        assert!(Weights::from_bytes(&b).is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! Prompt Lookup Decoding (PLD) — the bottom draft model M_dn.
+//!
+//! A retrieval-based statistical draft (Saxena 2023; paper §4.1 Def. 4.2):
+//! find the longest recent n-gram match of the current suffix inside
+//! (prompt ++ generated-so-far) and propose the tokens that followed it.
+//! Its cost coefficient is negligible (no model execution), which is what
+//! makes it the ideal final cascade stage (CS-Drafting's key observation).
+//!
+//! Implementation: an n-gram index (hash map from n-gram to last occurrence
+//! end position) maintained incrementally, so a lookup is O(max_ng) hashes
+//! instead of an O(len) scan — the matcher sits on the hot path of every
+//! engine that cascades onto PLD.
+
+use std::collections::HashMap;
+
+/// Maximum / minimum n-gram length used for suffix matching.
+pub const MAX_NG: usize = 3;
+pub const MIN_NG: usize = 1;
+
+#[derive(Debug, Clone)]
+pub struct PldMatcher {
+    tokens: Vec<u32>,
+    /// For each n in MIN_NG..=MAX_NG: map n-gram -> end index of its most
+    /// recent occurrence (i.e. index one past the n-gram).
+    index: Vec<HashMap<Vec<u32>, usize>>,
+    /// Undo journal: one entry per (token, n) insert so `truncate` can
+    /// restore displaced index entries in O(tokens rolled back) — the
+    /// engines checkpoint/rollback the matcher around every speculative
+    /// branch, so this is on the serving hot path.
+    journal: Vec<(usize, Vec<u32>, Option<usize>)>,
+}
+
+/// A PLD draft proposal.
+#[derive(Debug, Clone)]
+pub struct PldDraft {
+    pub tokens: Vec<u32>,
+    /// Length of the n-gram that matched (longer => higher confidence;
+    /// used by DyTC's token-level acceptance refinement, paper §4.2).
+    pub match_len: usize,
+}
+
+impl PldMatcher {
+    pub fn new(prompt: &[u32]) -> Self {
+        let mut m = PldMatcher {
+            tokens: Vec::with_capacity(prompt.len() + 256),
+            index: vec![HashMap::new(); MAX_NG - MIN_NG + 1],
+            journal: Vec::new(),
+        };
+        m.extend(prompt);
+        m
+    }
+
+    /// Number of tokens in the lookup corpus.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Append newly committed tokens (prompt extension or accepted output).
+    pub fn extend(&mut self, new_tokens: &[u32]) {
+        for &t in new_tokens {
+            self.tokens.push(t);
+            let end = self.tokens.len();
+            for n in MIN_NG..=MAX_NG {
+                if end >= n {
+                    let gram = self.tokens[end - n..end].to_vec();
+                    let old = self.index[n - MIN_NG].insert(gram.clone(), end);
+                    self.journal.push((n, gram, old));
+                }
+            }
+        }
+    }
+
+    /// Roll the corpus back to `len` tokens (used when a speculative branch
+    /// that fed the matcher is rejected). O(tokens rolled back) via the
+    /// undo journal.
+    pub fn truncate(&mut self, len: usize) {
+        while self.tokens.len() > len {
+            let end = self.tokens.len();
+            // pop this token's journal entries (one per applicable n)
+            let n_entries = (MIN_NG..=MAX_NG).filter(|n| end >= *n).count();
+            for _ in 0..n_entries {
+                let (n, gram, old) = self.journal.pop().expect("journal underflow");
+                match old {
+                    Some(prev) => {
+                        self.index[n - MIN_NG].insert(gram, prev);
+                    }
+                    None => {
+                        self.index[n - MIN_NG].remove(&gram);
+                    }
+                }
+            }
+            self.tokens.pop();
+        }
+    }
+
+    /// Propose up to `k` draft tokens continuing the current suffix.
+    ///
+    /// Tries the longest n-gram first; the match must end strictly before
+    /// the suffix itself (otherwise it would trivially match its own tail).
+    pub fn propose(&self, k: usize) -> Option<PldDraft> {
+        let len = self.tokens.len();
+        if k == 0 || len < MIN_NG {
+            return None;
+        }
+        for n in (MIN_NG..=MAX_NG).rev() {
+            if len < n {
+                continue;
+            }
+            let suffix = &self.tokens[len - n..];
+            if let Some(&end) = self.index[n - MIN_NG].get(suffix) {
+                // `end` is one past the most recent occurrence — if that is
+                // the suffix itself, look for nothing (index stores only the
+                // latest; scanning further back is the slow path below).
+                let cont_start = if end == len {
+                    // fall back: scan for the previous occurrence
+                    match find_previous(&self.tokens, n) {
+                        Some(s) => s,
+                        None => continue,
+                    }
+                } else {
+                    end
+                };
+                if cont_start >= len {
+                    continue;
+                }
+                let take = k.min(len - cont_start);
+                if take == 0 {
+                    continue;
+                }
+                return Some(PldDraft {
+                    tokens: self.tokens[cont_start..cont_start + take].to_vec(),
+                    match_len: n,
+                });
+            }
+        }
+        None
+    }
+}
+
+/// Scan for the latest occurrence of the length-`n` suffix that ends before
+/// the suffix itself; returns the index right after that occurrence.
+fn find_previous(tokens: &[u32], n: usize) -> Option<usize> {
+    let len = tokens.len();
+    let suffix = &tokens[len - n..];
+    // window ends at most at len-1 (strictly before the suffix occurrence)
+    for start in (0..len.saturating_sub(n)).rev() {
+        if &tokens[start..start + n] == suffix {
+            return Some(start + n);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposes_continuation_of_repeated_ngram() {
+        // ... 5 6 7 8 ... then suffix 5 6 -> propose 7 8
+        let m = PldMatcher::new(&[1, 2, 5, 6, 7, 8, 3, 4, 5, 6]);
+        let d = m.propose(4).expect("should match");
+        assert_eq!(d.tokens, vec![7, 8, 3, 4]);
+        assert!(d.match_len >= 2);
+    }
+
+    #[test]
+    fn longest_ngram_preferred() {
+        // suffix "9 5 6": trigram occurs earlier followed by 77;
+        // bigram "5 6" also occurs followed by 88. Trigram must win.
+        let m = PldMatcher::new(&[9, 5, 6, 77, 0, 5, 6, 88, 0, 9, 5, 6]);
+        let d = m.propose(1).unwrap();
+        assert_eq!(d.tokens, vec![77]);
+        assert_eq!(d.match_len, 3);
+    }
+
+    #[test]
+    fn no_match_returns_none() {
+        let m = PldMatcher::new(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(m.propose(4).is_none());
+    }
+
+    #[test]
+    fn extend_makes_generated_text_matchable() {
+        let mut m = PldMatcher::new(&[1, 2, 3]);
+        m.extend(&[10, 11, 12, 10, 11]);
+        let d = m.propose(2).unwrap();
+        assert_eq!(d.tokens, vec![12, 10]);
+    }
+
+    #[test]
+    fn self_match_suffix_skipped() {
+        // the only occurrence of the suffix is the suffix itself
+        let m = PldMatcher::new(&[7, 7]);
+        // suffix [7] matches at end; previous occurrence exists (first 7)
+        let d = m.propose(1).unwrap();
+        assert_eq!(d.tokens, vec![7]);
+    }
+
+    #[test]
+    fn k_limits_proposal_length() {
+        let m = PldMatcher::new(&[5, 6, 1, 2, 3, 4, 5, 6]);
+        let d = m.propose(2).unwrap();
+        assert_eq!(d.tokens, vec![1, 2]);
+    }
+
+    #[test]
+    fn truncate_rolls_back() {
+        let mut m = PldMatcher::new(&[1, 2, 3]);
+        m.extend(&[50, 51]);
+        assert_eq!(m.len(), 5);
+        m.truncate(3);
+        assert_eq!(m.len(), 3);
+        // 50/51 no longer proposable
+        let mut m2 = m.clone();
+        m2.extend(&[1, 2]);
+        let d = m2.propose(1).unwrap();
+        assert_eq!(d.tokens, vec![3]);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let m = PldMatcher::new(&[]);
+        assert!(m.propose(4).is_none());
+        let m = PldMatcher::new(&[1]);
+        assert!(m.propose(0).is_none());
+    }
+}

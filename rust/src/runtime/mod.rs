@@ -1,0 +1,394 @@
+//! PJRT runtime: loads the AOT artifacts and executes them on the hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//!
+//! Design points:
+//!   * **Weights are resident.** Every parameter tensor is uploaded once as a
+//!     `PjRtBuffer`; DSIA draft variants are parameter *subsets* of the
+//!     target, so all variants share the same buffers (`Rc<PjRtBuffer>`) —
+//!     the self-speculative property of the paper realized at the buffer
+//!     level. Nothing model-sized crosses the host boundary per step except
+//!     the KV cache (see below).
+//!   * **Step calls.** A step executable computes T in-flight tokens
+//!     (T ∈ {1, 8, 16, 64}) against the variant's KV cache and returns
+//!     (logits, kv'). PJRT returns the root tuple as a single buffer; we
+//!     copy it to host, split, and re-upload the KV — measured and tracked
+//!     per call so the DyTC latency model sees true end-to-end step costs.
+//!   * **Commit calls** compact accepted tree slots into contiguous cache
+//!     positions after a tree verification (see `spec::verify`).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::model::weights::Weights;
+use crate::model::{Manifest, ScaleInfo, Variant, VariantInfo};
+
+/// Step shapes lowered by aot.py (must match python `model.STEP_SHAPES`).
+pub const STEP_SHAPES: [usize; 4] = [1, 8, 16, 64];
+/// Tree-verification width of the target model (== max tree size M_tree_max).
+pub const VERIFY_T: usize = 16;
+
+/// Execution-count/latency accounting, accumulated per variant.
+#[derive(Debug, Default, Clone)]
+pub struct VariantCounters {
+    pub steps: u64,
+    pub tokens_stepped: u64,
+    pub commits: u64,
+    pub time: Duration,
+}
+
+/// A KV cache handle: device buffer + committed length.
+pub struct KvCache {
+    buf: PjRtBuffer,
+    pub pos: usize,
+    pub variant: Variant,
+}
+
+pub struct StepOutput {
+    /// Row-major (T, vocab) logits.
+    pub logits: Vec<f32>,
+    pub elapsed: Duration,
+}
+
+struct VariantRuntime {
+    info: VariantInfo,
+    /// Flat parameter buffers in `info.params` order (shared across variants).
+    params: Vec<Rc<PjRtBuffer>>,
+    steps: BTreeMap<usize, PjRtLoadedExecutable>,
+    commits: BTreeMap<usize, PjRtLoadedExecutable>,
+    counters: RefCell<VariantCounters>,
+}
+
+/// One fully-loaded model scale: executables + resident weights.
+pub struct ScaleRuntime {
+    pub info: ScaleInfo,
+    client: PjRtClient,
+    variants: BTreeMap<Variant, VariantRuntime>,
+}
+
+/// The top-level runtime: one PJRT CPU client + the artifact manifest.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create the PJRT client and read the manifest from `artifacts_dir`.
+    pub fn open(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Default artifacts directory: $CAS_SPEC_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var("CAS_SPEC_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|_| "artifacts".into())
+    }
+
+    /// Load a scale: weights + step/commit executables for `variants`.
+    pub fn load_scale(&self, scale: &str, variants: &[Variant]) -> Result<ScaleRuntime> {
+        let info = self.manifest.scale(scale)?.clone();
+        let weights = Weights::load(&self.manifest.dir.join(&info.weights_file))?;
+
+        // Upload each referenced tensor once; variants share buffers.
+        let mut tensor_bufs: BTreeMap<String, Rc<PjRtBuffer>> = BTreeMap::new();
+        let mut vrt = BTreeMap::new();
+        for v in variants {
+            let vi = info.variant(*v)?.clone();
+            let mut params = Vec::with_capacity(vi.params.len());
+            for name in &vi.params {
+                if !tensor_bufs.contains_key(name) {
+                    let t = weights.get(name)?;
+                    let buf = self
+                        .client
+                        .buffer_from_host_buffer(&t.data, &t.shape, None)
+                        .map_err(|e| anyhow!("uploading {name}: {e:?}"))?;
+                    tensor_bufs.insert(name.clone(), Rc::new(buf));
+                }
+                params.push(tensor_bufs[name].clone());
+            }
+            let mut steps = BTreeMap::new();
+            for (t, file) in &vi.steps {
+                steps.insert(*t, self.compile_artifact(file)?);
+            }
+            let mut commits = BTreeMap::new();
+            for (t, file) in &vi.commits {
+                commits.insert(*t, self.compile_artifact(file)?);
+            }
+            vrt.insert(
+                *v,
+                VariantRuntime {
+                    info: vi,
+                    params,
+                    steps,
+                    commits,
+                    counters: RefCell::new(VariantCounters::default()),
+                },
+            );
+        }
+        Ok(ScaleRuntime { info, client: self.client.clone(), variants: vrt })
+    }
+
+    fn compile_artifact(&self, file: &str) -> Result<PjRtLoadedExecutable> {
+        let path = self.manifest.dir.join(file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+}
+
+impl ScaleRuntime {
+    fn vr(&self, v: Variant) -> Result<&VariantRuntime> {
+        self.variants
+            .get(&v)
+            .ok_or_else(|| anyhow!("variant {v:?} not loaded for scale {}", self.info.name))
+    }
+
+    pub fn loaded_variants(&self) -> Vec<Variant> {
+        self.variants.keys().copied().collect()
+    }
+
+    /// Fresh zeroed KV cache for a variant.
+    pub fn new_kv(&self, v: Variant) -> Result<KvCache> {
+        let vi = &self.vr(v)?.info;
+        let zeros = vec![0f32; vi.kv_shape.iter().product()];
+        let buf = self
+            .client
+            .buffer_from_host_buffer(&zeros, &vi.kv_shape, None)
+            .map_err(|e| anyhow!("kv alloc: {e:?}"))?;
+        Ok(KvCache { buf, pos: 0, variant: v })
+    }
+
+    /// Execute one step of `t_shape` in-flight tokens.
+    ///
+    /// `tokens`/`depths` must have length == t_shape, `mask` length
+    /// t_shape². The tree tokens' KV is written at cache slots
+    /// `kv.pos .. kv.pos + t_shape`; the caller decides (via `commit` or a
+    /// manual pos advance for chain prefixes) how much becomes committed.
+    pub fn step(
+        &self,
+        kv: &mut KvCache,
+        t_shape: usize,
+        tokens: &[u32],
+        mask: &[f32],
+        depths: &[i32],
+    ) -> Result<StepOutput> {
+        let vr = self.vr(kv.variant)?;
+        let exe = vr
+            .steps
+            .get(&t_shape)
+            .ok_or_else(|| anyhow!("no step{t_shape} artifact for {:?}", kv.variant))?;
+        assert_eq!(tokens.len(), t_shape, "tokens len != step shape");
+        assert_eq!(mask.len(), t_shape * t_shape, "mask len != T^2");
+        assert_eq!(depths.len(), t_shape, "depths len != T");
+        assert!(
+            kv.pos + t_shape <= self.info.s_max,
+            "KV overflow: pos {} + T {} > s_max {}",
+            kv.pos,
+            t_shape,
+            self.info.s_max
+        );
+
+        let start = Instant::now();
+        let toks_i32: Vec<i32> = tokens.iter().map(|t| *t as i32).collect();
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(&[kv.pos as i32], &[], None)
+            .map_err(|e| anyhow!("pos upload: {e:?}"))?;
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&toks_i32, &[t_shape], None)
+            .map_err(|e| anyhow!("tokens upload: {e:?}"))?;
+        let mask_buf = self
+            .client
+            .buffer_from_host_buffer(mask, &[t_shape, t_shape], None)
+            .map_err(|e| anyhow!("mask upload: {e:?}"))?;
+        let depth_buf = self
+            .client
+            .buffer_from_host_buffer(depths, &[t_shape], None)
+            .map_err(|e| anyhow!("depths upload: {e:?}"))?;
+
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(vr.params.len() + 5);
+        for p in &vr.params {
+            args.push(p.as_ref());
+        }
+        args.push(&kv.buf);
+        args.push(&pos_buf);
+        args.push(&tok_buf);
+        args.push(&mask_buf);
+        args.push(&depth_buf);
+
+        let outs = exe.execute_b(&args).map_err(|e| anyhow!("step exec: {e:?}"))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("step result fetch: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("step result split: {e:?}"))?;
+        if parts.len() != 2 {
+            return Err(anyhow!("step returned {} outputs, expected 2", parts.len()));
+        }
+        let mut it = parts.into_iter();
+        let logits_lit = it.next().unwrap();
+        let kv_lit = it.next().unwrap();
+        let logits = logits_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
+        // NOTE: buffer_from_host_literal is asynchronous (no ready-future
+        // await in the C shim) — the literal would be freed while PJRT still
+        // reads it. buffer_from_host_buffer copies synchronously
+        // (kImmutableOnlyDuringCall), so the KV goes back through a host vec.
+        let kv_host = kv_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("kv to_vec: {e:?}"))?;
+        kv.buf = self
+            .client
+            .buffer_from_host_buffer(&kv_host, &vr.info.kv_shape, None)
+            .map_err(|e| anyhow!("kv reupload: {e:?}"))?;
+
+        let elapsed = start.elapsed();
+        let mut c = vr.counters.borrow_mut();
+        c.steps += 1;
+        c.tokens_stepped += t_shape as u64;
+        c.time += elapsed;
+        Ok(StepOutput { logits, elapsed })
+    }
+
+    /// Compact accepted tree slots after a tree verification.
+    ///
+    /// `src_slots[i]` is the tree-slot index whose KV becomes committed
+    /// position `kv.pos + i` (length = number of accepted slots). Advances
+    /// `kv.pos` by `src_slots.len()`.
+    pub fn commit(
+        &self,
+        kv: &mut KvCache,
+        t_shape: usize,
+        src_slots: &[usize],
+    ) -> Result<Duration> {
+        let vr = self.vr(kv.variant)?;
+        let n_accept = src_slots.len();
+        assert!(n_accept <= t_shape);
+
+        // Fast path: accepted slots already contiguous from slot 0 (chain
+        // acceptance) — the KV rows are already in place, no gather needed.
+        if src_slots.iter().enumerate().all(|(i, s)| *s == i) {
+            kv.pos += n_accept;
+            return Ok(Duration::ZERO);
+        }
+
+        let exe = vr
+            .commits
+            .get(&t_shape)
+            .ok_or_else(|| anyhow!("no commit{t_shape} artifact for {:?}", kv.variant))?;
+        let start = Instant::now();
+        let mut src_abs = vec![0i32; t_shape];
+        for i in 0..t_shape {
+            let slot = src_slots.get(i).copied().unwrap_or(i); // pad: identity
+            src_abs[i] = (kv.pos + slot) as i32;
+        }
+        let idx_buf = self
+            .client
+            .buffer_from_host_buffer(&src_abs, &[t_shape], None)
+            .map_err(|e| anyhow!("commit idx upload: {e:?}"))?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(&[kv.pos as i32], &[], None)
+            .map_err(|e| anyhow!("commit pos upload: {e:?}"))?;
+        let args: Vec<&PjRtBuffer> = vec![&kv.buf, &idx_buf, &pos_buf];
+        let outs = exe.execute_b(&args).map_err(|e| anyhow!("commit exec: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("commit fetch: {e:?}"))?;
+        let kv_lit = lit.to_tuple1().map_err(|e| anyhow!("commit split: {e:?}"))?;
+        let kv_host = kv_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("commit kv to_vec: {e:?}"))?;
+        kv.buf = self
+            .client
+            .buffer_from_host_buffer(&kv_host, &vr.info.kv_shape, None)
+            .map_err(|e| anyhow!("commit kv reupload: {e:?}"))?;
+        kv.pos += n_accept;
+
+        let elapsed = start.elapsed();
+        let mut c = vr.counters.borrow_mut();
+        c.commits += 1;
+        c.time += elapsed;
+        Ok(elapsed)
+    }
+
+    /// Roll the cache back to `pos` (discard everything after). Stale slots
+    /// are never attended (attention masks by `pos`), so this is free.
+    pub fn rollback(&self, kv: &mut KvCache, pos: usize) {
+        debug_assert!(pos <= kv.pos);
+        kv.pos = pos;
+    }
+
+    pub fn counters(&self, v: Variant) -> VariantCounters {
+        self.variants
+            .get(&v)
+            .map(|vr| vr.counters.borrow().clone())
+            .unwrap_or_default()
+    }
+
+    pub fn reset_counters(&self) {
+        for vr in self.variants.values() {
+            *vr.counters.borrow_mut() = VariantCounters::default();
+        }
+    }
+
+    /// Vocabulary size (logits row width).
+    pub fn vocab(&self) -> usize {
+        self.info.vocab
+    }
+}
+
+/// Argmax over one logits row.
+pub fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, v) in row.iter().enumerate() {
+        if *v > bv {
+            bv = *v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Numerically-stable softmax probability of `idx` within a logits row.
+pub fn softmax_prob(row: &[f32], idx: usize) -> f64 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f64 = row.iter().map(|v| ((*v - m) as f64).exp()).sum();
+    ((row[idx] - m) as f64).exp() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.0, 3.0, -1.0, 3.0 - 1e-6]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn softmax_prob_normalized() {
+        let row = [1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| softmax_prob(&row, i)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(softmax_prob(&row, 2) > softmax_prob(&row, 0));
+    }
+}

@@ -1,0 +1,293 @@
+//! Serving front-end: a threaded TCP server with a dynamic request queue.
+//!
+//! Architecture (PJRT handles are not `Send`, so the model lives on a
+//! dedicated worker thread):
+//!
+//!   * **acceptor** — accepts TCP connections; one lightweight reader
+//!     thread per connection parses newline-delimited JSON requests and
+//!     enqueues them;
+//!   * **scheduler queue** — an mpsc channel acting as the dynamic batcher:
+//!     requests from all connections interleave FIFO, so one slow client
+//!     cannot monopolize the engine between its own requests;
+//!   * **worker** — owns the PJRT runtime + engine; drains the queue,
+//!     generates, and replies through per-request channels.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"id": 1, "prompt": [1, 30, ...], "max_new": 64}
+//!   <- {"id": 1, "tokens": [...], "ms": 123.4, "rounds": 17,
+//!       "mean_accepted": 3.4, "engine": "cas-spec", "text": "a1 a2 ..."}
+//!   -> {"cmd": "stats"}   |   {"cmd": "shutdown"}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::engine::{build_engine, required_variants};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+enum Job {
+    Generate(Request, mpsc::Sender<String>),
+    Stats(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Serve until a shutdown command arrives. Blocks the calling thread.
+pub fn serve(cfg: &RunConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
+    eprintln!("cas-spec server on {} (engine={})", cfg.addr, cfg.engines[0]);
+
+    let (tx, rx) = mpsc::channel::<Job>();
+
+    // ---- worker: owns the runtime + engine ----
+    let wcfg = cfg.clone();
+    let worker = thread::spawn(move || -> Result<()> {
+        let engine_name = wcfg.engines[0].clone();
+        let rt = Runtime::open(&wcfg.artifacts)?;
+        let srt = rt.load_scale(&wcfg.scale, &required_variants(&engine_name))?;
+        let mut eng = build_engine(&engine_name, &srt, &wcfg.opts)?;
+        let mut served = 0u64;
+        let mut total_tokens = 0u64;
+        let mut total_secs = 0f64;
+        for job in rx {
+            match job {
+                Job::Shutdown => break,
+                Job::Stats(reply) => {
+                    let j = Json::obj(vec![
+                        ("served", Json::Num(served as f64)),
+                        ("total_tokens", Json::Num(total_tokens as f64)),
+                        ("total_secs", Json::Num(total_secs)),
+                        ("engine", Json::Str(engine_name.clone())),
+                        ("scale", Json::Str(wcfg.scale.clone())),
+                    ]);
+                    let _ = reply.send(j.to_string());
+                }
+                Job::Generate(req, reply) => {
+                    let t0 = Instant::now();
+                    let resp = match eng.generate(&req.prompt, req.max_new) {
+                        Ok(g) => {
+                            served += 1;
+                            total_tokens += g.tokens.len() as u64;
+                            let secs = t0.elapsed().as_secs_f64();
+                            total_secs += secs;
+                            Json::obj(vec![
+                                ("id", Json::Num(req.id as f64)),
+                                ("tokens", Json::arr_u32(&g.tokens)),
+                                ("text", Json::Str(crate::tokenizer::render(&g.tokens))),
+                                ("ms", Json::Num(secs * 1e3)),
+                                ("rounds", Json::Num(g.stats.rounds as f64)),
+                                ("mean_accepted", Json::Num(g.stats.mean_accepted())),
+                                ("engine", Json::Str(engine_name.clone())),
+                            ])
+                        }
+                        Err(e) => Json::obj(vec![
+                            ("id", Json::Num(req.id as f64)),
+                            ("error", Json::Str(format!("{e:#}"))),
+                        ]),
+                    };
+                    let _ = reply.send(resp.to_string());
+                }
+            }
+        }
+        Ok(())
+    });
+
+    // ---- acceptor: one reader thread per connection ----
+    let shutting_down = Arc::new(AtomicBool::new(false));
+    for stream in listener.incoming() {
+        if shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let tx = tx.clone();
+        let flag = shutting_down.clone();
+        let addr = cfg.addr.clone();
+        thread::spawn(move || {
+            if handle_connection(stream, tx) {
+                flag.store(true, Ordering::SeqCst);
+                // wake the acceptor so it observes the flag
+                let _ = TcpStream::connect(&addr);
+            }
+        });
+    }
+    let _ = tx.send(Job::Shutdown);
+    worker.join().map_err(|_| anyhow!("worker panicked"))??;
+    Ok(())
+}
+
+/// Reads requests from one connection; returns true when a shutdown command
+/// was received (the caller then stops accepting).
+fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Job>) -> bool {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return false,
+    };
+    let reader = BufReader::new(stream);
+    let mut shutdown = false;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_line(&line) {
+            Ok(ParsedLine::Shutdown) => {
+                let _ = writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]));
+                shutdown = true;
+                break;
+            }
+            Ok(ParsedLine::Stats) => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(Job::Stats(rtx)).is_ok() {
+                    if let Ok(resp) = rrx.recv() {
+                        let _ = writeln!(writer, "{resp}");
+                    }
+                }
+            }
+            Ok(ParsedLine::Request(req)) => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(Job::Generate(req, rtx)).is_err() {
+                    break;
+                }
+                match rrx.recv() {
+                    Ok(resp) => {
+                        if writeln!(writer, "{resp}").is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            Err(e) => {
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::Str(format!("{e} (from {peer:?})")))])
+                );
+            }
+        }
+    }
+    shutdown
+}
+
+enum ParsedLine {
+    Request(Request),
+    Stats,
+    Shutdown,
+}
+
+fn parse_line(line: &str) -> Result<ParsedLine> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "shutdown" => Ok(ParsedLine::Shutdown),
+            "stats" => Ok(ParsedLine::Stats),
+            other => Err(anyhow!("unknown cmd {other:?}")),
+        };
+    }
+    let id = j.get("id").and_then(|v| v.as_u64()).unwrap_or(0);
+    let prompt: Vec<u32> = j
+        .req("prompt")?
+        .usize_arr()
+        .map_err(|_| anyhow!("prompt must be an int array"))?
+        .into_iter()
+        .map(|t| t as u32)
+        .collect();
+    if prompt.is_empty() {
+        return Err(anyhow!("empty prompt"));
+    }
+    let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(64);
+    Ok(ParsedLine::Request(Request { id, prompt, max_new }))
+}
+
+/// Minimal blocking client used by examples and tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn request_raw(&mut self, line: &str) -> Result<Json> {
+        writeln!(self.writer, "{line}")?;
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf)?;
+        Json::parse(&buf).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    pub fn generate(&mut self, id: u64, prompt: &[u32], max_new: usize) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("prompt", Json::arr_u32(prompt)),
+            ("max_new", Json::Num(max_new as f64)),
+        ]);
+        self.request_raw(&req.to_string())
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.request_raw(r#"{"cmd":"stats"}"#)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let _ = self.request_raw(r#"{"cmd":"shutdown"}"#)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_line() {
+        match parse_line(r#"{"id": 3, "prompt": [1,2,3], "max_new": 8}"#).unwrap() {
+            ParsedLine::Request(r) => {
+                assert_eq!(r.id, 3);
+                assert_eq!(r.prompt, vec![1, 2, 3]);
+                assert_eq!(r.max_new, 8);
+            }
+            _ => panic!("expected request"),
+        }
+    }
+
+    #[test]
+    fn parse_commands() {
+        assert!(matches!(parse_line(r#"{"cmd":"stats"}"#).unwrap(), ParsedLine::Stats));
+        assert!(matches!(
+            parse_line(r#"{"cmd":"shutdown"}"#).unwrap(),
+            ParsedLine::Shutdown
+        ));
+        assert!(parse_line(r#"{"cmd":"nope"}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_line("not json").is_err());
+        assert!(parse_line(r#"{"prompt": []}"#).is_err());
+        assert!(parse_line(r#"{"max_new": 4}"#).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Speculative-decoding core: draft trees, lossless verification, and the
+//! per-variant decoding session (KV bookkeeping, prefill, catch-up).
+
+pub mod session;
+pub mod tree;
+pub mod verify;
+
+pub use session::VariantSession;
+pub use tree::{DraftTree, ROOT_CONFIG};
+pub use verify::{verify_greedy, VerifyOutcome};

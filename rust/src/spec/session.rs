@@ -1,0 +1,114 @@
+//! Per-variant decoding session: KV cache handle + prefill/decode/verify
+//! plumbing over the runtime's step artifacts.
+//!
+//! A session always keeps `pos` = number of *committed* tokens in its cache.
+//! Speculative KV (tree slots) written by `verify_tree` only becomes
+//! committed through `commit`; chain steps (prefill/decode) commit
+//! immediately via the contiguous fast path.
+
+use anyhow::Result;
+
+use crate::model::Variant;
+use crate::runtime::{KvCache, ScaleRuntime, StepOutput};
+use crate::spec::tree::DraftTree;
+
+/// Chunk shapes available for chain feeding, descending.
+const CHAIN_SHAPES: [usize; 4] = [64, 16, 8, 1];
+
+pub struct VariantSession<'rt> {
+    rt: &'rt ScaleRuntime,
+    kv: KvCache,
+    /// Logits after the most recently committed token (None until first feed).
+    last_logits: Option<Vec<f32>>,
+}
+
+impl<'rt> VariantSession<'rt> {
+    pub fn new(rt: &'rt ScaleRuntime, variant: Variant) -> Result<Self> {
+        Ok(Self { rt, kv: rt.new_kv(variant)?, last_logits: None })
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.kv.variant
+    }
+
+    pub fn pos(&self) -> usize {
+        self.kv.pos
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.rt.vocab()
+    }
+
+    /// Logits of the next-token distribution after everything committed.
+    pub fn last_logits(&self) -> Option<&[f32]> {
+        self.last_logits.as_deref()
+    }
+
+    /// Feed a chain of tokens (prompt prefill or accepted-token catch-up),
+    /// committing all of them. Returns logits after the final token.
+    pub fn feed(&mut self, tokens: &[u32]) -> Result<()> {
+        let vocab = self.rt.vocab();
+        let mut rest = tokens;
+        while !rest.is_empty() {
+            let n = rest.len();
+            // one call if a single shape covers the remainder, else 64-chunks
+            let t_shape = if n >= 64 {
+                64
+            } else {
+                *CHAIN_SHAPES.iter().rev().find(|s| **s >= n).unwrap()
+            };
+            let take = n.min(t_shape);
+            let chunk = &rest[..take];
+            let tree = DraftTree::chain(chunk[0], &chunk[1..], t_shape.max(take));
+            let (toks, mask, depths) = tree.serialize(t_shape, 0);
+            let out = self.rt.step(&mut self.kv, t_shape, &toks, &mask, &depths)?;
+            // contiguous chain: commit by advancing pos (fast path)
+            let slots: Vec<usize> = (0..take).collect();
+            self.rt.commit(&mut self.kv, t_shape, &slots)?;
+            self.last_logits =
+                Some(out.logits[(take - 1) * vocab..take * vocab].to_vec());
+            rest = &rest[take..];
+        }
+        Ok(())
+    }
+
+    /// Decode a single committed token; returns the next-token logits.
+    pub fn decode_one(&mut self, token: u32) -> Result<&[f32]> {
+        let vocab = self.rt.vocab();
+        let out = self.rt.step(&mut self.kv, 1, &[token], &[1.0], &[0])?;
+        self.rt.commit(&mut self.kv, 1, &[0])?;
+        self.last_logits = Some(out.logits[..vocab].to_vec());
+        Ok(self.last_logits.as_deref().unwrap())
+    }
+
+    /// Run a speculative tree step WITHOUT committing. Returns the (T, V)
+    /// logits rows; slot i's KV sits uncommitted at cache slot pos+i until
+    /// `commit_slots` (or is discarded by the next overwrite).
+    pub fn verify_tree(&mut self, tree: &DraftTree, t_shape: usize) -> Result<StepOutput> {
+        let (toks, mask, depths) = tree.serialize(t_shape, 0);
+        self.rt.step(&mut self.kv, t_shape, &toks, &mask, &depths)
+    }
+
+    /// Commit the KV of `accepted_slots` (tree-slot indices, path order)
+    /// from the most recent `verify_tree` call of shape `t_shape`.
+    pub fn commit_slots(&mut self, t_shape: usize, accepted_slots: &[usize]) -> Result<()> {
+        self.rt.commit(&mut self.kv, t_shape, accepted_slots)?;
+        Ok(())
+    }
+
+    /// Record externally-computed logits as the post-commit distribution
+    /// (used after tree verification: the deepest accepted slot's row).
+    pub fn set_last_logits(&mut self, row: &[f32]) {
+        self.last_logits = Some(row.to_vec());
+    }
+
+    /// Discard everything after `pos` (free: stale slots are never attended).
+    pub fn rollback(&mut self, pos: usize) {
+        self.rt.rollback(&mut self.kv, pos);
+    }
+
+    /// Remaining cache capacity for in-flight tokens.
+    pub fn capacity_left(&self) -> usize {
+        self.rt.info.s_max - self.kv.pos
+    }
+}

@@ -1,0 +1,253 @@
+//! Draft token tree (paper §4.2, Alg. 1 state).
+//!
+//! Slot 0 is always the *root*: the bonus token of the previous round —
+//! already emitted, but its KV is not yet in the cache, so it rides along
+//! with the tree and is accepted by construction. Every other node is a
+//! drafted token whose parent is an earlier slot. The tree serializes into
+//! the step-artifact calling convention: tokens[T], ancestor mask[T,T]
+//! (diagonal 1, padding slots self-only), depths[T].
+
+/// Which draft source produced a node (index into the engine's config set;
+/// `ROOT_CONFIG` for the root).
+pub const ROOT_CONFIG: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+pub struct DraftNode {
+    pub token: u32,
+    /// Parent slot index; `None` only for the root.
+    pub parent: Option<usize>,
+    pub depth: usize,
+    /// Draft-model confidence for this token (softmax prob for neural
+    /// drafts, match-length heuristic for PLD) — the token-level
+    /// information of §4.2.
+    pub prob: f64,
+    /// Config that drafted this node.
+    pub config: usize,
+    /// Estimated accumulated acceptance rate P_acc of the path to here.
+    pub p_acc: f64,
+    /// Active-leaf flag (D_active in Alg. 1).
+    pub active: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct DraftTree {
+    pub nodes: Vec<DraftNode>,
+    pub max_size: usize,
+}
+
+impl DraftTree {
+    /// A fresh tree holding only the root (= last bonus token).
+    pub fn new(root_token: u32, max_size: usize) -> Self {
+        assert!(max_size >= 1);
+        DraftTree {
+            nodes: vec![DraftNode {
+                token: root_token,
+                parent: None,
+                depth: 0,
+                prob: 1.0,
+                config: ROOT_CONFIG,
+                p_acc: 1.0,
+                active: true,
+            }],
+            max_size,
+        }
+    }
+
+    /// A linear chain `root -> toks[0] -> toks[1] -> ...` (what chain-based
+    /// engines verify; also used to replay accepted paths into draft caches).
+    pub fn chain(root_token: u32, toks: &[u32], max_size: usize) -> Self {
+        let mut t = DraftTree::new(root_token, max_size);
+        let mut parent = 0;
+        for &tok in toks {
+            parent = t.add_child(parent, tok, 1.0, 0, 1.0);
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.nodes.len() >= self.max_size
+    }
+
+    /// Remaining slot capacity.
+    pub fn remaining(&self) -> usize {
+        self.max_size - self.nodes.len()
+    }
+
+    pub fn add_child(&mut self, parent: usize, token: u32, prob: f64, config: usize, p_acc: f64) -> usize {
+        assert!(parent < self.nodes.len(), "parent out of range");
+        assert!(!self.is_full(), "tree full");
+        let depth = self.nodes[parent].depth + 1;
+        self.nodes.push(DraftNode {
+            token,
+            parent: Some(parent),
+            depth,
+            prob,
+            config,
+            p_acc,
+            active: true,
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Token path root..=node (slot indices).
+    pub fn path_slots(&self, mut idx: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.nodes[idx].depth + 1);
+        loop {
+            out.push(idx);
+            match self.nodes[idx].parent {
+                Some(p) => idx = p,
+                None => break,
+            }
+        }
+        out.reverse();
+        out
+    }
+
+    /// Tokens along the path root..=node, excluding the root token.
+    pub fn path_tokens(&self, idx: usize) -> Vec<u32> {
+        self.path_slots(idx)[1..]
+            .iter()
+            .map(|s| self.nodes[*s].token)
+            .collect()
+    }
+
+    pub fn children(&self, idx: usize) -> impl Iterator<Item = usize> + '_ {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(move |(_, n)| n.parent == Some(idx))
+            .map(|(i, _)| i)
+    }
+
+    /// Active leaf with highest P_acc (Alg. 1 line 5).
+    pub fn best_active_leaf(&self) -> Option<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.active)
+            .max_by(|a, b| a.1.p_acc.partial_cmp(&b.1.p_acc).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    pub fn deactivate(&mut self, idx: usize) {
+        self.nodes[idx].active = false;
+    }
+
+    /// Serialize to the step-artifact convention, padded to `t_shape` slots.
+    /// Padding slots carry token `pad_token`, self-only mask, depth 0; the
+    /// junk KV they produce is compacted away by the commit op.
+    pub fn serialize(&self, t_shape: usize, pad_token: u32) -> (Vec<u32>, Vec<f32>, Vec<i32>) {
+        assert!(self.nodes.len() <= t_shape, "tree larger than step shape");
+        let mut tokens = vec![pad_token; t_shape];
+        let mut mask = vec![0f32; t_shape * t_shape];
+        let mut depths = vec![0i32; t_shape];
+        for (i, n) in self.nodes.iter().enumerate() {
+            tokens[i] = n.token;
+            depths[i] = n.depth as i32;
+            // ancestors-or-self
+            let mut cur = i;
+            loop {
+                mask[i * t_shape + cur] = 1.0;
+                match self.nodes[cur].parent {
+                    Some(p) => cur = p,
+                    None => break,
+                }
+            }
+        }
+        for i in self.nodes.len()..t_shape {
+            mask[i * t_shape + i] = 1.0;
+        }
+        (tokens, mask, depths)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_tree() -> DraftTree {
+        // root(9) -> a(10) -> b(11)
+        //         -> c(12)
+        let mut t = DraftTree::new(9, 16);
+        let a = t.add_child(0, 10, 0.9, 0, 0.9);
+        let _b = t.add_child(a, 11, 0.8, 0, 0.72);
+        let _c = t.add_child(0, 12, 0.5, 1, 0.5);
+        t
+    }
+
+    #[test]
+    fn paths() {
+        let t = demo_tree();
+        assert_eq!(t.path_slots(2), vec![0, 1, 2]);
+        assert_eq!(t.path_tokens(2), vec![10, 11]);
+        assert_eq!(t.path_slots(3), vec![0, 3]);
+        assert_eq!(t.path_tokens(0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn serialize_mask_is_ancestor_closure() {
+        let t = demo_tree();
+        let (tokens, mask, depths) = t.serialize(8, 0);
+        assert_eq!(&tokens[..4], &[9, 10, 11, 12]);
+        assert_eq!(&depths[..4], &[0, 1, 2, 1]);
+        let m = |i: usize, j: usize| mask[i * 8 + j];
+        // node 2 (token 11) sees root, node 1, itself — not node 3
+        assert_eq!((m(2, 0), m(2, 1), m(2, 2), m(2, 3)), (1.0, 1.0, 1.0, 0.0));
+        // node 3 (token 12) sees root and itself only
+        assert_eq!((m(3, 0), m(3, 1), m(3, 3)), (1.0, 0.0, 1.0));
+        // padding slots: self only
+        assert_eq!(m(5, 5), 1.0);
+        assert_eq!(mask[5 * 8..6 * 8].iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn chain_layout() {
+        let t = DraftTree::chain(1, &[2, 3, 4], 16);
+        assert_eq!(t.len(), 4);
+        let (tokens, mask, depths) = t.serialize(4, 0);
+        assert_eq!(tokens, vec![1, 2, 3, 4]);
+        assert_eq!(depths, vec![0, 1, 2, 3]);
+        // chain mask == lower triangular
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(mask[i * 4 + j], if j <= i { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn best_active_leaf_tracks_p_acc() {
+        let mut t = demo_tree();
+        // root has p_acc 1.0 and is active — deactivate expanded nodes first
+        t.deactivate(0);
+        t.deactivate(1);
+        assert_eq!(t.best_active_leaf(), Some(2)); // p_acc 0.72 > 0.5
+        t.deactivate(2);
+        assert_eq!(t.best_active_leaf(), Some(3));
+        t.deactivate(3);
+        assert_eq!(t.best_active_leaf(), None);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut t = DraftTree::new(1, 2);
+        t.add_child(0, 2, 1.0, 0, 1.0);
+        assert!(t.is_full());
+        assert_eq!(t.remaining(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overfull_panics() {
+        let mut t = DraftTree::new(1, 1);
+        t.add_child(0, 2, 1.0, 0, 1.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Lossless greedy verification of a draft tree.
+//!
+//! Given the target model's logits at every tree slot, walk from the root
+//! accepting exactly the child whose token equals the greedy argmax of its
+//! parent's logits. The result (accepted path + one bonus token) is, by
+//! induction, identical to what plain autoregressive greedy decoding would
+//! have produced — the paper's losslessness guarantee, checked end-to-end
+//! by `tests/lossless.rs` for every engine.
+
+use super::tree::DraftTree;
+use crate::runtime::argmax;
+
+#[derive(Debug, Clone)]
+pub struct VerifyOutcome {
+    /// Accepted slot indices in path order, starting with the root (slot 0).
+    pub accepted_slots: Vec<usize>,
+    /// Tokens of the accepted slots *excluding* the root (newly confirmed).
+    pub accepted_tokens: Vec<u32>,
+    /// The bonus token: greedy argmax at the deepest accepted slot.
+    pub bonus: u32,
+    /// Per-slot acceptance verdict for estimator updates: (slot, accepted).
+    pub slot_outcomes: Vec<(usize, bool)>,
+}
+
+/// `logits` is row-major (t_shape, vocab); only rows of real tree slots are
+/// read. Requires `tree.len() >= 1` (the root).
+pub fn verify_greedy(tree: &DraftTree, logits: &[f32], vocab: usize) -> VerifyOutcome {
+    let row = |slot: usize| &logits[slot * vocab..(slot + 1) * vocab];
+
+    let mut accepted_slots = vec![0usize];
+    let mut accepted_tokens = Vec::new();
+    let mut slot_outcomes = Vec::new();
+    let mut cur = 0usize;
+    loop {
+        let want = argmax(row(cur));
+        // children of cur, in insertion order
+        let mut next = None;
+        for c in tree.children(cur) {
+            let ok = tree.nodes[c].token == want;
+            slot_outcomes.push((c, ok));
+            if ok && next.is_none() {
+                next = Some(c);
+            }
+        }
+        match next {
+            Some(c) => {
+                accepted_slots.push(c);
+                accepted_tokens.push(tree.nodes[c].token);
+                cur = c;
+            }
+            None => {
+                return VerifyOutcome {
+                    accepted_slots,
+                    accepted_tokens,
+                    bonus: argmax(row(cur)),
+                    slot_outcomes,
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// logits helper: row per slot; `peaks[slot]` = argmax token id.
+    fn fake_logits(peaks: &[u32], vocab: usize) -> Vec<f32> {
+        let mut l = vec![0f32; peaks.len() * vocab];
+        for (i, p) in peaks.iter().enumerate() {
+            l[i * vocab + *p as usize] = 10.0;
+        }
+        l
+    }
+
+    #[test]
+    fn accepts_matching_chain_and_bonus() {
+        // chain root(1) -> 2 -> 3; target predicts 2 after root, 3 after 2,
+        // and 7 after 3.
+        let t = DraftTree::chain(1, &[2, 3], 16);
+        let logits = fake_logits(&[2, 3, 7], 8);
+        let v = verify_greedy(&t, &logits, 8);
+        assert_eq!(v.accepted_slots, vec![0, 1, 2]);
+        assert_eq!(v.accepted_tokens, vec![2, 3]);
+        assert_eq!(v.bonus, 7);
+    }
+
+    #[test]
+    fn rejects_at_first_mismatch() {
+        let t = DraftTree::chain(1, &[2, 9, 4], 16); // 9 is wrong
+        let logits = fake_logits(&[2, 3, 0, 0], 16);
+        let v = verify_greedy(&t, &logits, 16);
+        assert_eq!(v.accepted_tokens, vec![2]);
+        assert_eq!(v.bonus, 3); // argmax at the last accepted slot
+        // outcome log: slot1 accepted, slot2 rejected
+        assert!(v.slot_outcomes.contains(&(1, true)));
+        assert!(v.slot_outcomes.contains(&(2, false)));
+    }
+
+    #[test]
+    fn picks_correct_branch() {
+        // root(1) -> a(5), b(6); target predicts 6 then 8.
+        let mut t = DraftTree::new(1, 16);
+        let _a = t.add_child(0, 5, 0.5, 0, 0.5);
+        let b = t.add_child(0, 6, 0.5, 0, 0.5);
+        t.add_child(b, 8, 0.5, 0, 0.25);
+        // rows: slot0 predicts 6, slot1 (unused), slot2 predicts 8, slot3 predicts 9
+        let logits = fake_logits(&[6, 0, 8, 9], 16);
+        let v = verify_greedy(&t, &logits, 16);
+        assert_eq!(v.accepted_slots, vec![0, 2, 3]);
+        assert_eq!(v.accepted_tokens, vec![6, 8]);
+        assert_eq!(v.bonus, 9);
+        // sibling a recorded as rejected
+        assert!(v.slot_outcomes.contains(&(1, false)));
+    }
+
+    #[test]
+    fn nothing_accepted_still_gives_bonus() {
+        let t = DraftTree::chain(1, &[2], 16);
+        let logits = fake_logits(&[4, 0], 8);
+        let v = verify_greedy(&t, &logits, 8);
+        assert_eq!(v.accepted_slots, vec![0]);
+        assert!(v.accepted_tokens.is_empty());
+        assert_eq!(v.bonus, 4);
+    }
+
+    #[test]
+    fn root_only_tree() {
+        let t = DraftTree::new(3, 16);
+        let logits = fake_logits(&[5], 8);
+        let v = verify_greedy(&t, &logits, 8);
+        assert_eq!(v.accepted_slots, vec![0]);
+        assert_eq!(v.bonus, 5);
+    }
+
+    #[test]
+    fn equivalence_with_sequential_greedy() {
+        // Property: for a random chain drafted from a deterministic "model"
+        // (next = (3*cur+1) % V), verification accepts exactly the correct
+        // prefix length.
+        let vocab = 32;
+        let model_next = |t: u32| (3 * t + 1) % vocab as u32;
+        for wrong_at in 0..5usize {
+            let root = 2u32;
+            let mut chain = Vec::new();
+            let mut cur = root;
+            for i in 0..5 {
+                cur = if i == wrong_at { (model_next(cur) + 1) % vocab as u32 } else { model_next(cur) };
+                chain.push(cur);
+            }
+            let t = DraftTree::chain(root, &chain, 16);
+            // target logits at each slot = model_next of that slot's token
+            let peaks: Vec<u32> = t.nodes.iter().map(|n| model_next(n.token)).collect();
+            let logits = fake_logits(&peaks, vocab);
+            let v = verify_greedy(&t, &logits, vocab);
+            assert_eq!(v.accepted_tokens.len(), wrong_at);
+        }
+    }
+}

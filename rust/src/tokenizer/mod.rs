@@ -1,0 +1,128 @@
+//! Token vocabulary of the synthetic language (mirrors
+//! `python/compile/synthlang.py`) and a human-readable rendering.
+//!
+//! The corpus is defined directly over token ids, so the "tokenizer" is an
+//! id<->name mapping rather than a string segmenter: specials render as
+//! `<bos>`-style tags, digits as `0..9`, region-A content as `a17`, region-B
+//! as `b42`.
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const QUERY: u32 = 4;
+pub const PERIOD: u32 = 5;
+pub const ANSWER: u32 = 6;
+pub const PLUS: u32 = 7;
+pub const MINUS: u32 = 8;
+pub const TIMES: u32 = 9;
+pub const EQUALS: u32 = 10;
+pub const COMMA: u32 = 11;
+
+pub const DIGIT0: u32 = 16;
+pub const A_BASE: u32 = 26;
+pub const A_SIZE: u32 = 240;
+pub const B_BASE: u32 = 266;
+pub const B_SIZE: u32 = 240;
+pub const VOCAB_SIZE: u32 = 512;
+
+/// Render one token id.
+pub fn render_token(t: u32) -> String {
+    match t {
+        PAD => "<pad>".into(),
+        BOS => "<bos>".into(),
+        EOS => "<eos>".into(),
+        SEP => "<sep>".into(),
+        QUERY => "<q>".into(),
+        PERIOD => ".".into(),
+        ANSWER => "<ans>".into(),
+        PLUS => "+".into(),
+        MINUS => "-".into(),
+        TIMES => "*".into(),
+        EQUALS => "=".into(),
+        COMMA => ",".into(),
+        t if (DIGIT0..DIGIT0 + 10).contains(&t) => (t - DIGIT0).to_string(),
+        t if (A_BASE..A_BASE + A_SIZE).contains(&t) => format!("a{}", t - A_BASE),
+        t if (B_BASE..B_BASE + B_SIZE).contains(&t) => format!("b{}", t - B_BASE),
+        t => format!("<{t}>"),
+    }
+}
+
+/// Render a token sequence as a compact string.
+pub fn render(tokens: &[u32]) -> String {
+    tokens.iter().map(|t| render_token(*t)).collect::<Vec<_>>().join(" ")
+}
+
+/// Parse a single rendered token back to its id (inverse of `render_token`).
+pub fn parse_token(s: &str) -> Option<u32> {
+    match s {
+        "<pad>" => Some(PAD),
+        "<bos>" => Some(BOS),
+        "<eos>" => Some(EOS),
+        "<sep>" => Some(SEP),
+        "<q>" => Some(QUERY),
+        "." => Some(PERIOD),
+        "<ans>" => Some(ANSWER),
+        "+" => Some(PLUS),
+        "-" => Some(MINUS),
+        "*" => Some(TIMES),
+        "=" => Some(EQUALS),
+        "," => Some(COMMA),
+        _ => {
+            if let Ok(d) = s.parse::<u32>() {
+                return (d < 10).then_some(DIGIT0 + d);
+            }
+            if let Some(n) = s.strip_prefix('a').and_then(|r| r.parse::<u32>().ok()) {
+                return (n < A_SIZE).then_some(A_BASE + n);
+            }
+            if let Some(n) = s.strip_prefix('b').and_then(|r| r.parse::<u32>().ok()) {
+                return (n < B_SIZE).then_some(B_BASE + n);
+            }
+            if let Some(inner) = s.strip_prefix('<').and_then(|r| r.strip_suffix('>')) {
+                return inner.parse::<u32>().ok().filter(|t| *t < VOCAB_SIZE);
+            }
+            None
+        }
+    }
+}
+
+/// Parse a whitespace-separated rendering back into ids.
+pub fn parse(s: &str) -> Option<Vec<u32>> {
+    s.split_whitespace().map(parse_token).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_ids() {
+        for t in 0..VOCAB_SIZE {
+            let r = render_token(t);
+            assert_eq!(parse_token(&r), Some(t), "token {t} rendered {r:?}");
+        }
+    }
+
+    #[test]
+    fn render_sequence() {
+        let toks = [BOS, A_BASE, PLUS, DIGIT0 + 7, EOS];
+        assert_eq!(render(&toks), "<bos> a0 + 7 <eos>");
+        assert_eq!(parse("<bos> a0 + 7 <eos>").unwrap(), toks);
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range() {
+        assert_eq!(parse_token("a999"), None);
+        assert_eq!(parse_token("b240"), None);
+        assert_eq!(parse_token("w"), None);
+        assert_eq!(parse_token("<9999>"), None);
+    }
+
+    #[test]
+    fn layout_constants_consistent_with_python() {
+        // Region layout must match synthlang.py exactly.
+        assert_eq!(A_BASE + A_SIZE, B_BASE);
+        assert_eq!(B_BASE + B_SIZE, 506);
+        assert!(B_BASE + B_SIZE <= VOCAB_SIZE);
+    }
+}

@@ -1,0 +1,137 @@
+//! Tiny command-line argument parser (the offline registry has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed getters parse on access and report the offending flag on error.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                    out.present.push(rest.to_string());
+                } else {
+                    out.flags.insert(rest.to_string(), String::new());
+                    out.present.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str()).filter(|s| !s.is_empty())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got {s:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got {s:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected number, got {s:?}")),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, key: &str, default: &str) -> Vec<String> {
+        self.str_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn mixed_styles() {
+        let a = parse("run --scale base --k=5 --verbose --out x.json");
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.str_opt("scale"), Some("base"));
+        assert_eq!(a.usize_or("k", 1).unwrap(), 5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.str_or("out", "-"), "x.json");
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("--n abc");
+        assert!(a.usize_or("n", 3).is_err());
+        assert_eq!(a.usize_or("missing", 3).unwrap(), 3);
+        assert_eq!(a.f64_or("missing", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn bare_flag_before_flag() {
+        let a = parse("--verbose --scale base");
+        assert!(a.has("verbose"));
+        assert_eq!(a.str_opt("verbose"), None);
+        assert_eq!(a.str_opt("scale"), Some("base"));
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("--methods ar,pld,dytc");
+        assert_eq!(a.list_or("methods", ""), vec!["ar", "pld", "dytc"]);
+        assert_eq!(a.list_or("other", "x,y"), vec!["x", "y"]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates: PRNG, JSON, CLI parsing, tables.
+//!
+//! The build image's offline crate registry has no serde/clap/criterion,
+//! so these are first-party implementations (each with its own test module).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;

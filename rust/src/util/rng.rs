@@ -1,0 +1,124 @@
+//! SplitMix64 PRNG — bit-identical to `python/compile/synthlang.py`.
+//!
+//! The synthetic Spec-Bench workload must be drawn from exactly the same
+//! distribution the models were pre-trained on; both sides derive all
+//! randomness from this generator (cross-checked by the
+//! `synthlang_check` fixture embedded in artifacts/manifest.json).
+
+/// SplitMix64: tiny, fast, and good enough for workload generation.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) via the multiply-shift method
+    /// (matches python's `(next_u64() * n) >> 64`).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Index drawn from cumulative weights summing to 1.0.
+    pub fn choice_weighted(&mut self, cum_weights: &[f64]) -> usize {
+        let r = self.next_f64();
+        for (i, c) in cum_weights.iter().enumerate() {
+            if r < *c {
+                return i;
+            }
+        }
+        cum_weights.len() - 1
+    }
+}
+
+/// FNV-1a 64-bit hash — mirrors `synthlang.hash_category`.
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in s.as_bytes() {
+        h = (h ^ *b as u64).wrapping_mul(0x1_0000_0001_B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector_seed0() {
+        // Canonical splitmix64 outputs; python side asserts the same values.
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(r.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(r.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = SplitMix64::new(42);
+        for _ in 0..1000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_spread() {
+        let mut r = SplitMix64::new(7);
+        let mut counts = [0u32; 10];
+        for _ in 0..10_000 {
+            counts[r.next_below(10) as usize] += 1;
+        }
+        for c in counts {
+            assert!((800..1200).contains(&c), "non-uniform: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn choice_weighted_respects_mass() {
+        let mut r = SplitMix64::new(9);
+        let cum = [0.7, 0.85, 0.95, 1.0];
+        let mut counts = [0u32; 4];
+        for _ in 0..10_000 {
+            counts[r.choice_weighted(&cum)] += 1;
+        }
+        assert!(counts[0] > 6500 && counts[0] < 7500);
+        assert!(counts[3] < 800);
+    }
+
+    #[test]
+    fn fnv_matches_python() {
+        assert_eq!(fnv1a64(""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(
+            fnv1a64("a"),
+            (0xCBF2_9CE4_8422_2325u64 ^ 0x61).wrapping_mul(0x1_0000_0001_B3)
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let (mut a, mut b) = (SplitMix64::new(123), SplitMix64::new(123));
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! Rust mirror of `python/compile/synthlang.py` — the synthetic Spec-Bench.
+//!
+//! Must produce *bit-identical* samples to the Python side for equal seeds;
+//! the integration test `tests/synthlang_cross.rs` checks every category
+//! against the fixture embedded in artifacts/manifest.json.
+
+use crate::tokenizer::*;
+use crate::util::rng::{fnv1a64, SplitMix64};
+
+pub const SUCC_K: usize = 4;
+pub const SUCC_CUM: [f64; 4] = [0.70, 0.85, 0.95, 1.0];
+
+pub const CATEGORIES: [&str; 6] =
+    ["mtbench", "translation", "summary", "qa", "math", "rag"];
+
+/// The language tables, fully determined by `seed`
+/// (must equal `pretrain.LANG_SEED` = manifest `lang_seed`).
+#[derive(Debug, Clone)]
+pub struct Language {
+    pub seed: u64,
+    /// successor table over region A, A-relative ids
+    pub succ: Vec<[u32; SUCC_K]>,
+    /// translation bijection, A-relative -> B-relative
+    pub perm: Vec<u32>,
+}
+
+impl Language {
+    pub fn build(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut succ = Vec::with_capacity(A_SIZE as usize);
+        for _ in 0..A_SIZE {
+            let mut row = [0u32; SUCC_K];
+            for r in row.iter_mut() {
+                *r = rng.next_below(A_SIZE as u64) as u32;
+            }
+            succ.push(row);
+        }
+        // Fisher-Yates, identical order to the python implementation
+        let mut perm: Vec<u32> = (0..A_SIZE).collect();
+        for i in (1..A_SIZE as usize).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            perm.swap(i, j);
+        }
+        Self { seed, succ, perm }
+    }
+
+    pub fn markov_next(&self, rng: &mut SplitMix64, cur_rel: u32) -> u32 {
+        let k = rng.choice_weighted(&SUCC_CUM);
+        self.succ[cur_rel as usize][k]
+    }
+
+    /// n region-A tokens (absolute ids).
+    pub fn markov_seq(&self, rng: &mut SplitMix64, n: usize) -> Vec<u32> {
+        let mut cur = rng.next_below(A_SIZE as u64) as u32;
+        let mut out = Vec::with_capacity(n);
+        out.push(A_BASE + cur);
+        for _ in 1..n {
+            cur = self.markov_next(rng, cur);
+            out.push(A_BASE + cur);
+        }
+        out
+    }
+
+    pub fn sentence(&self, rng: &mut SplitMix64) -> Vec<u32> {
+        self.sentence_range(rng, 6, 12)
+    }
+
+    pub fn sentence_range(&self, rng: &mut SplitMix64, lo: usize, hi: usize) -> Vec<u32> {
+        let n = lo + rng.next_below((hi - lo + 1) as u64) as usize;
+        let mut s = self.markov_seq(rng, n);
+        s.push(PERIOD);
+        s
+    }
+
+    pub fn translate(&self, toks: &[u32]) -> Vec<u32> {
+        toks.iter()
+            .map(|t| {
+                if (A_BASE..A_BASE + A_SIZE).contains(t) {
+                    B_BASE + self.perm[(t - A_BASE) as usize]
+                } else {
+                    *t
+                }
+            })
+            .collect()
+    }
+}
+
+fn digits_of(n: u64) -> Vec<u32> {
+    n.to_string().bytes().map(|c| DIGIT0 + (c - b'0') as u32).collect()
+}
+
+/// One generated workload item.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub category: &'static str,
+    pub prompt: Vec<u32>,
+    /// The training-time continuation. At serving time the model generates
+    /// greedily; this field is used only by tests and corpus statistics.
+    pub target: Vec<u32>,
+}
+
+/// Mirrors `synthlang.gen_sample` exactly (same rng call order).
+pub fn gen_sample(lang: &Language, category: &'static str, rng: &mut SplitMix64) -> Sample {
+    match category {
+        "summary" => {
+            let nsent = 6 + rng.next_below(5) as usize;
+            let sents: Vec<Vec<u32>> = (0..nsent).map(|_| lang.sentence(rng)).collect();
+            let mut prompt = vec![BOS];
+            for s in &sents {
+                prompt.extend_from_slice(s);
+            }
+            prompt.push(SEP);
+            let mut target = sents[0].clone();
+            target.extend_from_slice(&sents[nsent - 1]);
+            target.push(EOS);
+            Sample { category, prompt, target }
+        }
+        "rag" => {
+            let mut passages: Vec<Vec<Vec<u32>>> = Vec::new();
+            for _ in 0..3 {
+                let n = 2 + rng.next_below(2) as usize;
+                passages.push((0..n).map(|_| lang.sentence(rng)).collect());
+            }
+            let mut prompt = vec![BOS];
+            for p in &passages {
+                for s in p {
+                    prompt.extend_from_slice(s);
+                }
+                prompt.push(COMMA);
+            }
+            let pi = rng.next_below(3) as usize;
+            let si = rng.next_below(passages[pi].len() as u64 - 1) as usize;
+            let key = &passages[pi][si][..3];
+            prompt.push(QUERY);
+            prompt.extend_from_slice(key);
+            prompt.push(SEP);
+            let mut target = passages[pi][si].clone();
+            target.extend_from_slice(&passages[pi][si + 1]);
+            target.push(EOS);
+            Sample { category, prompt, target }
+        }
+        "qa" => {
+            let nfacts = 5 + rng.next_below(3) as usize;
+            let mut facts = Vec::with_capacity(nfacts);
+            for _ in 0..nfacts {
+                let x = A_BASE + rng.next_below(A_SIZE as u64) as u32;
+                let y = A_BASE + rng.next_below(A_SIZE as u64) as u32;
+                facts.push((x, y));
+            }
+            let mut prompt = vec![BOS];
+            for (x, y) in &facts {
+                prompt.extend_from_slice(&[*x, COMMA, *y, PERIOD]);
+            }
+            let qi = rng.next_below(nfacts as u64) as usize;
+            prompt.extend_from_slice(&[QUERY, facts[qi].0, SEP]);
+            let (x, y) = facts[qi];
+            let target = vec![ANSWER, y, PERIOD, x, COMMA, y, PERIOD, EOS];
+            Sample { category, prompt, target }
+        }
+        "translation" => {
+            let n = 24 + rng.next_below(25) as usize;
+            let src = lang.markov_seq(rng, n);
+            let mut prompt = vec![BOS];
+            prompt.extend_from_slice(&src);
+            prompt.push(SEP);
+            let mut target = lang.translate(&src);
+            target.push(EOS);
+            Sample { category, prompt, target }
+        }
+        "math" => {
+            let nprob = 3 + rng.next_below(2) as usize;
+            let mut probs = Vec::with_capacity(nprob);
+            for _ in 0..nprob {
+                let a = 10 + rng.next_below(90);
+                let b = 10 + rng.next_below(90);
+                probs.push((a, b));
+            }
+            let mut prompt = vec![BOS, QUERY];
+            for (a, b) in &probs {
+                prompt.extend(digits_of(*a));
+                prompt.push(PLUS);
+                prompt.extend(digits_of(*b));
+                prompt.push(COMMA);
+            }
+            prompt.push(SEP);
+            let mut target = Vec::new();
+            for (a, b) in &probs {
+                target.extend(digits_of(*a));
+                target.push(PLUS);
+                target.extend(digits_of(*b));
+                target.push(EQUALS);
+                target.extend(digits_of(a + b));
+                target.push(PERIOD);
+            }
+            target.push(EOS);
+            Sample { category, prompt, target }
+        }
+        "mtbench" => {
+            let nsent = 4 + rng.next_below(3) as usize;
+            let sents: Vec<Vec<u32>> = (0..nsent).map(|_| lang.sentence(rng)).collect();
+            let mut prompt = vec![BOS];
+            for s in &sents {
+                prompt.extend_from_slice(s);
+            }
+            prompt.push(SEP);
+            let mut target = Vec::new();
+            let ncopy = 1 + rng.next_below(2) as usize;
+            for _ in 0..ncopy {
+                let i = rng.next_below(nsent as u64) as usize;
+                target.extend_from_slice(&sents[i]);
+            }
+            target.extend(lang.sentence(rng));
+            target.push(EOS);
+            Sample { category, prompt, target }
+        }
+        other => panic!("unknown category {other:?}"),
+    }
+}
+
+/// The per-category check-sample rng seed used by the manifest fixture.
+pub fn check_rng(sample_seed: u64, category: &str) -> SplitMix64 {
+    SplitMix64::new(sample_seed ^ fnv1a64(category))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lang() -> Language {
+        Language::build(20250711)
+    }
+
+    #[test]
+    fn build_deterministic() {
+        let (a, b) = (lang(), lang());
+        assert_eq!(a.succ, b.succ);
+        assert_eq!(a.perm, b.perm);
+    }
+
+    #[test]
+    fn perm_is_bijection() {
+        let mut p = lang().perm.clone();
+        p.sort_unstable();
+        assert_eq!(p, (0..A_SIZE).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn samples_within_vocab() {
+        let l = lang();
+        let mut rng = SplitMix64::new(77);
+        for cat in CATEGORIES {
+            for _ in 0..20 {
+                let s = gen_sample(&l, cat, &mut rng);
+                assert!(s.prompt.iter().chain(&s.target).all(|t| *t < VOCAB_SIZE));
+                assert_eq!(s.prompt[0], BOS);
+                assert_eq!(*s.target.last().unwrap(), EOS);
+            }
+        }
+    }
+
+    #[test]
+    fn summary_target_is_verbatim_copy() {
+        let l = lang();
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..10 {
+            let s = gen_sample(&l, "summary", &mut rng);
+            let body = &s.target[..s.target.len() - 1];
+            let first_period = body.iter().position(|t| *t == PERIOD).unwrap();
+            let frag = &body[..=first_period];
+            let found = s.prompt.windows(frag.len()).any(|w| w == frag);
+            assert!(found, "summary must copy a prompt sentence verbatim");
+        }
+    }
+
+    #[test]
+    fn translation_targets_region_b() {
+        let l = lang();
+        let mut rng = SplitMix64::new(6);
+        let s = gen_sample(&l, "translation", &mut rng);
+        for t in &s.target[..s.target.len() - 1] {
+            assert!((B_BASE..B_BASE + B_SIZE).contains(t));
+        }
+    }
+
+    #[test]
+    fn math_sums_correct() {
+        let l = lang();
+        let mut rng = SplitMix64::new(11);
+        let s = gen_sample(&l, "math", &mut rng);
+        let toks = &s.target[..s.target.len() - 1];
+        let mut i = 0;
+        let mut checked = 0;
+        while i < toks.len() {
+            let j = toks[i..].iter().position(|t| *t == PERIOD).unwrap() + i;
+            let seg = &toks[i..j];
+            let plus = seg.iter().position(|t| *t == PLUS).unwrap();
+            let eq = seg.iter().position(|t| *t == EQUALS).unwrap();
+            let num = |ds: &[u32]| -> u64 {
+                ds.iter().fold(0, |acc, d| acc * 10 + (*d - DIGIT0) as u64)
+            };
+            assert_eq!(num(&seg[..plus]) + num(&seg[plus + 1..eq]), num(&seg[eq + 1..]));
+            checked += 1;
+            i = j + 1;
+        }
+        assert!(checked >= 3);
+    }
+
+    #[test]
+    fn prompts_fit_serving_budget() {
+        let l = lang();
+        let mut rng = SplitMix64::new(13);
+        for cat in CATEGORIES {
+            for _ in 0..50 {
+                let s = gen_sample(&l, cat, &mut rng);
+                assert!(s.prompt.len() <= 224, "{cat}: {}", s.prompt.len());
+            }
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! THE core invariant (paper title: "Lossless Inference Acceleration"):
+//! every engine's greedy output must equal plain autoregressive greedy
+//! decoding, token-for-token, for every engine × category × seed.
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent).
+
+use cas_spec::engine::{EngineOpts, ENGINES};
+use cas_spec::harness::run_suite;
+use cas_spec::model::Variant;
+use cas_spec::runtime::Runtime;
+use cas_spec::workload::{Language, Suite};
+
+fn open_runtime() -> Option<Runtime> {
+    Runtime::open(&Runtime::default_dir()).ok()
+}
+
+#[test]
+fn all_engines_reproduce_ar_greedy() {
+    let Some(rt) = open_runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 7, 1, 24);
+    let engines: Vec<String> = ENGINES.iter().map(|s| s.to_string()).collect();
+    // run_suite with check_lossless=true fails on the first divergence
+    run_suite(&srt, &suite, &engines, &EngineOpts::default(), true, false)
+        .expect("losslessness violated");
+}
+
+#[test]
+fn lossless_across_seeds_and_lengths() {
+    let Some(rt) = open_runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let lang = Language::build(rt.manifest.lang_seed);
+    // the adaptive engine is the most state-heavy: sweep seeds on it
+    let engines = vec!["cas-spec".to_string()];
+    for (seed, max_new) in [(1u64, 17usize), (2, 40), (3, 9)] {
+        let suite = Suite::spec_bench(&lang, seed, 1, max_new);
+        run_suite(&srt, &suite, &engines, &EngineOpts::default(), true, false)
+            .unwrap_or_else(|e| panic!("seed {seed} len {max_new}: {e:#}"));
+    }
+}
+
+#[test]
+fn engine_state_reuse_stays_lossless() {
+    // DyTC keeps estimator state across requests; repeated generates on the
+    // same engine instance must stay lossless (run_suite reuses instances).
+    let Some(rt) = open_runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 11, 2, 16); // 2 prompts/category
+    run_suite(
+        &srt,
+        &suite,
+        &["cas-spec+".to_string()],
+        &EngineOpts::default(),
+        true,
+        false,
+    )
+    .expect("stateful reuse violated losslessness");
+}
+
+#[test]
+fn nondefault_hyperparams_stay_lossless() {
+    // Scheduling hyper-parameters must never affect WHAT is generated.
+    let Some(rt) = open_runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 5, 1, 20);
+    for (k_max, t_min, draft_k) in [(1usize, 0.5f64, 2usize), (5, 2.0, 9)] {
+        let mut opts = EngineOpts::default();
+        opts.dytc.k_max = k_max;
+        opts.dytc.t_min = t_min;
+        opts.draft_k = draft_k;
+        run_suite(
+            &srt,
+            &suite,
+            &["cas-spec".to_string(), "swift".to_string(), "vchc".to_string()],
+            &opts,
+            true,
+            false,
+        )
+        .unwrap_or_else(|e| panic!("k_max={k_max} t_min={t_min}: {e:#}"));
+    }
+}

@@ -1,0 +1,224 @@
+//! Property-based tests over the coordinator's pure invariants (the offline
+//! registry has no proptest, so cases are driven by a seeded SplitMix64 —
+//! failures print the seed for replay).
+//!
+//! No artifacts required: everything here is model-free.
+
+use cas_spec::analytic::{simulate, t_hc, t_sd, t_vc, Scheme};
+use cas_spec::dytc::{expected_accepted, find_best_config, step_objective, AcceptanceEstimator};
+use cas_spec::pld::PldMatcher;
+use cas_spec::spec::{verify_greedy, DraftTree};
+use cas_spec::util::rng::SplitMix64;
+
+const CASES: usize = 200;
+
+fn rngs() -> impl Iterator<Item = (u64, SplitMix64)> {
+    (0..CASES as u64).map(|seed| (seed, SplitMix64::new(seed.wrapping_mul(0x9E37))))
+}
+
+/// Random forest tree with `n` nodes.
+fn random_tree(rng: &mut SplitMix64, n: usize, vocab: u32) -> DraftTree {
+    let mut t = DraftTree::new(rng.next_below(vocab as u64) as u32, n.max(1));
+    for _ in 1..n {
+        let parent = rng.next_below(t.len() as u64) as usize;
+        let tok = rng.next_below(vocab as u64) as u32;
+        t.add_child(parent, tok, rng.next_f64(), 0, rng.next_f64());
+    }
+    t
+}
+
+#[test]
+fn prop_verify_accepts_a_root_path() {
+    for (seed, mut rng) in rngs() {
+        let vocab = 32usize;
+        let n = 1 + rng.next_below(16) as usize;
+        let tree = random_tree(&mut rng, n, vocab as u32);
+        let logits: Vec<f32> =
+            (0..n * vocab).map(|_| (rng.next_f64() as f32) * 10.0).collect();
+        let v = verify_greedy(&tree, &logits, vocab);
+        // accepted slots form a root-anchored parent chain
+        assert_eq!(v.accepted_slots[0], 0, "seed {seed}");
+        for w in v.accepted_slots.windows(2) {
+            assert_eq!(tree.nodes[w[1]].parent, Some(w[0]), "seed {seed}");
+        }
+        // every accepted child matches the parent's argmax
+        for w in v.accepted_slots.windows(2) {
+            let row = &logits[w[0] * vocab..(w[0] + 1) * vocab];
+            assert_eq!(
+                tree.nodes[w[1]].token,
+                cas_spec::runtime::argmax(row),
+                "seed {seed}"
+            );
+        }
+        // bonus is the argmax at the deepest accepted slot
+        let last = *v.accepted_slots.last().unwrap();
+        let row = &logits[last * vocab..(last + 1) * vocab];
+        assert_eq!(v.bonus, cas_spec::runtime::argmax(row), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_tree_masks_are_ancestor_closures() {
+    for (seed, mut rng) in rngs() {
+        let n = 1 + rng.next_below(16) as usize;
+        let t_shape = 16;
+        let tree = random_tree(&mut rng, n, 100);
+        let (_toks, mask, depths) = tree.serialize(t_shape, 0);
+        for i in 0..n {
+            // diagonal
+            assert_eq!(mask[i * t_shape + i], 1.0, "seed {seed}");
+            // mask row i == exactly the ancestor set
+            let path = tree.path_slots(i);
+            for j in 0..n {
+                let expected = path.contains(&j);
+                assert_eq!(mask[i * t_shape + j] > 0.5, expected, "seed {seed} i={i} j={j}");
+            }
+            // depth consistency
+            assert_eq!(depths[i] as usize, path.len() - 1, "seed {seed}");
+        }
+        // padding rows: self only
+        for i in n..t_shape {
+            let row = &mask[i * t_shape..(i + 1) * t_shape];
+            assert_eq!(row.iter().sum::<f32>(), 1.0, "seed {seed}");
+            assert_eq!(row[i], 1.0, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_pld_proposals_are_genuine_continuations() {
+    for (seed, mut rng) in rngs() {
+        let len = 10 + rng.next_below(120) as usize;
+        let vocab = 1 + rng.next_below(12) as u32; // small vocab => many repeats
+        let corpus: Vec<u32> = (0..len).map(|_| rng.next_below(vocab as u64) as u32).collect();
+        let m = PldMatcher::new(&corpus);
+        if let Some(d) = m.propose(8) {
+            // the proposal must literally appear right after an occurrence
+            // of a matching suffix n-gram somewhere strictly earlier
+            let ng = d.match_len;
+            let suffix = &corpus[len - ng..];
+            let mut found = false;
+            for start in 0..len - ng {
+                if &corpus[start..start + ng] == suffix {
+                    let cont = &corpus[start + ng..];
+                    if cont.len() >= d.tokens.len() && &cont[..d.tokens.len()] == d.tokens {
+                        found = true;
+                        break;
+                    }
+                }
+            }
+            assert!(found, "seed {seed}: proposal not grounded in corpus");
+        }
+    }
+}
+
+#[test]
+fn prop_pld_truncate_restores_exact_state() {
+    for (seed, mut rng) in rngs() {
+        let base: Vec<u32> = (0..30).map(|_| rng.next_below(8) as u32).collect();
+        let extra: Vec<u32> = (0..10).map(|_| rng.next_below(8) as u32).collect();
+        let mut a = PldMatcher::new(&base);
+        let b = a.clone();
+        a.extend(&extra);
+        a.truncate(base.len());
+        // behaviourally identical: same proposals at several k
+        for k in [1, 3, 8] {
+            let pa = a.propose(k).map(|d| (d.tokens, d.match_len));
+            let pb = b.propose(k).map(|d| (d.tokens, d.match_len));
+            assert_eq!(pa, pb, "seed {seed} k={k}");
+        }
+    }
+}
+
+#[test]
+fn prop_estimator_bounded_and_tracks() {
+    for (seed, mut rng) in rngs().take(50) {
+        let p = rng.next_f64();
+        let mut est = AcceptanceEstimator::with_defaults(rng.next_f64());
+        for _ in 0..300 {
+            est.observe(rng.next_f64() < p);
+            est.roll();
+            let a = est.alpha();
+            assert!((0.01..=0.99).contains(&a), "seed {seed}");
+        }
+        assert!(
+            (est.alpha() - p).abs() < 0.25,
+            "seed {seed}: alpha {} far from p {p}",
+            est.alpha()
+        );
+    }
+}
+
+#[test]
+fn prop_closed_forms_match_simulation() {
+    for (seed, mut rng) in rngs().take(12) {
+        let a = 0.1 + 0.8 * rng.next_f64();
+        let c = 0.01 + 0.5 * rng.next_f64();
+        let k = 1 + rng.next_below(10) as usize;
+        let sim = simulate(Scheme::Sd { alpha: a, c, k }, 40_000, seed).speedup;
+        let th = t_sd(a, c, k);
+        assert!((sim - th).abs() / th < 0.03, "seed {seed}: sd {sim} vs {th}");
+
+        let a2 = 0.1 + 0.8 * rng.next_f64();
+        let c2 = 0.005 + 0.1 * rng.next_f64();
+        let k2 = 1 + rng.next_below(8) as usize;
+        let sim = simulate(
+            Scheme::Hc { a1: a, c1: c, k1: k, a2, c2, k2 },
+            40_000,
+            seed ^ 1,
+        )
+        .speedup;
+        let th = t_hc(a, a2, c, c2, k, k2);
+        assert!((sim - th).abs() / th < 0.035, "seed {seed}: hc {sim} vs {th}");
+
+        let n = 1 + rng.next_below(4) as usize;
+        let sim = simulate(
+            Scheme::Vc { a_t: a, a_in: a2, c1: c, c2, n, k: k2 },
+            40_000,
+            seed ^ 2,
+        )
+        .speedup;
+        let th = t_vc(a, a2, c, c2, n, k2);
+        assert!((sim - th).abs() / th < 0.04, "seed {seed}: vc {sim} vs {th}");
+    }
+}
+
+#[test]
+fn prop_find_best_config_is_argmax() {
+    for (seed, mut rng) in rngs().take(100) {
+        let n = 1 + rng.next_below(6) as usize;
+        let alphas: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let costs: Vec<f64> = (0..n).map(|_| 0.01 + rng.next_f64()).collect();
+        let (a_dn, c_dn) = (rng.next_f64(), 0.005 + 0.1 * rng.next_f64());
+        let k_max = 1 + rng.next_below(8) as usize;
+        if let Some((ci, k)) = find_best_config(&alphas, &costs, a_dn, c_dn, k_max) {
+            let best = step_objective(alphas[ci], costs[ci], k, a_dn, c_dn);
+            for i in 0..n {
+                for kk in 1..=k_max {
+                    assert!(
+                        best >= step_objective(alphas[i], costs[i], kk, a_dn, c_dn) - 1e-12,
+                        "seed {seed}: ({ci},{k}) beaten by ({i},{kk})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_expected_accepted_monotone() {
+    for (seed, mut rng) in rngs().take(100) {
+        let a = rng.next_f64().clamp(0.01, 0.99);
+        for k in 1..10 {
+            let lo = expected_accepted(a, k);
+            let hi = expected_accepted(a, k + 1);
+            assert!(hi >= lo - 1e-12, "seed {seed}: not monotone in k");
+            assert!(lo <= k as f64 + 1e-12, "seed {seed}: exceeds k");
+        }
+        let b = (a + 0.3).min(0.999);
+        assert!(
+            expected_accepted(b, 5) >= expected_accepted(a, 5),
+            "seed {seed}: not monotone in alpha"
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! End-to-end serving test: start the TCP server on a random port, issue
+//! concurrent requests from several client threads, verify the responses
+//! equal direct engine output, then shut down cleanly.
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent).
+
+use std::thread;
+use std::time::Duration;
+
+use cas_spec::config::RunConfig;
+use cas_spec::engine::{build_engine, EngineOpts};
+use cas_spec::model::Variant;
+use cas_spec::runtime::Runtime;
+use cas_spec::server::{serve, Client};
+use cas_spec::workload::{Language, Suite};
+
+#[test]
+fn serve_generate_stats_shutdown() {
+    let Ok(rt) = Runtime::open(&Runtime::default_dir()) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // expected outputs computed directly (losslessness makes this exact)
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 33, 1, 12);
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected: Vec<Vec<u32>> = suite
+        .items
+        .iter()
+        .take(3)
+        .map(|it| ar.generate(&it.prompt, it.max_new).unwrap().tokens)
+        .collect();
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()]; // lossless => same tokens as AR
+    cfg.addr = "127.0.0.1:7531".into();
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+
+    // wait for the listener
+    let mut client = None;
+    for _ in 0..100 {
+        match Client::connect(&addr) {
+            Ok(c) => {
+                client = Some(c);
+                break;
+            }
+            Err(_) => thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let mut client = client.expect("server did not come up");
+
+    // concurrent clients
+    let addr2 = addr.clone();
+    let item1 = suite.items[1].clone();
+    let want1 = expected[1].clone();
+    let handle = thread::spawn(move || {
+        let mut c = Client::connect(&addr2).unwrap();
+        let resp = c.generate(42, &item1.prompt, item1.max_new).unwrap();
+        let got: Vec<u32> = resp
+            .req("tokens")
+            .unwrap()
+            .usize_arr()
+            .unwrap()
+            .into_iter()
+            .map(|t| t as u32)
+            .collect();
+        assert_eq!(got, want1, "concurrent client got wrong tokens");
+    });
+
+    for (i, item) in suite.items.iter().take(3).enumerate() {
+        if i == 1 {
+            continue; // handled by the concurrent client
+        }
+        let resp = client.generate(i as u64, &item.prompt, item.max_new).unwrap();
+        assert!(resp.get("error").is_none(), "server error: {resp}");
+        let got: Vec<u32> = resp
+            .req("tokens")
+            .unwrap()
+            .usize_arr()
+            .unwrap()
+            .into_iter()
+            .map(|t| t as u32)
+            .collect();
+        assert_eq!(got, expected[i], "item {i}");
+        assert!(resp.req("ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(resp.get("text").is_some());
+    }
+    handle.join().unwrap();
+
+    // stats reflect the served requests
+    let stats = client.stats().unwrap();
+    assert!(stats.req("served").unwrap().as_u64().unwrap() >= 3);
+    assert_eq!(stats.req("engine").unwrap().as_str().unwrap(), "pld");
+
+    // malformed request gets an error, not a hang
+    let resp = client.request_raw(r#"{"prompt": "nope"}"#).unwrap();
+    assert!(resp.get("error").is_some());
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}

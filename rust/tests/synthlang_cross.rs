@@ -1,0 +1,80 @@
+//! Cross-language determinism: the Rust synthetic-language mirror must
+//! reproduce the Python fixture embedded in artifacts/manifest.json
+//! bit-for-bit (same PRNG stream, same language tables, same samples).
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent).
+
+use cas_spec::model::Manifest;
+use cas_spec::runtime::Runtime;
+use cas_spec::util::rng::SplitMix64;
+use cas_spec::workload::synthlang::{check_rng, gen_sample, Language, CATEGORIES};
+
+fn manifest() -> Option<Manifest> {
+    let dir = Runtime::default_dir();
+    Manifest::load(&dir).ok()
+}
+
+#[test]
+fn rng_stream_matches_python() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let chk = &m.synthlang_check;
+    let seed = chk.req("sample_seed").unwrap().as_u64().unwrap();
+    let want: Vec<String> = chk.req("rng_check").unwrap().str_arr().unwrap();
+    let mut rng = SplitMix64::new(seed);
+    for w in want {
+        assert_eq!(format!("{:016x}", rng.next_u64()), w);
+    }
+}
+
+#[test]
+fn language_tables_match_python() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let lang = Language::build(m.lang_seed);
+    let chk = &m.synthlang_check;
+    let succ0: Vec<usize> = chk.req("succ_row0").unwrap().usize_arr().unwrap();
+    assert_eq!(
+        lang.succ[0].iter().map(|x| *x as usize).collect::<Vec<_>>(),
+        succ0
+    );
+    let perm: Vec<usize> = chk.req("perm_head").unwrap().usize_arr().unwrap();
+    assert_eq!(
+        lang.perm[..16].iter().map(|x| *x as usize).collect::<Vec<_>>(),
+        perm
+    );
+}
+
+#[test]
+fn samples_match_python_exactly() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let lang = Language::build(m.lang_seed);
+    let chk = &m.synthlang_check;
+    let seed = chk.req("sample_seed").unwrap().as_u64().unwrap();
+    let samples = chk.req("samples").unwrap().as_obj().unwrap();
+    assert_eq!(samples.len(), CATEGORIES.len());
+    for cat in CATEGORIES {
+        let want = &samples[cat];
+        let want_prompt: Vec<usize> = want.req("prompt").unwrap().usize_arr().unwrap();
+        let want_target: Vec<usize> = want.req("target").unwrap().usize_arr().unwrap();
+        let mut rng = check_rng(seed, cat);
+        let got = gen_sample(&lang, cat, &mut rng);
+        assert_eq!(
+            got.prompt.iter().map(|t| *t as usize).collect::<Vec<_>>(),
+            want_prompt,
+            "{cat}: prompt diverged from python"
+        );
+        assert_eq!(
+            got.target.iter().map(|t| *t as usize).collect::<Vec<_>>(),
+            want_target,
+            "{cat}: target diverged from python"
+        );
+    }
+}

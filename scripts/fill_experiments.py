@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Fill EXPERIMENTS.md placeholders from bench_output.txt (+ optional
+serve_bench output in e2e_output.txt). Re-run after `cargo bench`."""
+
+import re
+import sys
+
+bench = open("bench_output.txt").read()
+
+
+def block(title_prefix: str) -> str:
+    """Extract an aligned-text table block starting at '== <title_prefix>'."""
+    pat = re.compile(r"^== " + re.escape(title_prefix) + r".*?$", re.M)
+    m = pat.search(bench)
+    if not m:
+        return f"(missing: {title_prefix})"
+    lines = bench[m.start():].split("\n")
+    out = []
+    for ln in lines:
+        if out and not ln.strip():
+            break
+        out.append(ln)
+    return "```\n" + "\n".join(out) + "\n```"
+
+
+def tail_lines(anchor: str, n: int) -> str:
+    i = bench.find(anchor)
+    if i < 0:
+        return ""
+    return "\n".join(bench[i:].split("\n")[:n])
+
+
+subs = {
+    "<!--TABLE1_SMALL-->": block("Table 1 — scale=small"),
+    "<!--TABLE1_BASE-->": block("Table 1 — scale=base"),
+    "<!--TABLE2-->": block("Table 2"),
+    "<!--FIG1A-->": block("Fig. 1a") + "\n\n" + tail_lines("ordering check:", 1),
+    "<!--FIG1BC-->": block("Fig. 1b/1c — effective bound on c_d1 (alpha_d2=0.3"),
+    "<!--FIG3-->": block("Fig. 3")
+    + "\n\n"
+    + tail_lines("DyTC vs Tr", 2),
+    "<!--ABLATION-->": block("DyTC ablations"),
+    "<!--HOTPATH-->": block("step latency")
+    + "\n"
+    + block("commit16 latency")
+    + "\n"
+    + tail_lines("PLD: build+extend+propose", 1),
+}
+
+try:
+    e2e = open("e2e_output.txt").read()
+    m = re.search(r"^== serve_bench.*?(?=\n\n|\Z)", e2e, re.S | re.M)
+    subs["<!--E2E-->"] = "```\n" + (m.group(0) if m else e2e.strip()) + "\n```"
+except FileNotFoundError:
+    pass
+
+text = open("EXPERIMENTS.md").read()
+for k, v in subs.items():
+    if k in text:
+        text = text.replace(k, v)
+    else:
+        print(f"warning: placeholder {k} not found", file=sys.stderr)
+open("EXPERIMENTS.md", "w").write(text)
+print("EXPERIMENTS.md filled")
