@@ -46,13 +46,13 @@ fn main() -> anyhow::Result<()> {
             // warmup
             for _ in 0..3 {
                 let pos0 = kv.pos;
-                srt.step(&mut kv, t_shape, &toks, &mask, &depths)?;
+                srt.step(&mut kv, t_shape, t_shape, &toks, &mask, &depths)?;
                 srt.rollback(&mut kv, pos0);
             }
             let start = Instant::now();
             for _ in 0..reps {
                 let pos0 = kv.pos;
-                srt.step(&mut kv, t_shape, &toks, &mask, &depths)?;
+                srt.step(&mut kv, t_shape, t_shape, &toks, &mask, &depths)?;
                 srt.rollback(&mut kv, pos0);
             }
             let ms = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         let start = Instant::now();
         for _ in 0..reps {
             let pos0 = kv.pos;
-            srt.step(&mut kv, 16, &toks, &mask, &depths)?;
+            srt.step(&mut kv, 16, 16, &toks, &mask, &depths)?;
             srt.commit(&mut kv, 16, &[0, 2, 3])?; // non-contiguous -> gather
             srt.rollback(&mut kv, pos0);
         }
@@ -88,7 +88,7 @@ fn main() -> anyhow::Result<()> {
         let start = Instant::now();
         for _ in 0..reps {
             let pos0 = kv.pos;
-            srt.step(&mut kv, 16, &toks, &mask, &depths)?;
+            srt.step(&mut kv, 16, 16, &toks, &mask, &depths)?;
             srt.commit(&mut kv, 16, &[0, 1, 2])?; // contiguous fast path
             srt.rollback(&mut kv, pos0);
         }
@@ -127,10 +127,12 @@ fn feed(
     tokens: &[u32],
 ) -> anyhow::Result<()> {
     for chunk in tokens.chunks(64) {
-        let t_shape = if chunk.len() == 64 { 64 } else { 16 };
+        // smallest lowered shape that covers the chunk (mirrors
+        // VariantSession::feed; a fixed 16 would panic for 17..=63 tails)
+        let t_shape = *STEP_SHAPES.iter().find(|s| **s >= chunk.len()).unwrap();
         let tree = DraftTree::chain(chunk[0], &chunk[1..], t_shape.max(chunk.len()));
         let (toks, mask, depths) = tree.serialize(t_shape, 0);
-        srt.step(kv, t_shape, &toks, &mask, &depths)?;
+        srt.step(kv, t_shape, chunk.len(), &toks, &mask, &depths)?;
         let slots: Vec<usize> = (0..chunk.len()).collect();
         srt.commit(kv, t_shape, &slots)?;
     }

@@ -1,8 +1,9 @@
 //! Quickstart: load a model scale, generate one response per task category
 //! with CAS-Spec (DyTC), and compare against plain autoregressive decoding.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart            # hermetic (ref backend)
 //!     cargo run --release --example quickstart -- --scale base --engine pld
+//!     make artifacts first to run against pretrained weights/PJRT
 
 use anyhow::Result;
 use cas_spec::engine::{build_engine, required_variants, EngineOpts};

@@ -4,8 +4,9 @@
 //! latency percentiles + throughput — once for AR, once for CAS-Spec —
 //! demonstrating all three layers composing on the request path.
 //!
-//!     make artifacts && cargo run --release --example serve_bench
+//!     cargo run --release --example serve_bench           # hermetic (ref backend)
 //!     cargo run --release --example serve_bench -- --scale base --requests 12
+//!     make artifacts first to run against pretrained weights/PJRT
 
 use std::sync::{Arc, Mutex};
 use std::thread;

@@ -9,6 +9,7 @@ use anyhow::{anyhow, Result};
 
 use crate::dytc::DytcParams;
 use crate::engine::EngineOpts;
+use crate::runtime::BackendSelect;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -16,6 +17,8 @@ use crate::util::json::Json;
 pub struct RunConfig {
     /// artifacts/ directory (manifest + weights + HLO).
     pub artifacts: PathBuf,
+    /// Execution backend: "auto" | "ref" | "pjrt" (see `runtime`).
+    pub backend: String,
     /// Model scale to load (small/base/large).
     pub scale: String,
     /// Engines to run (bench) or serve.
@@ -35,6 +38,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             artifacts: crate::runtime::Runtime::default_dir(),
+            backend: "auto".into(),
             scale: "base".into(),
             engines: vec!["ar".into(), "pld".into(), "cas-spec".into()],
             n_per_category: 3,
@@ -53,6 +57,7 @@ impl RunConfig {
         for (k, v) in obj {
             match k.as_str() {
                 "artifacts" => self.artifacts = v.as_str().ok_or_else(bad(k))?.into(),
+                "backend" => self.backend = v.as_str().ok_or_else(bad(k))?.into(),
                 "scale" => self.scale = v.as_str().ok_or_else(bad(k))?.into(),
                 "engines" => self.engines = v.str_arr()?,
                 "n_per_category" => self.n_per_category = v.as_usize().ok_or_else(bad(k))?,
@@ -72,6 +77,9 @@ impl RunConfig {
     pub fn apply_args(&mut self, a: &Args) -> Result<()> {
         if let Some(p) = a.str_opt("artifacts") {
             self.artifacts = p.into();
+        }
+        if let Some(b) = a.str_opt("backend") {
+            self.backend = b.into();
         }
         if let Some(s) = a.str_opt("scale") {
             self.scale = s.into();
@@ -104,6 +112,16 @@ impl RunConfig {
         }
         cfg.apply_args(a)?;
         Ok(cfg)
+    }
+
+    /// Resolve the configured backend choice; "auto" defers to
+    /// `CAS_SPEC_BACKEND` (see `runtime` for the full selection order).
+    pub fn backend_select(&self) -> Result<BackendSelect> {
+        if self.backend == "auto" {
+            BackendSelect::from_env()
+        } else {
+            BackendSelect::parse(&self.backend)
+        }
     }
 
     pub fn apply_file(&mut self, path: &Path) -> Result<()> {
@@ -150,6 +168,18 @@ mod tests {
         assert_eq!(cfg.max_new, 32);
         assert_eq!(cfg.engines, vec!["ar", "pld"]);
         assert_eq!(cfg.n_per_category, 3); // default preserved
+        assert_eq!(cfg.backend, "auto");
+    }
+
+    #[test]
+    fn backend_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--backend ref")).unwrap();
+        assert_eq!(cfg.backend_select().unwrap(), BackendSelect::Ref);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"backend":"pjrt"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.backend_select().unwrap(), BackendSelect::Pjrt);
+        cfg.backend = "gpu".into();
+        assert!(cfg.backend_select().is_err());
     }
 
     #[test]

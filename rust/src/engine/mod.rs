@@ -147,3 +147,72 @@ pub fn build_engine<'rt>(
         other => anyhow::bail!("unknown engine {other:?}"),
     })
 }
+
+#[cfg(test)]
+mod tests {
+    use std::path::Path;
+
+    use super::*;
+    use crate::runtime::{BackendSelect, Runtime, ScaleRuntime};
+
+    /// A hermetic all-variants runtime on the reference backend.
+    fn all_variants_runtime() -> ScaleRuntime {
+        let rt = Runtime::open_with(Path::new("/missing-artifacts"), BackendSelect::Ref)
+            .expect("ref runtime");
+        rt.load_scale("small", &Variant::ALL).expect("load small")
+    }
+
+    #[test]
+    fn every_engine_builds_on_ref_backend() {
+        let srt = all_variants_runtime();
+        let opts = EngineOpts::default();
+        for name in ENGINES {
+            let eng = build_engine(name, &srt, &opts)
+                .unwrap_or_else(|e| panic!("{name} failed to build: {e:#}"));
+            assert_eq!(eng.name(), name, "engine self-name mismatch");
+        }
+    }
+
+    #[test]
+    fn every_engine_generates_tokens() {
+        let srt = all_variants_runtime();
+        let opts = EngineOpts::default();
+        let prompt = [1u32, 30, 40, 50];
+        for name in ENGINES {
+            let mut eng = build_engine(name, &srt, &opts).unwrap();
+            let g = eng
+                .generate(&prompt, 3)
+                .unwrap_or_else(|e| panic!("{name} failed to generate: {e:#}"));
+            assert!(!g.tokens.is_empty(), "{name}: empty generation");
+            assert!(g.tokens.len() <= 3, "{name}: budget exceeded");
+        }
+    }
+
+    #[test]
+    fn required_variants_cover_all_engines() {
+        for name in ENGINES {
+            let v = required_variants(name);
+            assert_eq!(v[0], Variant::Target, "{name}: target must come first");
+            let unique: std::collections::BTreeSet<_> = v.iter().collect();
+            assert_eq!(unique.len(), v.len(), "{name}: duplicate variants");
+        }
+        assert_eq!(required_variants("pld"), vec![Variant::Target]);
+        assert_eq!(required_variants("cas-spec+").len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown engine")]
+    fn required_variants_unknown_panics() {
+        required_variants("warp-drive");
+    }
+
+    #[test]
+    fn build_engine_unknown_errors() {
+        let srt = all_variants_runtime();
+        let res = build_engine("warp-drive", &srt, &EngineOpts::default());
+        match res {
+            Ok(_) => panic!("unknown engine must not build"),
+            Err(e) => assert!(format!("{e:#}").contains("unknown engine")),
+        }
+    }
+}

@@ -10,8 +10,10 @@
 //!   (`python/compile/kernels/`), lowered once into the serving graphs.
 //! * **L2** — JAX transformer + DSIA draft variants
 //!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
-//! * **L3** — this crate: the serving coordinator. PJRT runtime
-//!   ([`runtime`]), speculative-decoding core ([`spec`], [`pld`]), the
+//! * **L3** — this crate: the serving coordinator. Backend-generic
+//!   execution runtime ([`runtime`]: a pure-Rust hermetic reference
+//!   backend plus the PJRT artifact backend behind the `pjrt` feature),
+//!   speculative-decoding core ([`spec`], [`pld`]), the
 //!   paper's DyTC scheduler ([`dytc`], [`engine::dytc`]), every baseline
 //!   engine ([`engine`]), the analytic EWIF machinery ([`analytic`]), the
 //!   synthetic Spec-Bench workload ([`workload`]), a threaded serving
@@ -19,6 +21,11 @@
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured results.
+
+// Explicit index loops are used deliberately in the numeric hot paths:
+// they pin the exact summation order the reference backend's bit-exact
+// determinism contract depends on (see `runtime::reference`).
+#![allow(clippy::needless_range_loop, clippy::new_without_default)]
 
 pub mod analytic;
 pub mod config;

@@ -45,7 +45,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "check" => check(args),
         "serve" => serve(args),
         "analytic" => analytic_cmd(args),
-        "help" | _ => {
+        _ => {
             print!("{}", HELP);
             Ok(())
         }
@@ -58,6 +58,9 @@ USAGE: cas-spec <info|run|bench|check|serve|analytic> [flags]
 
 FLAGS
   --artifacts DIR     artifacts directory (default: ./artifacts)
+  --backend NAME      auto | ref | pjrt           (default: auto;
+                      also via CAS_SPEC_BACKEND. ref = hermetic pure-Rust
+                      backend, no artifacts needed)
   --scale NAME        small | base | large        (default: base)
   --engine NAME       single engine               (run/serve)
   --engines A,B,C     engine list                 (bench/check)
@@ -74,9 +77,10 @@ ENGINES
 
 fn info(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
-    let rt = Runtime::open(&cfg.artifacts)?;
+    let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
     let m = &rt.manifest;
     println!("artifacts: {}", m.dir.display());
+    println!("backend: {}", rt.backend_name());
     println!("lang_seed: {}  vocab: {}", m.lang_seed, m.vocab);
     println!("step shapes: {:?}  commit shapes: {:?}", m.step_shapes, m.commit_shapes);
     for (name, sc) in &m.scales {
@@ -102,7 +106,7 @@ fn info(args: &Args) -> Result<()> {
 fn run(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     let engine_name = cfg.engines.first().cloned().unwrap_or_else(|| "cas-spec".into());
-    let rt = Runtime::open(&cfg.artifacts)?;
+    let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
     let srt = rt.load_scale(&cfg.scale, &required_variants(&engine_name))?;
     let mut eng = build_engine(&engine_name, &srt, &cfg.opts)?;
 
@@ -138,7 +142,7 @@ fn load_for_engines(rt: &Runtime, scale: &str, engines: &[String]) -> Result<cas
 
 fn bench(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
-    let rt = Runtime::open(&cfg.artifacts)?;
+    let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
     let srt = load_for_engines(&rt, &cfg.scale, &cfg.engines)?;
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);
@@ -160,7 +164,7 @@ fn check(args: &Args) -> Result<()> {
     if !args.has("engines") {
         cfg.engines = ENGINES.iter().map(|s| s.to_string()).collect();
     }
-    let rt = Runtime::open(&cfg.artifacts)?;
+    let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
     let srt = load_for_engines(&rt, &cfg.scale, &cfg.engines)?;
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);

@@ -3,6 +3,12 @@
 //! The manifest is the contract between the build path and the serving path:
 //! model dimensions, the DSIA variant layer sets, the flat parameter order
 //! of every serving graph, and the artifact file names per step shape.
+//!
+//! When no artifacts exist on disk, [`Manifest::synthetic`] reconstructs the
+//! same contract in-process (scales, variant layer sets, parameter names and
+//! shapes — mirroring `python/compile/model.py` exactly), which is what lets
+//! the pure-Rust reference backend run the full engine/test stack without
+//! `make artifacts` (see `runtime`).
 
 pub mod weights;
 
@@ -184,6 +190,198 @@ impl Manifest {
     }
 }
 
+// --------------------------------------------------------------------------
+// Synthetic manifest — mirrors python/compile/model.py so the reference
+// backend honors the exact same shapes/contract without on-disk artifacts.
+// --------------------------------------------------------------------------
+
+/// Language seed baked into build artifacts (`pretrain.LANG_SEED`).
+pub const SYNTH_LANG_SEED: u64 = 20250711;
+
+/// Per-layer parameter names in flat calling-convention order
+/// (mirrors python `model.LAYER_PARAM_NAMES`).
+pub const LAYER_PARAM_NAMES: [&str; 12] = [
+    "ln1_g", "ln1_b", "wqkv", "bqkv", "wo", "bo", "ln2_g", "ln2_b", "wi", "bi", "wo2", "bo2",
+];
+
+/// Round-half-even, i.e. python's `round()` — `keep_set` must reproduce the
+/// python layer selection bit-for-bit.
+fn round_half_even(x: f64) -> usize {
+    let fl = x.floor();
+    let frac = x - fl;
+    let fl = fl as usize;
+    if frac > 0.5 {
+        fl + 1
+    } else if frac < 0.5 {
+        fl
+    } else if fl % 2 == 0 {
+        fl
+    } else {
+        fl + 1
+    }
+}
+
+/// Evenly spaced kept-layer indices, first and last always kept
+/// (mirrors python `model.keep_set`).
+pub fn keep_set(n_layers: usize, keep_n: usize) -> Vec<usize> {
+    if keep_n >= n_layers {
+        return (0..n_layers).collect();
+    }
+    if keep_n == 1 {
+        return vec![n_layers - 1];
+    }
+    let mut out: Vec<usize> = Vec::with_capacity(keep_n);
+    for i in 0..keep_n {
+        let idx = round_half_even(i as f64 * (n_layers - 1) as f64 / (keep_n - 1) as f64);
+        if !out.contains(&idx) {
+            out.push(idx);
+        }
+    }
+    out
+}
+
+/// Layer indices a DSIA variant executes (mirrors python
+/// `model.variant_layers`).
+pub fn variant_layers(n_layers: usize, early_exit_layer: usize, v: Variant) -> Vec<usize> {
+    match v {
+        Variant::Target => (0..n_layers).collect(),
+        // sparsity 0.4 -> keep 60% of layers
+        Variant::Ls40 => keep_set(n_layers, (0.6 * n_layers as f64).ceil() as usize),
+        // sparsity 0.6 -> keep 40%
+        Variant::Ls60 => keep_set(n_layers, (0.4 * n_layers as f64).ceil() as usize),
+        Variant::Ee => (0..early_exit_layer).collect(),
+    }
+}
+
+/// Flat parameter order of a variant's serving graph (mirrors python
+/// `model.param_names`). `ee_adapter` appends the Kangaroo-style adapter.
+pub fn param_names(layers: &[usize], ee_adapter: bool) -> Vec<String> {
+    let mut names = vec!["emb".to_string(), "pos".to_string()];
+    for li in layers {
+        for p in LAYER_PARAM_NAMES {
+            names.push(format!("l{li}.{p}"));
+        }
+    }
+    if ee_adapter {
+        for p in ["ee.ln_g", "ee.ln_b", "ee.w", "ee.b"] {
+            names.push(p.to_string());
+        }
+    }
+    names.push("lnf_g".to_string());
+    names.push("lnf_b".to_string());
+    names
+}
+
+/// Every parameter of the full model incl. the early-exit adapter
+/// (mirrors python `model.all_param_names` / the weights-file order).
+pub fn all_param_names(n_layers: usize) -> Vec<String> {
+    let mut names = vec!["emb".to_string(), "pos".to_string()];
+    for li in 0..n_layers {
+        for p in LAYER_PARAM_NAMES {
+            names.push(format!("l{li}.{p}"));
+        }
+    }
+    for p in ["ee.ln_g", "ee.ln_b", "ee.w", "ee.b", "lnf_g", "lnf_b"] {
+        names.push(p.to_string());
+    }
+    names
+}
+
+/// Shape of one parameter tensor (mirrors python `model.param_shape`).
+pub fn param_shape(d_model: usize, s_max: usize, vocab: usize, name: &str) -> Vec<usize> {
+    let d = d_model;
+    let dh2 = 4 * d_model; // MLP hidden width
+    match name {
+        "emb" => vec![vocab, d],
+        "pos" => vec![s_max, d],
+        "lnf_g" | "lnf_b" | "ee.ln_g" | "ee.ln_b" | "ee.b" => vec![d],
+        "ee.w" => vec![d, d],
+        _ => {
+            let base = name.split_once('.').map(|(_, b)| b).unwrap_or(name);
+            match base {
+                "ln1_g" | "ln1_b" | "ln2_g" | "ln2_b" | "bo" | "bo2" => vec![d],
+                "wqkv" => vec![d, 3 * d],
+                "bqkv" => vec![3 * d],
+                "wo" => vec![d, d],
+                "wi" => vec![d, dh2],
+                "bi" => vec![dh2],
+                "wo2" => vec![dh2, d],
+                other => panic!("unknown parameter name {other:?}"),
+            }
+        }
+    }
+}
+
+impl ScaleInfo {
+    /// Build the metadata of one scale without any on-disk artifacts
+    /// (mirrors python `model.SCALES` + `aot.py`'s manifest emission).
+    pub fn synthetic(name: &str, n_layers: usize, d_model: usize, n_heads: usize) -> ScaleInfo {
+        let s_max = 384;
+        let vocab = 512;
+        let d_head = d_model / n_heads;
+        let early_exit_layer = round_half_even(n_layers as f64 / 3.0).max(2);
+        let mut variants = BTreeMap::new();
+        for v in Variant::ALL {
+            let layers = variant_layers(n_layers, early_exit_layer, v);
+            let params = param_names(&layers, v == Variant::Ee);
+            let mut param_shapes = BTreeMap::new();
+            for p in &params {
+                param_shapes.insert(p.clone(), param_shape(d_model, s_max, vocab, p));
+            }
+            variants.insert(
+                v,
+                VariantInfo {
+                    variant: v,
+                    kv_shape: [layers.len(), 2, n_heads, s_max, d_head],
+                    layers,
+                    params,
+                    param_shapes,
+                    // no lowered artifacts: the reference backend computes
+                    // every step shape directly
+                    steps: BTreeMap::new(),
+                    commits: BTreeMap::new(),
+                },
+            );
+        }
+        ScaleInfo {
+            name: name.to_string(),
+            n_layers,
+            d_model,
+            n_heads,
+            d_head,
+            s_max,
+            vocab,
+            early_exit_layer,
+            weights_file: format!("weights_{name}.bin"),
+            variants,
+        }
+    }
+}
+
+impl Manifest {
+    /// The artifact-free manifest: identical model contract, no files.
+    /// `dir` records where artifacts *would* live (weights are still loaded
+    /// from there opportunistically when present).
+    pub fn synthetic(dir: &Path) -> Manifest {
+        let mut scales = BTreeMap::new();
+        for (name, l, d, h) in
+            [("small", 6, 128, 4), ("base", 8, 192, 6), ("large", 12, 256, 8)]
+        {
+            scales.insert(name.to_string(), ScaleInfo::synthetic(name, l, d, h));
+        }
+        Manifest {
+            dir: dir.to_path_buf(),
+            lang_seed: SYNTH_LANG_SEED,
+            step_shapes: vec![1, 8, 16, 64],
+            commit_shapes: vec![16],
+            vocab: 512,
+            scales,
+            // the python fixture only exists inside real artifacts
+            synthlang_check: Json::Null,
+        }
+    }
+}
+
 impl ScaleInfo {
     pub fn variant(&self, v: Variant) -> Result<&VariantInfo> {
         self.variants
@@ -252,5 +450,76 @@ mod tests {
             assert_eq!(Variant::from_key(v.key()).unwrap(), v);
         }
         assert!(Variant::from_key("bogus").is_err());
+    }
+
+    #[test]
+    fn keep_set_matches_python_rounding() {
+        // python round() is half-even; these are the exact sets aot.py emits
+        assert_eq!(keep_set(6, 4), vec![0, 2, 3, 5]); // small ls40
+        assert_eq!(keep_set(6, 3), vec![0, 2, 5]); // small ls60 (round(2.5)=2)
+        assert_eq!(keep_set(8, 5), vec![0, 2, 4, 5, 7]); // base ls40 (round(3.5)=4)
+        assert_eq!(keep_set(8, 4), vec![0, 2, 5, 7]); // base ls60
+        assert_eq!(keep_set(12, 8), vec![0, 2, 3, 5, 6, 8, 9, 11]); // large ls40
+        assert_eq!(keep_set(12, 5), vec![0, 3, 6, 8, 11]); // large ls60 (round(5.5)=6)
+        assert_eq!(keep_set(3, 5), vec![0, 1, 2]); // keep_n >= L
+        assert_eq!(keep_set(4, 1), vec![3]); // last layer only
+    }
+
+    #[test]
+    fn synthetic_manifest_is_consistent() {
+        let m = Manifest::synthetic(Path::new("/nowhere"));
+        assert_eq!(m.lang_seed, SYNTH_LANG_SEED);
+        assert_eq!(m.step_shapes, vec![1, 8, 16, 64]);
+        for (scale, (l, d, h)) in
+            [("small", (6, 128, 4)), ("base", (8, 192, 6)), ("large", (12, 256, 8))]
+        {
+            let sc = m.scale(scale).unwrap();
+            assert_eq!((sc.n_layers, sc.d_model, sc.n_heads), (l, d, h));
+            assert_eq!(sc.d_head * sc.n_heads, sc.d_model);
+            for v in Variant::ALL {
+                let vi = sc.variant(v).unwrap();
+                // kv plane count == executed layer count
+                assert_eq!(vi.kv_shape[0], vi.layers.len());
+                assert_eq!(vi.kv_shape, [vi.layers.len(), 2, h, sc.s_max, sc.d_head]);
+                // layers are strictly increasing target indices
+                assert!(vi.layers.windows(2).all(|w| w[0] < w[1]));
+                assert!(vi.layers.iter().all(|li| *li < l));
+                // first/last always kept for the layer-sparse variants
+                if matches!(v, Variant::Ls40 | Variant::Ls60) {
+                    assert_eq!(vi.layers[0], 0);
+                    assert_eq!(*vi.layers.last().unwrap(), l - 1);
+                }
+                // every named parameter has a shape
+                for p in &vi.params {
+                    let shape = &vi.param_shapes[p];
+                    assert!(!shape.is_empty(), "{p} missing shape");
+                    assert_eq!(shape, &param_shape(sc.d_model, sc.s_max, sc.vocab, p));
+                }
+            }
+            assert_eq!(
+                sc.variant(Variant::Ee).unwrap().layers.len(),
+                sc.early_exit_layer
+            );
+        }
+    }
+
+    #[test]
+    fn early_exit_layer_matches_python() {
+        assert_eq!(ScaleInfo::synthetic("small", 6, 128, 4).early_exit_layer, 2);
+        assert_eq!(ScaleInfo::synthetic("base", 8, 192, 6).early_exit_layer, 3);
+        assert_eq!(ScaleInfo::synthetic("large", 12, 256, 8).early_exit_layer, 4);
+    }
+
+    #[test]
+    fn param_names_layout() {
+        let names = param_names(&[0, 2], false);
+        assert_eq!(names[0], "emb");
+        assert_eq!(names[1], "pos");
+        assert_eq!(names[2], "l0.ln1_g");
+        assert_eq!(names[names.len() - 2], "lnf_g");
+        assert_eq!(names.len(), 2 + 2 * LAYER_PARAM_NAMES.len() + 2);
+        let ee = param_names(&[0], true);
+        assert!(ee.contains(&"ee.w".to_string()));
+        assert_eq!(all_param_names(6).len(), 2 + 6 * 12 + 4 + 2);
     }
 }

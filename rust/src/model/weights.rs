@@ -84,6 +84,56 @@ impl Weights {
             .get(name)
             .ok_or_else(|| anyhow!("missing tensor {name:?}"))
     }
+
+    /// Deterministic seeded weights for a scale — the artifact-free stand-in
+    /// for `weights_{scale}.bin`, used by the reference backend when no
+    /// artifacts exist on disk.
+    ///
+    /// The init scheme mirrors `python/compile/model.py::init_params`
+    /// (GPT-2-style: N(0, 0.02), residual projections scaled by 1/sqrt(2L),
+    /// LN gains = 1, biases = 0). The stream is keyed per (scale, tensor),
+    /// so every tensor is reproducible independently of load order.
+    pub fn synthesize(info: &crate::model::ScaleInfo) -> Weights {
+        let mut tensors = BTreeMap::new();
+        for name in crate::model::all_param_names(info.n_layers) {
+            let shape = crate::model::param_shape(info.d_model, info.s_max, info.vocab, &name);
+            let data = seeded_tensor(&info.name, info.n_layers, &name, &shape);
+            tensors.insert(name, Tensor { shape, data });
+        }
+        Weights { tensors }
+    }
+}
+
+/// One deterministically-initialized tensor (see [`Weights::synthesize`]).
+fn seeded_tensor(scale: &str, n_layers: usize, name: &str, shape: &[usize]) -> Vec<f32> {
+    use crate::util::rng::{fnv1a64, SplitMix64};
+
+    let n: usize = shape.iter().product();
+    let last = name.rsplit('.').next().unwrap_or(name);
+    if name.ends_with("_g") {
+        return vec![1.0; n];
+    }
+    if name.ends_with("_b") || matches!(last, "bqkv" | "bi" | "bo" | "bo2" | "b") {
+        return vec![0.0; n];
+    }
+    let mut std = 0.02f64;
+    if matches!(last, "wo" | "wo2") || name == "ee.w" {
+        std /= (2.0 * n_layers as f64).sqrt();
+    }
+    let mut rng = SplitMix64::new(0xCA55_9EED ^ fnv1a64(scale) ^ fnv1a64(name).rotate_left(17));
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        // Box–Muller: two normals per uniform pair
+        let u1 = 1.0 - rng.next_f64(); // (0, 1] — keeps ln() finite
+        let u2 = rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        out.push((std * r * theta.cos()) as f32);
+        if out.len() < n {
+            out.push((std * r * theta.sin()) as f32);
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -151,5 +201,32 @@ mod tests {
         let n = b.len();
         b.truncate(n - 2); // cut into the data section
         assert!(Weights::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn synthesized_weights_deterministic_and_shaped() {
+        let info = crate::model::ScaleInfo::synthetic("small", 6, 128, 4);
+        let a = Weights::synthesize(&info);
+        let b = Weights::synthesize(&info);
+        assert_eq!(a.tensors.len(), crate::model::all_param_names(6).len());
+        for (name, t) in &a.tensors {
+            assert_eq!(t.data, b.tensors[name].data, "{name} not deterministic");
+            assert_eq!(t.data.len(), t.elem_count(), "{name} shape mismatch");
+            assert!(t.data.iter().all(|x| x.is_finite()), "{name} non-finite");
+        }
+        // init classes: gains are ones, biases zeros, projections random
+        assert!(a.get("lnf_g").unwrap().data.iter().all(|x| *x == 1.0));
+        assert!(a.get("l0.bqkv").unwrap().data.iter().all(|x| *x == 0.0));
+        assert!(a.get("ee.b").unwrap().data.iter().all(|x| *x == 0.0));
+        let emb = &a.get("emb").unwrap().data;
+        assert!(emb.iter().any(|x| *x != 0.0));
+        // residual projections are down-scaled vs plain 0.02 init
+        let rms = |v: &[f32]| {
+            (v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        assert!(rms(&a.get("l0.wo").unwrap().data) < rms(&a.get("l0.wqkv").unwrap().data));
+        // different scales draw different streams
+        let other = Weights::synthesize(&crate::model::ScaleInfo::synthetic("base", 8, 192, 6));
+        assert_ne!(a.get("emb").unwrap().data[..8], other.get("emb").unwrap().data[..8]);
     }
 }

@@ -1,36 +1,57 @@
-//! PJRT runtime: loads the AOT artifacts and executes them on the hot path.
+//! Execution runtime: a backend-generic hot path for the serving stack.
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! The paper's engines only ever need three device operations — run a
+//! *step* of T in-flight tokens against a variant's KV cache, *commit*
+//! (gather-compact) accepted tree slots, and allocate/roll back caches.
+//! Those operations are the [`Backend`] trait; everything above it
+//! (sessions, engines, harness, server, benches) is backend-agnostic.
 //!
-//! Design points:
-//!   * **Weights are resident.** Every parameter tensor is uploaded once as a
-//!     `PjRtBuffer`; DSIA draft variants are parameter *subsets* of the
-//!     target, so all variants share the same buffers (`Rc<PjRtBuffer>`) —
-//!     the self-speculative property of the paper realized at the buffer
-//!     level. Nothing model-sized crosses the host boundary per step except
-//!     the KV cache (see below).
-//!   * **Step calls.** A step executable computes T in-flight tokens
-//!     (T ∈ {1, 8, 16, 64}) against the variant's KV cache and returns
-//!     (logits, kv'). PJRT returns the root tuple as a single buffer; we
-//!     copy it to host, split, and re-upload the KV — measured and tracked
-//!     per call so the DyTC latency model sees true end-to-end step costs.
-//!   * **Commit calls** compact accepted tree slots into contiguous cache
-//!     positions after a tree verification (see `spec::verify`).
+//! Two implementations exist:
+//!
+//!   * [`reference::RefBackend`] — a pure-Rust, dependency-free CPU forward
+//!     pass (tree attention over KV cache + T in-flight tokens with
+//!     ancestor masks, pre-LN transformer, tied-embedding logits; the Rust
+//!     port of `python/compile/kernels/ref.py` + `model.py`). Weights come
+//!     from `weights_{scale}.bin` when artifacts exist, or from
+//!     deterministic seeded init ([`crate::model::weights::Weights::synthesize`])
+//!     when they don't — so the **entire test suite runs hermetically**
+//!     with no artifacts directory at all.
+//!   * `pjrt::PjrtBackend` (cargo feature `pjrt`) — executes the AOT HLO
+//!     artifacts through the PJRT C API. Weights are resident device
+//!     buffers shared across DSIA variants (the self-speculative property
+//!     realized at the buffer level).
+//!
+//! Backend selection order (see [`BackendSelect`]):
+//!
+//!   1. explicit `--backend ref|pjrt` / config key `backend`,
+//!   2. the `CAS_SPEC_BACKEND` environment variable,
+//!   3. `auto`: PJRT iff compiled with the `pjrt` feature *and* a manifest
+//!      exists at the artifacts dir *and* a PJRT client comes up; otherwise
+//!      the reference backend (with on-disk weights if present, seeded
+//!      weights if not).
+//!
+//! The generic layer owns shape/overflow assertions, wall-clock accounting
+//! per variant (the DyTC latency model consumes true end-to-end step
+//! costs), and the contiguous-commit fast path: a chain acceptance's KV
+//! rows are already in place, so commit is a position bump.
+
+pub mod reference;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
-use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::model::weights::Weights;
-use crate::model::{Manifest, ScaleInfo, Variant, VariantInfo};
+use crate::model::{Manifest, ScaleInfo, Variant};
 
 /// Step shapes lowered by aot.py (must match python `model.STEP_SHAPES`).
+/// The reference backend computes the same shapes directly.
 pub const STEP_SHAPES: [usize; 4] = [1, 8, 16, 64];
 /// Tree-verification width of the target model (== max tree size M_tree_max).
 pub const VERIFY_T: usize = 16;
@@ -44,47 +65,179 @@ pub struct VariantCounters {
     pub time: Duration,
 }
 
-/// A KV cache handle: device buffer + committed length.
+/// Backend-owned KV storage. The generic layer never looks inside; it only
+/// tracks the committed length (`KvCache::pos`).
+pub enum KvState {
+    /// Host-resident cache (reference backend): flat `(nl,2,H,S,dh)` f32.
+    Host(Vec<f32>),
+    /// Device-resident cache (PJRT backend).
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+/// A KV cache handle: backend storage + committed length.
 pub struct KvCache {
-    buf: PjRtBuffer,
+    pub state: KvState,
     pub pos: usize,
     pub variant: Variant,
 }
 
 pub struct StepOutput {
-    /// Row-major (T, vocab) logits.
+    /// Row-major (T, vocab) logits. Rows past the live token count are
+    /// never read by verification; their content is backend-defined (the
+    /// reference backend zero-fills them, the PJRT graphs compute them).
     pub logits: Vec<f32>,
     pub elapsed: Duration,
 }
 
-struct VariantRuntime {
-    info: VariantInfo,
-    /// Flat parameter buffers in `info.params` order (shared across variants).
-    params: Vec<Rc<PjRtBuffer>>,
-    steps: BTreeMap<usize, PjRtLoadedExecutable>,
-    commits: BTreeMap<usize, PjRtLoadedExecutable>,
-    counters: RefCell<VariantCounters>,
+/// The device operations a serving backend must provide.
+///
+/// Implementations are single-threaded (PJRT handles are not `Send`; the
+/// server keeps the whole runtime on a dedicated worker thread).
+pub trait Backend {
+    /// Short identifier ("ref" / "pjrt") for logs and stats.
+    fn name(&self) -> &'static str;
+
+    /// Variants this backend was loaded with.
+    fn variants(&self) -> Vec<Variant>;
+
+    /// Fresh zeroed KV storage for a variant.
+    fn new_kv(&self, v: Variant) -> Result<KvState>;
+
+    /// Execute one step of `t_shape` in-flight tokens at committed length
+    /// `pos`. Only the first `live` slots are real tree tokens; the rest
+    /// are padding a backend may skip. Returns row-major (t_shape, vocab)
+    /// logits and writes the live tokens' KV at cache slots
+    /// `pos .. pos + live`.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        v: Variant,
+        kv: &mut KvState,
+        pos: usize,
+        t_shape: usize,
+        live: usize,
+        tokens: &[u32],
+        mask: &[f32],
+        depths: &[i32],
+    ) -> Result<Vec<f32>>;
+
+    /// Gather cache rows `src_abs` (absolute positions, length `t_shape`,
+    /// identity-padded) and write them contiguously at `dst_pos ..
+    /// dst_pos + t_shape` — the tree-slot compaction after verification.
+    fn gather_commit(
+        &self,
+        v: Variant,
+        kv: &mut KvState,
+        t_shape: usize,
+        src_abs: &[usize],
+        dst_pos: usize,
+    ) -> Result<()>;
 }
 
-/// One fully-loaded model scale: executables + resident weights.
-pub struct ScaleRuntime {
-    pub info: ScaleInfo,
-    client: PjRtClient,
-    variants: BTreeMap<Variant, VariantRuntime>,
+/// Which backend to open (CLI `--backend`, config `backend`, or
+/// `CAS_SPEC_BACKEND`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendSelect {
+    /// PJRT when artifacts + the `pjrt` feature are available, else ref.
+    #[default]
+    Auto,
+    /// Force the pure-Rust reference backend.
+    Ref,
+    /// Require the PJRT backend (error when unavailable).
+    Pjrt,
 }
 
-/// The top-level runtime: one PJRT CPU client + the artifact manifest.
+impl BackendSelect {
+    pub fn parse(s: &str) -> Result<BackendSelect> {
+        match s {
+            "auto" | "" => Ok(BackendSelect::Auto),
+            "ref" => Ok(BackendSelect::Ref),
+            "pjrt" => Ok(BackendSelect::Pjrt),
+            other => Err(anyhow!("unknown backend {other:?} (expected auto|ref|pjrt)")),
+        }
+    }
+
+    /// Read `CAS_SPEC_BACKEND` (unset ⇒ `Auto`).
+    pub fn from_env() -> Result<BackendSelect> {
+        match std::env::var("CAS_SPEC_BACKEND") {
+            Ok(v) => Self::parse(&v).map_err(|e| anyhow!("CAS_SPEC_BACKEND: {e:#}")),
+            Err(_) => Ok(BackendSelect::Auto),
+        }
+    }
+}
+
+enum RuntimeKind {
+    Ref,
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+/// The top-level runtime: a model contract (manifest) plus the means to
+/// load per-scale backends.
 pub struct Runtime {
-    pub client: PjRtClient,
     pub manifest: Manifest,
+    kind: RuntimeKind,
+    #[cfg(feature = "pjrt")]
+    client: Option<xla::PjRtClient>,
 }
 
 impl Runtime {
-    /// Create the PJRT client and read the manifest from `artifacts_dir`.
+    /// Open with the environment-driven backend selection. Never fails for
+    /// a missing artifacts directory: the reference backend synthesizes the
+    /// manifest and weights.
     pub fn open(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { client, manifest })
+        Self::open_with(artifacts_dir, BackendSelect::from_env()?)
+    }
+
+    /// Open with an explicit backend choice.
+    pub fn open_with(artifacts_dir: &Path, select: BackendSelect) -> Result<Runtime> {
+        let disk = Manifest::load(artifacts_dir).ok();
+        match select {
+            BackendSelect::Pjrt => Self::open_pjrt(artifacts_dir, disk),
+            BackendSelect::Ref => Ok(Self::open_ref(artifacts_dir, disk)),
+            BackendSelect::Auto => {
+                if disk.is_some() {
+                    if let Ok(rt) = Self::open_pjrt(artifacts_dir, disk.clone()) {
+                        return Ok(rt);
+                    }
+                }
+                Ok(Self::open_ref(artifacts_dir, disk))
+            }
+        }
+    }
+
+    fn open_ref(artifacts_dir: &Path, disk: Option<Manifest>) -> Runtime {
+        let manifest = disk.unwrap_or_else(|| Manifest::synthetic(artifacts_dir));
+        Runtime {
+            manifest,
+            kind: RuntimeKind::Ref,
+            #[cfg(feature = "pjrt")]
+            client: None,
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn open_pjrt(artifacts_dir: &Path, disk: Option<Manifest>) -> Result<Runtime> {
+        let manifest = disk.ok_or_else(|| {
+            anyhow!("backend pjrt: no manifest at {}", artifacts_dir.display())
+        })?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { manifest, kind: RuntimeKind::Pjrt, client: Some(client) })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn open_pjrt(_artifacts_dir: &Path, _disk: Option<Manifest>) -> Result<Runtime> {
+        Err(anyhow!("backend pjrt requested, but built without the `pjrt` cargo feature"))
+    }
+
+    /// Which backend `load_scale` will instantiate ("ref" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        match self.kind {
+            RuntimeKind::Ref => "ref",
+            #[cfg(feature = "pjrt")]
+            RuntimeKind::Pjrt => "pjrt",
+        }
     }
 
     /// Default artifacts directory: $CAS_SPEC_ARTIFACTS or ./artifacts.
@@ -94,107 +247,80 @@ impl Runtime {
             .unwrap_or_else(|_| "artifacts".into())
     }
 
-    /// Load a scale: weights + step/commit executables for `variants`.
+    /// Load a scale: weights + execution state for `variants`.
     pub fn load_scale(&self, scale: &str, variants: &[Variant]) -> Result<ScaleRuntime> {
         let info = self.manifest.scale(scale)?.clone();
-        let weights = Weights::load(&self.manifest.dir.join(&info.weights_file))?;
-
-        // Upload each referenced tensor once; variants share buffers.
-        let mut tensor_bufs: BTreeMap<String, Rc<PjRtBuffer>> = BTreeMap::new();
-        let mut vrt = BTreeMap::new();
-        for v in variants {
-            let vi = info.variant(*v)?.clone();
-            let mut params = Vec::with_capacity(vi.params.len());
-            for name in &vi.params {
-                if !tensor_bufs.contains_key(name) {
-                    let t = weights.get(name)?;
-                    let buf = self
-                        .client
-                        .buffer_from_host_buffer(&t.data, &t.shape, None)
-                        .map_err(|e| anyhow!("uploading {name}: {e:?}"))?;
-                    tensor_bufs.insert(name.clone(), Rc::new(buf));
-                }
-                params.push(tensor_bufs[name].clone());
+        let backend: Box<dyn Backend> = match self.kind {
+            RuntimeKind::Ref => {
+                // opportunistic: real pretrained weights when present,
+                // deterministic seeded init otherwise
+                let path = self.manifest.dir.join(&info.weights_file);
+                let weights = if path.is_file() {
+                    Some(Weights::load(&path)?)
+                } else {
+                    None
+                };
+                Box::new(reference::RefBackend::new(&info, variants, weights.as_ref())?)
             }
-            let mut steps = BTreeMap::new();
-            for (t, file) in &vi.steps {
-                steps.insert(*t, self.compile_artifact(file)?);
+            #[cfg(feature = "pjrt")]
+            RuntimeKind::Pjrt => {
+                let client = self.client.as_ref().expect("pjrt runtime without client");
+                Box::new(pjrt::PjrtBackend::load(client, &self.manifest, &info, variants)?)
             }
-            let mut commits = BTreeMap::new();
-            for (t, file) in &vi.commits {
-                commits.insert(*t, self.compile_artifact(file)?);
-            }
-            vrt.insert(
-                *v,
-                VariantRuntime {
-                    info: vi,
-                    params,
-                    steps,
-                    commits,
-                    counters: RefCell::new(VariantCounters::default()),
-                },
-            );
-        }
-        Ok(ScaleRuntime { info, client: self.client.clone(), variants: vrt })
-    }
-
-    fn compile_artifact(&self, file: &str) -> Result<PjRtLoadedExecutable> {
-        let path = self.manifest.dir.join(file);
-        let proto = HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+        };
+        let counters = variants
+            .iter()
+            .map(|v| (*v, RefCell::new(VariantCounters::default())))
+            .collect();
+        Ok(ScaleRuntime { info, backend, counters })
     }
 }
 
+/// One fully-loaded model scale: a backend plus per-variant accounting.
+pub struct ScaleRuntime {
+    pub info: ScaleInfo,
+    backend: Box<dyn Backend>,
+    counters: BTreeMap<Variant, RefCell<VariantCounters>>,
+}
+
 impl ScaleRuntime {
-    fn vr(&self, v: Variant) -> Result<&VariantRuntime> {
-        self.variants
-            .get(&v)
-            .ok_or_else(|| anyhow!("variant {v:?} not loaded for scale {}", self.info.name))
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn loaded_variants(&self) -> Vec<Variant> {
-        self.variants.keys().copied().collect()
+        self.counters.keys().copied().collect()
     }
 
     /// Fresh zeroed KV cache for a variant.
     pub fn new_kv(&self, v: Variant) -> Result<KvCache> {
-        let vi = &self.vr(v)?.info;
-        let zeros = vec![0f32; vi.kv_shape.iter().product()];
-        let buf = self
-            .client
-            .buffer_from_host_buffer(&zeros, &vi.kv_shape, None)
-            .map_err(|e| anyhow!("kv alloc: {e:?}"))?;
-        Ok(KvCache { buf, pos: 0, variant: v })
+        if !self.counters.contains_key(&v) {
+            return Err(anyhow!("variant {v:?} not loaded for scale {}", self.info.name));
+        }
+        Ok(KvCache { state: self.backend.new_kv(v)?, pos: 0, variant: v })
     }
 
-    /// Execute one step of `t_shape` in-flight tokens.
+    /// Execute one step of `t_shape` in-flight tokens, of which the first
+    /// `live` are real (the rest padding).
     ///
     /// `tokens`/`depths` must have length == t_shape, `mask` length
-    /// t_shape². The tree tokens' KV is written at cache slots
-    /// `kv.pos .. kv.pos + t_shape`; the caller decides (via `commit` or a
+    /// t_shape². The live tokens' KV is written at cache slots
+    /// `kv.pos .. kv.pos + live`; the caller decides (via `commit` or a
     /// manual pos advance for chain prefixes) how much becomes committed.
     pub fn step(
         &self,
         kv: &mut KvCache,
         t_shape: usize,
+        live: usize,
         tokens: &[u32],
         mask: &[f32],
         depths: &[i32],
     ) -> Result<StepOutput> {
-        let vr = self.vr(kv.variant)?;
-        let exe = vr
-            .steps
-            .get(&t_shape)
-            .ok_or_else(|| anyhow!("no step{t_shape} artifact for {:?}", kv.variant))?;
+        assert!(STEP_SHAPES.contains(&t_shape), "unknown step shape {t_shape}");
         assert_eq!(tokens.len(), t_shape, "tokens len != step shape");
         assert_eq!(mask.len(), t_shape * t_shape, "mask len != T^2");
         assert_eq!(depths.len(), t_shape, "depths len != T");
+        assert!((1..=t_shape).contains(&live), "live {live} outside 1..={t_shape}");
         assert!(
             kv.pos + t_shape <= self.info.s_max,
             "KV overflow: pos {} + T {} > s_max {}",
@@ -204,65 +330,19 @@ impl ScaleRuntime {
         );
 
         let start = Instant::now();
-        let toks_i32: Vec<i32> = tokens.iter().map(|t| *t as i32).collect();
-        let pos_buf = self
-            .client
-            .buffer_from_host_buffer(&[kv.pos as i32], &[], None)
-            .map_err(|e| anyhow!("pos upload: {e:?}"))?;
-        let tok_buf = self
-            .client
-            .buffer_from_host_buffer(&toks_i32, &[t_shape], None)
-            .map_err(|e| anyhow!("tokens upload: {e:?}"))?;
-        let mask_buf = self
-            .client
-            .buffer_from_host_buffer(mask, &[t_shape, t_shape], None)
-            .map_err(|e| anyhow!("mask upload: {e:?}"))?;
-        let depth_buf = self
-            .client
-            .buffer_from_host_buffer(depths, &[t_shape], None)
-            .map_err(|e| anyhow!("depths upload: {e:?}"))?;
-
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(vr.params.len() + 5);
-        for p in &vr.params {
-            args.push(p.as_ref());
-        }
-        args.push(&kv.buf);
-        args.push(&pos_buf);
-        args.push(&tok_buf);
-        args.push(&mask_buf);
-        args.push(&depth_buf);
-
-        let outs = exe.execute_b(&args).map_err(|e| anyhow!("step exec: {e:?}"))?;
-        let tuple = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("step result fetch: {e:?}"))?;
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("step result split: {e:?}"))?;
-        if parts.len() != 2 {
-            return Err(anyhow!("step returned {} outputs, expected 2", parts.len()));
-        }
-        let mut it = parts.into_iter();
-        let logits_lit = it.next().unwrap();
-        let kv_lit = it.next().unwrap();
-        let logits = logits_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
-        // NOTE: buffer_from_host_literal is asynchronous (no ready-future
-        // await in the C shim) — the literal would be freed while PJRT still
-        // reads it. buffer_from_host_buffer copies synchronously
-        // (kImmutableOnlyDuringCall), so the KV goes back through a host vec.
-        let kv_host = kv_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("kv to_vec: {e:?}"))?;
-        kv.buf = self
-            .client
-            .buffer_from_host_buffer(&kv_host, &vr.info.kv_shape, None)
-            .map_err(|e| anyhow!("kv reupload: {e:?}"))?;
-
+        let variant = kv.variant;
+        let logits = self
+            .backend
+            .step(variant, &mut kv.state, kv.pos, t_shape, live, tokens, mask, depths)?;
         let elapsed = start.elapsed();
-        let mut c = vr.counters.borrow_mut();
-        c.steps += 1;
-        c.tokens_stepped += t_shape as u64;
-        c.time += elapsed;
+        debug_assert_eq!(logits.len(), t_shape * self.info.vocab, "logits shape");
+
+        if let Some(c) = self.counters.get(&variant) {
+            let mut c = c.borrow_mut();
+            c.steps += 1;
+            c.tokens_stepped += live as u64;
+            c.time += elapsed;
+        }
         Ok(StepOutput { logits, elapsed })
     }
 
@@ -277,7 +357,6 @@ impl ScaleRuntime {
         t_shape: usize,
         src_slots: &[usize],
     ) -> Result<Duration> {
-        let vr = self.vr(kv.variant)?;
         let n_accept = src_slots.len();
         assert!(n_accept <= t_shape);
 
@@ -288,43 +367,21 @@ impl ScaleRuntime {
             return Ok(Duration::ZERO);
         }
 
-        let exe = vr
-            .commits
-            .get(&t_shape)
-            .ok_or_else(|| anyhow!("no commit{t_shape} artifact for {:?}", kv.variant))?;
         let start = Instant::now();
-        let mut src_abs = vec![0i32; t_shape];
-        for i in 0..t_shape {
-            let slot = src_slots.get(i).copied().unwrap_or(i); // pad: identity
-            src_abs[i] = (kv.pos + slot) as i32;
-        }
-        let idx_buf = self
-            .client
-            .buffer_from_host_buffer(&src_abs, &[t_shape], None)
-            .map_err(|e| anyhow!("commit idx upload: {e:?}"))?;
-        let pos_buf = self
-            .client
-            .buffer_from_host_buffer(&[kv.pos as i32], &[], None)
-            .map_err(|e| anyhow!("commit pos upload: {e:?}"))?;
-        let args: Vec<&PjRtBuffer> = vec![&kv.buf, &idx_buf, &pos_buf];
-        let outs = exe.execute_b(&args).map_err(|e| anyhow!("commit exec: {e:?}"))?;
-        let lit = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("commit fetch: {e:?}"))?;
-        let kv_lit = lit.to_tuple1().map_err(|e| anyhow!("commit split: {e:?}"))?;
-        let kv_host = kv_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("commit kv to_vec: {e:?}"))?;
-        kv.buf = self
-            .client
-            .buffer_from_host_buffer(&kv_host, &vr.info.kv_shape, None)
-            .map_err(|e| anyhow!("commit kv reupload: {e:?}"))?;
+        let src_abs: Vec<usize> = (0..t_shape)
+            .map(|i| kv.pos + src_slots.get(i).copied().unwrap_or(i)) // pad: identity
+            .collect();
+        let variant = kv.variant;
+        self.backend
+            .gather_commit(variant, &mut kv.state, t_shape, &src_abs, kv.pos)?;
         kv.pos += n_accept;
 
         let elapsed = start.elapsed();
-        let mut c = vr.counters.borrow_mut();
-        c.commits += 1;
-        c.time += elapsed;
+        if let Some(c) = self.counters.get(&variant) {
+            let mut c = c.borrow_mut();
+            c.commits += 1;
+            c.time += elapsed;
+        }
         Ok(elapsed)
     }
 
@@ -336,15 +393,15 @@ impl ScaleRuntime {
     }
 
     pub fn counters(&self, v: Variant) -> VariantCounters {
-        self.variants
+        self.counters
             .get(&v)
-            .map(|vr| vr.counters.borrow().clone())
+            .map(|c| c.borrow().clone())
             .unwrap_or_default()
     }
 
     pub fn reset_counters(&self) {
-        for vr in self.variants.values() {
-            *vr.counters.borrow_mut() = VariantCounters::default();
+        for c in self.counters.values() {
+            *c.borrow_mut() = VariantCounters::default();
         }
     }
 
@@ -390,5 +447,46 @@ mod tests {
         let total: f64 = (0..3).map(|i| softmax_prob(&row, i)).sum();
         assert!((total - 1.0).abs() < 1e-9);
         assert!(softmax_prob(&row, 2) > softmax_prob(&row, 0));
+    }
+
+    #[test]
+    fn backend_select_parse() {
+        assert_eq!(BackendSelect::parse("auto").unwrap(), BackendSelect::Auto);
+        assert_eq!(BackendSelect::parse("ref").unwrap(), BackendSelect::Ref);
+        assert_eq!(BackendSelect::parse("pjrt").unwrap(), BackendSelect::Pjrt);
+        assert!(BackendSelect::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn open_without_artifacts_falls_back_to_ref() {
+        let rt = Runtime::open(Path::new("/definitely/not/a/dir")).unwrap();
+        assert_eq!(rt.backend_name(), "ref");
+        assert!(rt.manifest.scales.contains_key("small"));
+    }
+
+    #[test]
+    fn forced_ref_ignores_missing_artifacts() {
+        let rt =
+            Runtime::open_with(Path::new("/nope"), BackendSelect::Ref).unwrap();
+        assert_eq!(rt.backend_name(), "ref");
+        let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+        assert_eq!(srt.backend_name(), "ref");
+        assert_eq!(srt.loaded_variants(), vec![Variant::Target]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn forced_pjrt_errors_without_feature() {
+        let Err(err) = Runtime::open_with(Path::new("/nope"), BackendSelect::Pjrt) else {
+            panic!("forced pjrt must error in a ref-only build");
+        };
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+
+    #[test]
+    fn new_kv_rejects_unloaded_variant() {
+        let rt = Runtime::open_with(Path::new("/nope"), BackendSelect::Ref).unwrap();
+        let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+        assert!(srt.new_kv(Variant::Ls40).is_err());
     }
 }

@@ -1,0 +1,609 @@
+//! The pure-Rust reference backend: a dependency-free CPU forward pass.
+//!
+//! This is the Rust port of the L1/L2 serving math
+//! (`python/compile/kernels/ref.py::tree_attention_ref` + `fused_mlp_ref`
+//! and `python/compile/model.py::_step_impl`): pre-LN transformer, learned
+//! absolute positions, tied-embedding logits, tree attention over the
+//! committed KV cache plus T in-flight tokens with ancestor masks, and the
+//! Kangaroo-style early-exit adapter for the `ee` variant.
+//!
+//! Determinism contract (what makes the engines *exactly* lossless here):
+//! every per-token row is computed by row-independent operations (LN,
+//! matmuls, GELU) in a fixed summation order, and attention iterates the
+//! attended set in position order — committed cache rows first, then
+//! in-flight ancestor slots ascending. A token therefore produces
+//! bit-identical logits and KV rows whether it is decoded at T=1, chunked
+//! through a T=64 prefill, or verified inside a tree — which is what the
+//! lossless test suite exercises end-to-end for all engines.
+//!
+//! DSIA variants are parameter *subsets* of the target: layer weights are
+//! `Rc`-shared across variants, mirroring the PJRT backend's shared device
+//! buffers (the paper's self-speculative property at the host level).
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::weights::Weights;
+use crate::model::{ScaleInfo, Variant, VariantInfo};
+
+use super::{Backend, KvState};
+
+/// Per-layer weights in row-major `(in, out)` layout (x @ W convention).
+struct Layer {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wqkv: Vec<f32>,
+    bqkv: Vec<f32>,
+    wo: Vec<f32>,
+    bo: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    wi: Vec<f32>,
+    bi: Vec<f32>,
+    wo2: Vec<f32>,
+    bo2: Vec<f32>,
+}
+
+/// Kangaroo-style early-exit adapter (shared final LN / LM head).
+struct EeAdapter {
+    ln_g: Vec<f32>,
+    ln_b: Vec<f32>,
+    w: Vec<f32>,
+    b: Vec<f32>,
+}
+
+struct RefVariant {
+    info: VariantInfo,
+    /// Executed layers in order; `Rc`-shared across variants.
+    layers: Vec<Rc<Layer>>,
+}
+
+/// A loaded scale on the reference backend.
+pub struct RefBackend {
+    info: ScaleInfo,
+    /// (V, D) token embedding (also the tied LM head).
+    emb: Vec<f32>,
+    /// (D, V) transpose of `emb`, precomputed for the logits matmul.
+    emb_t: Vec<f32>,
+    /// (S, D) learned absolute position embedding.
+    pos_emb: Vec<f32>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    ee: Option<EeAdapter>,
+    variants: BTreeMap<Variant, RefVariant>,
+}
+
+/// Fetch one tensor, validating its shape against the model contract.
+fn tensor(w: &Weights, info: &ScaleInfo, name: &str) -> Result<Vec<f32>> {
+    let want = crate::model::param_shape(info.d_model, info.s_max, info.vocab, name);
+    let t = w.get(name)?;
+    if t.shape != want {
+        return Err(anyhow!(
+            "tensor {name}: shape {:?}, expected {:?} for scale {}",
+            t.shape,
+            want,
+            info.name
+        ));
+    }
+    Ok(t.data.clone())
+}
+
+impl Layer {
+    fn load(w: &Weights, info: &ScaleInfo, li: usize) -> Result<Layer> {
+        let t = |p: &str| tensor(w, info, &format!("l{li}.{p}"));
+        Ok(Layer {
+            ln1_g: t("ln1_g")?,
+            ln1_b: t("ln1_b")?,
+            wqkv: t("wqkv")?,
+            bqkv: t("bqkv")?,
+            wo: t("wo")?,
+            bo: t("bo")?,
+            ln2_g: t("ln2_g")?,
+            ln2_b: t("ln2_b")?,
+            wi: t("wi")?,
+            bi: t("bi")?,
+            wo2: t("wo2")?,
+            bo2: t("bo2")?,
+        })
+    }
+}
+
+impl RefBackend {
+    /// Load a scale for `variants`. `weights` is the on-disk tensor
+    /// container when artifacts exist; `None` synthesizes deterministic
+    /// seeded weights so no files are needed at all.
+    pub fn new(
+        info: &ScaleInfo,
+        variants: &[Variant],
+        weights: Option<&Weights>,
+    ) -> Result<RefBackend> {
+        let synthesized;
+        let w = match weights {
+            Some(w) => w,
+            None => {
+                synthesized = Weights::synthesize(info);
+                &synthesized
+            }
+        };
+
+        let emb = tensor(w, info, "emb")?;
+        let (d, vocab) = (info.d_model, info.vocab);
+        let mut emb_t = vec![0f32; d * vocab];
+        for tok in 0..vocab {
+            for j in 0..d {
+                emb_t[j * vocab + tok] = emb[tok * d + j];
+            }
+        }
+
+        let mut layer_cache: BTreeMap<usize, Rc<Layer>> = BTreeMap::new();
+        let mut vmap = BTreeMap::new();
+        let mut need_ee = false;
+        for v in variants {
+            let vi = info.variant(*v)?.clone();
+            let mut layers = Vec::with_capacity(vi.layers.len());
+            for li in &vi.layers {
+                let layer = match layer_cache.get(li) {
+                    Some(l) => l.clone(),
+                    None => {
+                        let l = Rc::new(Layer::load(w, info, *li)?);
+                        layer_cache.insert(*li, l.clone());
+                        l
+                    }
+                };
+                layers.push(layer);
+            }
+            need_ee |= *v == Variant::Ee;
+            vmap.insert(*v, RefVariant { info: vi, layers });
+        }
+
+        let ee = if need_ee {
+            Some(EeAdapter {
+                ln_g: tensor(w, info, "ee.ln_g")?,
+                ln_b: tensor(w, info, "ee.ln_b")?,
+                w: tensor(w, info, "ee.w")?,
+                b: tensor(w, info, "ee.b")?,
+            })
+        } else {
+            None
+        };
+
+        Ok(RefBackend {
+            info: info.clone(),
+            emb,
+            emb_t,
+            pos_emb: tensor(w, info, "pos")?,
+            lnf_g: tensor(w, info, "lnf_g")?,
+            lnf_b: tensor(w, info, "lnf_b")?,
+            ee,
+            variants: vmap,
+        })
+    }
+
+    fn variant(&self, v: Variant) -> Result<&RefVariant> {
+        self.variants
+            .get(&v)
+            .ok_or_else(|| anyhow!("variant {v:?} not loaded on ref backend"))
+    }
+}
+
+/// Row-wise layer norm: dst = (x - mean)/sqrt(var + 1e-5) * g + b.
+fn ln_rows(src: &[f32], g: &[f32], b: &[f32], dst: &mut [f32], rows: usize, d: usize) {
+    for r in 0..rows {
+        let x = &src[r * d..(r + 1) * d];
+        let out = &mut dst[r * d..(r + 1) * d];
+        let mut mean = 0f32;
+        for v in x {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0f32;
+        for v in x {
+            let c = v - mean;
+            var += c * c;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..d {
+            out[j] = (x[j] - mean) * inv * g[j] + b[j];
+        }
+    }
+}
+
+/// dst[r] = src[r] @ w + bias, with w row-major (din, dout).
+/// Accumulation order is fixed (ascending input dim), which the
+/// determinism contract relies on.
+fn matmul_bias(
+    src: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    dst: &mut [f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+) {
+    for r in 0..rows {
+        let x = &src[r * din..(r + 1) * din];
+        let out = &mut dst[r * dout..(r + 1) * dout];
+        out.copy_from_slice(bias);
+        for (i, &xi) in x.iter().enumerate() {
+            let wr = &w[i * dout..(i + 1) * dout];
+            for o in 0..dout {
+                out[o] += xi * wr[o];
+            }
+        }
+    }
+}
+
+/// One row-vector times matrix: out = x @ w, w row-major (din, dout).
+fn matvec(x: &[f32], w: &[f32], out: &mut [f32], din: usize, dout: usize) {
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate().take(din) {
+        let wr = &w[i * dout..(i + 1) * dout];
+        for o in 0..dout {
+            out[o] += xi * wr[o];
+        }
+    }
+}
+
+/// tanh-approx GELU (matches the Pallas kernel and the L2 model).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn variants(&self) -> Vec<Variant> {
+        self.variants.keys().copied().collect()
+    }
+
+    fn new_kv(&self, v: Variant) -> Result<KvState> {
+        let vi = &self.variant(v)?.info;
+        Ok(KvState::Host(vec![0f32; vi.kv_shape.iter().product()]))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        v: Variant,
+        kv: &mut KvState,
+        pos: usize,
+        t_shape: usize,
+        live: usize,
+        tokens: &[u32],
+        mask: &[f32],
+        depths: &[i32],
+    ) -> Result<Vec<f32>> {
+        let var = self.variant(v)?;
+        let (d, nh, dh) = (self.info.d_model, self.info.n_heads, self.info.d_head);
+        let (s, vocab) = (self.info.s_max, self.info.vocab);
+        let dh2 = 4 * d;
+        let t = live;
+        let cache = match kv {
+            KvState::Host(c) => c,
+            #[cfg(feature = "pjrt")]
+            _ => return Err(anyhow!("reference backend received a foreign KV cache")),
+        };
+        let expect: usize = var.info.kv_shape.iter().product();
+        if cache.len() != expect {
+            return Err(anyhow!("kv cache has {} elems, expected {expect}", cache.len()));
+        }
+        for &tok in &tokens[..t] {
+            if tok as usize >= vocab {
+                return Err(anyhow!("token {tok} out of vocab {vocab}"));
+            }
+        }
+
+        let scale = 1.0 / (dh as f32).sqrt();
+        let plane = 2 * nh * s * dh; // elems per layer in the cache
+        let head = s * dh; // elems per head within a k/v plane
+
+        // h = emb[token] + pos_emb[clip(pos + depth)]
+        let mut h = vec![0f32; t * d];
+        for i in 0..t {
+            let tok = tokens[i] as usize;
+            let pid = (pos as i64 + depths[i] as i64).clamp(0, s as i64 - 1) as usize;
+            let dst = &mut h[i * d..(i + 1) * d];
+            let e = &self.emb[tok * d..(tok + 1) * d];
+            let pe = &self.pos_emb[pid * d..(pid + 1) * d];
+            for j in 0..d {
+                dst[j] = e[j] + pe[j];
+            }
+        }
+
+        // reusable scratch
+        let mut hn = vec![0f32; t * d];
+        let mut qkv = vec![0f32; t * 3 * d];
+        let mut attn = vec![0f32; t * d];
+        let mut proj = vec![0f32; d];
+        let mut mlp = vec![0f32; dh2];
+        let mut scores: Vec<f32> = Vec::with_capacity(pos + t);
+
+        for (vi, layer) in var.layers.iter().enumerate() {
+            ln_rows(&h, &layer.ln1_g, &layer.ln1_b, &mut hn, t, d);
+            matmul_bias(&hn, &layer.wqkv, &layer.bqkv, &mut qkv, t, d, 3 * d);
+
+            // --- tree attention: committed cache rows, then ancestors ---
+            let kbase = vi * plane;
+            let vbase = kbase + nh * head;
+            for i in 0..t {
+                let mrow = &mask[i * t_shape..i * t_shape + t_shape];
+                for hh in 0..nh {
+                    let q = &qkv[i * 3 * d + hh * dh..][..dh];
+                    scores.clear();
+                    let mut mx = f32::NEG_INFINITY;
+                    for sp in 0..pos {
+                        let kr = &cache[kbase + hh * head + sp * dh..][..dh];
+                        let sc = dot(q, kr) * scale;
+                        scores.push(sc);
+                        mx = mx.max(sc);
+                    }
+                    for j in 0..t {
+                        if mrow[j] > 0.5 {
+                            let kr = &qkv[j * 3 * d + d + hh * dh..][..dh];
+                            let sc = dot(q, kr) * scale;
+                            scores.push(sc);
+                            mx = mx.max(sc);
+                        }
+                    }
+                    let mut denom = 0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - mx).exp();
+                        denom += *sc;
+                    }
+                    let inv = 1.0 / denom;
+                    let out = &mut attn[i * d + hh * dh..][..dh];
+                    out.fill(0.0);
+                    let mut idx = 0;
+                    for sp in 0..pos {
+                        let wgt = scores[idx] * inv;
+                        idx += 1;
+                        let vr = &cache[vbase + hh * head + sp * dh..][..dh];
+                        for x in 0..dh {
+                            out[x] += wgt * vr[x];
+                        }
+                    }
+                    for j in 0..t {
+                        if mrow[j] > 0.5 {
+                            let wgt = scores[idx] * inv;
+                            idx += 1;
+                            let vr = &qkv[j * 3 * d + 2 * d + hh * dh..][..dh];
+                            for x in 0..dh {
+                                out[x] += wgt * vr[x];
+                            }
+                        }
+                    }
+                }
+            }
+
+            // h = (h + attn @ wo) + bo
+            for i in 0..t {
+                matvec(&attn[i * d..(i + 1) * d], &layer.wo, &mut proj, d, d);
+                let hr = &mut h[i * d..(i + 1) * d];
+                for j in 0..d {
+                    hr[j] = (hr[j] + proj[j]) + layer.bo[j];
+                }
+            }
+
+            // h = (h + gelu(ln2(h) @ wi + bi) @ wo2) + bo2
+            ln_rows(&h, &layer.ln2_g, &layer.ln2_b, &mut hn, t, d);
+            for i in 0..t {
+                matvec(&hn[i * d..(i + 1) * d], &layer.wi, &mut mlp, d, dh2);
+                for (o, bv) in mlp.iter_mut().zip(&layer.bi) {
+                    *o = gelu(*o + bv);
+                }
+                matvec(&mlp, &layer.wo2, &mut proj, dh2, d);
+                let hr = &mut h[i * d..(i + 1) * d];
+                for j in 0..d {
+                    hr[j] = (hr[j] + proj[j]) + layer.bo2[j];
+                }
+            }
+
+            // write this layer's live-token KV at slots pos..pos+t (junk
+            // beyond the accepted prefix is compacted away by commit and
+            // never attended past `pos`)
+            for i in 0..t {
+                for hh in 0..nh {
+                    let kq = &qkv[i * 3 * d + d + hh * dh..][..dh];
+                    cache[kbase + hh * head + (pos + i) * dh..][..dh].copy_from_slice(kq);
+                    let vq = &qkv[i * 3 * d + 2 * d + hh * dh..][..dh];
+                    cache[vbase + hh * head + (pos + i) * dh..][..dh].copy_from_slice(vq);
+                }
+            }
+        }
+
+        // early-exit adapter (ee variant only): h += ln(h) @ w + b
+        if v == Variant::Ee {
+            let ee = self
+                .ee
+                .as_ref()
+                .ok_or_else(|| anyhow!("ee adapter not loaded"))?;
+            ln_rows(&h, &ee.ln_g, &ee.ln_b, &mut hn, t, d);
+            for i in 0..t {
+                matvec(&hn[i * d..(i + 1) * d], &ee.w, &mut proj, d, d);
+                let hr = &mut h[i * d..(i + 1) * d];
+                for j in 0..d {
+                    hr[j] = (hr[j] + proj[j]) + ee.b[j];
+                }
+            }
+        }
+
+        // final LN + tied-embedding logits; pad rows stay zero
+        ln_rows(&h, &self.lnf_g, &self.lnf_b, &mut hn, t, d);
+        let mut logits = vec![0f32; t_shape * vocab];
+        for i in 0..t {
+            let row = &mut logits[i * vocab..(i + 1) * vocab];
+            for j in 0..d {
+                let x = hn[i * d + j];
+                let er = &self.emb_t[j * vocab..(j + 1) * vocab];
+                for o in 0..vocab {
+                    row[o] += x * er[o];
+                }
+            }
+        }
+        Ok(logits)
+    }
+
+    fn gather_commit(
+        &self,
+        v: Variant,
+        kv: &mut KvState,
+        t_shape: usize,
+        src_abs: &[usize],
+        dst_pos: usize,
+    ) -> Result<()> {
+        let var = self.variant(v)?;
+        let (nh, dh, s) = (self.info.n_heads, self.info.d_head, self.info.s_max);
+        let nl = var.info.kv_shape[0];
+        let cache = match kv {
+            KvState::Host(c) => c,
+            #[cfg(feature = "pjrt")]
+            _ => return Err(anyhow!("reference backend received a foreign KV cache")),
+        };
+        if src_abs.len() != t_shape {
+            return Err(anyhow!("commit indices len {} != {t_shape}", src_abs.len()));
+        }
+        if dst_pos + t_shape > s || src_abs.iter().any(|sp| *sp >= s) {
+            return Err(anyhow!("commit out of cache bounds"));
+        }
+
+        // take(kv, src, axis=3) then write at dst_pos — gather from the
+        // original rows first, exactly like the lowered commit graph
+        let mut gathered = vec![0f32; t_shape * dh];
+        for plane in 0..nl * 2 * nh {
+            let base = plane * s * dh;
+            for (i, &sp) in src_abs.iter().enumerate() {
+                gathered[i * dh..(i + 1) * dh]
+                    .copy_from_slice(&cache[base + sp * dh..][..dh]);
+            }
+            for i in 0..t_shape {
+                cache[base + (dst_pos + i) * dh..][..dh]
+                    .copy_from_slice(&gathered[i * dh..(i + 1) * dh]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> RefBackend {
+        let info = ScaleInfo::synthetic("small", 6, 128, 4);
+        RefBackend::new(&info, &Variant::ALL, None).unwrap()
+    }
+
+    fn host(kv: &KvState) -> &[f32] {
+        match kv {
+            KvState::Host(c) => c,
+            #[cfg(feature = "pjrt")]
+            _ => panic!("expected a host cache"),
+        }
+    }
+
+    fn chain_inputs(tokens: &[u32], t_shape: usize) -> (Vec<u32>, Vec<f32>, Vec<i32>) {
+        let tree = crate::spec::DraftTree::chain(tokens[0], &tokens[1..], t_shape);
+        tree.serialize(t_shape, 0)
+    }
+
+    #[test]
+    fn chunked_equals_stepwise_bitwise() {
+        let be = backend();
+        let toks: [u32; 5] = [1, 30, 40, 50, 60];
+
+        // one T=8 chain step
+        let mut kv_a = be.new_kv(Variant::Target).unwrap();
+        let (t8, m8, d8) = chain_inputs(&toks, 8);
+        let logits_a = be
+            .step(Variant::Target, &mut kv_a, 0, 8, 5, &t8, &m8, &d8)
+            .unwrap();
+
+        // five T=1 steps
+        let mut kv_b = be.new_kv(Variant::Target).unwrap();
+        let mut last = Vec::new();
+        for (i, &tok) in toks.iter().enumerate() {
+            last = be
+                .step(Variant::Target, &mut kv_b, i, 1, 1, &[tok], &[1.0], &[0])
+                .unwrap();
+        }
+
+        // the determinism contract: final row identical BITWISE
+        let vocab = 512;
+        assert_eq!(&logits_a[4 * vocab..5 * vocab], &last[..vocab]);
+
+        // and the KV caches hold identical committed rows
+        assert_eq!(host(&kv_a), host(&kv_b));
+    }
+
+    #[test]
+    fn pad_rows_zero_and_ignored() {
+        let be = backend();
+        let mut kv = be.new_kv(Variant::Target).unwrap();
+        let (t8, m8, d8) = chain_inputs(&[1, 30], 8);
+        let logits = be
+            .step(Variant::Target, &mut kv, 0, 8, 2, &t8, &m8, &d8)
+            .unwrap();
+        let vocab = 512;
+        assert_eq!(logits.len(), 8 * vocab);
+        assert!(logits[2 * vocab..].iter().all(|x| *x == 0.0));
+        assert!(logits[..2 * vocab].iter().any(|x| *x != 0.0));
+    }
+
+    #[test]
+    fn gather_commit_moves_rows() {
+        let be = backend();
+        let mut kv = be.new_kv(Variant::Ee).unwrap();
+        // write 4 tree slots at pos 0
+        let (t8, m8, d8) = chain_inputs(&[1, 30, 40, 50], 8);
+        be.step(Variant::Ee, &mut kv, 0, 8, 4, &t8, &m8, &d8).unwrap();
+        let before = host(&kv).to_vec();
+        // accept slots 0 and 2 -> positions 0, 1 (plus identity padding)
+        let src: Vec<usize> = vec![0, 2, 2, 3, 4, 5, 6, 7];
+        be.gather_commit(Variant::Ee, &mut kv, 8, &src, 0).unwrap();
+        let after = host(&kv).to_vec();
+        let (dh, s) = (32usize, 384usize);
+        // plane 0 (layer 0 keys, head 0): row 1 now holds old row 2
+        assert_eq!(after[dh..2 * dh], before[2 * dh..3 * dh]);
+        // row 0 unchanged (gathered onto itself)
+        assert_eq!(after[..dh], before[..dh]);
+        // untouched committed-region rows beyond t_shape stay put
+        assert_eq!(after[9 * dh..10 * dh], before[9 * dh..10 * dh]);
+        assert!(s * dh > 10 * dh);
+    }
+
+    #[test]
+    fn variants_share_target_layers() {
+        let be = backend();
+        // ls40 layers are a subset of target layers and Rc-shared
+        let target = &be.variants[&Variant::Target];
+        let ls40 = &be.variants[&Variant::Ls40];
+        for (i, li) in ls40.info.layers.iter().enumerate() {
+            assert!(Rc::ptr_eq(&ls40.layers[i], &target.layers[*li]));
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_token() {
+        let be = backend();
+        let mut kv = be.new_kv(Variant::Target).unwrap();
+        assert!(be
+            .step(Variant::Target, &mut kv, 0, 1, 1, &[9999], &[1.0], &[0])
+            .is_err());
+    }
+}

@@ -1,7 +1,14 @@
 //! Serving front-end: a threaded TCP server with a dynamic request queue.
 //!
-//! Architecture (PJRT handles are not `Send`, so the model lives on a
-//! dedicated worker thread):
+//! The worker opens the runtime through the backend-generic layer
+//! (`runtime::Backend`): with PJRT artifacts it serves the AOT graphs;
+//! without them it falls back to the hermetic pure-Rust reference backend
+//! (selection order documented in `runtime`), so the server — and its
+//! integration test — runs with no artifacts at all. `stats` reports which
+//! backend is live.
+//!
+//! Architecture (backend handles, e.g. PJRT buffers, are not `Send`, so
+//! the model lives on a dedicated worker thread):
 //!
 //!   * **acceptor** — accepts TCP connections; one lightweight reader
 //!     thread per connection parses newline-delimited JSON requests and
@@ -56,7 +63,7 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
     let wcfg = cfg.clone();
     let worker = thread::spawn(move || -> Result<()> {
         let engine_name = wcfg.engines[0].clone();
-        let rt = Runtime::open(&wcfg.artifacts)?;
+        let rt = Runtime::open_with(&wcfg.artifacts, wcfg.backend_select()?)?;
         let srt = rt.load_scale(&wcfg.scale, &required_variants(&engine_name))?;
         let mut eng = build_engine(&engine_name, &srt, &wcfg.opts)?;
         let mut served = 0u64;
@@ -72,6 +79,7 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
                         ("total_secs", Json::Num(total_secs)),
                         ("engine", Json::Str(engine_name.clone())),
                         ("scale", Json::Str(wcfg.scale.clone())),
+                        ("backend", Json::Str(srt.backend_name().to_string())),
                     ]);
                     let _ = reply.send(j.to_string());
                 }

@@ -61,7 +61,7 @@ impl<'rt> VariantSession<'rt> {
             let chunk = &rest[..take];
             let tree = DraftTree::chain(chunk[0], &chunk[1..], t_shape.max(take));
             let (toks, mask, depths) = tree.serialize(t_shape, 0);
-            let out = self.rt.step(&mut self.kv, t_shape, &toks, &mask, &depths)?;
+            let out = self.rt.step(&mut self.kv, t_shape, take, &toks, &mask, &depths)?;
             // contiguous chain: commit by advancing pos (fast path)
             let slots: Vec<usize> = (0..take).collect();
             self.rt.commit(&mut self.kv, t_shape, &slots)?;
@@ -75,7 +75,7 @@ impl<'rt> VariantSession<'rt> {
     /// Decode a single committed token; returns the next-token logits.
     pub fn decode_one(&mut self, token: u32) -> Result<&[f32]> {
         let vocab = self.rt.vocab();
-        let out = self.rt.step(&mut self.kv, 1, &[token], &[1.0], &[0])?;
+        let out = self.rt.step(&mut self.kv, 1, 1, &[token], &[1.0], &[0])?;
         self.rt.commit(&mut self.kv, 1, &[0])?;
         self.last_logits = Some(out.logits[..vocab].to_vec());
         Ok(self.last_logits.as_deref().unwrap())
@@ -86,7 +86,7 @@ impl<'rt> VariantSession<'rt> {
     /// `commit_slots` (or is discarded by the next overwrite).
     pub fn verify_tree(&mut self, tree: &DraftTree, t_shape: usize) -> Result<StepOutput> {
         let (toks, mask, depths) = tree.serialize(t_shape, 0);
-        self.rt.step(&mut self.kv, t_shape, &toks, &mask, &depths)
+        self.rt.step(&mut self.kv, t_shape, tree.len(), &toks, &mask, &depths)
     }
 
     /// Commit the KV of `accepted_slots` (tree-slot indices, path order)

@@ -2,7 +2,9 @@
 //! every engine's greedy output must equal plain autoregressive greedy
 //! decoding, token-for-token, for every engine × category × seed.
 //!
-//! Requires `make artifacts` (skips cleanly when artifacts are absent).
+//! Hermetic: runs on the pure-Rust reference backend when no artifacts
+//! exist (`Runtime::open` falls back automatically), and on PJRT when
+//! `make artifacts` has run and the crate is built with `--features pjrt`.
 
 use cas_spec::engine::{EngineOpts, ENGINES};
 use cas_spec::harness::run_suite;
@@ -10,16 +12,13 @@ use cas_spec::model::Variant;
 use cas_spec::runtime::Runtime;
 use cas_spec::workload::{Language, Suite};
 
-fn open_runtime() -> Option<Runtime> {
-    Runtime::open(&Runtime::default_dir()).ok()
+fn open_runtime() -> Runtime {
+    Runtime::open(&Runtime::default_dir()).expect("runtime open")
 }
 
 #[test]
 fn all_engines_reproduce_ar_greedy() {
-    let Some(rt) = open_runtime() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let rt = open_runtime();
     let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, 7, 1, 24);
@@ -31,10 +30,7 @@ fn all_engines_reproduce_ar_greedy() {
 
 #[test]
 fn lossless_across_seeds_and_lengths() {
-    let Some(rt) = open_runtime() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let rt = open_runtime();
     let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
     let lang = Language::build(rt.manifest.lang_seed);
     // the adaptive engine is the most state-heavy: sweep seeds on it
@@ -50,10 +46,7 @@ fn lossless_across_seeds_and_lengths() {
 fn engine_state_reuse_stays_lossless() {
     // DyTC keeps estimator state across requests; repeated generates on the
     // same engine instance must stay lossless (run_suite reuses instances).
-    let Some(rt) = open_runtime() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let rt = open_runtime();
     let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, 11, 2, 16); // 2 prompts/category
@@ -71,10 +64,7 @@ fn engine_state_reuse_stays_lossless() {
 #[test]
 fn nondefault_hyperparams_stay_lossless() {
     // Scheduling hyper-parameters must never affect WHAT is generated.
-    let Some(rt) = open_runtime() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let rt = open_runtime();
     let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, 5, 1, 20);

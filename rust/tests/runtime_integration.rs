@@ -1,27 +1,23 @@
-//! Runtime-level integration: the AOT artifacts execute correctly through
-//! the PJRT path — KV semantics (write/commit/rollback), chain-vs-tree
-//! equivalence, and the draft variants' parameter-subset sharing.
-//!
-//! Requires `make artifacts` (skips cleanly when artifacts are absent).
+//! Runtime-level integration, backend-agnostic: KV semantics
+//! (write/commit/rollback), chain-vs-tree equivalence, and the draft
+//! variants' parameter-subset sharing — exercised through whichever
+//! backend `Runtime::open` selects (reference when artifacts are absent,
+//! PJRT with artifacts + the `pjrt` feature).
 
 use cas_spec::model::Variant;
 use cas_spec::runtime::{argmax, Runtime, ScaleRuntime, VERIFY_T};
 use cas_spec::spec::{DraftTree, VariantSession};
 
-fn load() -> Option<(Runtime, ScaleRuntime)> {
-    let rt = Runtime::open(&Runtime::default_dir()).ok()?;
-    let srt = rt.load_scale("small", &Variant::ALL).ok()?;
-    Some((rt, srt))
+fn load() -> ScaleRuntime {
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    rt.load_scale("small", &Variant::ALL).expect("load small")
 }
 
 const PROMPT: [u32; 9] = [1, 30, 40, 50, 60, 70, 80, 90, 100];
 
 #[test]
 fn decode_deterministic() {
-    let Some((_rt, srt)) = load() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let srt = load();
     let run = || -> anyhow::Result<Vec<u32>> {
         let mut s = VariantSession::new(&srt, Variant::Target)?;
         s.feed(&PROMPT)?;
@@ -37,10 +33,7 @@ fn decode_deterministic() {
 
 #[test]
 fn chunked_prefill_equals_token_by_token() {
-    let Some((_rt, srt)) = load() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let srt = load();
     // chunked feed
     let mut a = VariantSession::new(&srt, Variant::Target).unwrap();
     a.feed(&PROMPT).unwrap();
@@ -60,10 +53,7 @@ fn chunked_prefill_equals_token_by_token() {
 
 #[test]
 fn tree_verify_matches_sequential_decode() {
-    let Some((_rt, srt)) = load() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let srt = load();
     // sequential: feed prompt then decode 3 tokens t1,t2,t3 greedily
     let mut s = VariantSession::new(&srt, Variant::Target).unwrap();
     s.feed(&PROMPT).unwrap();
@@ -85,10 +75,7 @@ fn tree_verify_matches_sequential_decode() {
 
 #[test]
 fn commit_gather_equals_chain_replay() {
-    let Some((_rt, srt)) = load() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let srt = load();
     // Build a branching tree where the accepted path is NOT slot-contiguous,
     // commit it, and check subsequent decoding equals a chain replay.
     let mut s = VariantSession::new(&srt, Variant::Target).unwrap();
@@ -124,10 +111,7 @@ fn commit_gather_equals_chain_replay() {
 
 #[test]
 fn rollback_discards_speculation() {
-    let Some((_rt, srt)) = load() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let srt = load();
     let mut s = VariantSession::new(&srt, Variant::Target).unwrap();
     s.feed(&PROMPT).unwrap();
     let pos0 = s.pos();
@@ -149,10 +133,7 @@ fn rollback_discards_speculation() {
 
 #[test]
 fn draft_variants_run_and_differ_from_target() {
-    let Some((_rt, srt)) = load() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let srt = load();
     let mut logits: Vec<Vec<f32>> = Vec::new();
     for v in Variant::ALL {
         let mut s = VariantSession::new(&srt, v).unwrap();
@@ -170,10 +151,7 @@ fn draft_variants_run_and_differ_from_target() {
 
 #[test]
 fn counters_track_execution() {
-    let Some((_rt, srt)) = load() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let srt = load();
     srt.reset_counters();
     let mut s = VariantSession::new(&srt, Variant::Ls60).unwrap();
     s.feed(&PROMPT).unwrap();

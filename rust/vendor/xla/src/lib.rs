@@ -1,0 +1,153 @@
+//! Compile-time stub of the `xla` crate (PJRT C-API bindings).
+//!
+//! The offline build image has neither the crates.io registry nor an XLA
+//! toolchain, so this stub provides just enough API surface for
+//! `cas_spec`'s PJRT backend (`runtime/pjrt.rs`) to *type-check* behind
+//! the `pjrt` cargo feature. Every entry point fails at runtime with
+//! [`XlaError::Unavailable`], which the runtime's backend auto-selection
+//! treats as "PJRT not available" and falls back to the pure-Rust
+//! reference backend.
+//!
+//! To execute real AOT artifacts, replace the `xla` path dependency in
+//! `rust/Cargo.toml` with a checkout of the actual bindings; the API
+//! below mirrors their names 1:1 for the calls the repo makes.
+
+/// Error type: the stub only ever produces [`XlaError::Unavailable`].
+#[derive(Debug, Clone)]
+pub enum XlaError {
+    /// The stub is linked instead of real PJRT bindings.
+    Unavailable(&'static str),
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            XlaError::Unavailable(what) => {
+                write!(f, "xla stub: {what} requires real PJRT bindings")
+            }
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(XlaError::Unavailable(what))
+}
+
+/// Element types transferable to/from device buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// Handle to a PJRT device (stub: never instantiated).
+#[derive(Clone, Copy)]
+pub struct PjRtDevice {
+    _private: (),
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compile")
+    }
+}
+
+/// Device buffer handle (stub: never instantiated).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub: never instantiated).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execute_b")
+    }
+}
+
+/// Host-side literal value (stub: never instantiated).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+}
+
+/// Parsed HLO module proto (stub: parsing always fails).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("stub"));
+    }
+}

@@ -1,0 +1,105 @@
+import numpy as np
+from ref_backend_replica import *
+
+def chain_inputs(tokens, t_shape):
+    # mirrors DraftTree::chain().serialize()
+    n = len(tokens)
+    toks = [0]*t_shape; mask = [0.0]*(t_shape*t_shape); depths=[0]*t_shape
+    for i, tk in enumerate(tokens):
+        toks[i] = tk; depths[i] = i
+        for j in range(i+1): mask[i*t_shape+j] = 1.0
+    for i in range(n, t_shape): mask[i*t_shape+i] = 1.0
+    return toks, mask, depths
+
+sc = Scale("small", 6, 128, 4)
+be = Backend(sc, 'target')
+
+# (a) T=8 chain step vs 5x T=1 — bitwise
+toks = [1, 30, 40, 50, 60]
+kv_a = be.new_kv()
+t8, m8, d8 = chain_inputs(toks, 8)
+la = be.step(kv_a, 0, 8, 5, t8, m8, d8)
+kv_b = be.new_kv()
+for i, tk in enumerate(toks):
+    lb = be.step(kv_b, i, 1, 1, [tk], [1.0], [0])
+bit_logits = np.array_equal(la[4], lb[0])
+bit_kv = np.array_equal(kv_a, kv_b)
+print("T8-vs-T1 logits bitwise:", bit_logits, " kv bitwise:", bit_kv)
+assert bit_logits and bit_kv
+assert np.all(np.isfinite(la[:5])), "non-finite logits"
+assert np.all(la[5:] == 0)
+
+# greedy helpers
+def argmax(row): return int(np.argmax(row))  # ties: first index, same as Rust
+
+# (b) sequential greedy decode 8 tokens (AR reference)
+kv = be.new_kv()
+l = be.step(kv, 0, 8, len(toks), t8, m8, d8)  # prefill via chain
+pos = len(toks)
+cur = argmax(l[len(toks)-1])
+ar = [cur]
+for _ in range(8):
+    l = be.step(kv, pos, 1, 1, [cur], [1.0], [0]); pos += 1
+    cur = argmax(l[0]); ar.append(cur)
+print("AR continuation:", ar)
+assert len(set(ar)) > 1 or True
+
+# (c) spec round: verify chain [t1,t2,t3] (the AR tokens) in one T=8 step -> all accepted
+kv2 = be.new_kv()
+be.step(kv2, 0, 8, len(toks), t8, m8, d8)
+pos2 = len(toks)
+chain = ar[:4]  # root=ar[0], draft = ar[1..4]
+ct, cm, cd = chain_inputs(chain, 8)
+lv = be.step(kv2, pos2, 8, 4, ct, cm, cd)
+acc = []
+cur = 0
+ok = True
+for slot in range(3):
+    want = argmax(lv[slot])
+    if want == chain[slot+1]: acc.append(slot+1)
+    else: ok = False; break
+bonus = argmax(lv[len(acc)])
+print("verify accepts full chain:", ok, " bonus==ar[4]:", bonus == ar[4])
+assert ok and bonus == ar[4]
+# contiguous commit fast path: pos += 4 (root+3 accepted)
+pos2 += 4
+l = be.step(kv2, pos2, 1, 1, [bonus], [1.0], [0]); pos2 += 1
+nxt = argmax(l[0])
+print("post-verify next == ar[5]:", nxt == ar[5])
+assert nxt == ar[5]
+
+# (d) branching tree + gather commit vs chain replay
+kv3 = be.new_kv()
+be.step(kv3, 0, 8, len(toks), t8, m8, d8)
+pos3 = len(toks)
+root, t1, t2, t3 = ar[0], ar[1], ar[2], ar[3]
+# tree: slot0 root(d0); slot1 wrong(d1, parent0); slot2 t1(d1,parent0); slot3 t2(d2,parent2)
+T = 16
+tt = [0]*T; tm = [0.0]*(T*T); td = [0]*T
+nodes = [(root, None, 0), ((t1+1)%512, 0, 1), (t1, 0, 1), (t2, 2, 2)]
+for i,(tok,par,dep) in enumerate(nodes):
+    tt[i] = tok; td[i] = dep
+    j = i
+    while j is not None:
+        tm[i*T+j] = 1.0
+        j = nodes[j][1]
+for i in range(len(nodes), T): tm[i*T+i] = 1.0
+lv = be.step(kv3, pos3, 16, 4, tt, tm, td)
+assert argmax(lv[0]) == t1 and argmax(lv[2]) == t2 and argmax(lv[3]) == t3
+# gather commit accepted slots [0,2,3]
+src = [pos3 + s for s in [0,2,3]] + [pos3 + i for i in range(3, 16)]
+be.gather_commit(kv3, 16, src, pos3)
+pos3 += 3
+l = be.step(kv3, pos3, 1, 1, [t3], [1.0], [0])
+print("gather-commit then decode == ar[4]:", argmax(l[0]) == ar[4])
+assert argmax(l[0]) == ar[4]
+
+# (e) variants differ from target
+for v in ['ls40','ls60','ee']:
+    bv = Backend(sc, v)
+    kvv = bv.new_kv()
+    lvv = bv.step(kvv, 0, 8, len(toks), t8, m8, d8)
+    assert np.all(np.isfinite(lvv[:5]))
+    assert not np.array_equal(lvv[4], la[4]), v
+print("variants differ from target: ok")
+print("ALL REPLICA CHECKS PASSED")

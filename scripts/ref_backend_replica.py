@@ -1,0 +1,171 @@
+"""Faithful python replica of rust/src/runtime/reference.rs (row-wise f32 op
+order preserved) + model/weights.rs::synthesize, used to empirically validate
+the determinism/lossless claims the Rust code makes."""
+import numpy as np, math
+
+MASK = (1 << 64) - 1
+
+class SplitMix64:
+    def __init__(self, seed): self.state = seed & MASK
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+    def next_f64(self): return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+def fnv1a64(s):
+    h = 0xCBF29CE484222325
+    for b in s.encode():
+        h = ((h ^ b) * 0x100000001B3) & MASK
+    return h
+
+def rotl(x, n): return ((x << n) | (x >> (64 - n))) & MASK
+
+def keep_set(L, k):
+    if k >= L: return list(range(L))
+    if k == 1: return [L-1]
+    out = []
+    for i in range(k):
+        idx = round(i*(L-1)/(k-1))
+        if idx not in out: out.append(idx)
+    return out
+
+def variant_layers(L, ee, v):
+    if v == 'target': return list(range(L))
+    if v == 'ls40': return keep_set(L, math.ceil(0.6*L))
+    if v == 'ls60': return keep_set(L, math.ceil(0.4*L))
+    if v == 'ee': return list(range(ee))
+
+LAYER_P = ["ln1_g","ln1_b","wqkv","bqkv","wo","bo","ln2_g","ln2_b","wi","bi","wo2","bo2"]
+
+def param_shape(d, s, V, name):
+    dh2 = 4*d
+    if name == "emb": return (V, d)
+    if name == "pos": return (s, d)
+    if name in ("lnf_g","lnf_b","ee.ln_g","ee.ln_b","ee.b"): return (d,)
+    if name == "ee.w": return (d, d)
+    base = name.split('.',1)[1] if '.' in name else name
+    return {"ln1_g":(d,),"ln1_b":(d,),"wqkv":(d,3*d),"bqkv":(3*d,),"wo":(d,d),"bo":(d,),
+            "ln2_g":(d,),"ln2_b":(d,),"wi":(d,dh2),"bi":(dh2,),"wo2":(dh2,d),"bo2":(d,)}[base]
+
+def all_param_names(L):
+    names = ["emb","pos"]
+    for li in range(L): names += [f"l{li}.{p}" for p in LAYER_P]
+    return names + ["ee.ln_g","ee.ln_b","ee.w","ee.b","lnf_g","lnf_b"]
+
+def seeded_tensor(scale, L, name, shape):
+    n = int(np.prod(shape))
+    last = name.rsplit('.',1)[-1]
+    if name.endswith("_g"): return np.ones(n, np.float32).reshape(shape)
+    if name.endswith("_b") or last in ("bqkv","bi","bo","bo2","b"):
+        return np.zeros(n, np.float32).reshape(shape)
+    std = 0.02
+    if last in ("wo","wo2") or name == "ee.w": std /= math.sqrt(2.0*L)
+    rng = SplitMix64(0xCA559EED ^ fnv1a64(scale) ^ rotl(fnv1a64(name), 17))
+    out = []
+    while len(out) < n:
+        u1 = 1.0 - rng.next_f64(); u2 = rng.next_f64()
+        r = math.sqrt(-2.0*math.log(u1)); th = 2.0*math.pi*u2
+        out.append(np.float32(std*r*math.cos(th)))
+        if len(out) < n: out.append(np.float32(std*r*math.sin(th)))
+    return np.array(out, np.float32).reshape(shape)
+
+class Scale:
+    def __init__(self, name, L, d, H):
+        self.name, self.L, self.d, self.H = name, L, d, H
+        self.dh = d // H; self.s_max = 384; self.V = 512
+        self.ee_layer = max(2, round(L/3))
+        self.W = {n: seeded_tensor(name, L, n, param_shape(d, self.s_max, self.V, n))
+                  for n in all_param_names(L)}
+
+f32 = np.float32
+
+def ln_row(x, g, b):
+    mean = f32(np.sum(x, dtype=np.float32) / f32(len(x)))
+    c = (x - mean).astype(np.float32)
+    var = f32(np.sum(c*c, dtype=np.float32) / f32(len(x)))
+    inv = f32(1.0) / f32(np.sqrt(var + f32(1e-5)))
+    return ((x - mean) * inv * g + b).astype(np.float32)
+
+def rowmat(x, w):  # x (din,), w (din,dout): sequential axpy like Rust
+    out = np.zeros(w.shape[1], np.float32)
+    for i in range(len(x)):
+        out += x[i] * w[i]
+    return out
+
+def gelu(x):
+    C = f32(0.7978846)
+    return (f32(0.5)*x*(f32(1.0)+np.tanh(C*(x + f32(0.044715)*x*x*x)))).astype(np.float32)
+
+class Backend:
+    def __init__(self, sc: Scale, variant):
+        self.sc = sc
+        self.layers = variant_layers(sc.L, sc.ee_layer, variant)
+        self.variant = variant
+    def new_kv(self):
+        sc = self.sc
+        return np.zeros((len(self.layers), 2, sc.H, sc.s_max, sc.dh), np.float32)
+    def step(self, kv, pos, t_shape, live, tokens, mask, depths):
+        sc, W = self.sc, self.sc.W
+        d, H, dh, S, V = sc.d, sc.H, sc.dh, sc.s_max, sc.V
+        t = live
+        scale = f32(1.0)/f32(np.sqrt(f32(dh)))
+        h = np.zeros((t, d), np.float32)
+        for i in range(t):
+            pid = min(max(pos + depths[i], 0), S-1)
+            h[i] = W["emb"][tokens[i]] + W["pos"][pid]
+        for vi, li in enumerate(self.layers):
+            P = {p: W[f"l{li}.{p}"] for p in LAYER_P}
+            hn = np.stack([ln_row(h[i], P["ln1_g"], P["ln1_b"]) for i in range(t)])
+            qkv = np.stack([rowmat(hn[i], P["wqkv"]) + P["bqkv"] for i in range(t)]).astype(np.float32)
+            attn = np.zeros((t, d), np.float32)
+            for i in range(t):
+                for hh in range(H):
+                    q = qkv[i, hh*dh:(hh+1)*dh]
+                    scores = []
+                    vals = []
+                    for sp in range(pos):
+                        kr = kv[vi, 0, hh, sp]
+                        scores.append(f32(np.dot(q, kr)) * scale)
+                        vals.append(kv[vi, 1, hh, sp])
+                    for j in range(t):
+                        if mask[i*t_shape + j] > 0.5:
+                            kr = qkv[j, d + hh*dh : d + (hh+1)*dh]
+                            scores.append(f32(np.dot(q, kr)) * scale)
+                            vals.append(qkv[j, 2*d + hh*dh : 2*d + (hh+1)*dh])
+                    scores = np.array(scores, np.float32)
+                    mx = np.max(scores)
+                    e = np.exp(scores - mx, dtype=np.float32)
+                    denom = f32(0.0)
+                    for x in e: denom = f32(denom + x)
+                    inv = f32(1.0)/denom
+                    out = np.zeros(dh, np.float32)
+                    for w_, vr in zip(e, vals):
+                        out += (w_*inv) * vr
+                    attn[i, hh*dh:(hh+1)*dh] = out
+            for i in range(t):
+                proj = rowmat(attn[i], P["wo"])
+                h[i] = ((h[i] + proj) + P["bo"]).astype(np.float32)
+            hn = np.stack([ln_row(h[i], P["ln2_g"], P["ln2_b"]) for i in range(t)])
+            for i in range(t):
+                m = gelu((rowmat(hn[i], P["wi"]) + P["bi"]).astype(np.float32))
+                proj = rowmat(m, P["wo2"])
+                h[i] = ((h[i] + proj) + P["bo2"]).astype(np.float32)
+            for i in range(t):
+                for hh in range(H):
+                    kv[vi, 0, hh, pos+i] = qkv[i, d + hh*dh : d + (hh+1)*dh]
+                    kv[vi, 1, hh, pos+i] = qkv[i, 2*d + hh*dh : 2*d + (hh+1)*dh]
+        if self.variant == 'ee':
+            hn = np.stack([ln_row(h[i], W["ee.ln_g"], W["ee.ln_b"]) for i in range(t)])
+            for i in range(t):
+                h[i] = ((h[i] + rowmat(hn[i], W["ee.w"])) + W["ee.b"]).astype(np.float32)
+        logits = np.zeros((t_shape, V), np.float32)
+        for i in range(t):
+            hf = ln_row(h[i], W["lnf_g"], W["lnf_b"])
+            logits[i] = rowmat(hf, W["emb"].T.copy())
+        return logits
+    def gather_commit(self, kv, t_shape, src_abs, dst):
+        g = kv[:, :, :, src_abs, :].copy()
+        kv[:, :, :, dst:dst+t_shape, :] = g
