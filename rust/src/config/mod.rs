@@ -31,6 +31,9 @@ pub struct RunConfig {
     pub seed: u64,
     /// Serving address.
     pub addr: String,
+    /// Max concurrent requests in the server's running decode batch
+    /// (continuous batching; 1 = sequential serving).
+    pub max_batch: usize,
     pub opts: EngineOpts,
 }
 
@@ -45,6 +48,7 @@ impl Default for RunConfig {
             max_new: 64,
             seed: 42,
             addr: "127.0.0.1:7599".into(),
+            max_batch: 8,
             opts: EngineOpts::default(),
         }
     }
@@ -64,6 +68,7 @@ impl RunConfig {
                 "max_new" => self.max_new = v.as_usize().ok_or_else(bad(k))?,
                 "seed" => self.seed = v.as_u64().ok_or_else(bad(k))?,
                 "addr" => self.addr = v.as_str().ok_or_else(bad(k))?.into(),
+                "max_batch" => self.max_batch = v.as_usize().ok_or_else(bad(k))?,
                 "draft_k" => self.opts.draft_k = v.as_usize().ok_or_else(bad(k))?,
                 "conf_stop" => self.opts.conf_stop = v.as_f64().ok_or_else(bad(k))?,
                 "dytc" => apply_dytc(&mut self.opts.dytc, v)?,
@@ -96,6 +101,7 @@ impl RunConfig {
         if let Some(addr) = a.str_opt("addr") {
             self.addr = addr.into();
         }
+        self.max_batch = a.usize_or("max-batch", self.max_batch)?;
         self.opts.draft_k = a.usize_or("draft-k", self.opts.draft_k)?;
         self.opts.conf_stop = a.f64_or("conf-stop", self.opts.conf_stop)?;
         self.opts.dytc.k_max = a.usize_or("k-max", self.opts.dytc.k_max)?;
@@ -169,6 +175,16 @@ mod tests {
         assert_eq!(cfg.engines, vec!["ar", "pld"]);
         assert_eq!(cfg.n_per_category, 3); // default preserved
         assert_eq!(cfg.backend, "auto");
+        assert_eq!(cfg.max_batch, 8); // default preserved
+    }
+
+    #[test]
+    fn max_batch_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--max-batch 3")).unwrap();
+        assert_eq!(cfg.max_batch, 3);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"max_batch":16}"#).unwrap()).unwrap();
+        assert_eq!(cfg.max_batch, 16);
     }
 
     #[test]

@@ -7,47 +7,63 @@ use anyhow::Result;
 use crate::model::Variant;
 use crate::runtime::{argmax, ScaleRuntime};
 use crate::spec::VariantSession;
-use crate::tokenizer::EOS;
 
-use super::{Engine, GenStats, Generation};
+use super::common::{GenState, RoundStep};
+use super::{Engine, RequestRun};
 
+/// The autoregressive baseline engine.
 pub struct ArEngine<'rt> {
     rt: &'rt ScaleRuntime,
-    name: String,
 }
 
 impl<'rt> ArEngine<'rt> {
+    /// Build the baseline engine over a loaded scale.
     pub fn new(rt: &'rt ScaleRuntime) -> Result<Self> {
-        Ok(ArEngine { rt, name: "ar".into() })
+        Ok(ArEngine { rt })
+    }
+}
+
+/// Per-request AR state: the target session plus generation bookkeeping.
+/// Each "round" decodes exactly one token.
+pub struct ArRun<'rt> {
+    target: VariantSession<'rt>,
+    st: GenState,
+}
+
+impl RoundStep for ArRun<'_> {
+    fn state(&self) -> &GenState {
+        &self.st
+    }
+
+    fn state_mut(&mut self) -> &mut GenState {
+        &mut self.st
+    }
+
+    fn capacity_ok(&self) -> bool {
+        self.target.capacity_left() > 1
+    }
+
+    fn round_impl(&mut self) -> Result<()> {
+        let logits = self.target.decode_one(self.st.root)?;
+        let next = argmax(logits);
+        self.st.stats.target_calls += 1;
+        self.st.emit(&[next]);
+        Ok(())
     }
 }
 
 impl Engine for ArEngine<'_> {
     fn name(&self) -> &str {
-        &self.name
+        "ar"
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
+    fn begin<'e>(
+        &'e self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let mut stats = GenStats::default();
-
-        let t0 = std::time::Instant::now();
-        target.feed(prompt)?;
-        stats.prefill = t0.elapsed();
-
-        let t0 = std::time::Instant::now();
-        let mut out = Vec::with_capacity(max_new);
-        let mut next = argmax(target.last_logits().unwrap());
-        out.push(next);
-        while out.len() < max_new && next != EOS && target.capacity_left() > 1 {
-            let logits = target.decode_one(next)?;
-            stats.target_calls += 1;
-            next = argmax(logits);
-            out.push(next);
-            stats.rounds += 1;
-            stats.tokens_per_round.push(1);
-        }
-        stats.wall = t0.elapsed();
-        Ok(Generation { tokens: out, stats })
+        let st = GenState::start(&mut target, prompt, max_new)?;
+        Ok(Box::new(ArRun { target, st }))
     }
 }

@@ -15,11 +15,13 @@ use anyhow::Result;
 
 use crate::model::Variant;
 use crate::pld::PldMatcher;
-use crate::runtime::ScaleRuntime;
+use crate::runtime::{ScaleRuntime, VERIFY_T};
 use crate::spec::VariantSession;
 
-use super::common::{draft_chain, draft_chain_vc, verify_chain_round, BranchCache, GenState};
-use super::{Engine, EngineOpts, Generation};
+use super::common::{
+    draft_chain, draft_chain_vc, verify_chain_round, BranchCache, GenState, RoundStep,
+};
+use super::{Engine, EngineOpts, RequestRun};
 
 #[derive(Clone, Copy, PartialEq)]
 enum Mode {
@@ -28,6 +30,7 @@ enum Mode {
     VcHc,
 }
 
+/// Static-cascade engine (`vc` / `hc` / `vchc`).
 pub struct CascadeEngine<'rt> {
     rt: &'rt ScaleRuntime,
     mode: Mode,
@@ -41,16 +44,146 @@ pub struct CascadeEngine<'rt> {
 }
 
 impl<'rt> CascadeEngine<'rt> {
+    /// Vertical cascade (`vc`).
     pub fn new_vc(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
         Ok(Self { rt, mode: Mode::Vc, k_model: 12, k_pld: 0, inner_k: 7, name: "vc" })
     }
 
+    /// Horizontal cascade (`hc`).
     pub fn new_hc(rt: &'rt ScaleRuntime, opts: &EngineOpts) -> Result<Self> {
-        Ok(Self { rt, mode: Mode::Hc, k_model: opts.draft_k.min(5), k_pld: 8, inner_k: 7, name: "hc" })
+        Ok(Self {
+            rt,
+            mode: Mode::Hc,
+            k_model: opts.draft_k.min(5),
+            k_pld: 8,
+            inner_k: 7,
+            name: "hc",
+        })
     }
 
+    /// Vertical + horizontal cascade (`vchc`, full CS-Drafting).
     pub fn new_vchc(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
         Ok(Self { rt, mode: Mode::VcHc, k_model: 6, k_pld: 7, inner_k: 7, name: "vchc" })
+    }
+}
+
+/// Per-request state: target + ls40 draft sessions, PLD corpus, and the
+/// draft's branch-aware cache tracker.
+pub struct CascadeRun<'rt> {
+    target: VariantSession<'rt>,
+    draft: VariantSession<'rt>,
+    matcher: PldMatcher,
+    bc: BranchCache,
+    mode: Mode,
+    k_model: usize,
+    k_pld: usize,
+    inner_k: usize,
+    st: GenState,
+}
+
+impl RoundStep for CascadeRun<'_> {
+    fn state(&self) -> &GenState {
+        &self.st
+    }
+
+    fn state_mut(&mut self) -> &mut GenState {
+        &mut self.st
+    }
+
+    fn capacity_ok(&self) -> bool {
+        // max_chain + 2 = VERIFY_T + 1 head-room on the draft side
+        self.target.capacity_left() > VERIFY_T
+            && self.draft.capacity_left() >= VERIFY_T + 1
+    }
+
+    fn round_impl(&mut self) -> Result<()> {
+        let st = &mut self.st;
+        let max_chain = VERIFY_T - 1;
+        let budget = max_chain.min(st.max_new.saturating_sub(st.out.len()));
+        if budget == 0 {
+            return Ok(()); // no progress: the driver ends the run
+        }
+        let root = st.root;
+        let committed_len = self.matcher.len();
+        self.matcher.extend(&[root]); // root commits this round regardless
+        let committed: Vec<u32> = st.committed_except_root().to_vec();
+        self.bc.ensure(&mut self.draft, &committed, &[], &mut st.stats)?;
+
+        // ---- build the draft chain (speculative; matcher rolls back) ----
+        let mut chain: Vec<u32>;
+        match self.mode {
+            Mode::Vc => {
+                let (toks, _p, entered) = draft_chain_vc(
+                    &mut self.draft,
+                    &mut self.matcher,
+                    root,
+                    self.k_model.min(budget),
+                    self.inner_k,
+                    &mut st.stats,
+                )?;
+                self.bc.advanced(&entered);
+                chain = toks;
+            }
+            Mode::Hc => {
+                let cd = draft_chain(
+                    &mut self.draft,
+                    root,
+                    self.k_model.min(budget),
+                    None,
+                    &mut st.stats,
+                )?;
+                self.bc.advanced(&[root]);
+                if cd.tokens.len() > 1 {
+                    self.bc.advanced(&cd.tokens[..cd.tokens.len() - 1]);
+                }
+                chain = cd.tokens;
+                self.matcher.extend(&chain);
+                if chain.len() < budget && chain.last() != Some(&crate::tokenizer::EOS) {
+                    if let Some(p) =
+                        self.matcher.propose(self.k_pld.min(budget - chain.len()))
+                    {
+                        chain.extend_from_slice(&p.tokens);
+                    }
+                    st.stats.pld_proposals += 1;
+                }
+            }
+            Mode::VcHc => {
+                let (head, _p, entered) = draft_chain_vc(
+                    &mut self.draft,
+                    &mut self.matcher,
+                    root,
+                    self.k_model.min(budget),
+                    self.inner_k,
+                    &mut st.stats,
+                )?;
+                self.bc.advanced(&entered);
+                chain = head;
+                if chain.len() < budget && chain.last() != Some(&crate::tokenizer::EOS) {
+                    if let Some(p) =
+                        self.matcher.propose(self.k_pld.min(budget - chain.len()))
+                    {
+                        chain.extend_from_slice(&p.tokens);
+                    }
+                    st.stats.pld_proposals += 1;
+                }
+            }
+        }
+        chain.truncate(budget);
+
+        // ---- target verification ----
+        let (accepted, bonus) =
+            verify_chain_round(&mut self.target, root, &chain, &mut st.stats)?;
+
+        // ---- roll speculative state back to committed truth ----
+        // (draft cache syncs lazily on the next round's ensure)
+        self.matcher.truncate(committed_len);
+        self.matcher.extend(&[root]);
+        self.matcher.extend(&accepted);
+
+        let mut emitted = accepted;
+        emitted.push(bonus);
+        st.emit(&emitted);
+        Ok(())
     }
 }
 
@@ -59,92 +192,30 @@ impl Engine for CascadeEngine<'_> {
         self.name
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
+    fn begin<'e>(
+        &'e self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
         let mut draft = VariantSession::new(self.rt, Variant::Ls40)?;
 
         let mut st = GenState::start(&mut target, prompt, max_new)?;
-        let t0 = std::time::Instant::now();
-
-        let mut matcher = PldMatcher::new(prompt);
+        let matcher = PldMatcher::new(prompt);
         draft.feed(prompt)?;
         st.stats.draft_calls += 1;
-        let mut bc = BranchCache::new(draft.pos());
+        let bc = BranchCache::new(draft.pos());
 
-        while !st.done && target.capacity_left() > crate::runtime::VERIFY_T {
-            let max_chain = crate::runtime::VERIFY_T - 1;
-            let budget = max_chain.min(st.max_new.saturating_sub(st.out.len()));
-            if budget == 0 || draft.capacity_left() < max_chain + 2 {
-                break;
-            }
-            let root = st.root;
-            let committed_len = matcher.len();
-            matcher.extend(&[root]); // root commits this round regardless
-            let committed: Vec<u32> = st.committed_except_root().to_vec();
-            bc.ensure(&mut draft, &committed, &[], &mut st.stats)?;
-
-            // ---- build the draft chain (speculative; matcher rolls back) --
-            #[allow(unused_assignments)]
-            let mut chain: Vec<u32> = Vec::new();
-            match self.mode {
-                Mode::Vc => {
-                    let (toks, _p, entered) = draft_chain_vc(
-                        &mut draft, &mut matcher, root, self.k_model.min(budget),
-                        self.inner_k, &mut st.stats,
-                    )?;
-                    bc.advanced(&entered);
-                    chain = toks;
-                }
-                Mode::Hc => {
-                    let cd = draft_chain(
-                        &mut draft, root, self.k_model.min(budget), None, &mut st.stats,
-                    )?;
-                    bc.advanced(&[root]);
-                    if cd.tokens.len() > 1 {
-                        bc.advanced(&cd.tokens[..cd.tokens.len() - 1]);
-                    }
-                    chain = cd.tokens;
-                    matcher.extend(&chain);
-                    if chain.len() < budget && chain.last() != Some(&crate::tokenizer::EOS) {
-                        if let Some(p) = matcher.propose(self.k_pld.min(budget - chain.len())) {
-                            chain.extend_from_slice(&p.tokens);
-                        }
-                        st.stats.pld_proposals += 1;
-                    }
-                }
-                Mode::VcHc => {
-                    let (head, _p, entered) = draft_chain_vc(
-                        &mut draft, &mut matcher, root, self.k_model.min(budget),
-                        self.inner_k, &mut st.stats,
-                    )?;
-                    bc.advanced(&entered);
-                    chain = head;
-                    if chain.len() < budget && chain.last() != Some(&crate::tokenizer::EOS) {
-                        if let Some(p) = matcher.propose(self.k_pld.min(budget - chain.len())) {
-                            chain.extend_from_slice(&p.tokens);
-                        }
-                        st.stats.pld_proposals += 1;
-                    }
-                }
-            }
-            chain.truncate(budget);
-
-            // ---- target verification ----
-            let (accepted, bonus) =
-                verify_chain_round(&mut target, root, &chain, &mut st.stats)?;
-
-            // ---- roll speculative state back to committed truth ----
-            // (draft cache syncs lazily on the next round's ensure)
-            matcher.truncate(committed_len);
-            matcher.extend(&[root]);
-            matcher.extend(&accepted);
-
-            let mut emitted = accepted;
-            emitted.push(bonus);
-            st.emit(&emitted);
-        }
-
-        st.stats.wall = t0.elapsed();
-        Ok(Generation { tokens: st.out, stats: st.stats })
+        Ok(Box::new(CascadeRun {
+            target,
+            draft,
+            matcher,
+            bc,
+            mode: self.mode,
+            k_model: self.k_model,
+            k_pld: self.k_pld,
+            inner_k: self.inner_k,
+            st,
+        }))
     }
 }

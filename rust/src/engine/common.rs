@@ -10,14 +10,38 @@ use crate::tokenizer::EOS;
 
 use super::GenStats;
 
+/// The per-engine half of a resumable generation.
+///
+/// Each engine defines a run struct holding its sessions and bookkeeping
+/// plus a [`GenState`], and implements one speculation round here. The
+/// blanket [`super::RequestRun`] impl in `engine` supplies the uniform
+/// driving logic: done/capacity gating, no-progress termination,
+/// wall-clock accounting, and emitted-token deltas per round.
+pub trait RoundStep {
+    /// Shared generation bookkeeping (output, root, EOS/budget state).
+    fn state(&self) -> &GenState;
+    /// Mutable access to the shared bookkeeping.
+    fn state_mut(&mut self) -> &mut GenState;
+    /// Whether the run's KV caches have head-room for one more round.
+    fn capacity_ok(&self) -> bool;
+    /// Execute one speculation round (never called when the run is done
+    /// or out of capacity). Emits tokens via [`GenState::emit`].
+    fn round_impl(&mut self) -> Result<()>;
+}
+
 /// Output accumulator shared by all engines. Tracks the emitted tokens,
 /// the current root (= newest emitted token whose KV is not yet in the
 /// target cache), and EOS/budget termination.
 pub struct GenState {
+    /// Emitted tokens so far (prompt excluded).
     pub out: Vec<u32>,
+    /// Newest emitted token; its KV is not yet in the target cache.
     pub root: u32,
+    /// Set when EOS was emitted or the token budget is exhausted.
     pub done: bool,
+    /// Token budget for this request.
     pub max_new: usize,
+    /// Accumulated statistics.
     pub stats: GenStats,
 }
 
@@ -100,22 +124,24 @@ pub fn chain_step_shape(n: usize) -> usize {
     panic!("chain of {n} exceeds largest step shape");
 }
 
+/// Result of [`draft_chain`]: the drafted tokens, their draft
+/// confidences, and the runner-up token at the *first* position (the
+/// TOP-2 sibling candidate for tree engines) with its confidence.
+pub struct ChainDraft {
+    /// Greedily drafted tokens, in order.
+    pub tokens: Vec<u32>,
+    /// Softmax probability the draft assigned each drafted token.
+    pub probs: Vec<f64>,
+    /// Second-best first token and its probability, when one exists.
+    pub sibling: Option<(u32, f64)>,
+}
+
 /// Draft a greedy chain of up to `k` tokens with a DSIA model draft.
 ///
 /// The draft session must hold exactly the committed context; the caller
 /// restores it afterwards (rollback + catch-up). Optionally stops early
 /// when the draft's confidence drops below `conf_stop` (Kangaroo's
 /// early-exit drafting policy).
-///
-/// Returns the drafted tokens, their draft confidences, and the runner-up
-/// token at the *first* position (the TOP-2 sibling candidate for tree
-/// engines) with its confidence.
-pub struct ChainDraft {
-    pub tokens: Vec<u32>,
-    pub probs: Vec<f64>,
-    pub sibling: Option<(u32, f64)>,
-}
-
 pub fn draft_chain(
     draft: &mut VariantSession,
     root: u32,

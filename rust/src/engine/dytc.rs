@@ -17,7 +17,13 @@
 //!
 //! Estimator and latency state persists across requests (the "online"
 //! aspect of the paper: the scheduler keeps adapting over the workload).
+//! The engine holds it in a `RefCell` shared by every run it begins, so
+//! sequential `generate` calls *and* concurrently batched runs all read
+//! and update the same estimators — adaptation spans the served workload,
+//! not one request. Greedy losslessness is unaffected: scheduler state
+//! only decides what gets drafted, verification stays exact.
 
+use std::cell::RefCell;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -32,8 +38,10 @@ use crate::runtime::{ScaleRuntime, VERIFY_T};
 use crate::spec::{verify_greedy, DraftTree, VariantSession};
 use crate::tokenizer::EOS;
 
-use super::common::{chain_step_shape, draft_chain, draft_chain_vc, BranchCache, GenState};
-use super::{Engine, EngineOpts, Generation};
+use super::common::{
+    chain_step_shape, draft_chain, draft_chain_vc, BranchCache, GenState, RoundStep,
+};
+use super::{Engine, EngineOpts, RequestRun};
 
 /// Latency-model family ids.
 const FAM_TARGET: usize = 0;
@@ -47,8 +55,10 @@ struct ConfigState {
     runs: u64,
 }
 
-pub struct DytcEngine<'rt> {
-    rt: &'rt ScaleRuntime,
+/// The adaptive scheduler state (estimators + latency model). Lives in a
+/// `RefCell` on the engine, shared by reference with every [`DytcRun`]
+/// (the serving worker is single-threaded; borrows last one round).
+struct Sched {
     params: DytcParams,
     configs: Vec<ConfigState>,
     /// Index of the PLD config within `configs` (the bottom model M_dn).
@@ -56,38 +66,10 @@ pub struct DytcEngine<'rt> {
     latency: LatencyModel,
     /// EMA of the target's verify-step seconds (ĉ reference).
     target_step_secs: f64,
-    name: &'static str,
-    with_ee: bool,
     inner_k: usize,
 }
 
-impl<'rt> DytcEngine<'rt> {
-    pub fn new(rt: &'rt ScaleRuntime, with_ee: bool, opts: &EngineOpts) -> Result<Self> {
-        let mut configs = vec![
-            cs(DraftConfig::model(Variant::Ls40, false, 0.80), 0.60),
-            cs(DraftConfig::model(Variant::Ls40, true, 0.80), 0.50),
-            cs(DraftConfig::model(Variant::Ls60, false, 0.65), 0.45),
-            cs(DraftConfig::model(Variant::Ls60, true, 0.65), 0.38),
-        ];
-        if with_ee {
-            configs.push(cs(DraftConfig::model(Variant::Ee, false, 0.70), 0.35));
-            configs.push(cs(DraftConfig::model(Variant::Ee, true, 0.70), 0.30));
-        }
-        configs.push(cs(DraftConfig::pld(), 0.01));
-        let pld_idx = configs.len() - 1;
-        Ok(DytcEngine {
-            rt,
-            params: opts.dytc.clone(),
-            configs,
-            pld_idx,
-            latency: LatencyModel::new(8),
-            target_step_secs: 0.0,
-            name: if with_ee { "cas-spec+" } else { "cas-spec" },
-            with_ee,
-            inner_k: 7,
-        })
-    }
-
+impl Sched {
     fn alphas(&self) -> Vec<f64> {
         self.configs.iter().map(|c| c.est.alpha()).collect()
     }
@@ -119,6 +101,46 @@ impl<'rt> DytcEngine<'rt> {
     }
 }
 
+/// The CAS-Spec engine (`cas-spec` / `cas-spec+`).
+pub struct DytcEngine<'rt> {
+    rt: &'rt ScaleRuntime,
+    sched: RefCell<Sched>,
+    name: &'static str,
+    with_ee: bool,
+}
+
+impl<'rt> DytcEngine<'rt> {
+    /// Build the DyTC engine; `with_ee` adds the Kangaroo early-exit draft
+    /// to the configuration space (`cas-spec+`).
+    pub fn new(rt: &'rt ScaleRuntime, with_ee: bool, opts: &EngineOpts) -> Result<Self> {
+        let mut configs = vec![
+            cs(DraftConfig::model(Variant::Ls40, false, 0.80), 0.60),
+            cs(DraftConfig::model(Variant::Ls40, true, 0.80), 0.50),
+            cs(DraftConfig::model(Variant::Ls60, false, 0.65), 0.45),
+            cs(DraftConfig::model(Variant::Ls60, true, 0.65), 0.38),
+        ];
+        if with_ee {
+            configs.push(cs(DraftConfig::model(Variant::Ee, false, 0.70), 0.35));
+            configs.push(cs(DraftConfig::model(Variant::Ee, true, 0.70), 0.30));
+        }
+        configs.push(cs(DraftConfig::pld(), 0.01));
+        let pld_idx = configs.len() - 1;
+        Ok(DytcEngine {
+            rt,
+            sched: RefCell::new(Sched {
+                params: opts.dytc.clone(),
+                configs,
+                pld_idx,
+                latency: LatencyModel::new(8),
+                target_step_secs: 0.0,
+                inner_k: 7,
+            }),
+            name: if with_ee { "cas-spec+" } else { "cas-spec" },
+            with_ee,
+        })
+    }
+}
+
 /// Config-state constructor; `cost_prior` is the ĉ prior used until the
 /// first measurement replaces it (Appendix D cold start).
 fn cs(cfg: DraftConfig, cost_prior: f64) -> ConfigState {
@@ -137,255 +159,317 @@ struct Expansion {
     first_slot: usize,
 }
 
+/// Per-request DyTC state: one session per loaded DSIA variant, the PLD
+/// corpus, branch-aware draft cache trackers, and a shared reference to
+/// the engine's scheduler state — every round both consults and updates
+/// the engine-wide estimators, so adaptation spans the whole workload.
+pub struct DytcRun<'rt> {
+    target: VariantSession<'rt>,
+    ls40: VariantSession<'rt>,
+    ls60: VariantSession<'rt>,
+    ee: Option<VariantSession<'rt>>,
+    prompt: Vec<u32>,
+    matcher: PldMatcher,
+    caches: Vec<BranchCache>,
+    sched: &'rt RefCell<Sched>,
+    st: GenState,
+}
+
+impl<'rt> DytcRun<'rt> {
+    fn new(
+        rt: &'rt ScaleRuntime,
+        sched: &'rt RefCell<Sched>,
+        with_ee: bool,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Self> {
+        let mut target = VariantSession::new(rt, Variant::Target)?;
+        let ls40 = VariantSession::new(rt, Variant::Ls40)?;
+        let ls60 = VariantSession::new(rt, Variant::Ls60)?;
+        let ee = if with_ee {
+            Some(VariantSession::new(rt, Variant::Ee)?)
+        } else {
+            None
+        };
+
+        let st = GenState::start(&mut target, prompt, max_new)?;
+        let matcher = PldMatcher::new(prompt);
+        // Draft sessions are prefilled lazily on first use: a request whose
+        // scheduling never touches a DSIA variant (pure PLD rounds) pays
+        // nothing for it. BranchCache spans the full sequence incl. prompt.
+        let caches: Vec<BranchCache> = (0..3).map(|_| BranchCache::new(0)).collect();
+
+        Ok(DytcRun {
+            target,
+            ls40,
+            ls60,
+            ee,
+            prompt: prompt.to_vec(),
+            matcher,
+            caches,
+            sched,
+            st,
+        })
+    }
+}
+
+impl RoundStep for DytcRun<'_> {
+    fn state(&self) -> &GenState {
+        &self.st
+    }
+
+    fn state_mut(&mut self) -> &mut GenState {
+        &mut self.st
+    }
+
+    fn capacity_ok(&self) -> bool {
+        self.target.capacity_left() > VERIFY_T
+    }
+
+    fn round_impl(&mut self) -> Result<()> {
+        let st = &mut self.st;
+        // engine-wide scheduler state: held for this round only (the
+        // worker is single-threaded, runs advance strictly in turn)
+        let mut sched_guard = self.sched.borrow_mut();
+        let sched = &mut *sched_guard;
+        let matcher = &mut self.matcher;
+        let caches = &mut self.caches;
+
+        let root = st.root;
+        let committed_len = matcher.len();
+        matcher.extend(&[root]);
+        let mut committed: Vec<u32> = Vec::with_capacity(self.prompt.len() + st.out.len());
+        committed.extend_from_slice(&self.prompt);
+        committed.extend_from_slice(st.committed_except_root());
+
+        // ---------------- Alg. 1: grow the draft tree ----------------
+        let mut tree = DraftTree::new(root, sched.params.m_tree_max.min(VERIFY_T));
+        let mut expansions: Vec<Expansion> = Vec::new();
+
+        let alpha_dn = sched.configs[sched.pld_idx].est.alpha();
+        let c_dn = sched.costs()[sched.pld_idx].max(1e-3);
+
+        loop {
+            if tree.is_full() {
+                break;
+            }
+            let leaf = match tree.best_active_leaf() {
+                Some(l) => l,
+                None => break,
+            };
+            let p_acc = tree.nodes[leaf].p_acc;
+            if should_stop(p_acc, alpha_dn, c_dn, sched.params.t_min) {
+                break;
+            }
+            // Alg. 2 — re-run the selection excluding configurations
+            // that turn out to have nothing to offer at this leaf
+            // (e.g. PLD with no n-gram hit): the dynamic fallback that
+            // static cascades lack.
+            let alphas_all = sched.alphas();
+            let costs_all = sched.costs();
+            let mut excluded = vec![false; alphas_all.len()];
+            let leaf_token = tree.nodes[leaf].token;
+            let path = tree.path_tokens(leaf); // excludes root
+            let t_draft = Instant::now();
+            // (config, tokens, probs, optional sibling (token, prob))
+            let mut picked: Option<(usize, Vec<u32>, Vec<f64>, Option<(u32, f64)>)> = None;
+            loop {
+                let mut alphas = alphas_all.clone();
+                for (a, ex) in alphas.iter_mut().zip(&excluded) {
+                    if *ex {
+                        *a = 0.0; // an excluded config can win nothing
+                    }
+                }
+                let (ci, mut k) = match find_best_config(
+                    &alphas, &costs_all, alpha_dn, c_dn, sched.params.k_max,
+                ) {
+                    Some(x) => x,
+                    None => break,
+                };
+                if excluded[ci] {
+                    break; // nothing left worth trying
+                }
+                k = k.min(tree.remaining());
+                if k == 0 {
+                    break;
+                }
+                // Eq. 5 gate: expand only while the predicted local
+                // speedup of this step, discounted by the leaf's
+                // accumulated acceptance, clears the t_min threshold.
+                let t_val = step_objective(alphas[ci], costs_all[ci], k, alpha_dn, c_dn);
+                if t_val * p_acc < sched.params.t_min && tree.len() > 1 {
+                    break;
+                }
+                match sched.configs[ci].cfg.source {
+                    DraftSource::Pld => {
+                        // matcher := committed ++ root ++ path
+                        matcher.truncate(committed_len + 1);
+                        matcher.extend(&path);
+                        st.stats.pld_proposals += 1;
+                        match matcher.propose(k) {
+                            Some(p) => {
+                                let conf = (alpha_dn + 0.05 * (p.match_len as f64 - 1.0))
+                                    .clamp(0.05, 0.95);
+                                let n = p.tokens.len();
+                                picked = Some((ci, p.tokens, vec![conf; n], None));
+                                break;
+                            }
+                            None => {
+                                excluded[ci] = true;
+                                continue;
+                            }
+                        }
+                    }
+                    DraftSource::Model(variant) => {
+                        let (si, sess) = match variant {
+                            Variant::Ls40 => (0usize, &mut self.ls40),
+                            Variant::Ls60 => (1usize, &mut self.ls60),
+                            Variant::Ee => (2usize, self.ee.as_mut().expect("ee loaded")),
+                            Variant::Target => unreachable!("target is never a draft"),
+                        };
+                        if sess.capacity_left() < committed.len() + k + path.len() + 8 {
+                            excluded[ci] = true;
+                            continue;
+                        }
+                        // reposition the draft cache onto this branch:
+                        // cache must hold committed ++ root ++ path[..-1]
+                        // (the leaf token itself is decoded next)
+                        let mut want: Vec<u32> = Vec::with_capacity(path.len());
+                        if leaf != 0 {
+                            want.push(root);
+                            want.extend_from_slice(&path[..path.len() - 1]);
+                        }
+                        caches[si].ensure(sess, &committed, &want, &mut st.stats)?;
+                        let draft_from = leaf_token;
+                        if sched.configs[ci].cfg.vc_with_pld {
+                            matcher.truncate(committed_len + 1);
+                            matcher.extend(&path);
+                            let (toks, probs, entered) = draft_chain_vc(
+                                sess, matcher, draft_from, k, sched.inner_k, &mut st.stats,
+                            )?;
+                            caches[si].advanced(&entered);
+                            picked = Some((ci, toks, probs, None));
+                        } else {
+                            let cd = draft_chain(sess, draft_from, k, None, &mut st.stats)?;
+                            // cache now holds draft_from + all but the
+                            // last drafted token
+                            caches[si].advanced(&[draft_from]);
+                            if cd.tokens.len() > 1 {
+                                caches[si].advanced(&cd.tokens[..cd.tokens.len() - 1]);
+                            }
+                            picked = Some((ci, cd.tokens, cd.probs, cd.sibling));
+                        }
+                        break;
+                    }
+                }
+            }
+            let (ci, toks, probs, sibling) = match picked {
+                Some(x) => x,
+                None => {
+                    tree.deactivate(leaf);
+                    continue;
+                }
+            };
+            let draft_secs = t_draft.elapsed().as_secs_f64();
+            if !toks.is_empty() {
+                sched.update_cost(ci, draft_secs / toks.len() as f64);
+            }
+
+            // ---- attach nodes ----
+            let alpha_cfg = sched.configs[ci].est.alpha();
+            let mut parent = leaf;
+            let mut first_slot = None;
+            for (i, (&t, &p)) in toks.iter().zip(&probs).enumerate() {
+                if tree.is_full() {
+                    break;
+                }
+                // token-level refinement: blend config α̂ with draft prob
+                let node_alpha = (0.5 * alpha_cfg + 0.5 * p).clamp(0.02, 0.98);
+                let p_acc_child = tree.nodes[parent].p_acc * node_alpha;
+                let idx = tree.add_child(parent, t, p, ci, p_acc_child);
+                if i == 0 {
+                    first_slot = Some(idx);
+                }
+                parent = idx;
+                if t == EOS {
+                    break;
+                }
+            }
+            if let Some(fs) = first_slot {
+                expansions.push(Expansion { config: ci, first_slot: fs });
+                // sibling branch (TOP-K = 2, TOP-P filter)
+                if let Some((stok, sprob)) = sibling {
+                    if sprob >= sched.params.p_tree && !tree.is_full() {
+                        let node_alpha = (0.5 * alpha_cfg + 0.5 * sprob).clamp(0.02, 0.98);
+                        tree.add_child(leaf, stok, sprob, ci, tree.nodes[leaf].p_acc * node_alpha);
+                    }
+                }
+                tree.deactivate(leaf);
+            } else {
+                tree.deactivate(leaf);
+            }
+        }
+
+        // ---------------- verify + commit ----------------
+        let t_shape = chain_step_shape(tree.len());
+        let out = self.target.verify_tree(&tree, t_shape)?;
+        st.stats.target_calls += 1;
+        sched.target_step_secs = if sched.target_step_secs == 0.0 {
+            out.elapsed.as_secs_f64()
+        } else {
+            0.8 * sched.target_step_secs + 0.2 * out.elapsed.as_secs_f64()
+        };
+        sched.latency.observe(FAM_TARGET, t_shape, out.elapsed.as_secs_f64());
+
+        let vocab = self.target.vocab();
+        let v = verify_greedy(&tree, &out.logits, vocab);
+        self.target.commit_slots(VERIFY_T, &v.accepted_slots)?;
+        let last = *v.accepted_slots.last().unwrap();
+        self.target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
+
+        // ---- estimator updates from first-token outcomes ----
+        for exp in &expansions {
+            if let Some(&(_, ok)) =
+                v.slot_outcomes.iter().find(|(s, _)| *s == exp.first_slot)
+            {
+                sched.configs[exp.config].est.observe(ok);
+            }
+        }
+        for c in sched.configs.iter_mut() {
+            c.est.roll();
+        }
+
+        // ---- restore committed state (draft caches sync lazily) ----
+        matcher.truncate(committed_len);
+        matcher.extend(&[root]);
+        matcher.extend(&v.accepted_tokens);
+
+        let mut emitted = v.accepted_tokens.clone();
+        emitted.push(v.bonus);
+        st.emit(&emitted);
+        Ok(())
+    }
+}
+
 impl Engine for DytcEngine<'_> {
     fn name(&self) -> &str {
         self.name
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
-        let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let mut ls40 = VariantSession::new(self.rt, Variant::Ls40)?;
-        let mut ls60 = VariantSession::new(self.rt, Variant::Ls60)?;
-        let mut ee = if self.with_ee {
-            Some(VariantSession::new(self.rt, Variant::Ee)?)
-        } else {
-            None
-        };
-
-        let mut st = GenState::start(&mut target, prompt, max_new)?;
-        let t0 = Instant::now();
-
-        let mut matcher = PldMatcher::new(prompt);
-        // Draft sessions are prefilled lazily on first use: a request whose
-        // scheduling never touches a DSIA variant (pure PLD rounds) pays
-        // nothing for it. BranchCache spans the full sequence incl. prompt.
-        let mut caches: Vec<BranchCache> =
-            (0..3).map(|_| BranchCache::new(0)).collect();
-
-        while !st.done && target.capacity_left() > VERIFY_T {
-            let root = st.root;
-            let committed_len = matcher.len();
-            matcher.extend(&[root]);
-            let mut committed: Vec<u32> =
-                Vec::with_capacity(prompt.len() + st.out.len());
-            committed.extend_from_slice(prompt);
-            committed.extend_from_slice(st.committed_except_root());
-
-            // ---------------- Alg. 1: grow the draft tree ----------------
-            let mut tree = DraftTree::new(root, self.params.m_tree_max.min(VERIFY_T));
-            let mut expansions: Vec<Expansion> = Vec::new();
-
-            let alpha_dn = self.configs[self.pld_idx].est.alpha();
-            let c_dn = self.costs()[self.pld_idx].max(1e-3);
-
-            loop {
-                if tree.is_full() {
-                    break;
-                }
-                let leaf = match tree.best_active_leaf() {
-                    Some(l) => l,
-                    None => break,
-                };
-                let p_acc = tree.nodes[leaf].p_acc;
-                if should_stop(p_acc, alpha_dn, c_dn, self.params.t_min) {
-                    break;
-                }
-                // Alg. 2 — re-run the selection excluding configurations
-                // that turn out to have nothing to offer at this leaf
-                // (e.g. PLD with no n-gram hit): the dynamic fallback that
-                // static cascades lack.
-                let alphas_all = self.alphas();
-                let costs_all = self.costs();
-                let mut excluded = vec![false; alphas_all.len()];
-                let leaf_token = tree.nodes[leaf].token;
-                let path = tree.path_tokens(leaf); // excludes root
-                let t_draft = Instant::now();
-                // (config, tokens, probs, optional sibling (token, prob))
-                let mut picked: Option<(usize, Vec<u32>, Vec<f64>, Option<(u32, f64)>)> =
-                    None;
-                loop {
-                    let mut alphas = alphas_all.clone();
-                    for (a, ex) in alphas.iter_mut().zip(&excluded) {
-                        if *ex {
-                            *a = 0.0; // an excluded config can win nothing
-                        }
-                    }
-                    let (ci, mut k) = match find_best_config(
-                        &alphas, &costs_all, alpha_dn, c_dn, self.params.k_max,
-                    ) {
-                        Some(x) => x,
-                        None => break,
-                    };
-                    if excluded[ci] {
-                        break; // nothing left worth trying
-                    }
-                    k = k.min(tree.remaining());
-                    if k == 0 {
-                        break;
-                    }
-                    // Eq. 5 gate: expand only while the predicted local
-                    // speedup of this step, discounted by the leaf's
-                    // accumulated acceptance, clears the t_min threshold.
-                    let t_val =
-                        step_objective(alphas[ci], costs_all[ci], k, alpha_dn, c_dn);
-                    if t_val * p_acc < self.params.t_min && tree.len() > 1 {
-                        break;
-                    }
-                    match self.configs[ci].cfg.source {
-                        DraftSource::Pld => {
-                            // matcher := committed ++ root ++ path
-                            matcher.truncate(committed_len + 1);
-                            matcher.extend(&path);
-                            st.stats.pld_proposals += 1;
-                            match matcher.propose(k) {
-                                Some(p) => {
-                                    let conf = (alpha_dn
-                                        + 0.05 * (p.match_len as f64 - 1.0))
-                                        .clamp(0.05, 0.95);
-                                    let n = p.tokens.len();
-                                    picked = Some((ci, p.tokens, vec![conf; n], None));
-                                    break;
-                                }
-                                None => {
-                                    excluded[ci] = true;
-                                    continue;
-                                }
-                            }
-                        }
-                        DraftSource::Model(variant) => {
-                            let (si, sess) = match variant {
-                                Variant::Ls40 => (0usize, &mut ls40),
-                                Variant::Ls60 => (1usize, &mut ls60),
-                                Variant::Ee => (2usize, ee.as_mut().expect("ee loaded")),
-                                Variant::Target => unreachable!("target is never a draft"),
-                            };
-                            if sess.capacity_left() < committed.len() + k + path.len() + 8 {
-                                excluded[ci] = true;
-                                continue;
-                            }
-                            // reposition the draft cache onto this branch:
-                            // cache must hold committed ++ root ++ path[..-1]
-                            // (the leaf token itself is decoded next)
-                            let mut want: Vec<u32> = Vec::with_capacity(path.len());
-                            if leaf != 0 {
-                                want.push(root);
-                                want.extend_from_slice(&path[..path.len() - 1]);
-                            }
-                            caches[si].ensure(sess, &committed, &want, &mut st.stats)?;
-                            let draft_from = leaf_token;
-                            if self.configs[ci].cfg.vc_with_pld {
-                                matcher.truncate(committed_len + 1);
-                                matcher.extend(&path);
-                                let (toks, probs, entered) = draft_chain_vc(
-                                    sess, &mut matcher, draft_from, k, self.inner_k,
-                                    &mut st.stats,
-                                )?;
-                                caches[si].advanced(&entered);
-                                picked = Some((ci, toks, probs, None));
-                            } else {
-                                let cd =
-                                    draft_chain(sess, draft_from, k, None, &mut st.stats)?;
-                                // cache now holds draft_from + all but the
-                                // last drafted token
-                                caches[si].advanced(&[draft_from]);
-                                if cd.tokens.len() > 1 {
-                                    caches[si].advanced(&cd.tokens[..cd.tokens.len() - 1]);
-                                }
-                                picked = Some((ci, cd.tokens, cd.probs, cd.sibling));
-                            }
-                            break;
-                        }
-                    }
-                }
-                let (ci, toks, probs, sibling) = match picked {
-                    Some(x) => x,
-                    None => {
-                        tree.deactivate(leaf);
-                        continue;
-                    }
-                };
-                let draft_secs = t_draft.elapsed().as_secs_f64();
-                if !toks.is_empty() {
-                    self.update_cost(ci, draft_secs / toks.len() as f64);
-                }
-
-                // ---- attach nodes ----
-                let alpha_cfg = self.configs[ci].est.alpha();
-                let mut parent = leaf;
-                let mut first_slot = None;
-                for (i, (&t, &p)) in toks.iter().zip(&probs).enumerate() {
-                    if tree.is_full() {
-                        break;
-                    }
-                    // token-level refinement: blend config α̂ with draft prob
-                    let node_alpha = (0.5 * alpha_cfg + 0.5 * p).clamp(0.02, 0.98);
-                    let p_acc_child = tree.nodes[parent].p_acc * node_alpha;
-                    let idx = tree.add_child(parent, t, p, ci, p_acc_child);
-                    if i == 0 {
-                        first_slot = Some(idx);
-                    }
-                    parent = idx;
-                    if t == EOS {
-                        break;
-                    }
-                }
-                if let Some(fs) = first_slot {
-                    expansions.push(Expansion { config: ci, first_slot: fs });
-                    // sibling branch (TOP-K = 2, TOP-P filter)
-                    if let Some((stok, sprob)) = sibling {
-                        if sprob >= self.params.p_tree && !tree.is_full() {
-                            let node_alpha = (0.5 * alpha_cfg + 0.5 * sprob).clamp(0.02, 0.98);
-                            tree.add_child(leaf, stok, sprob,
-                                           ci, tree.nodes[leaf].p_acc * node_alpha);
-                        }
-                    }
-                    tree.deactivate(leaf);
-                } else {
-                    tree.deactivate(leaf);
-                }
-            }
-
-            // ---------------- verify + commit ----------------
-            let t_shape = chain_step_shape(tree.len());
-            let out = target.verify_tree(&tree, t_shape)?;
-            st.stats.target_calls += 1;
-            self.target_step_secs = if self.target_step_secs == 0.0 {
-                out.elapsed.as_secs_f64()
-            } else {
-                0.8 * self.target_step_secs + 0.2 * out.elapsed.as_secs_f64()
-            };
-            self.latency.observe(FAM_TARGET, t_shape, out.elapsed.as_secs_f64());
-
-            let vocab = target.vocab();
-            let v = verify_greedy(&tree, &out.logits, vocab);
-            target.commit_slots(VERIFY_T, &v.accepted_slots)?;
-            let last = *v.accepted_slots.last().unwrap();
-            target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
-
-            // ---- estimator updates from first-token outcomes ----
-            for exp in &expansions {
-                if let Some(&(_, ok)) =
-                    v.slot_outcomes.iter().find(|(s, _)| *s == exp.first_slot)
-                {
-                    self.configs[exp.config].est.observe(ok);
-                }
-            }
-            for c in self.configs.iter_mut() {
-                c.est.roll();
-            }
-
-            // ---- restore committed state (draft caches sync lazily) ----
-            matcher.truncate(committed_len);
-            matcher.extend(&[root]);
-            matcher.extend(&v.accepted_tokens);
-
-            let mut emitted = v.accepted_tokens.clone();
-            emitted.push(v.bonus);
-            st.emit(&emitted);
-        }
-
-        st.stats.wall = t0.elapsed();
-        Ok(Generation { tokens: st.out, stats: st.stats })
+    fn begin<'e>(
+        &'e self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Box<dyn RequestRun + 'e>> {
+        // every run shares the engine's scheduler state by reference, so
+        // sequential generates and concurrently batched runs all keep the
+        // same estimators learning across the workload
+        Ok(Box::new(DytcRun::new(
+            self.rt,
+            &self.sched,
+            self.with_ee,
+            prompt,
+            max_new,
+        )?))
     }
 }
-

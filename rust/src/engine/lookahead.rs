@@ -13,9 +13,8 @@
 //!   * drafting looks the current suffix up in the pool (falling back to
 //!     the generated text itself), like Lade's n-gram verification branch.
 //!
-//! The simplification is documented in DESIGN.md §Substitutions; its
-//! measured profile matches the paper's Fig. 1a placement (between AR and
-//! PLD on copy-heavy tasks, ~1.1–1.3× elsewhere).
+//! Its measured profile matches the paper's Fig. 1a placement (between AR
+//! and PLD on copy-heavy tasks, ~1.1–1.3× elsewhere).
 
 use std::collections::HashMap;
 
@@ -24,20 +23,21 @@ use anyhow::Result;
 use crate::model::Variant;
 use crate::runtime::{argmax, ScaleRuntime};
 use crate::spec::{verify_greedy, DraftTree, VariantSession};
-use crate::tokenizer::EOS;
 
-use super::common::{chain_step_shape, GenState};
-use super::{Engine, EngineOpts, Generation};
+use super::common::{chain_step_shape, GenState, RoundStep};
+use super::{Engine, EngineOpts, RequestRun};
 
 /// Pool context length (bigram keys, like Lade's default N-1 context).
 const POOL_CTX: usize = 2;
 
+/// The simplified Lookahead ("lade") engine.
 pub struct LookaheadEngine<'rt> {
     rt: &'rt ScaleRuntime,
     k: usize,
 }
 
 impl<'rt> LookaheadEngine<'rt> {
+    /// Build the engine; `opts.draft_k` bounds the n-gram chain length.
     pub fn new(rt: &'rt ScaleRuntime, opts: &EngineOpts) -> Result<Self> {
         Ok(LookaheadEngine { rt, k: opts.draft_k.max(5) })
     }
@@ -68,74 +68,99 @@ impl Pool {
     }
 }
 
+/// Per-request state: the target session, the harvested n-gram pool, and
+/// the full token history (prompt + emitted) the pool is keyed on.
+pub struct LookaheadRun<'rt> {
+    target: VariantSession<'rt>,
+    pool: Pool,
+    hist: Vec<u32>,
+    k: usize,
+    st: GenState,
+}
+
+impl RoundStep for LookaheadRun<'_> {
+    fn state(&self) -> &GenState {
+        &self.st
+    }
+
+    fn state_mut(&mut self) -> &mut GenState {
+        &mut self.st
+    }
+
+    fn capacity_ok(&self) -> bool {
+        self.target.capacity_left() > crate::runtime::VERIFY_T
+    }
+
+    fn round_impl(&mut self) -> Result<()> {
+        let st = &mut self.st;
+        let budget = self.k.min(st.max_new.saturating_sub(st.out.len()));
+        if budget == 0 {
+            return Ok(()); // no progress: the driver ends the run
+        }
+        let root = st.root;
+        self.hist.push(root);
+
+        let chain = self.pool.lookup(&self.hist, budget).unwrap_or_default();
+        let t_shape = chain_step_shape(chain.len() + 1);
+        let tree = DraftTree::chain(root, &chain, t_shape);
+        let out = self.target.verify_tree(&tree, t_shape)?;
+        st.stats.target_calls += 1;
+        let vocab = self.target.vocab();
+        let v = verify_greedy(&tree, &out.logits, vocab);
+        self.target.commit_slots(t_shape, &v.accepted_slots)?;
+        let last = *v.accepted_slots.last().unwrap();
+        self.target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
+
+        // --- harvest Jacobi-style n-grams from ALL slots (incl. the
+        // rejected tail): slot token -> target's argmax continuation ---
+        let slot_tokens: Vec<u32> = tree.nodes.iter().map(|n| n.token).collect();
+        for (i, tok) in slot_tokens.iter().enumerate() {
+            let guess = argmax(&out.logits[i * vocab..(i + 1) * vocab]);
+            // context = (previous path token, slot token)
+            let prev = if i == 0 {
+                *self.hist.get(self.hist.len().wrapping_sub(2)).unwrap_or(&root)
+            } else {
+                slot_tokens[i - 1]
+            };
+            self.pool.insert([prev, *tok], vec![guess]);
+        }
+
+        let mut emitted = v.accepted_tokens.clone();
+        emitted.push(v.bonus);
+        let accepted = v.accepted_tokens;
+        self.hist.extend_from_slice(&accepted);
+        // longer pool entries from committed text
+        if self.hist.len() >= POOL_CTX + 3 {
+            let n = self.hist.len();
+            let ctx: [u32; POOL_CTX] = self.hist[n - 5..n - 3].try_into().unwrap();
+            self.pool.insert(ctx, self.hist[n - 3..].to_vec());
+        }
+        st.emit(&emitted);
+        Ok(())
+    }
+}
+
 impl Engine for LookaheadEngine<'_> {
     fn name(&self) -> &str {
         "lade"
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
+    fn begin<'e>(
+        &'e self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let mut st = GenState::start(&mut target, prompt, max_new)?;
-        let t0 = std::time::Instant::now();
+        let st = GenState::start(&mut target, prompt, max_new)?;
 
         let mut pool = Pool::new();
         // seed the pool from the prompt's own n-grams
-        let mut hist: Vec<u32> = prompt.to_vec();
+        let hist: Vec<u32> = prompt.to_vec();
         for w in prompt.windows(POOL_CTX + self.k.min(3)) {
             let ctx: [u32; POOL_CTX] = w[..POOL_CTX].try_into().unwrap();
             pool.insert(ctx, w[POOL_CTX..].to_vec());
         }
 
-        while !st.done && target.capacity_left() > crate::runtime::VERIFY_T {
-            let budget = self.k.min(st.max_new.saturating_sub(st.out.len()));
-            if budget == 0 {
-                break;
-            }
-            let root = st.root;
-            hist.push(root);
-
-            let chain = pool.lookup(&hist, budget).unwrap_or_default();
-            let t_shape = chain_step_shape(chain.len() + 1);
-            let tree = DraftTree::chain(root, &chain, t_shape);
-            let out = target.verify_tree(&tree, t_shape)?;
-            st.stats.target_calls += 1;
-            let vocab = target.vocab();
-            let v = verify_greedy(&tree, &out.logits, vocab);
-            target.commit_slots(t_shape, &v.accepted_slots)?;
-            let last = *v.accepted_slots.last().unwrap();
-            target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
-
-            // --- harvest Jacobi-style n-grams from ALL slots (incl. the
-            // rejected tail): slot token -> target's argmax continuation ---
-            let slot_tokens: Vec<u32> = tree.nodes.iter().map(|n| n.token).collect();
-            for (i, tok) in slot_tokens.iter().enumerate() {
-                let guess = argmax(&out.logits[i * vocab..(i + 1) * vocab]);
-                // context = (previous path token, slot token)
-                let prev = if i == 0 {
-                    *hist.get(hist.len().wrapping_sub(2)).unwrap_or(&root)
-                } else {
-                    slot_tokens[i - 1]
-                };
-                pool.insert([prev, *tok], vec![guess]);
-            }
-
-            let mut emitted = v.accepted_tokens.clone();
-            emitted.push(v.bonus);
-            let accepted = v.accepted_tokens;
-            hist.extend_from_slice(&accepted);
-            // longer pool entries from committed text
-            if hist.len() >= POOL_CTX + 3 {
-                let n = hist.len();
-                let ctx: [u32; POOL_CTX] = hist[n - 5..n - 3].try_into().unwrap();
-                pool.insert(ctx, hist[n - 3..].to_vec());
-            }
-            st.emit(&emitted);
-            if emitted.contains(&EOS) {
-                break;
-            }
-        }
-
-        st.stats.wall = t0.elapsed();
-        Ok(Generation { tokens: st.out, stats: st.stats })
+        Ok(Box::new(LookaheadRun { target, pool, hist, k: self.k, st }))
     }
 }

@@ -19,6 +19,26 @@
 //! | `trvc`      | Fig. 3 "Tr+VC"     | static tree, VC-drafted chains   |
 //! | `cas-spec`  | CAS-Spec           | DyTC over {ls40, ls60, PLD, VC}  |
 //! | `cas-spec+` | CAS-Spec†          | DyTC adding the Kangaroo draft   |
+//!
+//! Two entry points per engine:
+//!
+//!   * [`Engine::generate`] — run one request start-to-finish (CLI, bench
+//!     harness, lossless checks).
+//!   * [`Engine::begin`] — start a *resumable* [`RequestRun`]: the
+//!     request's sessions/KV state live in the run, and each
+//!     [`RequestRun::round`] call advances exactly one speculation round.
+//!     The continuous-batching server (`server`) keeps many runs live on
+//!     one engine and interleaves them, so requests join and leave the
+//!     running batch at speculation-round boundaries.
+//!
+//! Engines put their per-round logic in [`common::RoundStep`]; a blanket
+//! impl lifts any `RoundStep` into a [`RequestRun`] with uniform
+//! done/capacity gating and wall-clock accounting, and the default
+//! `generate` simply drives a run to completion — so the sequential and
+//! batched paths execute the *same* round code (losslessness under
+//! batching is structural, not re-proved per engine).
+
+#![warn(missing_docs)]
 
 pub mod ar;
 pub mod cascade;
@@ -28,7 +48,7 @@ pub mod lookahead;
 pub mod sd;
 pub mod tree_static;
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -57,6 +77,7 @@ pub struct GenStats {
 }
 
 impl GenStats {
+    /// Mean emitted tokens per verification round (0 when no rounds ran).
     pub fn mean_accepted(&self) -> f64 {
         if self.tokens_per_round.is_empty() {
             return 0.0;
@@ -66,18 +87,124 @@ impl GenStats {
     }
 }
 
+/// A finished generation: the emitted tokens plus accounting.
 #[derive(Debug, Clone)]
 pub struct Generation {
     /// Generated tokens (prompt excluded), truncated at EOS.
     pub tokens: Vec<u32>,
+    /// Statistics accumulated over the generation.
     pub stats: GenStats,
 }
 
-/// A decoding method. Engines are single-stream and reusable across
-/// requests (each `generate` starts from fresh KV caches).
+/// What one [`RequestRun::round`] call produced.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Tokens emitted by this round, in order (empty when the run was
+    /// already finished or ended without progress).
+    pub emitted: Vec<u32>,
+    /// Whether the run is now finished (EOS, token budget, or KV capacity
+    /// exhausted).
+    pub done: bool,
+}
+
+/// A resumable in-flight generation: one request's decoding state,
+/// advanced one speculation round at a time.
+///
+/// Obtained from [`Engine::begin`]. The prompt is already prefilled and
+/// the first greedy token emitted when `begin` returns; each `round` call
+/// then performs one draft-verify-commit round. Dropping a run discards
+/// its KV caches (every run owns fresh per-request caches).
+pub trait RequestRun {
+    /// Whether the run has finished (further `round` calls are no-ops).
+    fn is_done(&self) -> bool;
+    /// Advance one speculation round and return the tokens it emitted.
+    fn round(&mut self) -> Result<RoundOutcome>;
+    /// All tokens emitted so far (prompt excluded).
+    fn tokens(&self) -> &[u32];
+    /// Statistics accumulated so far.
+    fn stats(&self) -> &GenStats;
+    /// Consume the run into its final [`Generation`].
+    fn finish(self: Box<Self>) -> Generation;
+}
+
+/// Blanket lift: every engine-specific [`common::RoundStep`] state machine
+/// is a [`RequestRun`]. Centralizes the gating every engine used to
+/// duplicate in its `generate` loop: skip when done, stop when the KV
+/// caches run out of head-room, stop when a round makes no progress
+/// (zero budget), and account wall-clock per round.
+impl<T: common::RoundStep> RequestRun for T {
+    fn is_done(&self) -> bool {
+        self.state().done
+    }
+
+    fn round(&mut self) -> Result<RoundOutcome> {
+        if self.state().done {
+            return Ok(RoundOutcome { emitted: Vec::new(), done: true });
+        }
+        if !self.capacity_ok() {
+            self.state_mut().done = true;
+            return Ok(RoundOutcome { emitted: Vec::new(), done: true });
+        }
+        let before = self.state().out.len();
+        let t0 = Instant::now();
+        self.round_impl()?;
+        let wall = t0.elapsed();
+        let st = self.state_mut();
+        st.stats.wall += wall;
+        if st.out.len() == before && !st.done {
+            // a round that cannot make progress (e.g. exhausted budget)
+            // ends the run instead of spinning forever
+            st.done = true;
+        }
+        let emitted = st.out[before..].to_vec();
+        Ok(RoundOutcome { emitted, done: st.done })
+    }
+
+    fn tokens(&self) -> &[u32] {
+        &self.state().out
+    }
+
+    fn stats(&self) -> &GenStats {
+        &self.state().stats
+    }
+
+    fn finish(self: Box<Self>) -> Generation {
+        Generation {
+            tokens: self.state().out.clone(),
+            stats: self.state().stats.clone(),
+        }
+    }
+}
+
+/// A decoding method. Engines are reusable across requests: sequential
+/// requests go through [`Engine::generate`], concurrent ones each get
+/// their own [`RequestRun`] via [`Engine::begin`] (per-request KV state
+/// lives entirely in the run, so many runs can be live at once).
 pub trait Engine {
+    /// The engine's registry name (one of [`ENGINES`]).
     fn name(&self) -> &str;
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation>;
+
+    /// Begin a resumable generation: allocate this request's sessions,
+    /// prefill the prompt and emit the first greedy token. Takes `&self`
+    /// so multiple runs can be in flight on one engine — the continuous-
+    /// batching server relies on this.
+    fn begin<'e>(
+        &'e self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Box<dyn RequestRun + 'e>>;
+
+    /// Run a whole request to completion (prefill + rounds until EOS,
+    /// budget, or capacity). The default drives [`Engine::begin`]'s run to
+    /// the end; engines with cross-request scheduler state (DyTC) share it
+    /// with their runs by reference, so it keeps adapting either way.
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
+        let mut run = self.begin(prompt, max_new)?;
+        while !run.is_done() {
+            run.round()?;
+        }
+        Ok(run.finish())
+    }
 }
 
 /// Tunables shared by the engines (paper §5.1 and App. E defaults).
@@ -185,6 +312,59 @@ mod tests {
                 .unwrap_or_else(|e| panic!("{name} failed to generate: {e:#}"));
             assert!(!g.tokens.is_empty(), "{name}: empty generation");
             assert!(g.tokens.len() <= 3, "{name}: budget exceeded");
+        }
+    }
+
+    #[test]
+    fn begin_round_matches_generate() {
+        // The resumable path must produce the same tokens as generate()
+        // and report per-round deltas that sum to the full output.
+        let srt = all_variants_runtime();
+        let opts = EngineOpts::default();
+        let prompt = [1u32, 30, 40, 50, 60];
+        for name in ENGINES {
+            let mut eng = build_engine(name, &srt, &opts).unwrap();
+            let g = eng.generate(&prompt, 8).unwrap();
+
+            let mut run = eng.begin(&prompt, 8).unwrap();
+            assert!(!run.tokens().is_empty(), "{name}: begin emits the first token");
+            let mut collected = run.tokens().to_vec();
+            while !run.is_done() {
+                let o = run.round().unwrap();
+                collected.extend_from_slice(&o.emitted);
+            }
+            assert_eq!(run.tokens(), &collected[..], "{name}: round deltas disagree");
+            let fin = run.finish();
+            assert_eq!(fin.tokens, g.tokens, "{name}: resumable path diverged");
+            assert!(fin.tokens.len() <= 8, "{name}: budget exceeded");
+        }
+    }
+
+    #[test]
+    fn concurrent_runs_on_one_engine_are_independent() {
+        // Two interleaved runs on one engine instance must each equal the
+        // solo output — the invariant the batching server is built on.
+        let srt = all_variants_runtime();
+        let opts = EngineOpts::default();
+        let p1 = [1u32, 30, 40, 50];
+        let p2 = [2u32, 35, 45, 55, 65];
+        for name in ["pld", "swift", "cas-spec"] {
+            let mut eng = build_engine(name, &srt, &opts).unwrap();
+            let solo1 = eng.generate(&p1, 6).unwrap().tokens;
+            let solo2 = eng.generate(&p2, 6).unwrap().tokens;
+
+            let eng = build_engine(name, &srt, &opts).unwrap();
+            // fresh instance so the interleaved pair starts from cold
+            // scheduler state; equality with the solo outputs holds via
+            // greedy losslessness (scheduler state only shifts cost)
+            let mut r1 = eng.begin(&p1, 6).unwrap();
+            let mut r2 = eng.begin(&p2, 6).unwrap();
+            while !(r1.is_done() && r2.is_done()) {
+                r1.round().unwrap();
+                r2.round().unwrap();
+            }
+            assert_eq!(r1.finish().tokens, solo1, "{name}: run 1 diverged");
+            assert_eq!(r2.finish().tokens, solo2, "{name}: run 2 diverged");
         }
     }
 

@@ -18,14 +18,15 @@ use crate::pld::PldMatcher;
 use crate::runtime::ScaleRuntime;
 use crate::spec::VariantSession;
 
-use super::common::{draft_chain, verify_chain_round, BranchCache, GenState};
-use super::{Engine, EngineOpts, Generation};
+use super::common::{draft_chain, verify_chain_round, BranchCache, GenState, RoundStep};
+use super::{Engine, EngineOpts, RequestRun};
 
 enum Draft<'rt> {
     Pld,
     Model { sess: VariantSession<'rt>, conf_stop: Option<f64> },
 }
 
+/// Single-draft speculative decoding (`pld` / `swift` / `kangaroo`).
 pub struct SdEngine<'rt> {
     rt: &'rt ScaleRuntime,
     draft_kind: DraftKind,
@@ -41,6 +42,7 @@ enum DraftKind {
 }
 
 impl<'rt> SdEngine<'rt> {
+    /// PLD-drafted speculative decoding (the `pld` engine).
     pub fn new_pld(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
         Ok(SdEngine {
             rt,
@@ -52,6 +54,7 @@ impl<'rt> SdEngine<'rt> {
         })
     }
 
+    /// DSIA-model-drafted speculative decoding (`swift` / `kangaroo`).
     pub fn new_model(
         rt: &'rt ScaleRuntime,
         variant: Variant,
@@ -71,6 +74,76 @@ impl<'rt> SdEngine<'rt> {
     }
 }
 
+/// Per-request state: target + draft sessions, the PLD corpus, and the
+/// draft's branch-aware cache tracker.
+pub struct SdRun<'rt> {
+    target: VariantSession<'rt>,
+    draft: Draft<'rt>,
+    matcher: PldMatcher,
+    bc: BranchCache,
+    k: usize,
+    st: GenState,
+}
+
+impl RoundStep for SdRun<'_> {
+    fn state(&self) -> &GenState {
+        &self.st
+    }
+
+    fn state_mut(&mut self) -> &mut GenState {
+        &mut self.st
+    }
+
+    fn capacity_ok(&self) -> bool {
+        self.target.capacity_left() > crate::runtime::VERIFY_T
+    }
+
+    fn round_impl(&mut self) -> Result<()> {
+        let st = &mut self.st;
+        let budget = self.k.min(st.max_new.saturating_sub(st.out.len()));
+        if budget == 0 {
+            return Ok(()); // no progress: the driver ends the run
+        }
+        let root = st.root;
+        // The root is committed by this round unconditionally; the PLD
+        // corpus may condition on it right away.
+        self.matcher.extend(&[root]);
+
+        // ---- draft ----
+        let committed: Vec<u32> = st.committed_except_root().to_vec();
+        let chain: Vec<u32> = match &mut self.draft {
+            Draft::Pld => {
+                st.stats.pld_proposals += 1;
+                self.matcher.propose(budget).map(|p| p.tokens).unwrap_or_default()
+            }
+            Draft::Model { sess, conf_stop } => {
+                self.bc.ensure(sess, &committed, &[], &mut st.stats)?;
+                if sess.capacity_left() < budget + 2 {
+                    Vec::new()
+                } else {
+                    let cd = draft_chain(sess, root, budget, *conf_stop, &mut st.stats)?;
+                    self.bc.advanced(&[root]);
+                    if cd.tokens.len() > 1 {
+                        self.bc.advanced(&cd.tokens[..cd.tokens.len() - 1]);
+                    }
+                    cd.tokens
+                }
+            }
+        };
+
+        // ---- verify (a bare root step when the draft had nothing) ----
+        let (accepted, bonus) =
+            verify_chain_round(&mut self.target, root, &chain, &mut st.stats)?;
+
+        // ---- bookkeeping (draft cache syncs lazily next round) ----
+        self.matcher.extend(&accepted);
+        let mut emitted = accepted;
+        emitted.push(bonus);
+        st.emit(&emitted);
+        Ok(())
+    }
+}
+
 impl Engine for SdEngine<'_> {
     fn name(&self) -> &str {
         if matches!(self.draft_kind, DraftKind::Model(Variant::Ls40)) {
@@ -80,7 +153,11 @@ impl Engine for SdEngine<'_> {
         }
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
+    fn begin<'e>(
+        &'e self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
         let mut draft: Draft = match self.draft_kind {
             DraftKind::Pld => Draft::Pld,
@@ -91,10 +168,9 @@ impl Engine for SdEngine<'_> {
         };
 
         let mut st = GenState::start(&mut target, prompt, max_new)?;
-        let t0 = std::time::Instant::now();
 
         // PLD corpus / draft cache both start at the committed prompt.
-        let mut matcher = PldMatcher::new(prompt);
+        let matcher = PldMatcher::new(prompt);
         let mut bc = BranchCache::new(0);
         if let Draft::Model { sess, .. } = &mut draft {
             sess.feed(prompt)?;
@@ -102,50 +178,6 @@ impl Engine for SdEngine<'_> {
             bc = BranchCache::new(sess.pos());
         }
 
-        while !st.done && target.capacity_left() > crate::runtime::VERIFY_T {
-            let budget = (self.k).min(st.max_new.saturating_sub(st.out.len()));
-            if budget == 0 {
-                break;
-            }
-            let root = st.root;
-            // The root is committed by this round unconditionally; the PLD
-            // corpus may condition on it right away.
-            matcher.extend(&[root]);
-
-            // ---- draft ----
-            let committed: Vec<u32> = st.committed_except_root().to_vec();
-            let chain: Vec<u32> = match &mut draft {
-                Draft::Pld => {
-                    st.stats.pld_proposals += 1;
-                    matcher.propose(budget).map(|p| p.tokens).unwrap_or_default()
-                }
-                Draft::Model { sess, conf_stop } => {
-                    bc.ensure(sess, &committed, &[], &mut st.stats)?;
-                    if sess.capacity_left() < budget + 2 {
-                        Vec::new()
-                    } else {
-                        let cd = draft_chain(sess, root, budget, *conf_stop, &mut st.stats)?;
-                        bc.advanced(&[root]);
-                        if cd.tokens.len() > 1 {
-                            bc.advanced(&cd.tokens[..cd.tokens.len() - 1]);
-                        }
-                        cd.tokens
-                    }
-                }
-            };
-
-            // ---- verify (a bare root step when the draft had nothing) ----
-            let (accepted, bonus) =
-                verify_chain_round(&mut target, root, &chain, &mut st.stats)?;
-
-            // ---- bookkeeping (draft cache syncs lazily next round) ----
-            matcher.extend(&accepted);
-            let mut emitted = accepted;
-            emitted.push(bonus);
-            st.emit(&emitted);
-        }
-
-        st.stats.wall = t0.elapsed();
-        Ok(Generation { tokens: st.out, stats: st.stats })
+        Ok(Box::new(SdRun { target, draft, matcher, bc, k: self.k, st }))
     }
 }

@@ -19,9 +19,12 @@ use crate::runtime::{argmax, softmax_prob, ScaleRuntime, VERIFY_T};
 use crate::spec::{verify_greedy, DraftTree, VariantSession};
 use crate::tokenizer::EOS;
 
-use super::common::{chain_step_shape, draft_chain, draft_chain_vc, BranchCache, GenState};
-use super::{Engine, EngineOpts, Generation};
+use super::common::{
+    chain_step_shape, draft_chain, draft_chain_vc, BranchCache, GenState, RoundStep,
+};
+use super::{Engine, EngineOpts, RequestRun};
 
+/// Static-tree engine (`tr` / `trvc`).
 pub struct TreeEngine<'rt> {
     rt: &'rt ScaleRuntime,
     use_vc: bool,
@@ -33,6 +36,7 @@ pub struct TreeEngine<'rt> {
 }
 
 impl<'rt> TreeEngine<'rt> {
+    /// Build the static-tree engine; `use_vc` selects VC-drafted chains.
     pub fn new(rt: &'rt ScaleRuntime, use_vc: bool, opts: &EngineOpts) -> Result<Self> {
         Ok(TreeEngine {
             rt,
@@ -43,7 +47,130 @@ impl<'rt> TreeEngine<'rt> {
             name: if use_vc { "trvc" } else { "tr" },
         })
     }
+}
 
+/// Per-request state: target + ls40 draft sessions, PLD corpus, and the
+/// draft's branch-aware cache tracker.
+pub struct TreeRun<'rt> {
+    target: VariantSession<'rt>,
+    draft: VariantSession<'rt>,
+    matcher: PldMatcher,
+    bc: BranchCache,
+    use_vc: bool,
+    k_main: usize,
+    k_sib: usize,
+    inner_k: usize,
+    st: GenState,
+}
+
+impl RoundStep for TreeRun<'_> {
+    fn state(&self) -> &GenState {
+        &self.st
+    }
+
+    fn state_mut(&mut self) -> &mut GenState {
+        &mut self.st
+    }
+
+    fn capacity_ok(&self) -> bool {
+        self.target.capacity_left() > VERIFY_T
+            && self.draft.capacity_left() >= VERIFY_T + 2
+    }
+
+    fn round_impl(&mut self) -> Result<()> {
+        let st = &mut self.st;
+        let root = st.root;
+        let committed_len = self.matcher.len();
+        self.matcher.extend(&[root]);
+        let committed: Vec<u32> = st.committed_except_root().to_vec();
+        self.bc.ensure(&mut self.draft, &committed, &[], &mut st.stats)?;
+
+        let mut tree = DraftTree::new(root, VERIFY_T);
+
+        // --- main branch: top-1 chain of depth k_main ---
+        let (main_chain, sibling) = if self.use_vc {
+            // first token via a plain decode (for the sibling), rest VC
+            let head = draft_chain(&mut self.draft, root, 1, None, &mut st.stats)?;
+            self.bc.advanced(&[root]);
+            let mut toks = head.tokens.clone();
+            let mut probs = head.probs.clone();
+            if toks.first().map(|t| *t != EOS).unwrap_or(false) {
+                self.matcher.extend(&toks);
+                let (more, mp, entered) = draft_chain_vc(
+                    &mut self.draft,
+                    &mut self.matcher,
+                    toks[0],
+                    self.k_main - 1,
+                    self.inner_k,
+                    &mut st.stats,
+                )?;
+                self.bc.advanced(&entered);
+                toks.extend(more);
+                probs.extend(mp);
+            }
+            ((toks, probs), head.sibling)
+        } else {
+            let cd = draft_chain(&mut self.draft, root, self.k_main, None, &mut st.stats)?;
+            self.bc.advanced(&[root]);
+            if cd.tokens.len() > 1 {
+                self.bc.advanced(&cd.tokens[..cd.tokens.len() - 1]);
+            }
+            ((cd.tokens, cd.probs), cd.sibling)
+        };
+        let mut parent = 0usize;
+        for (t, p) in main_chain.0.iter().zip(&main_chain.1) {
+            if tree.remaining() <= self.k_sib {
+                break; // reserve room for the sibling branch
+            }
+            parent = tree.add_child(parent, *t, *p, 0, *p);
+        }
+
+        // --- sibling branch: from the second-best first token ---
+        if let Some((s1, sp)) = sibling {
+            if !tree.is_full() {
+                let mut sparent = tree.add_child(0, s1, sp, 0, sp);
+                if s1 != EOS && self.k_sib > 1 && !tree.is_full() {
+                    // reposition the draft cache onto the sibling branch
+                    self.bc.ensure(&mut self.draft, &committed, &[root], &mut st.stats)?;
+                    let mut cur = s1;
+                    for _ in 0..self.k_sib - 1 {
+                        if tree.is_full() {
+                            break;
+                        }
+                        let lg = self.draft.decode_one(cur)?;
+                        let t = argmax(lg);
+                        let p = softmax_prob(lg, t as usize);
+                        self.bc.advanced(&[cur]);
+                        st.stats.draft_calls += 1;
+                        sparent = tree.add_child(sparent, t, p, 0, p);
+                        if t == EOS {
+                            break;
+                        }
+                        cur = t;
+                    }
+                }
+            }
+        }
+
+        // --- single-step tree verification ---
+        let t_shape = chain_step_shape(tree.len());
+        let out = self.target.verify_tree(&tree, t_shape)?;
+        st.stats.target_calls += 1;
+        let vocab = self.target.vocab();
+        let v = verify_greedy(&tree, &out.logits, vocab);
+        self.target.commit_slots(VERIFY_T, &v.accepted_slots)?;
+        let last = *v.accepted_slots.last().unwrap();
+        self.target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
+
+        self.matcher.truncate(committed_len);
+        self.matcher.extend(&[root]);
+        self.matcher.extend(&v.accepted_tokens);
+
+        let mut emitted = v.accepted_tokens.clone();
+        emitted.push(v.bonus);
+        st.emit(&emitted);
+        Ok(())
+    }
 }
 
 impl Engine for TreeEngine<'_> {
@@ -51,111 +178,30 @@ impl Engine for TreeEngine<'_> {
         self.name
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
+    fn begin<'e>(
+        &'e self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
         let mut draft = VariantSession::new(self.rt, Variant::Ls40)?;
 
         let mut st = GenState::start(&mut target, prompt, max_new)?;
-        let t0 = std::time::Instant::now();
-
-        let mut matcher = PldMatcher::new(prompt);
+        let matcher = PldMatcher::new(prompt);
         draft.feed(prompt)?;
         st.stats.draft_calls += 1;
-        let mut bc = BranchCache::new(draft.pos());
+        let bc = BranchCache::new(draft.pos());
 
-        while !st.done && target.capacity_left() > VERIFY_T {
-            if draft.capacity_left() < VERIFY_T + 2 {
-                break;
-            }
-            let root = st.root;
-            let committed_len = matcher.len();
-            matcher.extend(&[root]);
-            let committed: Vec<u32> = st.committed_except_root().to_vec();
-            bc.ensure(&mut draft, &committed, &[], &mut st.stats)?;
-
-            let mut tree = DraftTree::new(root, VERIFY_T);
-
-            // --- main branch: top-1 chain of depth k_main ---
-            let (main_chain, sibling) = if self.use_vc {
-                // first token via a plain decode (for the sibling), rest VC
-                let head = draft_chain(&mut draft, root, 1, None, &mut st.stats)?;
-                bc.advanced(&[root]);
-                let mut toks = head.tokens.clone();
-                let mut probs = head.probs.clone();
-                if toks.first().map(|t| *t != EOS).unwrap_or(false) {
-                    matcher.extend(&toks);
-                    let (more, mp, entered) = draft_chain_vc(
-                        &mut draft, &mut matcher, toks[0], self.k_main - 1,
-                        self.inner_k, &mut st.stats,
-                    )?;
-                    bc.advanced(&entered);
-                    toks.extend(more);
-                    probs.extend(mp);
-                }
-                ((toks, probs), head.sibling)
-            } else {
-                let cd = draft_chain(&mut draft, root, self.k_main, None, &mut st.stats)?;
-                bc.advanced(&[root]);
-                if cd.tokens.len() > 1 {
-                    bc.advanced(&cd.tokens[..cd.tokens.len() - 1]);
-                }
-                ((cd.tokens, cd.probs), cd.sibling)
-            };
-            let mut parent = 0usize;
-            for (t, p) in main_chain.0.iter().zip(&main_chain.1) {
-                if tree.remaining() <= self.k_sib {
-                    break; // reserve room for the sibling branch
-                }
-                parent = tree.add_child(parent, *t, *p, 0, *p);
-            }
-
-            // --- sibling branch: from the second-best first token ---
-            if let Some((s1, sp)) = sibling {
-                if !tree.is_full() {
-                    let mut sparent = tree.add_child(0, s1, sp, 0, sp);
-                    if s1 != EOS && self.k_sib > 1 && !tree.is_full() {
-                        // reposition the draft cache onto the sibling branch
-                        bc.ensure(&mut draft, &committed, &[root], &mut st.stats)?;
-                        let mut cur = s1;
-                        for _ in 0..self.k_sib - 1 {
-                            if tree.is_full() {
-                                break;
-                            }
-                            let lg = draft.decode_one(cur)?;
-                            bc.advanced(&[cur]);
-                            st.stats.draft_calls += 1;
-                            let t = argmax(lg);
-                            let p = softmax_prob(lg, t as usize);
-                            sparent = tree.add_child(sparent, t, p, 0, p);
-                            if t == EOS {
-                                break;
-                            }
-                            cur = t;
-                        }
-                    }
-                }
-            }
-
-            // --- single-step tree verification ---
-            let t_shape = chain_step_shape(tree.len());
-            let out = target.verify_tree(&tree, t_shape)?;
-            st.stats.target_calls += 1;
-            let vocab = target.vocab();
-            let v = verify_greedy(&tree, &out.logits, vocab);
-            target.commit_slots(VERIFY_T, &v.accepted_slots)?;
-            let last = *v.accepted_slots.last().unwrap();
-            target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
-
-            matcher.truncate(committed_len);
-            matcher.extend(&[root]);
-            matcher.extend(&v.accepted_tokens);
-
-            let mut emitted = v.accepted_tokens.clone();
-            emitted.push(v.bonus);
-            st.emit(&emitted);
-        }
-
-        st.stats.wall = t0.elapsed();
-        Ok(Generation { tokens: st.out, stats: st.stats })
+        Ok(Box::new(TreeRun {
+            target,
+            draft,
+            matcher,
+            bc,
+            use_vc: self.use_vc,
+            k_main: self.k_main,
+            k_sib: self.k_sib,
+            inner_k: self.inner_k,
+            st,
+        }))
     }
 }

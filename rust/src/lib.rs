@@ -12,15 +12,17 @@
 //!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
 //! * **L3** — this crate: the serving coordinator. Backend-generic
 //!   execution runtime ([`runtime`]: a pure-Rust hermetic reference
-//!   backend plus the PJRT artifact backend behind the `pjrt` feature),
-//!   speculative-decoding core ([`spec`], [`pld`]), the
-//!   paper's DyTC scheduler ([`dytc`], [`engine::dytc`]), every baseline
-//!   engine ([`engine`]), the analytic EWIF machinery ([`analytic`]), the
-//!   synthetic Spec-Bench workload ([`workload`]), a threaded serving
-//!   front-end ([`server`]) and the bench harness ([`harness`]).
+//!   backend plus the PJRT artifact backend behind the `pjrt` feature,
+//!   with single-lane and batched step shapes), speculative-decoding core
+//!   ([`spec`], [`pld`]), the paper's DyTC scheduler ([`dytc`],
+//!   [`engine::dytc`]), every baseline engine ([`engine`], each with a
+//!   run-to-completion and a resumable per-round entry point), the
+//!   analytic EWIF machinery ([`analytic`]), the synthetic Spec-Bench
+//!   workload ([`workload`]), a continuous-batching serving front-end
+//!   ([`server`]) and the bench harness ([`harness`]).
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See docs/ARCHITECTURE.md for the paper-to-code map, the `Backend`
+//! bit-determinism contract, and the serving-loop dataflow.
 
 // Explicit index loops are used deliberately in the numeric hot paths:
 // they pin the exact summation order the reference backend's bit-exact

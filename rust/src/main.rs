@@ -67,6 +67,8 @@ FLAGS
   --n N               prompts per category        (default: 3)
   --max-new N         tokens to generate          (default: 64)
   --seed N            workload seed               (default: 42)
+  --max-batch N       serve: max concurrent requests per decode batch
+                      (continuous batching; default: 8, 1 = sequential)
   --config FILE       JSON config (see config/mod.rs)
   --markdown          emit tables as markdown
   --verbose           per-request progress lines
@@ -81,6 +83,7 @@ fn info(args: &Args) -> Result<()> {
     let m = &rt.manifest;
     println!("artifacts: {}", m.dir.display());
     println!("backend: {}", rt.backend_name());
+    println!("max_batch: {}", cfg.max_batch);
     println!("lang_seed: {}  vocab: {}", m.lang_seed, m.vocab);
     println!("step shapes: {:?}  commit shapes: {:?}", m.step_shapes, m.commit_shapes);
     for (name, sc) in &m.scales {

@@ -34,6 +34,22 @@
 //! per variant (the DyTC latency model consumes true end-to-end step
 //! costs), and the contiguous-commit fast path: a chain acceptance's KV
 //! rows are already in place, so commit is a position bump.
+//!
+//! # Batched steps
+//!
+//! For multi-request serving, [`Backend::step_batch`] executes one step
+//! for several independent *lanes* — `(variant, kv, pos, tokens)` tuples
+//! sharing a step shape — in a single backend call. The default
+//! implementation loops [`Backend::step`], so every backend (including
+//! PJRT) is batch-callable; the reference backend overrides it with a
+//! genuinely batched forward that streams each layer's shared weights
+//! once for the whole lane group while keeping per-lane KV caches. The
+//! contract is bit-exactness: batched logits and KV writes must be
+//! identical to per-lane `step` calls (`tests/batch_step.rs`), which is
+//! what makes greedy losslessness hold unchanged under continuous
+//! batching.
+
+#![warn(missing_docs)]
 
 pub mod reference;
 
@@ -59,9 +75,14 @@ pub const VERIFY_T: usize = 16;
 /// Execution-count/latency accounting, accumulated per variant.
 #[derive(Debug, Default, Clone)]
 pub struct VariantCounters {
+    /// Step calls executed (batched steps count once per lane).
     pub steps: u64,
+    /// Live (non-padding) tokens stepped.
     pub tokens_stepped: u64,
+    /// Gather-commit calls (contiguous fast-path commits excluded).
     pub commits: u64,
+    /// Wall-clock spent in steps/commits (batched steps split evenly
+    /// across their lanes' variants).
     pub time: Duration,
 }
 
@@ -77,17 +98,44 @@ pub enum KvState {
 
 /// A KV cache handle: backend storage + committed length.
 pub struct KvCache {
+    /// Backend-owned storage (host vector or device buffer).
     pub state: KvState,
+    /// Number of committed tokens (rows below this are attended).
     pub pos: usize,
+    /// The DSIA variant this cache belongs to.
     pub variant: Variant,
 }
 
+/// Result of one step call.
 pub struct StepOutput {
     /// Row-major (T, vocab) logits. Rows past the live token count are
     /// never read by verification; their content is backend-defined (the
     /// reference backend zero-fills them, the PJRT graphs compute them).
     pub logits: Vec<f32>,
+    /// End-to-end wall-clock of the backend call. For a batched step this
+    /// is the whole batch's elapsed time (per-lane cost is not separable
+    /// inside a fused forward).
     pub elapsed: Duration,
+}
+
+/// One lane of a [`Backend::step_batch`] call: a variant's KV cache plus
+/// the serialized tree-step inputs for that lane. All lanes of a call
+/// share the step shape `t_shape`; everything else is per-lane.
+pub struct LaneStep<'a> {
+    /// Which DSIA variant this lane steps.
+    pub variant: Variant,
+    /// The lane's KV storage (live KV is written at `pos .. pos + live`).
+    pub kv: &'a mut KvState,
+    /// The lane's committed length.
+    pub pos: usize,
+    /// Number of live (non-padding) tree slots in this lane.
+    pub live: usize,
+    /// Tree-slot tokens, length == the call's `t_shape`.
+    pub tokens: &'a [u32],
+    /// Row-major (t_shape, t_shape) ancestor mask.
+    pub mask: &'a [f32],
+    /// Per-slot tree depths.
+    pub depths: &'a [i32],
 }
 
 /// The device operations a serving backend must provide.
@@ -133,6 +181,30 @@ pub trait Backend {
         src_abs: &[usize],
         dst_pos: usize,
     ) -> Result<()>;
+
+    /// Execute one step of `t_shape` in-flight tokens for several
+    /// independent lanes at once (the continuous-batching step shape).
+    /// Each lane keeps its own KV cache, committed length and tree
+    /// inputs, and receives its own row-major (t_shape, vocab) logits —
+    /// **bit-identical** to what a per-lane [`Backend::step`] call would
+    /// produce (`tests/batch_step.rs` enforces this).
+    ///
+    /// The default implementation loops `step` per lane, so every
+    /// backend is batch-callable; backends that can amortize weight
+    /// reads across lanes (the reference backend) override it.
+    fn step_batch(
+        &self,
+        t_shape: usize,
+        lanes: &mut [LaneStep<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(lanes.len());
+        for l in lanes.iter_mut() {
+            out.push(self.step(
+                l.variant, l.kv, l.pos, t_shape, l.live, l.tokens, l.mask, l.depths,
+            )?);
+        }
+        Ok(out)
+    }
 }
 
 /// Which backend to open (CLI `--backend`, config `backend`, or
@@ -149,6 +221,7 @@ pub enum BackendSelect {
 }
 
 impl BackendSelect {
+    /// Parse a `--backend` / config value ("auto" | "ref" | "pjrt").
     pub fn parse(s: &str) -> Result<BackendSelect> {
         match s {
             "auto" | "" => Ok(BackendSelect::Auto),
@@ -176,6 +249,7 @@ enum RuntimeKind {
 /// The top-level runtime: a model contract (manifest) plus the means to
 /// load per-scale backends.
 pub struct Runtime {
+    /// The model contract (scales, variants, artifact file names).
     pub manifest: Manifest,
     kind: RuntimeKind,
     #[cfg(feature = "pjrt")]
@@ -278,16 +352,35 @@ impl Runtime {
 
 /// One fully-loaded model scale: a backend plus per-variant accounting.
 pub struct ScaleRuntime {
+    /// Scale hyper-parameters (dims, s_max, vocab, variant layer lists).
     pub info: ScaleInfo,
     backend: Box<dyn Backend>,
     counters: BTreeMap<Variant, RefCell<VariantCounters>>,
 }
 
+/// One lane of a [`ScaleRuntime::step_batch`] call. The cache handle
+/// carries the lane's variant and committed position; the tree inputs are
+/// owned so callers can serialize each lane's tree independently.
+pub struct BatchLane<'a> {
+    /// The lane's cache handle.
+    pub kv: &'a mut KvCache,
+    /// Number of live (non-padding) tree slots.
+    pub live: usize,
+    /// Serialized tree-slot tokens (length == the call's `t_shape`).
+    pub tokens: Vec<u32>,
+    /// Row-major (t_shape, t_shape) ancestor mask.
+    pub mask: Vec<f32>,
+    /// Per-slot tree depths.
+    pub depths: Vec<i32>,
+}
+
 impl ScaleRuntime {
+    /// Short identifier of the live backend ("ref" / "pjrt").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
 
+    /// Variants this scale was loaded with.
     pub fn loaded_variants(&self) -> Vec<Variant> {
         self.counters.keys().copied().collect()
     }
@@ -346,6 +439,76 @@ impl ScaleRuntime {
         Ok(StepOutput { logits, elapsed })
     }
 
+    /// Execute one step of `t_shape` tokens for several lanes in a single
+    /// backend call ([`Backend::step_batch`]). Per-lane results are
+    /// bit-identical to per-lane [`ScaleRuntime::step`] calls; the backend
+    /// only amortizes weight reads across lanes. Counter wall-clock is
+    /// split evenly across the lanes' variants (per-lane cost is not
+    /// separable inside a fused batch); every [`StepOutput::elapsed`]
+    /// reports the whole batch's elapsed time.
+    pub fn step_batch(
+        &self,
+        t_shape: usize,
+        lanes: &mut [BatchLane<'_>],
+    ) -> Result<Vec<StepOutput>> {
+        if lanes.is_empty() {
+            return Ok(Vec::new());
+        }
+        assert!(STEP_SHAPES.contains(&t_shape), "unknown step shape {t_shape}");
+        for l in lanes.iter() {
+            assert_eq!(l.tokens.len(), t_shape, "lane tokens len != step shape");
+            assert_eq!(l.mask.len(), t_shape * t_shape, "lane mask len != T^2");
+            assert_eq!(l.depths.len(), t_shape, "lane depths len != T");
+            assert!((1..=t_shape).contains(&l.live), "lane live outside 1..={t_shape}");
+            assert!(
+                l.kv.pos + t_shape <= self.info.s_max,
+                "KV overflow: pos {} + T {} > s_max {}",
+                l.kv.pos,
+                t_shape,
+                self.info.s_max
+            );
+        }
+
+        let start = Instant::now();
+        let mut backend_lanes: Vec<LaneStep<'_>> = lanes
+            .iter_mut()
+            .map(|l| {
+                let variant = l.kv.variant;
+                let pos = l.kv.pos;
+                LaneStep {
+                    variant,
+                    kv: &mut l.kv.state,
+                    pos,
+                    live: l.live,
+                    tokens: &l.tokens,
+                    mask: &l.mask,
+                    depths: &l.depths,
+                }
+            })
+            .collect();
+        let logits = self.backend.step_batch(t_shape, &mut backend_lanes)?;
+        drop(backend_lanes);
+        let elapsed = start.elapsed();
+        debug_assert_eq!(logits.len(), lanes.len(), "one logits block per lane");
+
+        let share = elapsed / lanes.len() as u32;
+        for l in lanes.iter() {
+            if let Some(c) = self.counters.get(&l.kv.variant) {
+                let mut c = c.borrow_mut();
+                c.steps += 1;
+                c.tokens_stepped += l.live as u64;
+                c.time += share;
+            }
+        }
+        Ok(logits
+            .into_iter()
+            .map(|lg| {
+                debug_assert_eq!(lg.len(), t_shape * self.info.vocab, "lane logits shape");
+                StepOutput { logits: lg, elapsed }
+            })
+            .collect())
+    }
+
     /// Compact accepted tree slots after a tree verification.
     ///
     /// `src_slots[i]` is the tree-slot index whose KV becomes committed
@@ -392,6 +555,7 @@ impl ScaleRuntime {
         kv.pos = pos;
     }
 
+    /// Snapshot of a variant's accumulated step/commit accounting.
     pub fn counters(&self, v: Variant) -> VariantCounters {
         self.counters
             .get(&v)
@@ -399,6 +563,7 @@ impl ScaleRuntime {
             .unwrap_or_default()
     }
 
+    /// Zero all variants' accounting (between bench phases).
     pub fn reset_counters(&self) {
         for c in self.counters.values() {
             *c.borrow_mut() = VariantCounters::default();

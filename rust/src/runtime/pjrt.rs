@@ -21,6 +21,13 @@
 //!     call, so the DyTC latency model sees true end-to-end step costs.
 //!   * **Commit calls** compact accepted tree slots into contiguous cache
 //!     positions after a tree verification (see `spec::verify`).
+//!   * **Batched steps.** This backend keeps the trait's default
+//!     [`Backend::step_batch`] (loop per lane): the AOT step graphs are
+//!     lowered per `(variant, T)` with a single KV operand, so true
+//!     multi-lane fusion needs batched HLO graphs from `aot.py` first.
+//!     Correctness is unaffected — the default is bit-identical to
+//!     per-lane `step` by construction — only the weight-read amortization
+//!     of the reference backend's override is missing.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;

@@ -13,8 +13,15 @@
 //! attended set in position order — committed cache rows first, then
 //! in-flight ancestor slots ascending. A token therefore produces
 //! bit-identical logits and KV rows whether it is decoded at T=1, chunked
-//! through a T=64 prefill, or verified inside a tree — which is what the
-//! lossless test suite exercises end-to-end for all engines.
+//! through a T=64 prefill, verified inside a tree — or stepped as one lane
+//! of a batched call — which is what the lossless test suite and
+//! `tests/batch_step.rs` exercise end-to-end.
+//!
+//! Batched steps ([`super::Backend::step_batch`]) run the forward with the
+//! layer loop outermost and the lane loop inside: each layer's weights are
+//! streamed through the cache hierarchy once for the whole lane group
+//! instead of once per lane, while rows never mix across lanes (per-lane
+//! KV, per-lane attention), so bit-exactness is structural.
 //!
 //! DSIA variants are parameter *subsets* of the target: layer weights are
 //! `Rc`-shared across variants, mirroring the PJRT backend's shared device
@@ -28,7 +35,7 @@ use anyhow::{anyhow, Result};
 use crate::model::weights::Weights;
 use crate::model::{ScaleInfo, Variant, VariantInfo};
 
-use super::{Backend, KvState};
+use super::{Backend, KvState, LaneStep};
 
 /// Per-layer weights in row-major `(in, out)` layout (x @ W convention).
 struct Layer {
@@ -263,6 +270,268 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Extract the host-resident cache vector from a KV handle.
+fn host_cache_mut(kv: &mut KvState) -> Result<&mut Vec<f32>> {
+    match kv {
+        KvState::Host(c) => Ok(c),
+        #[cfg(feature = "pjrt")]
+        _ => Err(anyhow!("reference backend received a foreign KV cache")),
+    }
+}
+
+/// Per-lane working state inside a (possibly batched) forward pass: the
+/// lane's inputs plus its private activation buffers. Rows never mix
+/// across lanes; only weight *reads* are shared.
+struct LaneRun<'a> {
+    cache: &'a mut Vec<f32>,
+    pos: usize,
+    t_shape: usize,
+    live: usize,
+    tokens: &'a [u32],
+    mask: &'a [f32],
+    depths: &'a [i32],
+    /// (live, d) residual stream.
+    h: Vec<f32>,
+    /// (live, 3d) fused qkv projections of the current layer.
+    qkv: Vec<f32>,
+    /// (live, d) LN scratch.
+    hn: Vec<f32>,
+    /// (live, d) attention outputs.
+    attn: Vec<f32>,
+}
+
+impl<'a> LaneRun<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        cache: &'a mut Vec<f32>,
+        pos: usize,
+        t_shape: usize,
+        live: usize,
+        tokens: &'a [u32],
+        mask: &'a [f32],
+        depths: &'a [i32],
+    ) -> Self {
+        LaneRun {
+            cache,
+            pos,
+            t_shape,
+            live,
+            tokens,
+            mask,
+            depths,
+            h: Vec::new(),
+            qkv: Vec::new(),
+            hn: Vec::new(),
+            attn: Vec::new(),
+        }
+    }
+}
+
+impl RefBackend {
+    /// Run the forward pass for a group of lanes that all execute
+    /// variant `v`'s layer stack. The layer loop is outermost so each
+    /// layer's (`Rc`-shared) weights are streamed once per layer for the
+    /// whole group — the batched-serving memory win — while every per-row
+    /// operation keeps the exact arithmetic and summation order of a
+    /// single-lane step, so per-lane results are bit-identical to solo
+    /// steps by construction.
+    fn forward_lanes(&self, v: Variant, lanes: &mut [LaneRun<'_>]) -> Result<Vec<Vec<f32>>> {
+        let var = self.variant(v)?;
+        let (d, nh, dh) = (self.info.d_model, self.info.n_heads, self.info.d_head);
+        let (s, vocab) = (self.info.s_max, self.info.vocab);
+        let dh2 = 4 * d;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let plane = 2 * nh * s * dh; // elems per layer in the cache
+        let head = s * dh; // elems per head within a k/v plane
+        let expect: usize = var.info.kv_shape.iter().product();
+
+        // ---- validate + embed each lane: h = emb[tok] + pos_emb[...] ----
+        for ln in lanes.iter_mut() {
+            if ln.cache.len() != expect {
+                return Err(anyhow!(
+                    "kv cache has {} elems, expected {expect}",
+                    ln.cache.len()
+                ));
+            }
+            if ln.tokens.len() != ln.t_shape
+                || ln.live == 0
+                || ln.live > ln.t_shape
+                || ln.pos + ln.live > s
+            {
+                return Err(anyhow!(
+                    "lane shape mismatch: tokens {}, t_shape {}, live {}, pos {}, s_max {s}",
+                    ln.tokens.len(),
+                    ln.t_shape,
+                    ln.live,
+                    ln.pos
+                ));
+            }
+            for &tok in &ln.tokens[..ln.live] {
+                if tok as usize >= vocab {
+                    return Err(anyhow!("token {tok} out of vocab {vocab}"));
+                }
+            }
+            let t = ln.live;
+            ln.h = vec![0f32; t * d];
+            for i in 0..t {
+                let tok = ln.tokens[i] as usize;
+                let pid =
+                    (ln.pos as i64 + ln.depths[i] as i64).clamp(0, s as i64 - 1) as usize;
+                let dst = &mut ln.h[i * d..(i + 1) * d];
+                let e = &self.emb[tok * d..(tok + 1) * d];
+                let pe = &self.pos_emb[pid * d..(pid + 1) * d];
+                for j in 0..d {
+                    dst[j] = e[j] + pe[j];
+                }
+            }
+            ln.qkv = vec![0f32; t * 3 * d];
+            ln.hn = vec![0f32; t * d];
+            ln.attn = vec![0f32; t * d];
+        }
+
+        // shared small scratch, fully overwritten before each use
+        let mut proj = vec![0f32; d];
+        let mut mlp = vec![0f32; dh2];
+        let mut scores: Vec<f32> = Vec::new();
+
+        for (li, layer) in var.layers.iter().enumerate() {
+            let kbase = li * plane;
+            let vbase = kbase + nh * head;
+            for ln in lanes.iter_mut() {
+                let t = ln.live;
+                ln_rows(&ln.h, &layer.ln1_g, &layer.ln1_b, &mut ln.hn, t, d);
+                matmul_bias(&ln.hn, &layer.wqkv, &layer.bqkv, &mut ln.qkv, t, d, 3 * d);
+
+                // --- tree attention: committed cache rows, then ancestors ---
+                for i in 0..t {
+                    let mrow = &ln.mask[i * ln.t_shape..i * ln.t_shape + ln.t_shape];
+                    for hh in 0..nh {
+                        let q = &ln.qkv[i * 3 * d + hh * dh..][..dh];
+                        scores.clear();
+                        let mut mx = f32::NEG_INFINITY;
+                        for sp in 0..ln.pos {
+                            let kr = &ln.cache[kbase + hh * head + sp * dh..][..dh];
+                            let sc = dot(q, kr) * scale;
+                            scores.push(sc);
+                            mx = mx.max(sc);
+                        }
+                        for j in 0..t {
+                            if mrow[j] > 0.5 {
+                                let kr = &ln.qkv[j * 3 * d + d + hh * dh..][..dh];
+                                let sc = dot(q, kr) * scale;
+                                scores.push(sc);
+                                mx = mx.max(sc);
+                            }
+                        }
+                        let mut denom = 0f32;
+                        for sc in scores.iter_mut() {
+                            *sc = (*sc - mx).exp();
+                            denom += *sc;
+                        }
+                        let inv = 1.0 / denom;
+                        let out = &mut ln.attn[i * d + hh * dh..][..dh];
+                        out.fill(0.0);
+                        let mut idx = 0;
+                        for sp in 0..ln.pos {
+                            let wgt = scores[idx] * inv;
+                            idx += 1;
+                            let vr = &ln.cache[vbase + hh * head + sp * dh..][..dh];
+                            for x in 0..dh {
+                                out[x] += wgt * vr[x];
+                            }
+                        }
+                        for j in 0..t {
+                            if mrow[j] > 0.5 {
+                                let wgt = scores[idx] * inv;
+                                idx += 1;
+                                let vr = &ln.qkv[j * 3 * d + 2 * d + hh * dh..][..dh];
+                                for x in 0..dh {
+                                    out[x] += wgt * vr[x];
+                                }
+                            }
+                        }
+                    }
+                }
+
+                // h = (h + attn @ wo) + bo
+                for i in 0..t {
+                    matvec(&ln.attn[i * d..(i + 1) * d], &layer.wo, &mut proj, d, d);
+                    let hr = &mut ln.h[i * d..(i + 1) * d];
+                    for j in 0..d {
+                        hr[j] = (hr[j] + proj[j]) + layer.bo[j];
+                    }
+                }
+
+                // h = (h + gelu(ln2(h) @ wi + bi) @ wo2) + bo2
+                ln_rows(&ln.h, &layer.ln2_g, &layer.ln2_b, &mut ln.hn, t, d);
+                for i in 0..t {
+                    matvec(&ln.hn[i * d..(i + 1) * d], &layer.wi, &mut mlp, d, dh2);
+                    for (o, bv) in mlp.iter_mut().zip(&layer.bi) {
+                        *o = gelu(*o + bv);
+                    }
+                    matvec(&mlp, &layer.wo2, &mut proj, dh2, d);
+                    let hr = &mut ln.h[i * d..(i + 1) * d];
+                    for j in 0..d {
+                        hr[j] = (hr[j] + proj[j]) + layer.bo2[j];
+                    }
+                }
+
+                // write this layer's live-token KV at slots pos..pos+t (junk
+                // beyond the accepted prefix is compacted away by commit and
+                // never attended past `pos`)
+                for i in 0..t {
+                    for hh in 0..nh {
+                        let kq = &ln.qkv[i * 3 * d + d + hh * dh..][..dh];
+                        ln.cache[kbase + hh * head + (ln.pos + i) * dh..][..dh]
+                            .copy_from_slice(kq);
+                        let vq = &ln.qkv[i * 3 * d + 2 * d + hh * dh..][..dh];
+                        ln.cache[vbase + hh * head + (ln.pos + i) * dh..][..dh]
+                            .copy_from_slice(vq);
+                    }
+                }
+            }
+        }
+
+        // ---- per-lane epilogue: EE adapter, final LN, tied logits ----
+        let mut outs = Vec::with_capacity(lanes.len());
+        for ln in lanes.iter_mut() {
+            let t = ln.live;
+
+            // early-exit adapter (ee variant only): h += ln(h) @ w + b
+            if v == Variant::Ee {
+                let ee = self
+                    .ee
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("ee adapter not loaded"))?;
+                ln_rows(&ln.h, &ee.ln_g, &ee.ln_b, &mut ln.hn, t, d);
+                for i in 0..t {
+                    matvec(&ln.hn[i * d..(i + 1) * d], &ee.w, &mut proj, d, d);
+                    let hr = &mut ln.h[i * d..(i + 1) * d];
+                    for j in 0..d {
+                        hr[j] = (hr[j] + proj[j]) + ee.b[j];
+                    }
+                }
+            }
+
+            // final LN + tied-embedding logits; pad rows stay zero
+            ln_rows(&ln.h, &self.lnf_g, &self.lnf_b, &mut ln.hn, t, d);
+            let mut logits = vec![0f32; ln.t_shape * vocab];
+            for i in 0..t {
+                let row = &mut logits[i * vocab..(i + 1) * vocab];
+                for j in 0..d {
+                    let x = ln.hn[i * d + j];
+                    let er = &self.emb_t[j * vocab..(j + 1) * vocab];
+                    for o in 0..vocab {
+                        row[o] += x * er[o];
+                    }
+                }
+            }
+            outs.push(logits);
+        }
+        Ok(outs)
+    }
+}
+
 impl Backend for RefBackend {
     fn name(&self) -> &'static str {
         "ref"
@@ -289,174 +558,52 @@ impl Backend for RefBackend {
         mask: &[f32],
         depths: &[i32],
     ) -> Result<Vec<f32>> {
-        let var = self.variant(v)?;
-        let (d, nh, dh) = (self.info.d_model, self.info.n_heads, self.info.d_head);
-        let (s, vocab) = (self.info.s_max, self.info.vocab);
-        let dh2 = 4 * d;
-        let t = live;
-        let cache = match kv {
-            KvState::Host(c) => c,
-            #[cfg(feature = "pjrt")]
-            _ => return Err(anyhow!("reference backend received a foreign KV cache")),
-        };
-        let expect: usize = var.info.kv_shape.iter().product();
-        if cache.len() != expect {
-            return Err(anyhow!("kv cache has {} elems, expected {expect}", cache.len()));
-        }
-        for &tok in &tokens[..t] {
-            if tok as usize >= vocab {
-                return Err(anyhow!("token {tok} out of vocab {vocab}"));
+        let cache = host_cache_mut(kv)?;
+        let mut lanes = [LaneRun::new(cache, pos, t_shape, live, tokens, mask, depths)];
+        Ok(self
+            .forward_lanes(v, &mut lanes)?
+            .pop()
+            .expect("single-lane forward returns one logits block"))
+    }
+
+    fn step_batch(
+        &self,
+        t_shape: usize,
+        lanes: &mut [LaneStep<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        // Group lanes by variant (preserving intra-group order) so each
+        // group shares one layer-outer forward; the common serving case —
+        // many requests in the same phase, hence the same variant — gets
+        // the full weight-sharing win. Output order is restored at the end.
+        let mut variants: Vec<Variant> = Vec::new();
+        for l in lanes.iter() {
+            if !variants.contains(&l.variant) {
+                variants.push(l.variant);
             }
         }
-
-        let scale = 1.0 / (dh as f32).sqrt();
-        let plane = 2 * nh * s * dh; // elems per layer in the cache
-        let head = s * dh; // elems per head within a k/v plane
-
-        // h = emb[token] + pos_emb[clip(pos + depth)]
-        let mut h = vec![0f32; t * d];
-        for i in 0..t {
-            let tok = tokens[i] as usize;
-            let pid = (pos as i64 + depths[i] as i64).clamp(0, s as i64 - 1) as usize;
-            let dst = &mut h[i * d..(i + 1) * d];
-            let e = &self.emb[tok * d..(tok + 1) * d];
-            let pe = &self.pos_emb[pid * d..(pid + 1) * d];
-            for j in 0..d {
-                dst[j] = e[j] + pe[j];
+        let mut out: Vec<Option<Vec<f32>>> = (0..lanes.len()).map(|_| None).collect();
+        for v in variants {
+            let mut idx: Vec<usize> = Vec::new();
+            let mut group: Vec<LaneRun<'_>> = Vec::new();
+            for (i, l) in lanes.iter_mut().enumerate() {
+                if l.variant != v {
+                    continue;
+                }
+                let cache = host_cache_mut(l.kv)?;
+                group.push(LaneRun::new(
+                    cache, l.pos, t_shape, l.live, l.tokens, l.mask, l.depths,
+                ));
+                idx.push(i);
+            }
+            let outs = self.forward_lanes(v, &mut group)?;
+            for (i, o) in idx.into_iter().zip(outs) {
+                out[i] = Some(o);
             }
         }
-
-        // reusable scratch
-        let mut hn = vec![0f32; t * d];
-        let mut qkv = vec![0f32; t * 3 * d];
-        let mut attn = vec![0f32; t * d];
-        let mut proj = vec![0f32; d];
-        let mut mlp = vec![0f32; dh2];
-        let mut scores: Vec<f32> = Vec::with_capacity(pos + t);
-
-        for (vi, layer) in var.layers.iter().enumerate() {
-            ln_rows(&h, &layer.ln1_g, &layer.ln1_b, &mut hn, t, d);
-            matmul_bias(&hn, &layer.wqkv, &layer.bqkv, &mut qkv, t, d, 3 * d);
-
-            // --- tree attention: committed cache rows, then ancestors ---
-            let kbase = vi * plane;
-            let vbase = kbase + nh * head;
-            for i in 0..t {
-                let mrow = &mask[i * t_shape..i * t_shape + t_shape];
-                for hh in 0..nh {
-                    let q = &qkv[i * 3 * d + hh * dh..][..dh];
-                    scores.clear();
-                    let mut mx = f32::NEG_INFINITY;
-                    for sp in 0..pos {
-                        let kr = &cache[kbase + hh * head + sp * dh..][..dh];
-                        let sc = dot(q, kr) * scale;
-                        scores.push(sc);
-                        mx = mx.max(sc);
-                    }
-                    for j in 0..t {
-                        if mrow[j] > 0.5 {
-                            let kr = &qkv[j * 3 * d + d + hh * dh..][..dh];
-                            let sc = dot(q, kr) * scale;
-                            scores.push(sc);
-                            mx = mx.max(sc);
-                        }
-                    }
-                    let mut denom = 0f32;
-                    for sc in scores.iter_mut() {
-                        *sc = (*sc - mx).exp();
-                        denom += *sc;
-                    }
-                    let inv = 1.0 / denom;
-                    let out = &mut attn[i * d + hh * dh..][..dh];
-                    out.fill(0.0);
-                    let mut idx = 0;
-                    for sp in 0..pos {
-                        let wgt = scores[idx] * inv;
-                        idx += 1;
-                        let vr = &cache[vbase + hh * head + sp * dh..][..dh];
-                        for x in 0..dh {
-                            out[x] += wgt * vr[x];
-                        }
-                    }
-                    for j in 0..t {
-                        if mrow[j] > 0.5 {
-                            let wgt = scores[idx] * inv;
-                            idx += 1;
-                            let vr = &qkv[j * 3 * d + 2 * d + hh * dh..][..dh];
-                            for x in 0..dh {
-                                out[x] += wgt * vr[x];
-                            }
-                        }
-                    }
-                }
-            }
-
-            // h = (h + attn @ wo) + bo
-            for i in 0..t {
-                matvec(&attn[i * d..(i + 1) * d], &layer.wo, &mut proj, d, d);
-                let hr = &mut h[i * d..(i + 1) * d];
-                for j in 0..d {
-                    hr[j] = (hr[j] + proj[j]) + layer.bo[j];
-                }
-            }
-
-            // h = (h + gelu(ln2(h) @ wi + bi) @ wo2) + bo2
-            ln_rows(&h, &layer.ln2_g, &layer.ln2_b, &mut hn, t, d);
-            for i in 0..t {
-                matvec(&hn[i * d..(i + 1) * d], &layer.wi, &mut mlp, d, dh2);
-                for (o, bv) in mlp.iter_mut().zip(&layer.bi) {
-                    *o = gelu(*o + bv);
-                }
-                matvec(&mlp, &layer.wo2, &mut proj, dh2, d);
-                let hr = &mut h[i * d..(i + 1) * d];
-                for j in 0..d {
-                    hr[j] = (hr[j] + proj[j]) + layer.bo2[j];
-                }
-            }
-
-            // write this layer's live-token KV at slots pos..pos+t (junk
-            // beyond the accepted prefix is compacted away by commit and
-            // never attended past `pos`)
-            for i in 0..t {
-                for hh in 0..nh {
-                    let kq = &qkv[i * 3 * d + d + hh * dh..][..dh];
-                    cache[kbase + hh * head + (pos + i) * dh..][..dh].copy_from_slice(kq);
-                    let vq = &qkv[i * 3 * d + 2 * d + hh * dh..][..dh];
-                    cache[vbase + hh * head + (pos + i) * dh..][..dh].copy_from_slice(vq);
-                }
-            }
-        }
-
-        // early-exit adapter (ee variant only): h += ln(h) @ w + b
-        if v == Variant::Ee {
-            let ee = self
-                .ee
-                .as_ref()
-                .ok_or_else(|| anyhow!("ee adapter not loaded"))?;
-            ln_rows(&h, &ee.ln_g, &ee.ln_b, &mut hn, t, d);
-            for i in 0..t {
-                matvec(&hn[i * d..(i + 1) * d], &ee.w, &mut proj, d, d);
-                let hr = &mut h[i * d..(i + 1) * d];
-                for j in 0..d {
-                    hr[j] = (hr[j] + proj[j]) + ee.b[j];
-                }
-            }
-        }
-
-        // final LN + tied-embedding logits; pad rows stay zero
-        ln_rows(&h, &self.lnf_g, &self.lnf_b, &mut hn, t, d);
-        let mut logits = vec![0f32; t_shape * vocab];
-        for i in 0..t {
-            let row = &mut logits[i * vocab..(i + 1) * vocab];
-            for j in 0..d {
-                let x = hn[i * d + j];
-                let er = &self.emb_t[j * vocab..(j + 1) * vocab];
-                for o in 0..vocab {
-                    row[o] += x * er[o];
-                }
-            }
-        }
-        Ok(logits)
+        Ok(out
+            .into_iter()
+            .map(|o| o.expect("every lane belongs to exactly one variant group"))
+            .collect())
     }
 
     fn gather_commit(
@@ -470,11 +617,7 @@ impl Backend for RefBackend {
         let var = self.variant(v)?;
         let (nh, dh, s) = (self.info.n_heads, self.info.d_head, self.info.s_max);
         let nl = var.info.kv_shape[0];
-        let cache = match kv {
-            KvState::Host(c) => c,
-            #[cfg(feature = "pjrt")]
-            _ => return Err(anyhow!("reference backend received a foreign KV cache")),
-        };
+        let cache = host_cache_mut(kv)?;
         if src_abs.len() != t_shape {
             return Err(anyhow!("commit indices len {} != {t_shape}", src_abs.len()));
         }
@@ -563,6 +706,55 @@ mod tests {
         assert_eq!(logits.len(), 8 * vocab);
         assert!(logits[2 * vocab..].iter().all(|x| *x == 0.0));
         assert!(logits[..2 * vocab].iter().any(|x| *x != 0.0));
+    }
+
+    #[test]
+    fn batched_lanes_match_solo_steps_bitwise() {
+        // the overridden step_batch (layer-outer, lane-inner) must equal
+        // per-lane step calls bit-for-bit, including mixed variants
+        let be = backend();
+        let specs: [(Variant, Vec<u32>); 3] = [
+            (Variant::Target, vec![1, 30, 40]),
+            (Variant::Ls40, vec![2, 31]),
+            (Variant::Target, vec![5, 33, 44, 55]),
+        ];
+
+        // solo path
+        let mut solo_logits = Vec::new();
+        let mut solo_caches = Vec::new();
+        for (v, toks) in &specs {
+            let mut kv = be.new_kv(*v).unwrap();
+            let (t8, m8, d8) = chain_inputs(toks, 8);
+            let lg = be.step(*v, &mut kv, 0, 8, toks.len(), &t8, &m8, &d8).unwrap();
+            solo_logits.push(lg);
+            solo_caches.push(host(&kv).to_vec());
+        }
+
+        // batched path
+        let mut kvs: Vec<KvState> = specs.iter().map(|(v, _)| be.new_kv(*v).unwrap()).collect();
+        let inputs: Vec<(Vec<u32>, Vec<f32>, Vec<i32>)> =
+            specs.iter().map(|(_, toks)| chain_inputs(toks, 8)).collect();
+        let mut lanes: Vec<LaneStep<'_>> = kvs
+            .iter_mut()
+            .zip(specs.iter())
+            .zip(inputs.iter())
+            .map(|((kv, (v, toks)), (t8, m8, d8))| LaneStep {
+                variant: *v,
+                kv,
+                pos: 0,
+                live: toks.len(),
+                tokens: t8,
+                mask: m8,
+                depths: d8,
+            })
+            .collect();
+        let batched = be.step_batch(8, &mut lanes).unwrap();
+        drop(lanes);
+
+        for i in 0..specs.len() {
+            assert_eq!(batched[i], solo_logits[i], "lane {i} logits diverged");
+            assert_eq!(host(&kvs[i]), &solo_caches[i][..], "lane {i} KV diverged");
+        }
     }
 
     #[test]

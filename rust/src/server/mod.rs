@@ -1,30 +1,57 @@
-//! Serving front-end: a threaded TCP server with a dynamic request queue.
+//! Serving front-end: a threaded TCP server with a continuous-batching
+//! scheduler.
 //!
 //! The worker opens the runtime through the backend-generic layer
 //! (`runtime::Backend`): with PJRT artifacts it serves the AOT graphs;
 //! without them it falls back to the hermetic pure-Rust reference backend
 //! (selection order documented in `runtime`), so the server — and its
-//! integration test — runs with no artifacts at all. `stats` reports which
-//! backend is live.
+//! integration tests — runs with no artifacts at all. `stats` reports
+//! which backend is live.
 //!
-//! Architecture (backend handles, e.g. PJRT buffers, are not `Send`, so
-//! the model lives on a dedicated worker thread):
+//! # Architecture
+//!
+//! Backend handles (e.g. PJRT buffers) are not `Send`, so the model lives
+//! on a dedicated worker thread:
 //!
 //!   * **acceptor** — accepts TCP connections; one lightweight reader
 //!     thread per connection parses newline-delimited JSON requests and
 //!     enqueues them;
-//!   * **scheduler queue** — an mpsc channel acting as the dynamic batcher:
-//!     requests from all connections interleave FIFO, so one slow client
-//!     cannot monopolize the engine between its own requests;
-//!   * **worker** — owns the PJRT runtime + engine; drains the queue,
-//!     generates, and replies through per-request channels.
+//!   * **admission queue** — an mpsc channel feeding the scheduler; jobs
+//!     from all connections interleave FIFO;
+//!   * **scheduler (worker thread)** — owns the runtime + engine and runs
+//!     the continuous-batching loop: it admits queued requests into a
+//!     *running batch* of up to `max_batch` per-request
+//!     [`crate::engine::RequestRun`]s (each with its own
+//!     `VariantSession` KV state), advances every active request by **one
+//!     speculation round** per cycle, and retires finished requests
+//!     immediately — so requests join and leave the batch at round
+//!     boundaries instead of waiting for each other, and each reply goes
+//!     out on its own channel the moment its request completes.
 //!
-//! Protocol (one JSON object per line):
-//!   -> {"id": 1, "prompt": [1, 30, ...], "max_new": 64}
-//!   <- {"id": 1, "tokens": [...], "ms": 123.4, "rounds": 17,
-//!       "mean_accepted": 3.4, "engine": "cas-spec", "text": "a1 a2 ..."}
-//!   -> {"cmd": "stats"}   |   {"cmd": "shutdown"}
+//! Greedy losslessness is preserved under batching by construction:
+//! per-request KV state is fully isolated in its run, and the engines'
+//! round code is the same code `generate` runs sequentially.
+//!
+//! # Wire protocol
+//!
+//! One JSON object per line (documented in README.md §Server protocol):
+//!
+//! ```text
+//! -> {"id": 1, "prompt": [1, 30, ...], "max_new": 64}
+//! <- {"id": 1, "tokens": [...], "text": "a1 ...", "ms": 123.4,
+//!     "queued_ms": 0.2, "rounds": 17, "mean_accepted": 3.4,
+//!     "batch": 3, "engine": "cas-spec"}
+//! -> {"cmd": "stats"}
+//! <- {"served": 12, "errors": 0, "total_tokens": 768, "total_secs": 1.9,
+//!     "tok_s": 404.2, "queue_depth": 0, "running": 3, "peak_batch": 4,
+//!     "max_batch": 8, "engine": "cas-spec", "scale": "base",
+//!     "backend": "ref"}
+//! -> {"cmd": "shutdown"}   <- {"ok": true}
+//! ```
 
+#![warn(missing_docs)]
+
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -35,13 +62,17 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
-use crate::engine::{build_engine, required_variants};
+use crate::engine::{build_engine, required_variants, Engine, RequestRun};
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 
+/// One parsed generate request.
 pub struct Request {
+    /// Client-chosen request id, echoed back in the response.
     pub id: u64,
+    /// Prompt tokens (non-empty).
     pub prompt: Vec<u32>,
+    /// Token budget for the generation.
     pub max_new: usize,
 }
 
@@ -51,66 +82,65 @@ enum Job {
     Shutdown,
 }
 
+/// A queued request waiting for a batch slot.
+struct Queued {
+    req: Request,
+    reply: mpsc::Sender<String>,
+    enqueued: Instant,
+}
+
+/// A request admitted into the running batch.
+struct Active<'e> {
+    id: u64,
+    reply: mpsc::Sender<String>,
+    run: Box<dyn RequestRun + 'e>,
+    /// Milliseconds spent waiting in the admission queue.
+    queued_ms: f64,
+    /// Admission time (service time = now - started at completion).
+    started: Instant,
+}
+
+/// Aggregate serving counters reported by `stats`.
+#[derive(Default)]
+struct SchedCounters {
+    served: u64,
+    errors: u64,
+    total_tokens: u64,
+    /// Worker busy seconds: prompt prefill (inside `Engine::begin`) plus
+    /// decode-round time. Aggregate throughput = total_tokens / busy_secs
+    /// — overlapping requests are not double-counted the way per-request
+    /// wall times would be.
+    busy_secs: f64,
+    /// High-water mark of the running batch size.
+    peak_batch: usize,
+}
+
 /// Serve until a shutdown command arrives. Blocks the calling thread.
 pub fn serve(cfg: &RunConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
-    eprintln!("cas-spec server on {} (engine={})", cfg.addr, cfg.engines[0]);
+    eprintln!(
+        "cas-spec server on {} (engine={}, max_batch={})",
+        cfg.addr, cfg.engines[0], cfg.max_batch
+    );
 
     let (tx, rx) = mpsc::channel::<Job>();
 
-    // ---- worker: owns the runtime + engine ----
+    // ---- worker: owns the runtime + engine, runs the scheduler ----
     let wcfg = cfg.clone();
     let worker = thread::spawn(move || -> Result<()> {
         let engine_name = wcfg.engines[0].clone();
         let rt = Runtime::open_with(&wcfg.artifacts, wcfg.backend_select()?)?;
         let srt = rt.load_scale(&wcfg.scale, &required_variants(&engine_name))?;
-        let mut eng = build_engine(&engine_name, &srt, &wcfg.opts)?;
-        let mut served = 0u64;
-        let mut total_tokens = 0u64;
-        let mut total_secs = 0f64;
-        for job in rx {
-            match job {
-                Job::Shutdown => break,
-                Job::Stats(reply) => {
-                    let j = Json::obj(vec![
-                        ("served", Json::Num(served as f64)),
-                        ("total_tokens", Json::Num(total_tokens as f64)),
-                        ("total_secs", Json::Num(total_secs)),
-                        ("engine", Json::Str(engine_name.clone())),
-                        ("scale", Json::Str(wcfg.scale.clone())),
-                        ("backend", Json::Str(srt.backend_name().to_string())),
-                    ]);
-                    let _ = reply.send(j.to_string());
-                }
-                Job::Generate(req, reply) => {
-                    let t0 = Instant::now();
-                    let resp = match eng.generate(&req.prompt, req.max_new) {
-                        Ok(g) => {
-                            served += 1;
-                            total_tokens += g.tokens.len() as u64;
-                            let secs = t0.elapsed().as_secs_f64();
-                            total_secs += secs;
-                            Json::obj(vec![
-                                ("id", Json::Num(req.id as f64)),
-                                ("tokens", Json::arr_u32(&g.tokens)),
-                                ("text", Json::Str(crate::tokenizer::render(&g.tokens))),
-                                ("ms", Json::Num(secs * 1e3)),
-                                ("rounds", Json::Num(g.stats.rounds as f64)),
-                                ("mean_accepted", Json::Num(g.stats.mean_accepted())),
-                                ("engine", Json::Str(engine_name.clone())),
-                            ])
-                        }
-                        Err(e) => Json::obj(vec![
-                            ("id", Json::Num(req.id as f64)),
-                            ("error", Json::Str(format!("{e:#}"))),
-                        ]),
-                    };
-                    let _ = reply.send(resp.to_string());
-                }
-            }
-        }
-        Ok(())
+        let eng = build_engine(&engine_name, &srt, &wcfg.opts)?;
+        run_scheduler(
+            &rx,
+            eng.as_ref(),
+            &engine_name,
+            &wcfg.scale,
+            srt.backend_name(),
+            wcfg.max_batch.max(1),
+        )
     });
 
     // ---- acceptor: one reader thread per connection ----
@@ -137,6 +167,178 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
     let _ = tx.send(Job::Shutdown);
     worker.join().map_err(|_| anyhow!("worker panicked"))??;
     Ok(())
+}
+
+/// The continuous-batching loop (one iteration = one speculation round of
+/// every active request):
+///
+/// ```text
+///   loop:
+///     drain channel  -> queue (Generate) / reply (Stats) / flag (Shutdown)
+///     admit          -> queue front fills the running batch to max_batch
+///                       (engine.begin: per-request sessions + prefill)
+///     round          -> every active run advances ONE speculation round
+///     retire         -> finished runs reply on their own channel, freeing
+///                       slots that next cycle's admissions reuse
+/// ```
+///
+/// The loop blocks on the channel only when fully idle, so it neither
+/// spins while empty nor delays rounds while busy.
+fn run_scheduler(
+    rx: &mpsc::Receiver<Job>,
+    eng: &dyn Engine,
+    engine_name: &str,
+    scale: &str,
+    backend: &str,
+    max_batch: usize,
+) -> Result<()> {
+    let mut queue: VecDeque<Queued> = VecDeque::new();
+    let mut running: Vec<Active<'_>> = Vec::new();
+    let mut c = SchedCounters::default();
+
+    loop {
+        // ---- drain the admission channel ----
+        let mut jobs: Vec<Job> = Vec::new();
+        if running.is_empty() && queue.is_empty() {
+            // fully idle: block until something arrives
+            match rx.recv() {
+                Ok(job) => jobs.push(job),
+                Err(_) => return Ok(()), // all senders gone
+            }
+        }
+        while let Ok(job) = rx.try_recv() {
+            jobs.push(job);
+        }
+        let mut shutdown = false;
+        for job in jobs {
+            match job {
+                Job::Shutdown => shutdown = true,
+                Job::Stats(reply) => {
+                    let _ = reply.send(
+                        stats_json(&c, queue.len(), running.len(), max_batch, engine_name, scale, backend)
+                            .to_string(),
+                    );
+                }
+                Job::Generate(req, reply) => {
+                    queue.push_back(Queued { req, reply, enqueued: Instant::now() });
+                }
+            }
+        }
+        if shutdown {
+            // abandon in-flight work like the pre-batching server did, but
+            // tell the affected clients instead of dropping their channels
+            for q in queue.drain(..) {
+                let _ = q.reply.send(error_json(q.req.id, "server shutting down"));
+            }
+            for a in running.drain(..) {
+                let _ = a.reply.send(error_json(a.id, "server shutting down"));
+            }
+            return Ok(());
+        }
+
+        // ---- admit: fill the running batch from the queue front ----
+        // When decode is already in flight, admit at most one request per
+        // cycle: admission includes the prompt prefill, so an unbounded
+        // burst of admissions would stall every active request's next
+        // round for the combined prefill time.
+        let admit_cap = if running.is_empty() { max_batch } else { running.len() + 1 };
+        while running.len() < max_batch.min(admit_cap) {
+            let Some(q) = queue.pop_front() else { break };
+            let queued_ms = q.enqueued.elapsed().as_secs_f64() * 1e3;
+            // `started` is taken BEFORE begin() so the response's `ms` and
+            // the stats' busy_secs both include prompt prefill — otherwise
+            // the most expensive per-request step would vanish between
+            // queued_ms and ms and inflate tok_s
+            let started = Instant::now();
+            let admitted = eng.begin(&q.req.prompt, q.req.max_new);
+            c.busy_secs += started.elapsed().as_secs_f64();
+            match admitted {
+                Ok(run) => running.push(Active {
+                    id: q.req.id,
+                    reply: q.reply,
+                    run,
+                    queued_ms,
+                    started,
+                }),
+                Err(e) => {
+                    c.errors += 1;
+                    let _ = q.reply.send(error_json(q.req.id, &format!("{e:#}")));
+                }
+            }
+        }
+        c.peak_batch = c.peak_batch.max(running.len());
+
+        // ---- advance every active request one speculation round ----
+        if running.is_empty() {
+            continue;
+        }
+        let batch_now = running.len();
+        let t0 = Instant::now();
+        let mut i = 0;
+        while i < running.len() {
+            match running[i].run.round() {
+                Err(e) => {
+                    let a = running.remove(i);
+                    c.errors += 1;
+                    let _ = a.reply.send(error_json(a.id, &format!("{e:#}")));
+                }
+                Ok(o) if o.done => {
+                    let a = running.remove(i);
+                    let gen = a.run.finish();
+                    c.served += 1;
+                    c.total_tokens += gen.tokens.len() as u64;
+                    let resp = Json::obj(vec![
+                        ("id", Json::Num(a.id as f64)),
+                        ("tokens", Json::arr_u32(&gen.tokens)),
+                        ("text", Json::Str(crate::tokenizer::render(&gen.tokens))),
+                        ("ms", Json::Num(a.started.elapsed().as_secs_f64() * 1e3)),
+                        ("queued_ms", Json::Num(a.queued_ms)),
+                        ("rounds", Json::Num(gen.stats.rounds as f64)),
+                        ("mean_accepted", Json::Num(gen.stats.mean_accepted())),
+                        ("batch", Json::Num(batch_now as f64)),
+                        ("engine", Json::Str(engine_name.to_string())),
+                    ]);
+                    let _ = a.reply.send(resp.to_string());
+                }
+                Ok(_) => i += 1,
+            }
+        }
+        c.busy_secs += t0.elapsed().as_secs_f64();
+    }
+}
+
+fn stats_json(
+    c: &SchedCounters,
+    queue_depth: usize,
+    running: usize,
+    max_batch: usize,
+    engine: &str,
+    scale: &str,
+    backend: &str,
+) -> Json {
+    let tok_s = if c.busy_secs > 0.0 { c.total_tokens as f64 / c.busy_secs } else { 0.0 };
+    Json::obj(vec![
+        ("served", Json::Num(c.served as f64)),
+        ("errors", Json::Num(c.errors as f64)),
+        ("total_tokens", Json::Num(c.total_tokens as f64)),
+        ("total_secs", Json::Num(c.busy_secs)),
+        ("tok_s", Json::Num(tok_s)),
+        ("queue_depth", Json::Num(queue_depth as f64)),
+        ("running", Json::Num(running as f64)),
+        ("peak_batch", Json::Num(c.peak_batch as f64)),
+        ("max_batch", Json::Num(max_batch as f64)),
+        ("engine", Json::Str(engine.to_string())),
+        ("scale", Json::Str(scale.to_string())),
+        ("backend", Json::Str(backend.to_string())),
+    ])
+}
+
+fn error_json(id: u64, msg: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .to_string()
 }
 
 /// Reads requests from one connection; returns true when a shutdown command
@@ -227,19 +429,23 @@ fn parse_line(line: &str) -> Result<ParsedLine> {
     Ok(ParsedLine::Request(Request { id, prompt, max_new }))
 }
 
-/// Minimal blocking client used by examples and tests.
+/// Minimal blocking client used by examples and tests. One request may be
+/// in flight per connection; concurrency comes from multiple clients
+/// (the server batches across connections).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
 impl Client {
+    /// Connect to a serving address ("host:port").
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
         Ok(Client { reader: BufReader::new(stream), writer })
     }
 
+    /// Send one raw protocol line and read one JSON reply line.
     pub fn request_raw(&mut self, line: &str) -> Result<Json> {
         writeln!(self.writer, "{line}")?;
         let mut buf = String::new();
@@ -247,6 +453,8 @@ impl Client {
         Json::parse(&buf).map_err(|e| anyhow!("bad response: {e}"))
     }
 
+    /// Generate `max_new` tokens for `prompt`; blocks until the response
+    /// (fields documented in the module header / README).
     pub fn generate(&mut self, id: u64, prompt: &[u32], max_new: usize) -> Result<Json> {
         let req = Json::obj(vec![
             ("id", Json::Num(id as f64)),
@@ -256,10 +464,13 @@ impl Client {
         self.request_raw(&req.to_string())
     }
 
+    /// Fetch the server's aggregate serving counters.
     pub fn stats(&mut self) -> Result<Json> {
         self.request_raw(r#"{"cmd":"stats"}"#)
     }
 
+    /// Ask the server to shut down (it finishes accepting, abandons
+    /// in-flight work with error replies, and exits).
     pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.request_raw(r#"{"cmd":"shutdown"}"#)?;
         Ok(())
@@ -297,5 +508,23 @@ mod tests {
         assert!(parse_line("not json").is_err());
         assert!(parse_line(r#"{"prompt": []}"#).is_err());
         assert!(parse_line(r#"{"max_new": 4}"#).is_err());
+    }
+
+    #[test]
+    fn stats_json_reports_batching_fields() {
+        let c = SchedCounters {
+            served: 3,
+            errors: 0,
+            total_tokens: 120,
+            busy_secs: 0.5,
+            peak_batch: 4,
+        };
+        let j = stats_json(&c, 2, 3, 8, "pld", "small", "ref");
+        assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("running").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("peak_batch").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("max_batch").unwrap().as_usize().unwrap(), 8);
+        assert!((j.get("tok_s").unwrap().as_f64().unwrap() - 240.0).abs() < 1e-9);
+        assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "ref");
     }
 }

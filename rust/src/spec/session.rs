@@ -5,6 +5,13 @@
 //! Speculative KV (tree slots) written by `verify_tree` only becomes
 //! committed through `commit`; chain steps (prefill/decode) commit
 //! immediately via the contiguous fast path.
+//!
+//! Sessions are strictly per-request: the continuous-batching server gives
+//! every admitted request its own set of sessions (inside an
+//! `engine::RequestRun`), so concurrent requests never share KV state and
+//! greedy losslessness is preserved under any interleaving.
+
+#![warn(missing_docs)]
 
 use anyhow::Result;
 
@@ -15,6 +22,8 @@ use crate::spec::tree::DraftTree;
 /// Chunk shapes available for chain feeding, descending.
 const CHAIN_SHAPES: [usize; 4] = [64, 16, 8, 1];
 
+/// One DSIA variant's decoding state for one request: a KV cache plus the
+/// logits row after the most recently committed token.
 pub struct VariantSession<'rt> {
     rt: &'rt ScaleRuntime,
     kv: KvCache,
@@ -23,18 +32,22 @@ pub struct VariantSession<'rt> {
 }
 
 impl<'rt> VariantSession<'rt> {
+    /// Open a session with a fresh zeroed KV cache for `variant`.
     pub fn new(rt: &'rt ScaleRuntime, variant: Variant) -> Result<Self> {
         Ok(Self { rt, kv: rt.new_kv(variant)?, last_logits: None })
     }
 
+    /// The DSIA variant this session steps.
     pub fn variant(&self) -> Variant {
         self.kv.variant
     }
 
+    /// Number of committed tokens in the cache.
     pub fn pos(&self) -> usize {
         self.kv.pos
     }
 
+    /// Vocabulary size (logits row width).
     pub fn vocab(&self) -> usize {
         self.rt.vocab()
     }

@@ -1,0 +1,240 @@
+//! Bit-exactness of the batched step path (`Backend::step_batch`).
+//!
+//! Two independent guarantees are pinned here:
+//!
+//!   1. the trait's **default implementation** (loop per lane — what the
+//!      PJRT backend uses) matches per-lane `step` calls bit-for-bit;
+//!   2. the reference backend's **overridden** genuinely-batched forward
+//!      (layer-outer, lane-inner, shared weight reads) also matches
+//!      per-lane `step` bit-for-bit, across mixed variants, positions and
+//!      live counts.
+//!
+//! Bit-exactness here is what makes greedy losslessness survive
+//! continuous batching without any per-engine re-proof.
+
+use std::path::Path;
+
+use anyhow::Result;
+use cas_spec::model::{ScaleInfo, Variant};
+use cas_spec::runtime::reference::RefBackend;
+use cas_spec::runtime::{Backend, BackendSelect, BatchLane, KvState, LaneStep, Runtime};
+use cas_spec::spec::DraftTree;
+
+fn backend() -> RefBackend {
+    let info = ScaleInfo::synthetic("small", 6, 128, 4);
+    RefBackend::new(&info, &Variant::ALL, None).unwrap()
+}
+
+fn host(kv: &KvState) -> &[f32] {
+    match kv {
+        KvState::Host(c) => c,
+        #[cfg(feature = "pjrt")]
+        _ => panic!("expected a host cache"),
+    }
+}
+
+fn chain_inputs(tokens: &[u32], t_shape: usize) -> (Vec<u32>, Vec<f32>, Vec<i32>) {
+    let tree = DraftTree::chain(tokens[0], &tokens[1..], t_shape);
+    tree.serialize(t_shape, 0)
+}
+
+/// Wraps a backend, forwarding everything EXCEPT `step_batch`, so calls
+/// exercise the trait's default per-lane loop implementation.
+struct DefaultBatch<'a>(&'a RefBackend);
+
+impl Backend for DefaultBatch<'_> {
+    fn name(&self) -> &'static str {
+        "default-batch"
+    }
+
+    fn variants(&self) -> Vec<Variant> {
+        self.0.variants()
+    }
+
+    fn new_kv(&self, v: Variant) -> Result<KvState> {
+        self.0.new_kv(v)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        v: Variant,
+        kv: &mut KvState,
+        pos: usize,
+        t_shape: usize,
+        live: usize,
+        tokens: &[u32],
+        mask: &[f32],
+        depths: &[i32],
+    ) -> Result<Vec<f32>> {
+        self.0.step(v, kv, pos, t_shape, live, tokens, mask, depths)
+    }
+
+    fn gather_commit(
+        &self,
+        v: Variant,
+        kv: &mut KvState,
+        t_shape: usize,
+        src_abs: &[usize],
+        dst_pos: usize,
+    ) -> Result<()> {
+        self.0.gather_commit(v, kv, t_shape, src_abs, dst_pos)
+    }
+    // step_batch intentionally NOT overridden: the default impl runs
+}
+
+/// Each lane: (variant, committed-prefix tokens, stepped chain tokens).
+/// The prefix is fed with a first step so lanes sit at different `pos`.
+type LaneSpec = (Variant, Vec<u32>, Vec<u32>);
+
+fn lane_specs() -> Vec<LaneSpec> {
+    vec![
+        (Variant::Target, vec![1, 30], vec![40, 50, 60]),
+        (Variant::Ls40, vec![2], vec![31, 41]),
+        (Variant::Target, vec![], vec![5, 33, 44, 55]),
+        (Variant::Ee, vec![3, 32, 42], vec![52]),
+    ]
+}
+
+/// Run each lane's prefix step solo (both paths share this setup), then
+/// compare a batched second step against solo second steps.
+fn assert_batch_matches_solo(be: &dyn Backend, label: &str) {
+    let specs = lane_specs();
+    let t_shape = 8;
+
+    // ---- solo path: prefix step, then the compared step ----
+    let mut solo_logits = Vec::new();
+    let mut solo_caches = Vec::new();
+    for (v, prefix, chain) in &specs {
+        let mut kv = be.new_kv(*v).unwrap();
+        if !prefix.is_empty() {
+            let (tk, mk, dp) = chain_inputs(prefix, t_shape);
+            be.step(*v, &mut kv, 0, t_shape, prefix.len(), &tk, &mk, &dp).unwrap();
+        }
+        let (tk, mk, dp) = chain_inputs(chain, t_shape);
+        let lg = be
+            .step(*v, &mut kv, prefix.len(), t_shape, chain.len(), &tk, &mk, &dp)
+            .unwrap();
+        solo_logits.push(lg);
+        solo_caches.push(host(&kv).to_vec());
+    }
+
+    // ---- batched path: same prefixes, then ONE step_batch call ----
+    let mut kvs: Vec<KvState> = Vec::new();
+    for (v, prefix, _) in &specs {
+        let mut kv = be.new_kv(*v).unwrap();
+        if !prefix.is_empty() {
+            let (tk, mk, dp) = chain_inputs(prefix, t_shape);
+            be.step(*v, &mut kv, 0, t_shape, prefix.len(), &tk, &mk, &dp).unwrap();
+        }
+        kvs.push(kv);
+    }
+    let inputs: Vec<(Vec<u32>, Vec<f32>, Vec<i32>)> =
+        specs.iter().map(|(_, _, chain)| chain_inputs(chain, t_shape)).collect();
+    let mut lanes: Vec<LaneStep<'_>> = kvs
+        .iter_mut()
+        .zip(specs.iter())
+        .zip(inputs.iter())
+        .map(|((kv, (v, prefix, chain)), (tk, mk, dp))| LaneStep {
+            variant: *v,
+            kv,
+            pos: prefix.len(),
+            live: chain.len(),
+            tokens: tk,
+            mask: mk,
+            depths: dp,
+        })
+        .collect();
+    let batched = be.step_batch(t_shape, &mut lanes).unwrap();
+    drop(lanes);
+
+    assert_eq!(batched.len(), specs.len(), "{label}: one logits block per lane");
+    for i in 0..specs.len() {
+        assert_eq!(batched[i], solo_logits[i], "{label}: lane {i} logits diverged");
+        assert_eq!(host(&kvs[i]), &solo_caches[i][..], "{label}: lane {i} KV diverged");
+    }
+}
+
+#[test]
+fn default_step_batch_matches_per_lane_step() {
+    let be = backend();
+    let wrapped = DefaultBatch(&be);
+    assert_batch_matches_solo(&wrapped, "default impl");
+}
+
+#[test]
+fn ref_step_batch_matches_per_lane_step() {
+    let be = backend();
+    assert_batch_matches_solo(&be, "ref override");
+}
+
+#[test]
+fn ref_and_default_batch_agree() {
+    // the fused forward and the naive per-lane loop produce byte-identical
+    // logits AND KV caches on identical lane sets
+    let be = backend();
+    let specs = lane_specs();
+    let t_shape = 8;
+    let mut results: Vec<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = Vec::new();
+    for path in 0..2 {
+        let mut kvs: Vec<KvState> =
+            specs.iter().map(|(v, _, _)| be.new_kv(*v).unwrap()).collect();
+        let inputs: Vec<(Vec<u32>, Vec<f32>, Vec<i32>)> = specs
+            .iter()
+            .map(|(_, _, chain)| chain_inputs(chain, t_shape))
+            .collect();
+        let mut lanes: Vec<LaneStep<'_>> = kvs
+            .iter_mut()
+            .zip(specs.iter())
+            .zip(inputs.iter())
+            .map(|((kv, (v, _, chain)), (tk, mk, dp))| LaneStep {
+                variant: *v,
+                kv,
+                pos: 0,
+                live: chain.len(),
+                tokens: tk,
+                mask: mk,
+                depths: dp,
+            })
+            .collect();
+        let out = if path == 0 {
+            be.step_batch(t_shape, &mut lanes).unwrap()
+        } else {
+            DefaultBatch(&be).step_batch(t_shape, &mut lanes).unwrap()
+        };
+        drop(lanes);
+        let caches: Vec<Vec<f32>> = kvs.iter().map(|kv| host(kv).to_vec()).collect();
+        results.push((out, caches));
+    }
+    assert_eq!(results[0].0, results[1].0, "logits differ between paths");
+    assert_eq!(results[0].1, results[1].1, "KV caches differ between paths");
+}
+
+#[test]
+fn scale_runtime_step_batch_counts_lanes() {
+    // the generic-layer wrapper: per-lane StepOutputs, per-variant counters
+    let rt = Runtime::open_with(Path::new("/missing-artifacts"), BackendSelect::Ref)
+        .expect("ref runtime");
+    let srt = rt.load_scale("small", &[Variant::Target, Variant::Ls40]).unwrap();
+
+    let mut kv_a = srt.new_kv(Variant::Target).unwrap();
+    let mut kv_b = srt.new_kv(Variant::Ls40).unwrap();
+    let (tk_a, mk_a, dp_a) = chain_inputs(&[1, 30, 40], 8);
+    let (tk_b, mk_b, dp_b) = chain_inputs(&[2, 31], 8);
+    let mut lanes = vec![
+        BatchLane { kv: &mut kv_a, live: 3, tokens: tk_a, mask: mk_a, depths: dp_a },
+        BatchLane { kv: &mut kv_b, live: 2, tokens: tk_b, mask: mk_b, depths: dp_b },
+    ];
+    let outs = srt.step_batch(8, &mut lanes).unwrap();
+    drop(lanes);
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0].logits.len(), 8 * srt.vocab());
+    assert_eq!(outs[1].logits.len(), 8 * srt.vocab());
+    // positions are NOT advanced by a step (commit does that)
+    assert_eq!(kv_a.pos, 0);
+    assert_eq!(kv_b.pos, 0);
+    assert_eq!(srt.counters(Variant::Target).steps, 1);
+    assert_eq!(srt.counters(Variant::Target).tokens_stepped, 3);
+    assert_eq!(srt.counters(Variant::Ls40).steps, 1);
+    assert_eq!(srt.counters(Variant::Ls40).tokens_stepped, 2);
+}

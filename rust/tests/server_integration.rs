@@ -1,6 +1,12 @@
-//! End-to-end serving test: start the TCP server on a fixed port, issue
+//! End-to-end serving tests: start the TCP server on a fixed port, issue
 //! concurrent requests from several client threads, verify the responses
 //! equal direct engine output, then shut down cleanly.
+//!
+//! `continuous_batching_is_lossless_and_interleaves` is the acceptance
+//! test for the continuous-batching scheduler: N concurrent clients must
+//! share one running batch (stats `peak_batch` > 1) and every response
+//! must equal the same request served alone (greedy losslessness under
+//! batching).
 //!
 //! Hermetic: the worker falls back to the reference backend when no
 //! artifacts exist, so this always runs.
@@ -13,7 +19,21 @@ use cas_spec::engine::{build_engine, EngineOpts};
 use cas_spec::model::Variant;
 use cas_spec::runtime::Runtime;
 use cas_spec::server::{serve, Client};
-use cas_spec::workload::{Language, Suite};
+use cas_spec::workload::{Language, Suite, WorkItem};
+
+/// Wait until the server accepts connections AND its worker answers a
+/// stats round-trip (engine built, scheduler live).
+fn wait_ready(addr: &str) -> Client {
+    for _ in 0..100 {
+        if let Ok(mut c) = Client::connect(addr) {
+            if c.stats().is_ok() {
+                return c;
+            }
+        }
+        thread::sleep(Duration::from_millis(100));
+    }
+    panic!("server did not come up on {addr}");
+}
 
 #[test]
 fn serve_generate_stats_shutdown() {
@@ -100,5 +120,93 @@ fn serve_generate_stats_shutdown() {
     assert!(resp.get("error").is_some());
 
     client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn continuous_batching_is_lossless_and_interleaves() {
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    // 6 requests against max_batch=3: forces queueing AND a multi-request
+    // running batch; expected outputs computed solo (losslessness = exact)
+    let suite = Suite::spec_bench(&lang, 91, 1, 40);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(6).collect();
+    assert!(items.len() >= 6, "spec_bench must yield 6 categories");
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected: Vec<Vec<u32>> = items
+        .iter()
+        .map(|it| ar.generate(&it.prompt, it.max_new).unwrap().tokens)
+        .collect();
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()]; // lossless => same tokens as AR
+    cfg.addr = "127.0.0.1:7532".into();
+    cfg.max_batch = 3;
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut control = wait_ready(&addr);
+
+    // ---- N concurrent clients, one request each ----
+    let mut handles = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let addr = addr.clone();
+        let item = item.clone();
+        handles.push(thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = c.generate(i as u64, &item.prompt, item.max_new).unwrap();
+            assert!(resp.get("error").is_none(), "server error: {resp}");
+            assert!(resp.req("ms").unwrap().as_f64().unwrap() > 0.0);
+            assert!(resp.req("queued_ms").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(resp.req("batch").unwrap().as_usize().unwrap() >= 1);
+            let got: Vec<u32> = resp
+                .req("tokens")
+                .unwrap()
+                .usize_arr()
+                .unwrap()
+                .into_iter()
+                .map(|t| t as u32)
+                .collect();
+            (i, got)
+        }));
+    }
+
+    // sample live stats while requests are in flight (control-plane calls
+    // interleave with decode rounds instead of waiting behind them)
+    let mut saw_running = 0usize;
+    for _ in 0..200 {
+        let s = control.stats().unwrap();
+        let running = s.req("running").unwrap().as_usize().unwrap();
+        saw_running = saw_running.max(running);
+        if running == 0 && saw_running > 0 {
+            break;
+        }
+        thread::sleep(Duration::from_millis(2));
+    }
+
+    for h in handles {
+        let (i, got) = h.join().unwrap();
+        assert_eq!(
+            got, expected[i],
+            "request {i}: batched tokens differ from solo serving"
+        );
+    }
+
+    // ---- stats must prove the batch actually interleaved ----
+    let stats = control.stats().unwrap();
+    assert!(stats.req("served").unwrap().as_u64().unwrap() >= 6);
+    assert_eq!(stats.req("max_batch").unwrap().as_usize().unwrap(), 3);
+    let peak = stats.req("peak_batch").unwrap().as_usize().unwrap();
+    assert!(
+        peak >= 2,
+        "6 concurrent requests never shared a running batch (peak_batch={peak})"
+    );
+    assert_eq!(stats.req("queue_depth").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(stats.req("running").unwrap().as_usize().unwrap(), 0);
+    assert!(stats.req("tok_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(stats.req("total_secs").unwrap().as_f64().unwrap() > 0.0);
+
+    control.shutdown().unwrap();
     server.join().unwrap().unwrap();
 }
