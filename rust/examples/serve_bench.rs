@@ -1,11 +1,21 @@
 //! End-to-end serving driver (the repo's E2E validation, EXPERIMENTS.md §E2E):
-//! starts the TCP serving front-end with a real model, fires a mixed
-//! Spec-Bench workload from several concurrent client threads, and reports
-//! latency percentiles + throughput — once for AR, once for CAS-Spec —
-//! demonstrating all three layers composing on the request path.
+//! starts the TCP serving front-end with a real model, fires a workload from
+//! several concurrent client threads, and reports latency percentiles +
+//! throughput — demonstrating all three layers composing on the request path.
+//!
+//! Two scenarios:
+//!
+//!   * `--workload spec` (default) — the mixed Spec-Bench suite, once for
+//!     AR and once for CAS-Spec.
+//!   * `--workload shared-prefix` — N requests sharing a long prompt
+//!     prefix, served with the cross-request prefix cache **off and on**
+//!     at the same engine. The cache run must report `prefix_hit_tokens
+//!     > 0` and step fewer total tokens than the cold run (the stats
+//!     columns make the skipped prefill work visible).
 //!
 //!     cargo run --release --example serve_bench           # hermetic (ref backend)
 //!     cargo run --release --example serve_bench -- --scale base --requests 12
+//!     cargo run --release --example serve_bench -- --workload shared-prefix
 //!     make artifacts first to run against pretrained weights/PJRT
 
 use std::sync::{Arc, Mutex};
@@ -17,6 +27,7 @@ use cas_spec::config::RunConfig;
 use cas_spec::metrics::latency_summary;
 use cas_spec::server::{serve, Client};
 use cas_spec::util::cli::Args;
+use cas_spec::util::json::Json;
 use cas_spec::util::table::Table;
 use cas_spec::workload::{Language, Suite, WorkItem};
 
@@ -26,7 +37,23 @@ fn main() -> Result<()> {
     let requests = args.usize_or("requests", 8)?;
     let clients = args.usize_or("clients", 3)?;
     let max_new = args.usize_or("max-new", 48)?;
+    let workload = args.str_or("workload", "spec").to_string();
 
+    match workload.as_str() {
+        "spec" => spec_scenario(&args, &scale, requests, clients, max_new),
+        "shared-prefix" => shared_prefix_scenario(&args, &scale, requests, clients),
+        other => anyhow::bail!("unknown --workload {other:?} (spec | shared-prefix)"),
+    }
+}
+
+/// The mixed Spec-Bench workload: AR vs CAS-Spec latency/throughput.
+fn spec_scenario(
+    _args: &Args,
+    scale: &str,
+    requests: usize,
+    clients: usize,
+    max_new: usize,
+) -> Result<()> {
     let lang = Language::build(20250711);
     let n_per = requests.div_ceil(6).max(1);
     let suite = Suite::spec_bench(&lang, 7, n_per, max_new);
@@ -36,26 +63,142 @@ fn main() -> Result<()> {
         &format!("serve_bench — scale={scale}, {requests} requests, {clients} clients, {max_new} tokens"),
         &["engine", "wall (s)", "tok/s", "mean (ms)", "p50", "p90", "p99", "mean acc"],
     );
-    for engine in ["ar", "cas-spec"] {
-        let row = run_one(&scale, engine, &items, clients, 7600 + engine.len() as u16)?;
-        t.row(row);
+    for (i, engine) in ["ar", "cas-spec"].into_iter().enumerate() {
+        let run = run_one(&RunSpec {
+            scale,
+            engine,
+            items: &items,
+            n_clients: clients,
+            port: 7600 + i as u16,
+            prefix_cache_mb: 0,
+        })?;
+        t.row(run.latency_row(engine));
     }
     println!("{}", t.to_text());
     println!("(lossless: both engines return identical token streams — asserted per request)");
     Ok(())
 }
 
-fn run_one(
+/// The shared-prefix workload: one engine, cache off vs on. The skipped
+/// prefill shows up as `prefix_hit_tokens > 0` and fewer `tokens_stepped`.
+fn shared_prefix_scenario(
+    args: &Args,
     scale: &str,
-    engine: &str,
-    items: &[WorkItem],
+    requests: usize,
+    clients: usize,
+) -> Result<()> {
+    let engine = args.str_or("engine", "cas-spec").to_string();
+    let prefix_len = args.usize_or("prefix-len", 96)?;
+    let suffix_len = args.usize_or("suffix-len", 16)?;
+    let max_new = args.usize_or("max-new", 32)?;
+    let cache_mb = args.usize_or("prefix-cache-mb", 32)?;
+    anyhow::ensure!(cache_mb > 0, "--prefix-cache-mb must be > 0 for this scenario");
+
+    let lang = Language::build(20250711);
+    let suite = Suite::shared_prefix(&lang, 7, requests, prefix_len, suffix_len, max_new);
+
+    let mut t = Table::new(
+        &format!(
+            "serve_bench shared-prefix — scale={scale}, engine={engine}, \
+             {requests} requests, prefix {prefix_len} + suffix {suffix_len} tokens"
+        ),
+        &["cache", "wall (s)", "tok/s", "tokens_stepped", "lookups", "hit_tokens", "evictions"],
+    );
+    let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut stepped: Vec<u64> = Vec::new();
+    let mut hits: Vec<u64> = Vec::new();
+    for (i, mb) in [0usize, cache_mb].into_iter().enumerate() {
+        let run = run_one(&RunSpec {
+            scale,
+            engine: &engine,
+            items: &suite.items,
+            n_clients: clients,
+            port: 7610 + i as u16,
+            prefix_cache_mb: mb,
+        })?;
+        t.row(run.cache_row(mb));
+        stepped.push(run.stats.req("tokens_stepped")?.as_u64().unwrap_or(0));
+        hits.push(run.stats.req("prefix_hit_tokens")?.as_u64().unwrap_or(0));
+        outputs.push(run.tokens);
+    }
+    println!("{}", t.to_text());
+
+    anyhow::ensure!(outputs[0] == outputs[1], "cache changed generated tokens!");
+    anyhow::ensure!(hits[1] > 0, "warm run reported no prefix hits");
+    anyhow::ensure!(
+        stepped[1] < stepped[0],
+        "cache did not reduce stepped tokens ({} -> {})",
+        stepped[0],
+        stepped[1]
+    );
+    println!(
+        "(lossless: cache on/off token streams identical; {} of {} stepped tokens skipped)",
+        stepped[0] - stepped[1],
+        stepped[0]
+    );
+    Ok(())
+}
+
+struct RunSpec<'a> {
+    scale: &'a str,
+    engine: &'a str,
+    items: &'a [WorkItem],
     n_clients: usize,
     port: u16,
-) -> Result<Vec<String>> {
+    prefix_cache_mb: usize,
+}
+
+struct RunOutcome {
+    wall: Duration,
+    total_tokens: usize,
+    mean_acc: f64,
+    lat: cas_spec::metrics::LatencySummary,
+    /// Final server stats (fetched right before shutdown).
+    stats: Json,
+    /// Generated tokens, ordered by request id (for lossless comparison).
+    tokens: Vec<Vec<u32>>,
+}
+
+impl RunOutcome {
+    fn latency_row(&self, engine: &str) -> Vec<String> {
+        vec![
+            engine.into(),
+            format!("{:.2}", self.wall.as_secs_f64()),
+            format!("{:.1}", self.total_tokens as f64 / self.wall.as_secs_f64()),
+            format!("{:.0}", self.lat.mean.as_secs_f64() * 1e3),
+            format!("{:.0}", self.lat.p50.as_secs_f64() * 1e3),
+            format!("{:.0}", self.lat.p90.as_secs_f64() * 1e3),
+            format!("{:.0}", self.lat.p99.as_secs_f64() * 1e3),
+            format!("{:.2}", self.mean_acc),
+        ]
+    }
+
+    fn cache_row(&self, mb: usize) -> Vec<String> {
+        let s = |k: &str| {
+            self.stats
+                .get(k)
+                .and_then(|v| v.as_u64())
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| "?".into())
+        };
+        vec![
+            if mb == 0 { "off".into() } else { format!("{mb} MiB") },
+            format!("{:.2}", self.wall.as_secs_f64()),
+            format!("{:.1}", self.total_tokens as f64 / self.wall.as_secs_f64()),
+            s("tokens_stepped"),
+            s("prefix_lookups"),
+            s("prefix_hit_tokens"),
+            s("evictions"),
+        ]
+    }
+}
+
+fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
     let mut cfg = RunConfig::default();
-    cfg.scale = scale.into();
-    cfg.engines = vec![engine.into()];
-    cfg.addr = format!("127.0.0.1:{port}");
+    cfg.scale = spec.scale.into();
+    cfg.engines = vec![spec.engine.into()];
+    cfg.addr = format!("127.0.0.1:{}", spec.port);
+    cfg.prefix_cache_mb = spec.prefix_cache_mb;
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
 
@@ -73,11 +216,12 @@ fn run_one(
     // round-trips through the worker queue, so its reply implies readiness
     Client::connect(&addr)?.stats()?;
 
-    let queue: Arc<Mutex<Vec<WorkItem>>> = Arc::new(Mutex::new(items.to_vec()));
-    let results: Arc<Mutex<Vec<(Duration, usize, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+    let queue: Arc<Mutex<Vec<WorkItem>>> = Arc::new(Mutex::new(spec.items.to_vec()));
+    type Obs = (usize, Duration, Vec<u32>, f64);
+    let results: Arc<Mutex<Vec<Obs>>> = Arc::new(Mutex::new(Vec::new()));
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    for _ in 0..n_clients {
+    for _ in 0..spec.n_clients {
         let queue = queue.clone();
         let results = results.clone();
         let addr = addr.clone();
@@ -92,9 +236,15 @@ fn run_one(
                 let resp = client.generate(item.id as u64, &item.prompt, item.max_new)?;
                 let lat = t.elapsed();
                 anyhow::ensure!(resp.get("error").is_none(), "server error: {resp}");
-                let ntok = resp.req("tokens")?.as_arr().unwrap().len();
+                let toks: Vec<u32> = resp
+                    .req("tokens")?
+                    .usize_arr()
+                    .map_err(|_| anyhow::anyhow!("bad tokens array"))?
+                    .into_iter()
+                    .map(|t| t as u32)
+                    .collect();
                 let acc = resp.req("mean_accepted")?.as_f64().unwrap_or(0.0);
-                results.lock().unwrap().push((lat, ntok, acc));
+                results.lock().unwrap().push((item.id, lat, toks, acc));
             }
             Ok(())
         }));
@@ -105,21 +255,15 @@ fn run_one(
     let wall = t0.elapsed();
 
     let mut client = Client::connect(&addr)?;
+    let stats = client.stats()?;
     client.shutdown()?;
     server.join().unwrap()?;
 
-    let res = results.lock().unwrap().clone();
-    let total_tokens: usize = res.iter().map(|(_, n, _)| n).sum();
-    let mean_acc = res.iter().map(|(_, _, a)| a).sum::<f64>() / res.len() as f64;
-    let lat = latency_summary(res.iter().map(|(d, _, _)| *d).collect());
-    Ok(vec![
-        engine.into(),
-        format!("{:.2}", wall.as_secs_f64()),
-        format!("{:.1}", total_tokens as f64 / wall.as_secs_f64()),
-        format!("{:.0}", lat.mean.as_secs_f64() * 1e3),
-        format!("{:.0}", lat.p50.as_secs_f64() * 1e3),
-        format!("{:.0}", lat.p90.as_secs_f64() * 1e3),
-        format!("{:.0}", lat.p99.as_secs_f64() * 1e3),
-        format!("{mean_acc:.2}"),
-    ])
+    let mut res = results.lock().unwrap().clone();
+    res.sort_by_key(|(id, ..)| *id);
+    let total_tokens: usize = res.iter().map(|(_, _, t, _)| t.len()).sum();
+    let mean_acc = res.iter().map(|(.., a)| a).sum::<f64>() / res.len() as f64;
+    let lat = latency_summary(res.iter().map(|(_, d, ..)| *d).collect());
+    let tokens = res.into_iter().map(|(_, _, t, _)| t).collect();
+    Ok(RunOutcome { wall, total_tokens, mean_acc, lat, stats, tokens })
 }

@@ -1,0 +1,633 @@
+//! Cross-request prefix/KV cache: radix-trie reuse of committed KV.
+//!
+//! The continuous-batching server re-ran prefill from scratch for every
+//! admitted request, even when requests share a system prompt or few-shot
+//! prefix — the common case under heavy multi-user traffic. Because the
+//! reference backend's determinism contract makes a committed token's KV
+//! rows a **pure function of the token prefix** (bit-identical no matter
+//! how the tokens were stepped — see `docs/ARCHITECTURE.md`), those rows
+//! can be copied between requests with zero impact on greedy
+//! losslessness: a cache-seeded prefill produces byte-identical
+//! generations (`rust/tests/prefix_cache.rs`).
+//!
+//! Structure:
+//!
+//!   * **Block pool** — KV rows are cached in fixed-size token blocks
+//!     ([`BLOCK_TOKENS`] committed tokens each). A block holds the rows of
+//!     every layer/head plane of one DSIA variant, in the plane-major
+//!     layout of `Backend::export_rows`. Variants never share blocks
+//!     (their layer sets, and hence row contents, differ).
+//!   * **Radix trie per variant** — edges are runs of whole blocks,
+//!     children of a node are distinguished by their first block's token
+//!     sequence. Inserting a request that shares some blocks with an
+//!     existing edge and then diverges *splits* the edge at the last
+//!     shared block boundary, so common prefixes are stored once.
+//!   * **Reference counting** — a successful [`PrefixCache::lookup`]
+//!     returns a [`PrefixHit`] that pins every node on the matched path;
+//!     pinned nodes (and therefore their ancestors, which by construction
+//!     have children) are never evicted until the hit is dropped.
+//!   * **LRU eviction** — inserts that push the resident byte total over
+//!     the configured budget evict least-recently-used *leaves* first
+//!     (evicting an interior node would orphan the blocks below it, whose
+//!     tokens are only meaningful under the full path).
+//!
+//! The cache is owned by `runtime::ScaleRuntime` and consulted by
+//! `spec::VariantSession` on the first feed of a fresh session (the
+//! prefill path): look up the longest cached prefix, copy its rows into
+//! the session's own KV cache, step only the suffix, then publish the
+//! newly computed blocks. Interior mutability (`RefCell`) matches the
+//! single-threaded serving worker that owns the runtime.
+
+#![warn(missing_docs)]
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::Variant;
+
+/// Committed tokens per cached KV block. Lookups and inserts operate on
+/// whole blocks only, so reuse granularity — and the trie's split points
+/// — are multiples of this.
+pub const BLOCK_TOKENS: usize = 16;
+
+/// Cache accounting, snapshot via [`PrefixCache::stats`].
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    /// Prefill lookups issued (hits and misses).
+    pub lookups: u64,
+    /// Committed tokens served from cached blocks instead of prefill steps.
+    pub hit_tokens: u64,
+    /// Blocks published into the trie.
+    pub inserted_blocks: u64,
+    /// Blocks evicted to stay under the byte budget.
+    pub evicted_blocks: u64,
+    /// Resident block bytes right now.
+    pub bytes: usize,
+    /// Configured byte budget.
+    pub budget: usize,
+}
+
+/// One radix-trie node: an edge of whole blocks from its parent.
+struct Node {
+    /// Edge label: the committed token run this node's blocks cover
+    /// (`blocks.len() * BLOCK_TOKENS` tokens; empty only at the root).
+    tokens: Vec<u32>,
+    /// One KV row block per [`BLOCK_TOKENS`] tokens of the edge.
+    blocks: Vec<Vec<f32>>,
+    /// Child node ids; children differ in their first block's tokens.
+    children: Vec<usize>,
+    parent: usize,
+    /// Monotonic LRU stamp (updated on lookup hits and insert walks).
+    last_used: u64,
+    /// Outstanding [`PrefixHit`] pins; nonzero blocks eviction and splits.
+    pins: u32,
+    /// False for slab slots on the free list.
+    live: bool,
+}
+
+/// Per-variant radix trie. Node 0 is the root (empty edge, never evicted).
+struct Tree {
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// f32 elements per block, fixed by the variant's KV geometry on the
+    /// first insert and validated on every later one.
+    block_elems: usize,
+}
+
+impl Tree {
+    fn new() -> Tree {
+        Tree {
+            nodes: vec![Node {
+                tokens: Vec::new(),
+                blocks: Vec::new(),
+                children: Vec::new(),
+                parent: 0,
+                last_used: 0,
+                pins: 0,
+                live: true,
+            }],
+            free: Vec::new(),
+            block_elems: 0,
+        }
+    }
+
+    fn alloc(&mut self, node: Node) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Child of `cur` whose edge starts with the block `want`.
+    fn child_with_first_block(&self, cur: usize, want: &[u32]) -> Option<usize> {
+        self.nodes[cur]
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].tokens[..BLOCK_TOKENS] == *want)
+    }
+
+    /// Leading whole blocks of `node`'s edge that match `tokens`.
+    fn matching_blocks(&self, node: usize, tokens: &[u32]) -> usize {
+        let edge = &self.nodes[node].tokens;
+        let mut m = 0;
+        while (m + 1) * BLOCK_TOKENS <= edge.len().min(tokens.len())
+            && edge[m * BLOCK_TOKENS..(m + 1) * BLOCK_TOKENS]
+                == tokens[m * BLOCK_TOKENS..(m + 1) * BLOCK_TOKENS]
+        {
+            m += 1;
+        }
+        m
+    }
+
+    /// Split `node`'s edge after its first `keep` blocks: the node keeps
+    /// the shared prefix, a new child takes the remainder (blocks and
+    /// children). Requires the node to be unpinned (callers check).
+    fn split(&mut self, node: usize, keep: usize) {
+        debug_assert!(keep > 0 && keep < self.nodes[node].blocks.len());
+        debug_assert_eq!(self.nodes[node].pins, 0, "splitting a pinned node");
+        let rest_tokens = self.nodes[node].tokens.split_off(keep * BLOCK_TOKENS);
+        let rest_blocks = self.nodes[node].blocks.split_off(keep);
+        let rest_children = std::mem::take(&mut self.nodes[node].children);
+        let last_used = self.nodes[node].last_used;
+        let rest = self.alloc(Node {
+            tokens: rest_tokens,
+            blocks: rest_blocks,
+            children: rest_children,
+            parent: node,
+            last_used,
+            pins: 0,
+            live: true,
+        });
+        for i in 0..self.nodes[rest].children.len() {
+            let c = self.nodes[rest].children[i];
+            self.nodes[c].parent = rest;
+        }
+        self.nodes[node].children.push(rest);
+    }
+}
+
+struct Inner {
+    budget: usize,
+    bytes: usize,
+    clock: u64,
+    trees: BTreeMap<Variant, Tree>,
+    stats: CacheStats,
+}
+
+/// The cross-request prefix cache: per-variant radix tries over a shared
+/// byte budget. Obtained from `runtime::ScaleRuntime::prefix_cache`.
+pub struct PrefixCache {
+    inner: RefCell<Inner>,
+}
+
+/// A pinned longest-prefix match. Holding it keeps every matched block
+/// resident; drop it (after copying the rows out) to allow eviction
+/// again. Must be dropped before the next [`PrefixCache::insert`] on the
+/// same variant (the single-threaded prefill path does this naturally).
+pub struct PrefixHit<'c> {
+    cache: &'c PrefixCache,
+    variant: Variant,
+    /// Matched path: (node id, blocks used from that node's edge).
+    path: Vec<(usize, usize)>,
+    tokens: usize,
+}
+
+impl PrefixHit<'_> {
+    /// Matched committed-token count (a multiple of [`BLOCK_TOKENS`]).
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Visit the matched blocks' rows in token order.
+    pub fn for_each_block(&self, mut f: impl FnMut(&[f32]) -> Result<()>) -> Result<()> {
+        let inner = self.cache.inner.borrow();
+        let tree = &inner.trees[&self.variant];
+        for &(n, used) in &self.path {
+            for b in &tree.nodes[n].blocks[..used] {
+                f(b)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for PrefixHit<'_> {
+    fn drop(&mut self) {
+        let mut inner = self.cache.inner.borrow_mut();
+        if let Some(tree) = inner.trees.get_mut(&self.variant) {
+            for &(n, _) in &self.path {
+                tree.nodes[n].pins = tree.nodes[n].pins.saturating_sub(1);
+            }
+        }
+    }
+}
+
+impl PrefixCache {
+    /// A cache with the given resident-byte budget (block data bytes; the
+    /// trie's token/pointer overhead is not counted).
+    pub fn new(budget_bytes: usize) -> PrefixCache {
+        PrefixCache {
+            inner: RefCell::new(Inner {
+                budget: budget_bytes,
+                bytes: 0,
+                clock: 0,
+                trees: BTreeMap::new(),
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    /// Longest cached prefix of `tokens` for `variant`, in whole blocks.
+    /// Pins the matched path until the returned hit is dropped. `None`
+    /// when not even the first block matches.
+    pub fn lookup(&self, variant: Variant, tokens: &[u32]) -> Option<PrefixHit<'_>> {
+        let mut inner = self.inner.borrow_mut();
+        let inner = &mut *inner; // split field borrows through the RefMut
+        inner.stats.lookups += 1;
+        inner.clock += 1;
+        let now = inner.clock;
+        let max_blocks = tokens.len() / BLOCK_TOKENS;
+        let tree = inner.trees.get_mut(&variant)?;
+
+        let mut path: Vec<(usize, usize)> = Vec::new();
+        let mut matched = 0usize; // blocks
+        let mut cur = 0usize;
+        while matched < max_blocks {
+            let rest = &tokens[matched * BLOCK_TOKENS..max_blocks * BLOCK_TOKENS];
+            let Some(c) = tree.child_with_first_block(cur, &rest[..BLOCK_TOKENS]) else {
+                break;
+            };
+            let m = tree.matching_blocks(c, rest);
+            debug_assert!(m >= 1);
+            tree.nodes[c].last_used = now;
+            tree.nodes[c].pins += 1;
+            path.push((c, m));
+            matched += m;
+            if m < tree.nodes[c].blocks.len() {
+                break; // partial edge match: nothing below can continue it
+            }
+            cur = c;
+        }
+        if matched == 0 {
+            return None;
+        }
+        inner.stats.hit_tokens += (matched * BLOCK_TOKENS) as u64;
+        Some(PrefixHit { cache: self, variant, path, tokens: matched * BLOCK_TOKENS })
+    }
+
+    /// Publish the whole-block prefix of `tokens` for `variant`. Rows for
+    /// block `i` (covering tokens `i*BLOCK_TOKENS ..`) are fetched from
+    /// `rows(i)` — only for blocks not already cached, so re-publishing a
+    /// shared prefix costs no row copies. Returns newly inserted blocks.
+    pub fn insert(
+        &self,
+        variant: Variant,
+        tokens: &[u32],
+        mut rows: impl FnMut(usize) -> Result<Vec<f32>>,
+    ) -> Result<usize> {
+        let n_blocks = tokens.len() / BLOCK_TOKENS;
+        if n_blocks == 0 {
+            return Ok(0);
+        }
+        let mut inner = self.inner.borrow_mut();
+        let inner = &mut *inner;
+        inner.clock += 1;
+        let now = inner.clock;
+        let tree = inner.trees.entry(variant).or_insert_with(Tree::new);
+
+        let mut added = 0usize;
+        let mut cur = 0usize;
+        let mut consumed = 0usize; // blocks
+        while consumed < n_blocks {
+            let rest = &tokens[consumed * BLOCK_TOKENS..n_blocks * BLOCK_TOKENS];
+            match tree.child_with_first_block(cur, &rest[..BLOCK_TOKENS]) {
+                None => {
+                    // new tail: fetch and attach all remaining blocks
+                    let mut blocks = Vec::with_capacity(n_blocks - consumed);
+                    let mut new_bytes = 0usize;
+                    for bi in consumed..n_blocks {
+                        let data = rows(bi)?;
+                        if tree.block_elems == 0 {
+                            tree.block_elems = data.len();
+                        }
+                        if data.len() != tree.block_elems {
+                            return Err(anyhow!(
+                                "prefix cache: block of {} elems for {variant:?}, expected {}",
+                                data.len(),
+                                tree.block_elems
+                            ));
+                        }
+                        new_bytes += data.len() * std::mem::size_of::<f32>();
+                        blocks.push(data);
+                    }
+                    let node = tree.alloc(Node {
+                        tokens: rest.to_vec(),
+                        blocks,
+                        children: Vec::new(),
+                        parent: cur,
+                        last_used: now,
+                        pins: 0,
+                        live: true,
+                    });
+                    tree.nodes[cur].children.push(node);
+                    added += n_blocks - consumed;
+                    inner.bytes += new_bytes;
+                    inner.stats.inserted_blocks += (n_blocks - consumed) as u64;
+                    consumed = n_blocks;
+                }
+                Some(c) => {
+                    let m = tree.matching_blocks(c, rest);
+                    tree.nodes[c].last_used = now;
+                    if m < tree.nodes[c].blocks.len() {
+                        if consumed + m < n_blocks {
+                            if tree.nodes[c].pins > 0 {
+                                // a live hit still reads this edge; skip
+                                // caching the divergent tail this time
+                                break;
+                            }
+                            tree.split(c, m);
+                        }
+                        // (insert is a prefix of the edge: nothing to add)
+                        cur = c;
+                        consumed += m;
+                        if consumed >= n_blocks {
+                            break;
+                        }
+                        // loop re-walks from the split node; the next
+                        // first block now mismatches all children => None
+                    } else {
+                        cur = c;
+                        consumed += m;
+                    }
+                }
+            }
+        }
+        Self::evict_to_budget(inner);
+        Ok(added)
+    }
+
+    /// Evict LRU unpinned leaves until resident bytes fit the budget.
+    fn evict_to_budget(inner: &mut Inner) {
+        while inner.bytes > inner.budget {
+            let mut victim: Option<(Variant, usize, u64)> = None;
+            for (v, tree) in inner.trees.iter() {
+                for (i, n) in tree.nodes.iter().enumerate() {
+                    if i == 0 || !n.live || n.pins > 0 || !n.children.is_empty() {
+                        continue;
+                    }
+                    if victim.map(|(_, _, lu)| n.last_used < lu).unwrap_or(true) {
+                        victim = Some((*v, i, n.last_used));
+                    }
+                }
+            }
+            let Some((v, i, _)) = victim else {
+                break; // everything left is pinned or structural
+            };
+            let tree = inner.trees.get_mut(&v).expect("victim tree exists");
+            let node = &mut tree.nodes[i];
+            let freed: usize =
+                node.blocks.iter().map(|b| b.len() * std::mem::size_of::<f32>()).sum();
+            let n_blocks = node.blocks.len();
+            let parent = node.parent;
+            node.live = false;
+            node.tokens = Vec::new();
+            node.blocks = Vec::new();
+            tree.nodes[parent].children.retain(|&c| c != i);
+            tree.free.push(i);
+            inner.bytes -= freed;
+            inner.stats.evicted_blocks += n_blocks as u64;
+        }
+    }
+
+    /// Accounting snapshot (bytes/budget filled in at call time).
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.borrow();
+        let mut s = inner.stats.clone();
+        s.bytes = inner.bytes;
+        s.budget = inner.budget;
+        s
+    }
+
+    /// Live (non-root) node count of one variant's trie — test hook.
+    #[cfg(test)]
+    fn live_nodes(&self, variant: Variant) -> usize {
+        let inner = self.inner.borrow();
+        inner
+            .trees
+            .get(&variant)
+            .map(|t| t.nodes.iter().skip(1).filter(|n| n.live).count())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: usize = BLOCK_TOKENS;
+    /// f32 elements per fake block (1 KV "row" of 4 floats per token).
+    const ELEMS: usize = B * 4;
+    const BLOCK_BYTES: usize = ELEMS * 4;
+
+    /// Deterministic fake rows for block `bi` of `tokens`.
+    fn fake_rows(tokens: &[u32], bi: usize) -> Vec<f32> {
+        let tag = tokens[bi * B] as f32;
+        (0..ELEMS).map(|j| tag + j as f32 * 0.25).collect()
+    }
+
+    fn seq(prefix: &[u32], blocks: usize, salt: u32) -> Vec<u32> {
+        let mut out = prefix.to_vec();
+        let mut i = 0;
+        while out.len() < blocks * B {
+            out.push(1000 + salt * 97 + i);
+            i += 1;
+        }
+        out
+    }
+
+    fn insert(cache: &PrefixCache, v: Variant, tokens: &[u32]) -> usize {
+        cache.insert(v, tokens, |bi| Ok(fake_rows(tokens, bi))).unwrap()
+    }
+
+    /// All matched rows of a lookup, concatenated.
+    fn hit_rows(cache: &PrefixCache, v: Variant, tokens: &[u32]) -> Option<(usize, Vec<f32>)> {
+        let hit = cache.lookup(v, tokens)?;
+        let mut rows = Vec::new();
+        hit.for_each_block(|b| {
+            rows.extend_from_slice(b);
+            Ok(())
+        })
+        .unwrap();
+        Some((hit.tokens(), rows))
+    }
+
+    #[test]
+    fn insert_then_lookup_roundtrips_rows() {
+        let c = PrefixCache::new(1 << 20);
+        let t = seq(&[], 3, 1);
+        assert_eq!(insert(&c, Variant::Target, &t), 3);
+
+        // exact query: all 3 blocks, rows in order
+        let (n, rows) = hit_rows(&c, Variant::Target, &t).unwrap();
+        assert_eq!(n, 3 * B);
+        let want: Vec<f32> =
+            (0..3).flat_map(|bi| fake_rows(&t, bi)).collect();
+        assert_eq!(rows, want);
+
+        // longer query matches only the cached prefix
+        let mut longer = t.clone();
+        longer.extend(seq(&[], 1, 9));
+        assert_eq!(hit_rows(&c, Variant::Target, &longer).unwrap().0, 3 * B);
+
+        // shorter query truncates to its own whole blocks
+        assert_eq!(hit_rows(&c, Variant::Target, &t[..2 * B + 5]).unwrap().0, 2 * B);
+        // sub-block query can't match anything
+        assert!(c.lookup(Variant::Target, &t[..B - 1]).is_none());
+        // different variant namespace is empty
+        assert!(c.lookup(Variant::Ls40, &t).is_none());
+    }
+
+    #[test]
+    fn divergent_insert_splits_shared_edge() {
+        let c = PrefixCache::new(1 << 20);
+        let a = seq(&[], 4, 1);
+        insert(&c, Variant::Target, &a);
+        assert_eq!(c.live_nodes(Variant::Target), 1);
+
+        // b shares a's first 2 blocks, then diverges
+        let b = seq(&a[..2 * B], 4, 2);
+        let added = insert(&c, Variant::Target, &b);
+        assert_eq!(added, 2, "only the divergent tail is new");
+        // split: shared(2 blocks) -> {a-tail(2), b-tail(2)}
+        assert_eq!(c.live_nodes(Variant::Target), 3);
+
+        // both full sequences still resolve with correct rows
+        let (na, ra) = hit_rows(&c, Variant::Target, &a).unwrap();
+        assert_eq!(na, 4 * B);
+        assert_eq!(ra, (0..4).flat_map(|bi| fake_rows(&a, bi)).collect::<Vec<_>>());
+        let (nb, rb) = hit_rows(&c, Variant::Target, &b).unwrap();
+        assert_eq!(nb, 4 * B);
+        // b's first two blocks were published by a (shared edge), so its
+        // row tags follow a's tokens there — exactly the dedup the trie
+        // exists for; the tail carries b's own rows
+        let mut want_b: Vec<f32> = (0..2).flat_map(|bi| fake_rows(&a, bi)).collect();
+        want_b.extend((2..4).flat_map(|bi| fake_rows(&b, bi)));
+        assert_eq!(rb, want_b);
+
+        // a prefix-only re-insert adds nothing
+        assert_eq!(insert(&c, Variant::Target, &a[..3 * B]), 0);
+        assert_eq!(c.stats().inserted_blocks, 6);
+    }
+
+    #[test]
+    fn pinned_paths_survive_eviction() {
+        // budget: 4 blocks
+        let c = PrefixCache::new(4 * BLOCK_BYTES);
+        let a = seq(&[], 2, 1);
+        let b = seq(&[], 2, 2);
+        insert(&c, Variant::Target, &a);
+        insert(&c, Variant::Target, &b);
+        assert_eq!(c.stats().bytes, 4 * BLOCK_BYTES);
+
+        // pin a, then overflow the budget: only b may be evicted
+        let hit = c.lookup(Variant::Target, &a).unwrap();
+        let d = seq(&[], 2, 3);
+        insert(&c, Variant::Target, &d);
+        assert!(c.stats().bytes <= 4 * BLOCK_BYTES);
+        assert!(c.lookup(Variant::Target, &a).is_some(), "pinned entry evicted");
+        assert!(c.lookup(Variant::Target, &b).is_none(), "LRU unpinned entry kept");
+        // the pinned rows are still readable through the original hit
+        let mut n = 0;
+        hit.for_each_block(|rows| {
+            assert_eq!(rows.len(), ELEMS);
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 2);
+        drop(hit);
+
+        // unpinned now: the next overflow may take it
+        let e = seq(&[], 4, 4);
+        insert(&c, Variant::Target, &e);
+        assert!(c.lookup(Variant::Target, &a).is_none(), "unpinned entry outlived LRU");
+        assert!(c.stats().evicted_blocks >= 4);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_touch_refreshes() {
+        let c = PrefixCache::new(4 * BLOCK_BYTES);
+        let a = seq(&[], 2, 1);
+        let b = seq(&[], 2, 2);
+        insert(&c, Variant::Target, &a);
+        insert(&c, Variant::Target, &b);
+        // touch a: b becomes the LRU entry
+        assert!(c.lookup(Variant::Target, &a).is_some());
+
+        let d = seq(&[], 2, 3);
+        insert(&c, Variant::Target, &d);
+        assert!(c.lookup(Variant::Target, &a).is_some(), "recently used entry evicted");
+        assert!(c.lookup(Variant::Target, &b).is_none(), "LRU entry kept");
+        assert!(c.lookup(Variant::Target, &d).is_some(), "fresh insert evicted");
+    }
+
+    #[test]
+    fn byte_budget_enforced_per_insert() {
+        let c = PrefixCache::new(3 * BLOCK_BYTES);
+        for salt in 0..8 {
+            let t = seq(&[], 2, salt);
+            insert(&c, Variant::Target, &t);
+            assert!(
+                c.stats().bytes <= 3 * BLOCK_BYTES,
+                "resident bytes exceed budget after insert {salt}"
+            );
+        }
+        let s = c.stats();
+        assert_eq!(s.budget, 3 * BLOCK_BYTES);
+        assert_eq!(s.inserted_blocks, 16);
+        assert!(s.evicted_blocks >= 13, "evictions must track the overflow");
+    }
+
+    #[test]
+    fn interior_nodes_evict_only_after_their_leaves() {
+        // shared(1 block) -> two 1-block tails; budget forces everything out
+        let c = PrefixCache::new(3 * BLOCK_BYTES);
+        let a = seq(&[], 2, 1);
+        let b = seq(&a[..B], 2, 2);
+        insert(&c, Variant::Target, &a);
+        insert(&c, Variant::Target, &b);
+        assert_eq!(c.live_nodes(Variant::Target), 3);
+
+        // overflow with fresh unrelated entries, one block at a time: the
+        // shared interior node must outlive at least one of its tails
+        insert(&c, Variant::Target, &seq(&[], 1, 3));
+        let s = c.stats();
+        assert!(s.bytes <= s.budget);
+        // whatever was evicted, lookups that still hit must return
+        // consistent whole-block matches (no dangling interior reads)
+        for t in [&a, &b] {
+            if let Some((n, rows)) = hit_rows(&c, Variant::Target, t) {
+                assert_eq!(rows.len(), (n / B) * ELEMS);
+            }
+        }
+    }
+
+    #[test]
+    fn block_size_mismatch_rejected() {
+        let c = PrefixCache::new(1 << 20);
+        let t = seq(&[], 1, 1);
+        insert(&c, Variant::Target, &t);
+        let u = seq(&[], 1, 2);
+        let res = c.insert(Variant::Target, &u, |_| Ok(vec![0f32; ELEMS + 1]));
+        assert!(res.is_err(), "inconsistent block geometry must be rejected");
+    }
+}

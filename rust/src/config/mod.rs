@@ -34,6 +34,10 @@ pub struct RunConfig {
     /// Max concurrent requests in the server's running decode batch
     /// (continuous batching; 1 = sequential serving).
     pub max_batch: usize,
+    /// Cross-request prefix/KV cache budget in MiB (0 = disabled).
+    /// Committed prompt blocks are shared across requests through a
+    /// radix trie (`cache` module); reuse is bit-exact.
+    pub prefix_cache_mb: usize,
     pub opts: EngineOpts,
 }
 
@@ -49,6 +53,7 @@ impl Default for RunConfig {
             seed: 42,
             addr: "127.0.0.1:7599".into(),
             max_batch: 8,
+            prefix_cache_mb: 0,
             opts: EngineOpts::default(),
         }
     }
@@ -69,6 +74,9 @@ impl RunConfig {
                 "seed" => self.seed = v.as_u64().ok_or_else(bad(k))?,
                 "addr" => self.addr = v.as_str().ok_or_else(bad(k))?.into(),
                 "max_batch" => self.max_batch = v.as_usize().ok_or_else(bad(k))?,
+                "prefix_cache_mb" => {
+                    self.prefix_cache_mb = v.as_usize().ok_or_else(bad(k))?
+                }
                 "draft_k" => self.opts.draft_k = v.as_usize().ok_or_else(bad(k))?,
                 "conf_stop" => self.opts.conf_stop = v.as_f64().ok_or_else(bad(k))?,
                 "dytc" => apply_dytc(&mut self.opts.dytc, v)?,
@@ -102,6 +110,7 @@ impl RunConfig {
             self.addr = addr.into();
         }
         self.max_batch = a.usize_or("max-batch", self.max_batch)?;
+        self.prefix_cache_mb = a.usize_or("prefix-cache-mb", self.prefix_cache_mb)?;
         self.opts.draft_k = a.usize_or("draft-k", self.opts.draft_k)?;
         self.opts.conf_stop = a.f64_or("conf-stop", self.opts.conf_stop)?;
         self.opts.dytc.k_max = a.usize_or("k-max", self.opts.dytc.k_max)?;
@@ -118,6 +127,11 @@ impl RunConfig {
         }
         cfg.apply_args(a)?;
         Ok(cfg)
+    }
+
+    /// Prefix-cache budget in bytes (the `prefix_cache_mb` knob).
+    pub fn prefix_cache_bytes(&self) -> usize {
+        self.prefix_cache_mb << 20
     }
 
     /// Resolve the configured backend choice; "auto" defers to
@@ -185,6 +199,19 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.apply_json(&Json::parse(r#"{"max_batch":16}"#).unwrap()).unwrap();
         assert_eq!(cfg.max_batch, 16);
+    }
+
+    #[test]
+    fn prefix_cache_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert_eq!(cfg.prefix_cache_mb, 0, "prefix cache defaults off");
+        assert_eq!(cfg.prefix_cache_bytes(), 0);
+        let cfg = RunConfig::from_args(&args("--prefix-cache-mb 32")).unwrap();
+        assert_eq!(cfg.prefix_cache_mb, 32);
+        assert_eq!(cfg.prefix_cache_bytes(), 32 << 20);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"prefix_cache_mb":4}"#).unwrap()).unwrap();
+        assert_eq!(cfg.prefix_cache_mb, 4);
     }
 
     #[test]

@@ -19,7 +19,8 @@
 //!   run-to-completion and a resumable per-round entry point), the
 //!   analytic EWIF machinery ([`analytic`]), the synthetic Spec-Bench
 //!   workload ([`workload`]), a continuous-batching serving front-end
-//!   ([`server`]) and the bench harness ([`harness`]).
+//!   ([`server`]) with a cross-request prefix/KV cache ([`cache`]) and
+//!   the bench harness ([`harness`]).
 //!
 //! See docs/ARCHITECTURE.md for the paper-to-code map, the `Backend`
 //! bit-determinism contract, and the serving-loop dataflow.
@@ -30,6 +31,7 @@
 #![allow(clippy::needless_range_loop, clippy::new_without_default)]
 
 pub mod analytic;
+pub mod cache;
 pub mod config;
 pub mod dytc;
 pub mod engine;

@@ -69,6 +69,9 @@ FLAGS
   --seed N            workload seed               (default: 42)
   --max-batch N       serve: max concurrent requests per decode batch
                       (continuous batching; default: 8, 1 = sequential)
+  --prefix-cache-mb N cross-request prefix/KV cache budget in MiB
+                      (default: 0 = off; shared prompt prefixes are
+                      reused bit-exactly across requests)
   --config FILE       JSON config (see config/mod.rs)
   --markdown          emit tables as markdown
   --verbose           per-request progress lines
@@ -84,6 +87,7 @@ fn info(args: &Args) -> Result<()> {
     println!("artifacts: {}", m.dir.display());
     println!("backend: {}", rt.backend_name());
     println!("max_batch: {}", cfg.max_batch);
+    println!("prefix_cache_mb: {}", cfg.prefix_cache_mb);
     println!("lang_seed: {}  vocab: {}", m.lang_seed, m.vocab);
     println!("step shapes: {:?}  commit shapes: {:?}", m.step_shapes, m.commit_shapes);
     for (name, sc) in &m.scales {
@@ -110,7 +114,8 @@ fn run(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     let engine_name = cfg.engines.first().cloned().unwrap_or_else(|| "cas-spec".into());
     let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
-    let srt = rt.load_scale(&cfg.scale, &required_variants(&engine_name))?;
+    let mut srt = rt.load_scale(&cfg.scale, &required_variants(&engine_name))?;
+    srt.enable_prefix_cache(cfg.prefix_cache_bytes());
     let mut eng = build_engine(&engine_name, &srt, &cfg.opts)?;
 
     let lang = Language::build(rt.manifest.lang_seed);
@@ -131,7 +136,11 @@ fn run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_for_engines(rt: &Runtime, scale: &str, engines: &[String]) -> Result<cas_spec::runtime::ScaleRuntime> {
+fn load_for_engines(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    engines: &[String],
+) -> Result<cas_spec::runtime::ScaleRuntime> {
     let mut vars = vec![Variant::Target];
     for e in engines {
         for v in required_variants(e) {
@@ -140,13 +149,15 @@ fn load_for_engines(rt: &Runtime, scale: &str, engines: &[String]) -> Result<cas
             }
         }
     }
-    rt.load_scale(scale, &vars)
+    let mut srt = rt.load_scale(&cfg.scale, &vars)?;
+    srt.enable_prefix_cache(cfg.prefix_cache_bytes());
+    Ok(srt)
 }
 
 fn bench(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
-    let srt = load_for_engines(&rt, &cfg.scale, &cfg.engines)?;
+    let srt = load_for_engines(&rt, &cfg, &cfg.engines)?;
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);
     let run = run_suite(&srt, &suite, &cfg.engines, &cfg.opts, false, args.has("verbose"))?;
@@ -168,7 +179,7 @@ fn check(args: &Args) -> Result<()> {
         cfg.engines = ENGINES.iter().map(|s| s.to_string()).collect();
     }
     let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
-    let srt = load_for_engines(&rt, &cfg.scale, &cfg.engines)?;
+    let srt = load_for_engines(&rt, &cfg, &cfg.engines)?;
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);
     run_suite(&srt, &suite, &cfg.engines, &cfg.opts, true, args.has("verbose"))?;

@@ -48,6 +48,17 @@
 //! identical to per-lane `step` calls (`tests/batch_step.rs`), which is
 //! what makes greedy losslessness hold unchanged under continuous
 //! batching.
+//!
+//! # Cross-request prefix reuse
+//!
+//! [`Backend::export_rows`] / [`Backend::import_rows`] move committed KV
+//! rows between a cache and a backend-neutral host buffer. Together with
+//! the determinism contract (a committed token's rows are a pure function
+//! of its token prefix) they let the cross-request prefix cache
+//! ([`crate::cache`]) seed a new request's prefill from another request's
+//! committed prompt blocks, bit-exactly. [`ScaleRuntime`] optionally owns
+//! one such cache ([`ScaleRuntime::enable_prefix_cache`]); sessions
+//! consult it on their first feed.
 
 #![warn(missing_docs)]
 
@@ -63,6 +74,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::cache::PrefixCache;
 use crate::model::weights::Weights;
 use crate::model::{Manifest, ScaleInfo, Variant};
 
@@ -81,6 +93,9 @@ pub struct VariantCounters {
     pub tokens_stepped: u64,
     /// Gather-commit calls (contiguous fast-path commits excluded).
     pub commits: u64,
+    /// Committed tokens seeded from the cross-request prefix cache
+    /// instead of being stepped (row imports, see [`ScaleRuntime::import_rows`]).
+    pub tokens_reused: u64,
     /// Wall-clock spent in steps/commits (batched steps split evenly
     /// across their lanes' variants).
     pub time: Duration,
@@ -204,6 +219,35 @@ pub trait Backend {
             )?);
         }
         Ok(out)
+    }
+
+    /// Copy committed KV rows `start .. start + len` out of a cache into
+    /// a contiguous host buffer, plane-major: for each of the variant's
+    /// `nl * 2 * H` planes, `len` rows of `d_head` f32s. The cross-request
+    /// prefix cache publishes prompt blocks through this.
+    ///
+    /// The default reports unsupported so backends without host row
+    /// access (the PJRT stub) keep type-checking; a real device backend
+    /// would implement it with a device-to-host (or device-to-device)
+    /// copy — recorded as a ROADMAP follow-up.
+    fn export_rows(&self, v: Variant, kv: &KvState, start: usize, len: usize) -> Result<Vec<f32>> {
+        let _ = (v, kv, start, len);
+        Err(anyhow!("backend {}: KV row export not supported", self.name()))
+    }
+
+    /// Inverse of [`Backend::export_rows`]: write `rows` (same plane-major
+    /// layout) at cache positions `start .. start + len`. Seeds a fresh
+    /// request's cache from another request's committed prefix.
+    fn import_rows(
+        &self,
+        v: Variant,
+        kv: &mut KvState,
+        start: usize,
+        len: usize,
+        rows: &[f32],
+    ) -> Result<()> {
+        let _ = (v, kv, start, len, rows);
+        Err(anyhow!("backend {}: KV row import not supported", self.name()))
     }
 }
 
@@ -346,16 +390,19 @@ impl Runtime {
             .iter()
             .map(|v| (*v, RefCell::new(VariantCounters::default())))
             .collect();
-        Ok(ScaleRuntime { info, backend, counters })
+        Ok(ScaleRuntime { info, backend, counters, prefix_cache: None })
     }
 }
 
-/// One fully-loaded model scale: a backend plus per-variant accounting.
+/// One fully-loaded model scale: a backend plus per-variant accounting
+/// and (optionally) the cross-request prefix cache shared by every
+/// session opened on this runtime.
 pub struct ScaleRuntime {
     /// Scale hyper-parameters (dims, s_max, vocab, variant layer lists).
     pub info: ScaleInfo,
     backend: Box<dyn Backend>,
     counters: BTreeMap<Variant, RefCell<VariantCounters>>,
+    prefix_cache: Option<PrefixCache>,
 }
 
 /// One lane of a [`ScaleRuntime::step_batch`] call. The cache handle
@@ -383,6 +430,46 @@ impl ScaleRuntime {
     /// Variants this scale was loaded with.
     pub fn loaded_variants(&self) -> Vec<Variant> {
         self.counters.keys().copied().collect()
+    }
+
+    /// Attach a cross-request prefix cache with `budget_bytes` of block
+    /// storage (0 disables). Call before sharing the runtime with
+    /// engines; only immutable committed prefixes are ever shared, so
+    /// per-request KV isolation — and greedy losslessness — is untouched.
+    pub fn enable_prefix_cache(&mut self, budget_bytes: usize) {
+        self.prefix_cache = (budget_bytes > 0).then(|| PrefixCache::new(budget_bytes));
+    }
+
+    /// The attached prefix cache, when one is enabled.
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.prefix_cache.as_ref()
+    }
+
+    /// Copy committed KV rows `start .. start + len` out of a cache
+    /// (plane-major, see [`Backend::export_rows`]). Only committed rows
+    /// may leave a cache — speculative tree slots never do.
+    pub fn export_rows(&self, kv: &KvCache, start: usize, len: usize) -> Result<Vec<f32>> {
+        assert!(start + len <= kv.pos, "exporting uncommitted rows");
+        self.backend.export_rows(kv.variant, &kv.state, start, len)
+    }
+
+    /// Seed `len` committed rows at the cache tail (`kv.pos`) from `rows`
+    /// (the [`Backend::export_rows`] layout) and advance the committed
+    /// length — the prefill fast path for a cross-request prefix hit.
+    pub fn import_rows(&self, kv: &mut KvCache, len: usize, rows: &[f32]) -> Result<()> {
+        assert!(
+            kv.pos + len <= self.info.s_max,
+            "KV overflow: pos {} + import {} > s_max {}",
+            kv.pos,
+            len,
+            self.info.s_max
+        );
+        self.backend.import_rows(kv.variant, &mut kv.state, kv.pos, len, rows)?;
+        kv.pos += len;
+        if let Some(c) = self.counters.get(&kv.variant) {
+            c.borrow_mut().tokens_reused += len as u64;
+        }
+        Ok(())
     }
 
     /// Fresh zeroed KV cache for a variant.

@@ -28,6 +28,11 @@
 //!     Correctness is unaffected — the default is bit-identical to
 //!     per-lane `step` by construction — only the weight-read amortization
 //!     of the reference backend's override is missing.
+//!   * **KV row export/import.** Also kept at the trait defaults (which
+//!     report unsupported): the cross-request prefix cache therefore
+//!     stays inert on PJRT until device-side row copies are wired
+//!     (ROADMAP follow-up). Sessions degrade gracefully — a prefill just
+//!     steps the whole prompt like before.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;

@@ -279,6 +279,15 @@ fn host_cache_mut(kv: &mut KvState) -> Result<&mut Vec<f32>> {
     }
 }
 
+/// Immutable twin of [`host_cache_mut`] (row export reads only).
+fn host_cache(kv: &KvState) -> Result<&Vec<f32>> {
+    match kv {
+        KvState::Host(c) => Ok(c),
+        #[cfg(feature = "pjrt")]
+        _ => Err(anyhow!("reference backend received a foreign KV cache")),
+    }
+}
+
 /// Per-lane working state inside a (possibly batched) forward pass: the
 /// lane's inputs plus its private activation buffers. Rows never mix
 /// across lanes; only weight *reads* are shared.
@@ -606,6 +615,52 @@ impl Backend for RefBackend {
             .collect())
     }
 
+    fn export_rows(&self, v: Variant, kv: &KvState, start: usize, len: usize) -> Result<Vec<f32>> {
+        let var = self.variant(v)?;
+        let (nh, dh, s) = (self.info.n_heads, self.info.d_head, self.info.s_max);
+        let nl = var.info.kv_shape[0];
+        let cache = host_cache(kv)?;
+        if start + len > s {
+            return Err(anyhow!("row export out of cache bounds"));
+        }
+        let mut out = Vec::with_capacity(nl * 2 * nh * len * dh);
+        for plane in 0..nl * 2 * nh {
+            let base = plane * s * dh;
+            out.extend_from_slice(&cache[base + start * dh..base + (start + len) * dh]);
+        }
+        Ok(out)
+    }
+
+    fn import_rows(
+        &self,
+        v: Variant,
+        kv: &mut KvState,
+        start: usize,
+        len: usize,
+        rows: &[f32],
+    ) -> Result<()> {
+        let var = self.variant(v)?;
+        let (nh, dh, s) = (self.info.n_heads, self.info.d_head, self.info.s_max);
+        let nl = var.info.kv_shape[0];
+        let cache = host_cache_mut(kv)?;
+        if start + len > s {
+            return Err(anyhow!("row import out of cache bounds"));
+        }
+        if rows.len() != nl * 2 * nh * len * dh {
+            return Err(anyhow!(
+                "row import: {} elems for {len} rows of {v:?}, expected {}",
+                rows.len(),
+                nl * 2 * nh * len * dh
+            ));
+        }
+        for plane in 0..nl * 2 * nh {
+            let base = plane * s * dh;
+            cache[base + start * dh..base + (start + len) * dh]
+                .copy_from_slice(&rows[plane * len * dh..(plane + 1) * len * dh]);
+        }
+        Ok(())
+    }
+
     fn gather_commit(
         &self,
         v: Variant,
@@ -788,6 +843,36 @@ mod tests {
         for (i, li) in ls40.info.layers.iter().enumerate() {
             assert!(Rc::ptr_eq(&ls40.layers[i], &target.layers[*li]));
         }
+    }
+
+    #[test]
+    fn exported_rows_reimport_bitwise() {
+        // the prefix-cache primitive: committed rows exported from one
+        // request's cache and imported into a fresh one must continue the
+        // generation bit-identically to the donor
+        let be = backend();
+        let toks: [u32; 4] = [1, 30, 40, 50];
+        let mut kv_a = be.new_kv(Variant::Target).unwrap();
+        let (t8, m8, d8) = chain_inputs(&toks, 8);
+        be.step(Variant::Target, &mut kv_a, 0, 8, 4, &t8, &m8, &d8).unwrap();
+
+        let rows = be.export_rows(Variant::Target, &kv_a, 0, 4).unwrap();
+        let mut kv_b = be.new_kv(Variant::Target).unwrap();
+        be.import_rows(Variant::Target, &mut kv_b, 0, 4, &rows).unwrap();
+
+        // continue both caches with one more token at pos 4
+        let la = be
+            .step(Variant::Target, &mut kv_a, 4, 1, 1, &[60], &[1.0], &[0])
+            .unwrap();
+        let lb = be
+            .step(Variant::Target, &mut kv_b, 4, 1, 1, &[60], &[1.0], &[0])
+            .unwrap();
+        assert_eq!(la, lb, "continuation logits diverged after row import");
+        assert_eq!(host(&kv_a), host(&kv_b), "caches diverged after row import");
+
+        // shape validation
+        assert!(be.import_rows(Variant::Target, &mut kv_b, 0, 4, &rows[1..]).is_err());
+        assert!(be.export_rows(Variant::Target, &kv_a, 383, 2).is_err());
     }
 
     #[test]

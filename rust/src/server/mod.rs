@@ -44,10 +44,23 @@
 //! -> {"cmd": "stats"}
 //! <- {"served": 12, "errors": 0, "total_tokens": 768, "total_secs": 1.9,
 //!     "tok_s": 404.2, "queue_depth": 0, "running": 3, "peak_batch": 4,
-//!     "max_batch": 8, "engine": "cas-spec", "scale": "base",
-//!     "backend": "ref"}
+//!     "max_batch": 8, "tokens_stepped": 3210, "prefix_cache_mb": 32,
+//!     "prefix_lookups": 24, "prefix_hit_tokens": 512, "evictions": 0,
+//!     "engine": "cas-spec", "scale": "base", "backend": "ref"}
 //! -> {"cmd": "shutdown"}   <- {"ok": true}
 //! ```
+//!
+//! # Cross-request prefix cache
+//!
+//! With `--prefix-cache-mb N` (config `prefix_cache_mb`, default 0 =
+//! off) the worker attaches a [`crate::cache::PrefixCache`] to the
+//! loaded runtime before building the engine. Every admitted request's
+//! sessions then consult one shared radix trie of committed prompt
+//! blocks at prefill: shared-prompt traffic turns into KV row copies
+//! instead of forward passes, bit-exactly (engines keep fully isolated
+//! per-request sessions; only immutable committed prefixes are shared).
+//! `stats` exposes `prefix_lookups` / `prefix_hit_tokens` / `evictions`
+//! plus `tokens_stepped`, so the skipped prefill work is observable.
 
 #![warn(missing_docs)]
 
@@ -61,9 +74,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::cache::CacheStats;
 use crate::config::RunConfig;
 use crate::engine::{build_engine, required_variants, Engine, RequestRun};
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, ScaleRuntime};
 use crate::util::json::Json;
 
 /// One parsed generate request.
@@ -131,16 +145,11 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
     let worker = thread::spawn(move || -> Result<()> {
         let engine_name = wcfg.engines[0].clone();
         let rt = Runtime::open_with(&wcfg.artifacts, wcfg.backend_select()?)?;
-        let srt = rt.load_scale(&wcfg.scale, &required_variants(&engine_name))?;
+        let mut srt = rt.load_scale(&wcfg.scale, &required_variants(&engine_name))?;
+        // attach the cross-request prefix cache before any session opens
+        srt.enable_prefix_cache(wcfg.prefix_cache_bytes());
         let eng = build_engine(&engine_name, &srt, &wcfg.opts)?;
-        run_scheduler(
-            &rx,
-            eng.as_ref(),
-            &engine_name,
-            &wcfg.scale,
-            srt.backend_name(),
-            wcfg.max_batch.max(1),
-        )
+        run_scheduler(&rx, &srt, eng.as_ref(), &engine_name, wcfg.max_batch.max(1))
     });
 
     // ---- acceptor: one reader thread per connection ----
@@ -186,10 +195,9 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
 /// spins while empty nor delays rounds while busy.
 fn run_scheduler(
     rx: &mpsc::Receiver<Job>,
+    srt: &ScaleRuntime,
     eng: &dyn Engine,
     engine_name: &str,
-    scale: &str,
-    backend: &str,
     max_batch: usize,
 ) -> Result<()> {
     let mut queue: VecDeque<Queued> = VecDeque::new();
@@ -214,10 +222,21 @@ fn run_scheduler(
             match job {
                 Job::Shutdown => shutdown = true,
                 Job::Stats(reply) => {
-                    let _ = reply.send(
-                        stats_json(&c, queue.len(), running.len(), max_batch, engine_name, scale, backend)
-                            .to_string(),
-                    );
+                    let view = StatsView {
+                        queue_depth: queue.len(),
+                        running: running.len(),
+                        max_batch,
+                        tokens_stepped: srt
+                            .loaded_variants()
+                            .iter()
+                            .map(|v| srt.counters(*v).tokens_stepped)
+                            .sum(),
+                        cache: srt.prefix_cache().map(|pc| pc.stats()),
+                        engine: engine_name,
+                        scale: &srt.info.name,
+                        backend: srt.backend_name(),
+                    };
+                    let _ = reply.send(stats_json(&c, &view).to_string());
                 }
                 Job::Generate(req, reply) => {
                     queue.push_back(Queued { req, reply, enqueued: Instant::now() });
@@ -307,29 +326,42 @@ fn run_scheduler(
     }
 }
 
-fn stats_json(
-    c: &SchedCounters,
+/// Live scheduler/runtime state folded into a `stats` reply.
+struct StatsView<'a> {
     queue_depth: usize,
     running: usize,
     max_batch: usize,
-    engine: &str,
-    scale: &str,
-    backend: &str,
-) -> Json {
+    /// Live tokens actually stepped by the backend, summed over variants
+    /// — prefix-cache hits skip steps, so this drops when reuse works.
+    tokens_stepped: u64,
+    /// Prefix-cache accounting (None = cache disabled).
+    cache: Option<CacheStats>,
+    engine: &'a str,
+    scale: &'a str,
+    backend: &'a str,
+}
+
+fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
     let tok_s = if c.busy_secs > 0.0 { c.total_tokens as f64 / c.busy_secs } else { 0.0 };
+    let cache = v.cache.clone().unwrap_or_default();
     Json::obj(vec![
         ("served", Json::Num(c.served as f64)),
         ("errors", Json::Num(c.errors as f64)),
         ("total_tokens", Json::Num(c.total_tokens as f64)),
         ("total_secs", Json::Num(c.busy_secs)),
         ("tok_s", Json::Num(tok_s)),
-        ("queue_depth", Json::Num(queue_depth as f64)),
-        ("running", Json::Num(running as f64)),
+        ("queue_depth", Json::Num(v.queue_depth as f64)),
+        ("running", Json::Num(v.running as f64)),
         ("peak_batch", Json::Num(c.peak_batch as f64)),
-        ("max_batch", Json::Num(max_batch as f64)),
-        ("engine", Json::Str(engine.to_string())),
-        ("scale", Json::Str(scale.to_string())),
-        ("backend", Json::Str(backend.to_string())),
+        ("max_batch", Json::Num(v.max_batch as f64)),
+        ("tokens_stepped", Json::Num(v.tokens_stepped as f64)),
+        ("prefix_cache_mb", Json::Num((cache.budget >> 20) as f64)),
+        ("prefix_lookups", Json::Num(cache.lookups as f64)),
+        ("prefix_hit_tokens", Json::Num(cache.hit_tokens as f64)),
+        ("evictions", Json::Num(cache.evicted_blocks as f64)),
+        ("engine", Json::Str(v.engine.to_string())),
+        ("scale", Json::Str(v.scale.to_string())),
+        ("backend", Json::Str(v.backend.to_string())),
     ])
 }
 
@@ -519,12 +551,55 @@ mod tests {
             busy_secs: 0.5,
             peak_batch: 4,
         };
-        let j = stats_json(&c, 2, 3, 8, "pld", "small", "ref");
+        let v = StatsView {
+            queue_depth: 2,
+            running: 3,
+            max_batch: 8,
+            tokens_stepped: 900,
+            cache: None,
+            engine: "pld",
+            scale: "small",
+            backend: "ref",
+        };
+        let j = stats_json(&c, &v);
         assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("running").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.get("peak_batch").unwrap().as_usize().unwrap(), 4);
         assert_eq!(j.get("max_batch").unwrap().as_usize().unwrap(), 8);
         assert!((j.get("tok_s").unwrap().as_f64().unwrap() - 240.0).abs() < 1e-9);
         assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "ref");
+        assert_eq!(j.get("tokens_stepped").unwrap().as_u64().unwrap(), 900);
+        // cache disabled: prefix fields present and zeroed
+        assert_eq!(j.get("prefix_cache_mb").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("prefix_lookups").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(j.get("prefix_hit_tokens").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(j.get("evictions").unwrap().as_u64().unwrap(), 0);
+    }
+
+    #[test]
+    fn stats_json_reports_prefix_cache_fields() {
+        let c = SchedCounters::default();
+        let v = StatsView {
+            queue_depth: 0,
+            running: 0,
+            max_batch: 8,
+            tokens_stepped: 40,
+            cache: Some(CacheStats {
+                lookups: 5,
+                hit_tokens: 64,
+                inserted_blocks: 9,
+                evicted_blocks: 2,
+                bytes: 1 << 20,
+                budget: 32 << 20,
+            }),
+            engine: "cas-spec",
+            scale: "base",
+            backend: "ref",
+        };
+        let j = stats_json(&c, &v);
+        assert_eq!(j.get("prefix_cache_mb").unwrap().as_usize().unwrap(), 32);
+        assert_eq!(j.get("prefix_lookups").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(j.get("prefix_hit_tokens").unwrap().as_u64().unwrap(), 64);
+        assert_eq!(j.get("evictions").unwrap().as_u64().unwrap(), 2);
     }
 }

@@ -10,11 +10,25 @@
 //! every admitted request its own set of sessions (inside an
 //! `engine::RequestRun`), so concurrent requests never share KV state and
 //! greedy losslessness is preserved under any interleaving.
+//!
+//! # Prefill through the cross-request prefix cache
+//!
+//! The *first* feed of a fresh session (`pos == 0`) is the prefill path.
+//! When the runtime carries a [`crate::cache::PrefixCache`], that feed
+//! becomes: look up the longest cached prefix of the tokens (capped so at
+//! least the final token is still stepped — the post-prefill logits must
+//! exist), copy the cached KV rows into this session's own cache
+//! ([`ScaleRuntime::import_rows`]), step only the remaining suffix, then
+//! publish the newly committed whole blocks back into the cache. Reuse is
+//! bit-exact by the backend determinism contract (a committed token's
+//! rows are a pure function of its token prefix), so greedy losslessness
+//! is untouched — `rust/tests/prefix_cache.rs` pins this end to end.
 
 #![warn(missing_docs)]
 
 use anyhow::Result;
 
+use crate::cache::BLOCK_TOKENS;
 use crate::model::Variant;
 use crate::runtime::{KvCache, ScaleRuntime, StepOutput};
 use crate::spec::tree::DraftTree;
@@ -59,7 +73,57 @@ impl<'rt> VariantSession<'rt> {
 
     /// Feed a chain of tokens (prompt prefill or accepted-token catch-up),
     /// committing all of them. Returns logits after the final token.
+    ///
+    /// The first feed of a fresh session additionally consults the
+    /// runtime's cross-request prefix cache (see the module docs): cached
+    /// prefix rows are imported instead of stepped, and the newly
+    /// committed blocks are published for later requests.
     pub fn feed(&mut self, tokens: &[u32]) -> Result<()> {
+        // pos == 0 marks the prefill feed — the only point where a
+        // cached prefix can be grafted in (it must start at position 0)
+        let prefill = self.kv.pos == 0 && !tokens.is_empty();
+        let reused = if prefill { self.seed_from_cache(tokens)? } else { 0 };
+        self.feed_steps(&tokens[reused..])?;
+        if prefill {
+            self.publish_prefix(tokens);
+        }
+        Ok(())
+    }
+
+    /// Import the longest cached prefix of `tokens` into this session's
+    /// KV cache; returns how many committed tokens were seeded. Always
+    /// leaves at least the final token for [`Self::feed_steps`], so the
+    /// post-prefill logits row is computed as usual.
+    fn seed_from_cache(&mut self, tokens: &[u32]) -> Result<usize> {
+        let Some(cache) = self.rt.prefix_cache() else { return Ok(0) };
+        if tokens.len() < 2 {
+            return Ok(0);
+        }
+        let Some(hit) = cache.lookup(self.kv.variant, &tokens[..tokens.len() - 1]) else {
+            return Ok(0);
+        };
+        let rt = self.rt;
+        let kv = &mut self.kv;
+        hit.for_each_block(|rows| rt.import_rows(kv, BLOCK_TOKENS, rows))?;
+        debug_assert_eq!(self.kv.pos, hit.tokens());
+        Ok(hit.tokens())
+    }
+
+    /// Publish the whole-block prefix of the freshly committed `tokens`
+    /// into the cross-request cache. Best-effort: backends without row
+    /// export (PJRT until device copies land) simply never populate it.
+    fn publish_prefix(&self, tokens: &[u32]) {
+        let Some(cache) = self.rt.prefix_cache() else { return };
+        debug_assert!(self.kv.pos >= tokens.len(), "publish before commit");
+        let rt = self.rt;
+        let kv = &self.kv;
+        let _ = cache.insert(kv.variant, tokens, |blk| {
+            rt.export_rows(kv, blk * BLOCK_TOKENS, BLOCK_TOKENS)
+        });
+    }
+
+    /// Step-and-commit a chain of tokens in lowered chunk shapes.
+    fn feed_steps(&mut self, tokens: &[u32]) -> Result<()> {
         let vocab = self.rt.vocab();
         let mut rest = tokens;
         while !rest.is_empty() {
@@ -86,12 +150,11 @@ impl<'rt> VariantSession<'rt> {
     }
 
     /// Decode a single committed token; returns the next-token logits.
+    /// (A one-token chain feed: same step/commit path as [`Self::feed`],
+    /// which picks the T=1 shape and the contiguous-commit fast path.)
     pub fn decode_one(&mut self, token: u32) -> Result<&[f32]> {
-        let vocab = self.rt.vocab();
-        let out = self.rt.step(&mut self.kv, 1, 1, &[token], &[1.0], &[0])?;
-        self.rt.commit(&mut self.kv, 1, &[0])?;
-        self.last_logits = Some(out.logits[..vocab].to_vec());
-        Ok(self.last_logits.as_deref().unwrap())
+        self.feed(std::slice::from_ref(&token))?;
+        Ok(self.last_logits.as_deref().expect("feed sets last_logits"))
     }
 
     /// Run a speculative tree step WITHOUT committing. Returns the (T, V)

@@ -44,6 +44,50 @@ impl Suite {
         Suite { items }
     }
 
+    /// A shared-prefix serving workload: `n_requests` prompts that all
+    /// start with the same `prefix_len`-token prefix (system prompt /
+    /// few-shot header) followed by a distinct per-request suffix of
+    /// `suffix_len` tokens. This is the traffic shape the cross-request
+    /// prefix cache converts into skipped prefill passes; the
+    /// `serve_bench` example runs it with the cache off and on.
+    /// Deterministic in `seed`; prefix and suffixes are drawn from the
+    /// pretraining Markov stream so drafting behaves like real prompts.
+    pub fn shared_prefix(
+        lang: &Language,
+        seed: u64,
+        n_requests: usize,
+        prefix_len: usize,
+        suffix_len: usize,
+        max_new: usize,
+    ) -> Suite {
+        use crate::tokenizer::{BOS, SEP};
+        assert!(prefix_len >= 1 && suffix_len >= 1);
+
+        let mut prng = SplitMix64::new(seed ^ fnv1a64("shared_prefix") ^ 0x5eed);
+        let mut prefix = vec![BOS];
+        while prefix.len() < prefix_len {
+            let s = lang.sentence(&mut prng);
+            prefix.extend_from_slice(&s);
+        }
+        prefix.truncate(prefix_len);
+
+        let mut items = Vec::with_capacity(n_requests);
+        for id in 0..n_requests {
+            // per-request stream so changing one suffix never shifts others
+            let mut rng =
+                SplitMix64::new(seed ^ fnv1a64("shared_suffix") ^ (id as u64 + 1));
+            let mut prompt = prefix.clone();
+            while prompt.len() < prefix_len + suffix_len - 1 {
+                let s = lang.sentence(&mut prng);
+                prompt.extend_from_slice(&s);
+            }
+            prompt.truncate(prefix_len + suffix_len - 1);
+            prompt.push(SEP);
+            items.push(WorkItem { id, category: "shared_prefix", prompt, max_new });
+        }
+        Suite { items }
+    }
+
     /// Restrict to one category (used by per-column benches).
     pub fn category(&self, cat: &str) -> Vec<&WorkItem> {
         self.items.iter().filter(|w| w.category == cat).collect()
@@ -83,6 +127,28 @@ mod tests {
             a.items.iter().map(|w| &w.prompt).collect::<Vec<_>>(),
             b.items.iter().map(|w| &w.prompt).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn shared_prefix_shape_and_determinism() {
+        let lang = Language::build(20250711);
+        let a = Suite::shared_prefix(&lang, 7, 5, 64, 12, 32);
+        assert_eq!(a.len(), 5);
+        for w in &a.items {
+            assert_eq!(w.prompt.len(), 64 + 12, "prefix + suffix length");
+            assert_eq!(w.prompt[..64], a.items[0].prompt[..64], "shared prefix");
+            assert_eq!(w.max_new, 32);
+            assert_eq!(w.category, "shared_prefix");
+        }
+        // suffixes are per-request distinct
+        assert_ne!(a.items[0].prompt[64..], a.items[1].prompt[64..]);
+        // deterministic in the seed; different seeds differ
+        let b = Suite::shared_prefix(&lang, 7, 5, 64, 12, 32);
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+        let c = Suite::shared_prefix(&lang, 8, 5, 64, 12, 32);
+        assert_ne!(a.items[0].prompt, c.items[0].prompt);
     }
 
     #[test]

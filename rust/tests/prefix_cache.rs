@@ -1,0 +1,174 @@
+//! Cross-request prefix cache: losslessness and reuse accounting.
+//!
+//! The load-bearing claim (docs/ARCHITECTURE.md §Prefix cache): because a
+//! committed token's KV rows are a pure function of its token prefix (the
+//! backend determinism contract), seeding a prefill from another
+//! request's cached blocks is **bit-exact** — every engine must generate
+//! byte-identical tokens with the cache enabled, while the runtime steps
+//! measurably fewer tokens. Hermetic: runs on the reference backend with
+//! seeded weights.
+
+use std::path::Path;
+
+use cas_spec::cache::BLOCK_TOKENS;
+use cas_spec::engine::{build_engine, EngineOpts, ENGINES};
+use cas_spec::model::Variant;
+use cas_spec::runtime::{BackendSelect, Runtime, ScaleRuntime};
+use cas_spec::spec::VariantSession;
+
+/// A hermetic all-variants runtime; `cache_mb` > 0 attaches the cache.
+fn runtime(cache_mb: usize) -> ScaleRuntime {
+    let rt = Runtime::open_with(Path::new("/missing-artifacts"), BackendSelect::Ref)
+        .expect("ref runtime");
+    let mut srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    srt.enable_prefix_cache(cache_mb << 20);
+    srt
+}
+
+/// Prompts sharing a multi-block prefix, with distinct tails.
+fn shared_prompts() -> (Vec<u32>, Vec<u32>) {
+    // 3 cache blocks of region-A tokens, then per-request tails
+    let prefix: Vec<u32> = (0..3 * BLOCK_TOKENS as u32).map(|i| 26 + (i * 7) % 240).collect();
+    let mut p1 = prefix.clone();
+    p1.extend([30, 40, 3]);
+    let mut p2 = prefix;
+    p2.extend([50, 60, 70, 3]);
+    (p1, p2)
+}
+
+#[test]
+fn cache_seeded_prefill_is_bit_identical_for_every_engine() {
+    let cold = runtime(0);
+    let warm = runtime(8);
+    let (p1, p2) = shared_prompts();
+
+    for name in ENGINES {
+        let opts = EngineOpts::default();
+        let mut ce = build_engine(name, &cold, &opts).unwrap();
+        let cold1 = ce.generate(&p1, 10).unwrap().tokens;
+        let cold2 = ce.generate(&p2, 10).unwrap().tokens;
+
+        let mut we = build_engine(name, &warm, &opts).unwrap();
+        // first request publishes the prefix, second reuses it
+        let warm1 = we.generate(&p1, 10).unwrap().tokens;
+        let warm2 = we.generate(&p2, 10).unwrap().tokens;
+        assert_eq!(warm1, cold1, "{name}: publishing request diverged");
+        assert_eq!(warm2, cold2, "{name}: cache-seeded request diverged");
+    }
+
+    let stats = warm.prefix_cache().unwrap().stats();
+    assert!(stats.lookups > 0, "prefill never consulted the cache");
+    assert!(
+        stats.hit_tokens > 0,
+        "shared prefixes never hit ({} lookups)",
+        stats.lookups
+    );
+}
+
+#[test]
+fn cache_hits_skip_prefill_steps() {
+    let warm = runtime(8);
+    let (p1, p2) = shared_prompts();
+
+    let mut s1 = VariantSession::new(&warm, Variant::Target).unwrap();
+    s1.feed(&p1).unwrap();
+    let stepped_cold = warm.counters(Variant::Target).tokens_stepped;
+    assert_eq!(warm.counters(Variant::Target).tokens_reused, 0);
+
+    let mut s2 = VariantSession::new(&warm, Variant::Target).unwrap();
+    s2.feed(&p2).unwrap();
+    let c = warm.counters(Variant::Target);
+    assert_eq!(
+        c.tokens_reused as usize,
+        3 * BLOCK_TOKENS,
+        "second prefill must reuse the whole shared prefix"
+    );
+    let stepped_warm = c.tokens_stepped - stepped_cold;
+    assert_eq!(
+        stepped_warm as usize,
+        p2.len() - 3 * BLOCK_TOKENS,
+        "second prefill must step only the suffix"
+    );
+
+    // both sessions are positioned after their full prompts
+    assert_eq!(s1.pos(), p1.len());
+    assert_eq!(s2.pos(), p2.len());
+
+    // and the reused prefill continues bit-identically: same next-token
+    // logits as a cold session fed the same prompt
+    let cold = runtime(0);
+    let mut s3 = VariantSession::new(&cold, Variant::Target).unwrap();
+    s3.feed(&p2).unwrap();
+    assert_eq!(s2.last_logits().unwrap(), s3.last_logits().unwrap());
+}
+
+#[test]
+fn identical_prompts_reuse_everything_but_the_tail() {
+    let warm = runtime(8);
+    let (p1, _) = shared_prompts();
+
+    let mut a = VariantSession::new(&warm, Variant::Target).unwrap();
+    a.feed(&p1).unwrap();
+    let mut b = VariantSession::new(&warm, Variant::Target).unwrap();
+    b.feed(&p1).unwrap();
+
+    // the repeat reuses every whole block of the lookup slice (the last
+    // token is always stepped so post-prefill logits exist)
+    let c = warm.counters(Variant::Target);
+    let reusable = ((p1.len() - 1) / BLOCK_TOKENS) * BLOCK_TOKENS;
+    assert_eq!(c.tokens_reused as usize, reusable);
+    assert_eq!(a.last_logits().unwrap(), b.last_logits().unwrap());
+}
+
+#[test]
+fn draft_variants_have_their_own_namespace() {
+    let warm = runtime(8);
+    let (p1, _) = shared_prompts();
+
+    let mut t = VariantSession::new(&warm, Variant::Target).unwrap();
+    t.feed(&p1).unwrap();
+    // a draft session of a different variant must not hit target blocks
+    let mut d = VariantSession::new(&warm, Variant::Ls40).unwrap();
+    d.feed(&p1).unwrap();
+    assert_eq!(
+        warm.counters(Variant::Ls40).tokens_reused,
+        0,
+        "ls40 prefill must miss on target-published blocks"
+    );
+    // but a second ls40 session reuses ls40's own published blocks
+    let mut d2 = VariantSession::new(&warm, Variant::Ls40).unwrap();
+    d2.feed(&p1).unwrap();
+    assert!(warm.counters(Variant::Ls40).tokens_reused > 0);
+    assert_eq!(d.last_logits().unwrap(), d2.last_logits().unwrap());
+}
+
+#[test]
+fn export_import_roundtrip_continues_bitwise() {
+    // The ScaleRuntime-level primitive under the cache: committed rows
+    // exported from one request's KV seed a fresh cache that continues
+    // decoding bit-identically to the donor.
+    use cas_spec::spec::DraftTree;
+
+    let srt = runtime(0);
+    let n = 2 * BLOCK_TOKENS;
+    let toks: Vec<u32> = (0..n as u32).map(|i| 26 + (i * 5) % 240).collect();
+
+    let mut kv_a = srt.new_kv(Variant::Target).unwrap();
+    let tree = DraftTree::chain(toks[0], &toks[1..], 64);
+    let (t64, m64, d64) = tree.serialize(64, 0);
+    srt.step(&mut kv_a, 64, n, &t64, &m64, &d64).unwrap();
+    let slots: Vec<usize> = (0..n).collect();
+    srt.commit(&mut kv_a, 64, &slots).unwrap();
+    assert_eq!(kv_a.pos, n);
+
+    let rows = srt.export_rows(&kv_a, 0, n).unwrap();
+    let mut kv_b = srt.new_kv(Variant::Target).unwrap();
+    srt.import_rows(&mut kv_b, n, &rows).unwrap();
+    assert_eq!(kv_b.pos, n, "import advances the committed length");
+    assert_eq!(srt.counters(Variant::Target).tokens_reused as usize, n);
+
+    // continue both caches with the same next token: bitwise equal
+    let la = srt.step(&mut kv_a, 1, 1, &[77], &[1.0], &[0]).unwrap();
+    let lb = srt.step(&mut kv_b, 1, 1, &[77], &[1.0], &[0]).unwrap();
+    assert_eq!(la.logits, lb.logits, "imported rows diverged from donor");
+}

@@ -10,6 +10,11 @@
 //!
 //! Hermetic: the worker falls back to the reference backend when no
 //! artifacts exist, so this always runs.
+//!
+//! The whole suite honors `CAS_SPEC_PREFIX_CACHE_MB` (CI runs it with
+//! the cross-request prefix cache off *and* on — losslessness must hold
+//! either way); `prefix_cache_stats_prove_reuse` additionally forces the
+//! cache on and asserts the reuse counters move.
 
 use std::thread;
 use std::time::Duration;
@@ -20,6 +25,16 @@ use cas_spec::model::Variant;
 use cas_spec::runtime::Runtime;
 use cas_spec::server::{serve, Client};
 use cas_spec::workload::{Language, Suite, WorkItem};
+
+/// Prefix-cache budget for the suite: the CI matrix leg sets
+/// `CAS_SPEC_PREFIX_CACHE_MB` to run everything with the cache off (0)
+/// and on; locally it defaults to off (the seed behavior).
+fn env_prefix_cache_mb() -> usize {
+    std::env::var("CAS_SPEC_PREFIX_CACHE_MB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
 
 /// Wait until the server accepts connections AND its worker answers a
 /// stats round-trip (engine built, scheduler live).
@@ -54,6 +69,7 @@ fn serve_generate_stats_shutdown() {
     cfg.scale = "small".into();
     cfg.engines = vec!["pld".into()]; // lossless => same tokens as AR
     cfg.addr = "127.0.0.1:7531".into();
+    cfg.prefix_cache_mb = env_prefix_cache_mb();
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
 
@@ -144,6 +160,7 @@ fn continuous_batching_is_lossless_and_interleaves() {
     cfg.engines = vec!["pld".into()]; // lossless => same tokens as AR
     cfg.addr = "127.0.0.1:7532".into();
     cfg.max_batch = 3;
+    cfg.prefix_cache_mb = env_prefix_cache_mb();
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
     let mut control = wait_ready(&addr);
@@ -209,4 +226,76 @@ fn continuous_batching_is_lossless_and_interleaves() {
 
     control.shutdown().unwrap();
     server.join().unwrap().unwrap();
+}
+
+/// Serve `suite` sequentially on a fresh server; returns the per-request
+/// token streams plus the final stats line.
+fn serve_suite(
+    suite: &Suite,
+    port: u16,
+    prefix_cache_mb: usize,
+) -> (Vec<Vec<u32>>, cas_spec::util::json::Json) {
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()];
+    cfg.addr = format!("127.0.0.1:{port}");
+    cfg.prefix_cache_mb = prefix_cache_mb;
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut client = wait_ready(&addr);
+
+    let mut outputs = Vec::with_capacity(suite.items.len());
+    for (i, item) in suite.items.iter().enumerate() {
+        let resp = client.generate(i as u64, &item.prompt, item.max_new).unwrap();
+        assert!(resp.get("error").is_none(), "server error: {resp}");
+        outputs.push(
+            resp.req("tokens")
+                .unwrap()
+                .usize_arr()
+                .unwrap()
+                .into_iter()
+                .map(|t| t as u32)
+                .collect(),
+        );
+    }
+    let stats = client.stats().unwrap();
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    (outputs, stats)
+}
+
+#[test]
+fn prefix_cache_stats_prove_reuse() {
+    // The acceptance criterion end to end: the same shared-prefix
+    // workload served cold (cache off) and warm (cache on) must produce
+    // byte-identical token streams, while the warm run reports
+    // prefix_hit_tokens > 0 and steps exactly that many fewer tokens
+    // (decode work is deterministic, so prefill reuse is the only delta).
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let lang = Language::build(rt.manifest.lang_seed);
+    // 4 requests sharing a 64-token (4-block) prefix + 12-token suffixes
+    let suite = Suite::shared_prefix(&lang, 11, 4, 64, 12, 16);
+
+    let (cold_tokens, cold_stats) = serve_suite(&suite, 7533, 0);
+    let (warm_tokens, warm_stats) = serve_suite(&suite, 7534, 4);
+    assert_eq!(warm_tokens, cold_tokens, "prefix cache changed generations");
+
+    assert_eq!(cold_stats.req("prefix_lookups").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(warm_stats.req("prefix_cache_mb").unwrap().as_usize().unwrap(), 4);
+    let lookups = warm_stats.req("prefix_lookups").unwrap().as_u64().unwrap();
+    assert!(lookups >= 4, "every prefill must consult the cache ({lookups})");
+    let hit_tokens = warm_stats.req("prefix_hit_tokens").unwrap().as_u64().unwrap();
+    // requests 2..4 each reuse the whole 64-token shared prefix (the
+    // first pays cold and publishes it)
+    assert_eq!(hit_tokens, 3 * 64, "unexpected reuse volume");
+
+    let cold_stepped = cold_stats.req("tokens_stepped").unwrap().as_u64().unwrap();
+    let warm_stepped = warm_stats.req("tokens_stepped").unwrap().as_u64().unwrap();
+    assert!(warm_stepped < cold_stepped, "reuse must skip forward passes");
+    assert_eq!(
+        cold_stepped - warm_stepped,
+        hit_tokens,
+        "every reused token must correspond to one skipped stepped token"
+    );
+    assert_eq!(warm_stats.req("evictions").unwrap().as_u64().unwrap(), 0);
 }

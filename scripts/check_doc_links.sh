@@ -1,34 +1,36 @@
 #!/usr/bin/env bash
-# Docs link check: every repo path referenced in docs/ARCHITECTURE.md
-# (backtick-quoted, looking like a path into rust/, python/, docs/,
-# scripts/, or a top-level *.md) must actually exist. Keeps the
-# paper-to-code map honest as the tree moves.
+# Docs link check: every repo path referenced in docs/ARCHITECTURE.md or
+# README.md (backtick-quoted, looking like a path into rust/, python/,
+# docs/, scripts/, or a top-level *.md) must actually exist. Keeps the
+# paper-to-code map — and the serving/prefix-cache docs — honest as the
+# tree moves.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-doc="docs/ARCHITECTURE.md"
-if [ ! -f "$doc" ]; then
-  echo "missing $doc" >&2
-  exit 1
-fi
-
 fail=0
-checked=0
-for p in $(grep -oE '`[A-Za-z0-9_./-]+`' "$doc" | tr -d '`' | sort -u); do
-  case "$p" in
-    rust/* | python/* | docs/* | scripts/* | *.md)
-      checked=$((checked + 1))
-      if [ ! -e "$p" ]; then
-        echo "BROKEN: $doc references '$p' which does not exist" >&2
-        fail=1
-      fi
-      ;;
-  esac
-done
+for doc in docs/ARCHITECTURE.md README.md; do
+  if [ ! -f "$doc" ]; then
+    echo "missing $doc" >&2
+    exit 1
+  fi
 
-if [ "$checked" -eq 0 ]; then
-  echo "suspicious: no path references found in $doc" >&2
-  exit 1
-fi
-echo "check_doc_links: $checked path references OK"
+  checked=0
+  for p in $(grep -oE '`[A-Za-z0-9_./-]+`' "$doc" | tr -d '`' | sort -u); do
+    case "$p" in
+      rust/* | python/* | docs/* | scripts/* | *.md)
+        checked=$((checked + 1))
+        if [ ! -e "$p" ]; then
+          echo "BROKEN: $doc references '$p' which does not exist" >&2
+          fail=1
+        fi
+        ;;
+    esac
+  done
+
+  if [ "$checked" -eq 0 ]; then
+    echo "suspicious: no path references found in $doc" >&2
+    exit 1
+  fi
+  echo "check_doc_links: $doc — $checked path references OK"
+done
 exit "$fail"

@@ -1,0 +1,240 @@
+#!/usr/bin/env python3
+# Python mirror of rust/src/cache/mod.rs (same radix-trie walk/split/
+# LRU-evict logic), driven with the exact scenarios of its #[cfg(test)]
+# suite plus the server_integration shared-prefix scenario. Runnable in
+# the toolchain-less growth container: if this passes, the Rust unit
+# tests' expected values (node counts, eviction order, byte budget,
+# hit-token totals) are algorithmically consistent.
+B = 16          # BLOCK_TOKENS
+ELEMS = B * 4   # fake block elems (test suite)
+BB = ELEMS * 4  # block bytes
+
+class Node:
+    def __init__(s, tokens, blocks, parent, last_used):
+        s.tokens, s.blocks, s.children, s.parent = tokens, blocks, [], parent
+        s.last_used, s.pins, s.live = last_used, 0, True
+
+class Cache:
+    def __init__(s, budget):
+        s.budget, s.bytes, s.clock = budget, 0, 0
+        s.trees = {}   # variant -> (nodes, free, block_elems)
+        s.stats = dict(lookups=0, hit_tokens=0, inserted=0, evicted=0)
+
+    def tree(s, v):
+        if v not in s.trees:
+            s.trees[v] = [[Node([], [], 0, 0)], [], [0]]  # nodes, free, block_elems(box)
+        return s.trees[v]
+
+    @staticmethod
+    def child_first(nodes, cur, want):
+        for c in nodes[cur].children:
+            if nodes[c].tokens[:B] == want: return c
+        return None
+
+    @staticmethod
+    def matching(nodes, c, toks):
+        e = nodes[c].tokens; m = 0
+        while (m+1)*B <= min(len(e), len(toks)) and e[m*B:(m+1)*B] == toks[m*B:(m+1)*B]:
+            m += 1
+        return m
+
+    def lookup(s, v, toks, pin=False):
+        s.stats['lookups'] += 1; s.clock += 1; now = s.clock
+        maxb = len(toks)//B
+        if v not in s.trees: return None
+        nodes = s.trees[v][0]
+        path, matched, cur = [], 0, 0
+        while matched < maxb:
+            rest = toks[matched*B:maxb*B]
+            c = s.child_first(nodes, cur, rest[:B])
+            if c is None: break
+            m = s.matching(nodes, c, rest)
+            nodes[c].last_used = now
+            if pin: nodes[c].pins += 1
+            path.append((c, m)); matched += m
+            if m < len(nodes[c].blocks): break
+            cur = c
+        if matched == 0: return None
+        s.stats['hit_tokens'] += matched*B
+        return (v, path, matched*B)
+
+    def unpin(s, hit):
+        v, path, _ = hit
+        for c,_ in path: s.trees[v][0][c].pins -= 1
+
+    def hit_rows(s, hit):
+        v, path, n = hit; nodes = s.trees[v][0]; out = []
+        for c, used in path:
+            for b in nodes[c].blocks[:used]: out.extend(b)
+        return n, out
+
+    def alloc(s, t, node):
+        nodes, free, _ = t
+        if free: i = free.pop(); nodes[i] = node; return i
+        nodes.append(node); return len(nodes)-1
+
+    def split(s, t, node, keep):
+        nodes = t[0]
+        n = nodes[node]
+        assert n.pins == 0
+        rest_t, rest_b = n.tokens[keep*B:], n.blocks[keep:]
+        n.tokens, n.blocks = n.tokens[:keep*B], n.blocks[:keep]
+        rest_children, n.children = n.children, []
+        r = s.alloc(t, Node(rest_t, rest_b, node, n.last_used))
+        nodes[r].children = rest_children
+        for c in rest_children: nodes[c].parent = r
+        n.children.append(r)
+
+    def insert(s, v, toks, rows):
+        nb = len(toks)//B
+        if nb == 0: return 0
+        s.clock += 1; now = s.clock
+        t = s.tree(v); nodes, _, be = t
+        added, cur, consumed = 0, 0, 0
+        while consumed < nb:
+            rest = toks[consumed*B:nb*B]
+            c = s.child_first(nodes, cur, rest[:B])
+            if c is None:
+                blocks, nbytes = [], 0
+                for bi in range(consumed, nb):
+                    d = rows(bi)
+                    if be[0] == 0: be[0] = len(d)
+                    if len(d) != be[0]: raise ValueError("geometry")
+                    nbytes += len(d)*4; blocks.append(d)
+                node = s.alloc(t, Node(rest[:], blocks, cur, now))
+                nodes[node].tokens = rest[:(nb-consumed)*B]
+                nodes[cur].children.append(node)
+                added += nb-consumed; s.bytes += nbytes
+                s.stats['inserted'] += nb-consumed; consumed = nb
+            else:
+                m = s.matching(nodes, c, rest)
+                nodes[c].last_used = now
+                if m < len(nodes[c].blocks):
+                    if consumed + m < nb:
+                        if nodes[c].pins > 0: break
+                        s.split(t, c, m)
+                    cur = c; consumed += m
+                    if consumed >= nb: break
+                else:
+                    cur = c; consumed += m
+        s.evict()
+        return added
+
+    def evict(s):
+        while s.bytes > s.budget:
+            victim = None
+            for v, (nodes, _, _) in s.trees.items():
+                for i, n in enumerate(nodes):
+                    if i == 0 or not n.live or n.pins > 0 or n.children: continue
+                    if victim is None or n.last_used < victim[2]:
+                        victim = (v, i, n.last_used)
+            if victim is None: break
+            v, i, _ = victim
+            nodes, free, _ = s.trees[v]
+            n = nodes[i]
+            freed = sum(len(b)*4 for b in n.blocks)
+            s.stats['evicted'] += len(n.blocks)
+            nodes[n.parent].children.remove(i)
+            n.live = False; n.tokens = []; n.blocks = []
+            s.bytes -= freed; free.append(i)
+
+    def live_nodes(s, v):
+        if v not in s.trees: return 0
+        return sum(1 for n in s.trees[v][0][1:] if n.live)
+
+def fake_rows(toks, bi): return [toks[bi*B] + j*0.25 for j in range(ELEMS)]
+def seq(prefix, blocks, salt):
+    out = list(prefix); i = 0
+    while len(out) < blocks*B: out.append(1000 + salt*97 + i); i += 1
+    return out
+def ins(c, v, t): return c.insert(v, t, lambda bi: fake_rows(t, bi))
+
+# --- test 1: insert_then_lookup_roundtrips_rows ---
+c = Cache(1<<20); t = seq([], 3, 1)
+assert ins(c, 'T', t) == 3
+n, rows = c.hit_rows(c.lookup('T', t))
+assert n == 3*B and rows == [x for bi in range(3) for x in fake_rows(t, bi)]
+assert c.hit_rows(c.lookup('T', t + seq([], 1, 9)))[0] == 3*B
+assert c.hit_rows(c.lookup('T', t[:2*B+5]))[0] == 2*B
+assert c.lookup('T', t[:B-1]) is None
+assert c.lookup('L', t) is None
+print("test1 OK")
+
+# --- test 2: divergent_insert_splits_shared_edge ---
+c = Cache(1<<20); a = seq([], 4, 1); ins(c, 'T', a)
+assert c.live_nodes('T') == 1
+b = seq(a[:2*B], 4, 2)
+assert ins(c, 'T', b) == 2
+assert c.live_nodes('T') == 3
+na, ra = c.hit_rows(c.lookup('T', a))
+assert na == 4*B and ra == [x for bi in range(4) for x in fake_rows(a, bi)]
+nb_, rb = c.hit_rows(c.lookup('T', b))
+want_b = [x for bi in range(2) for x in fake_rows(a, bi)] + [x for bi in range(2,4) for x in fake_rows(b, bi)]
+assert nb_ == 4*B and rb == want_b
+assert ins(c, 'T', a[:3*B]) == 0
+assert c.stats['inserted'] == 6
+print("test2 OK")
+
+# --- test 3: pinned_paths_survive_eviction ---
+c = Cache(4*BB); a = seq([], 2, 1); b = seq([], 2, 2)
+ins(c, 'T', a); ins(c, 'T', b)
+assert c.bytes == 4*BB
+hit = c.lookup('T', a, pin=True)
+d = seq([], 2, 3); ins(c, 'T', d)
+assert c.bytes <= 4*BB
+assert c.lookup('T', a) is not None
+assert c.lookup('T', b) is None
+n, rows = c.hit_rows(hit); assert n == 2*B and len(rows) == 2*ELEMS
+c.unpin(hit)
+e = seq([], 4, 4); ins(c, 'T', e)
+assert c.lookup('T', a) is None
+assert c.stats['evicted'] >= 4
+print("test3 OK")
+
+# --- test 4: eviction_is_lru_and_touch_refreshes ---
+c = Cache(4*BB); a = seq([], 2, 1); b = seq([], 2, 2)
+ins(c, 'T', a); ins(c, 'T', b)
+assert c.lookup('T', a) is not None
+d = seq([], 2, 3); ins(c, 'T', d)
+assert c.lookup('T', a) is not None
+assert c.lookup('T', b) is None
+assert c.lookup('T', d) is not None
+print("test4 OK")
+
+# --- test 5: byte_budget_enforced_per_insert ---
+c = Cache(3*BB)
+for salt in range(8):
+    ins(c, 'T', seq([], 2, salt))
+    assert c.bytes <= 3*BB
+assert c.stats['inserted'] == 16 and c.stats['evicted'] >= 13
+print("test5 OK, evicted =", c.stats['evicted'])
+
+# --- test 6: interior_nodes_evict_only_after_their_leaves ---
+c = Cache(3*BB); a = seq([], 2, 1); b = seq(a[:B], 2, 2)
+ins(c, 'T', a); ins(c, 'T', b)
+assert c.live_nodes('T') == 3
+ins(c, 'T', seq([], 1, 3))
+assert c.bytes <= c.budget
+for t_ in (a, b):
+    h = c.lookup('T', t_)
+    if h: 
+        n, rows = c.hit_rows(h); assert len(rows) == (n//B)*ELEMS
+print("test6 OK")
+
+# --- server-test scenario: 4 reqs, 64-tok prefix + 12-tok suffix ---
+c = Cache(4<<20)
+import random
+random.seed(11)
+prefix = [random.randrange(26,266) for _ in range(64)]
+prompts = [prefix + [random.randrange(26,266) for _ in range(12)] for _ in range(4)]
+hit_toks = 0
+for p in prompts:
+    h = c.lookup('T', p[:-1])
+    got = h[2] if h else 0
+    hit_toks += got
+    c.insert('T', p, lambda bi, p=p: fake_rows(p, bi))
+assert c.stats['lookups'] == 4
+assert hit_toks == 3*64, hit_toks
+assert c.stats['evicted'] == 0
+print("server scenario OK: hit_tokens =", hit_toks)
+print("ALL CACHE REPLICA CHECKS PASSED")
