@@ -1,18 +1,24 @@
 //! Hot-path microbenchmarks: per-(variant, step-shape) step latency, commit
-//! latency, PLD matcher throughput, and the L3 overhead split.
+//! latency, PLD matcher throughput, the L3 overhead split — and the
+//! serial-vs-blocked-vs-threaded kernel comparison behind the perf
+//! trajectory (`scripts/bench_hotpath.sh` -> `BENCH_hotpath.json`).
 //!
 //! This is the measurement harness behind EXPERIMENTS.md §Perf: it tells us
 //! where a step's time goes (XLA compute vs KV shuttle vs host bookkeeping)
 //! and what the realized cost coefficients ĉ(variant) are — the quantity
 //! the whole paper's economics runs on.
 //!
-//! Usage: cargo bench --bench hotpath [-- --scale base --reps 30]
+//! Usage: cargo bench --bench hotpath [-- --scale base --reps 30 --json]
+//!
+//! With `--json`, the LAST stdout line is a single JSON object holding the
+//! kernel-comparison numbers (naive vs blocked matmul; threads=1 vs
+//! threads=N full T=64 steps), so shell scripts can `tail -n 1` it.
 
 use std::time::Instant;
 
 use cas_spec::model::Variant;
 use cas_spec::pld::PldMatcher;
-use cas_spec::runtime::{Runtime, STEP_SHAPES};
+use cas_spec::runtime::{reference, resolve_threads, Runtime, ScaleRuntime, STEP_SHAPES};
 use cas_spec::spec::DraftTree;
 use cas_spec::util::cli::Args;
 use cas_spec::util::rng::SplitMix64;
@@ -23,13 +29,18 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let scale = args.str_or("scale", "small").to_string();
     let reps = args.usize_or("reps", 12)?;
+    let json = args.has("json");
+    let threads_n = resolve_threads(None).max(2);
 
     let rt = Runtime::open(&Runtime::default_dir())?;
     let srt = rt.load_scale(&scale, &Variant::ALL)?;
 
     // ---- step latency per (variant, T) ----
     let mut t = Table::new(
-        &format!("step latency (ms) — scale={scale}, reps={reps}"),
+        &format!(
+            "step latency (ms) — scale={scale}, reps={reps}, threads={}",
+            rt.threads()
+        ),
         &["variant", "T=1", "T=8", "T=16", "T=64", "c (T=1 vs target)"],
     );
     let mut target_t1 = 0.0;
@@ -117,7 +128,121 @@ fn main() -> anyhow::Result<()> {
          -> c_dn ≈ {:.5} of a target step\n",
         us / 1e3 / target_t1.max(1e-9)
     );
+
+    // ---- serial vs blocked vs threaded (the perf-trajectory record) ----
+    let d = srt.info.d_model;
+    let (mm_naive_ms, mm_blocked_ms) = matmul_compare(d, reps.max(3));
+    let step1_ms = step_t64_ms(&rt_with_threads(&scale, 1)?, reps)?;
+    let stepn_ms = step_t64_ms(&rt_with_threads(&scale, threads_n)?, reps)?;
+
+    let mut t = Table::new(
+        &format!("serial vs blocked vs threaded — scale={scale}, d={d}"),
+        &["kernel", "ms", "speedup vs serial"],
+    );
+    t.row(vec!["matmul (64,d)x(d,4d) naive".into(), format!("{mm_naive_ms:.3}"), "1.00".into()]);
+    t.row(vec![
+        "matmul (64,d)x(d,4d) blocked".into(),
+        format!("{mm_blocked_ms:.3}"),
+        format!("{:.2}", mm_naive_ms / mm_blocked_ms.max(1e-9)),
+    ]);
+    t.row(vec!["target step T=64, threads=1".into(), format!("{step1_ms:.3}"), "-".into()]);
+    t.row(vec![
+        format!("target step T=64, threads={threads_n}"),
+        format!("{stepn_ms:.3}"),
+        format!("{:.2}", step1_ms / stepn_ms.max(1e-9)),
+    ]);
+    println!("{}", t.to_text());
+
+    if json {
+        // keep this the LAST stdout line: scripts/bench_hotpath.sh tails it
+        println!(
+            "{{\"scale\":\"{scale}\",\"reps\":{reps},\"d_model\":{d},\
+             \"matmul_naive_ms\":{mm_naive_ms:.6},\"matmul_blocked_ms\":{mm_blocked_ms:.6},\
+             \"matmul_speedup\":{:.4},\
+             \"step_t64_ms_threads1\":{step1_ms:.6},\"step_t64_ms_threaded\":{stepn_ms:.6},\
+             \"threads_n\":{threads_n},\"thread_speedup\":{:.4}}}",
+            mm_naive_ms / mm_blocked_ms.max(1e-9),
+            step1_ms / stepn_ms.max(1e-9),
+        );
+    }
     Ok(())
+}
+
+/// A runtime pinned to an explicit thread budget.
+fn rt_with_threads(scale: &str, threads: usize) -> anyhow::Result<ScaleRuntime> {
+    let mut rt = Runtime::open(&Runtime::default_dir())?;
+    rt.set_threads(threads);
+    rt.load_scale(scale, &[Variant::Target])
+}
+
+/// The pre-blocking scalar matmul, timed against the blocked library
+/// kernel on a prefill-sized (64, d) x (d, 4d) problem. Also asserts the
+/// two agree bitwise — the bench doubles as a determinism check.
+fn matmul_compare(d: usize, reps: usize) -> (f64, f64) {
+    let rows = 64;
+    let dout = 4 * d;
+    let mut rng = SplitMix64::new(42);
+    let mut gen = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect()
+    };
+    let src = gen(rows * d);
+    let w = gen(d * dout);
+    let bias = gen(dout);
+    let mut out_naive = vec![0f32; rows * dout];
+    let mut out_blocked = vec![0f32; rows * dout];
+
+    let start = Instant::now();
+    for _ in 0..reps {
+        for r in 0..rows {
+            let x = &src[r * d..(r + 1) * d];
+            let out = &mut out_naive[r * dout..(r + 1) * dout];
+            out.copy_from_slice(&bias);
+            for (i, &xi) in x.iter().enumerate() {
+                let wr = &w[i * dout..(i + 1) * dout];
+                for o in 0..dout {
+                    out[o] += xi * wr[o];
+                }
+            }
+        }
+    }
+    let naive_ms = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    let start = Instant::now();
+    for _ in 0..reps {
+        reference::matmul_bias(&src, &w, Some(&bias), &mut out_blocked, rows, d, dout);
+    }
+    let blocked_ms = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    // bitwise, not float ==: 0.0 vs -0.0 must count as divergence (the
+    // determinism contract is about bits, not values)
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(&out_naive),
+        bits(&out_blocked),
+        "blocked kernel diverged from serial"
+    );
+    (naive_ms, blocked_ms)
+}
+
+/// Mean T=64 target-step latency on a warmed cache.
+fn step_t64_ms(srt: &ScaleRuntime, reps: usize) -> anyhow::Result<f64> {
+    let mut kv = srt.new_kv(Variant::Target)?;
+    let warm: Vec<u32> = (0..128u32).map(|i| 26 + (i * 7) % 240).collect();
+    feed(srt, &mut kv, &warm)?;
+    let tree = DraftTree::chain(1, &[30; 63], 64);
+    let (toks, mask, depths) = tree.serialize(64, 0);
+    for _ in 0..3 {
+        let pos0 = kv.pos;
+        srt.step(&mut kv, 64, 64, &toks, &mask, &depths)?;
+        srt.rollback(&mut kv, pos0);
+    }
+    let start = Instant::now();
+    for _ in 0..reps {
+        let pos0 = kv.pos;
+        srt.step(&mut kv, 64, 64, &toks, &mask, &depths)?;
+        srt.rollback(&mut kv, pos0);
+    }
+    Ok(start.elapsed().as_secs_f64() * 1e3 / reps as f64)
 }
 
 /// Minimal chain feed (mirrors VariantSession::feed without logits copies).

@@ -3,7 +3,7 @@
 //! several concurrent client threads, and reports latency percentiles +
 //! throughput — demonstrating all three layers composing on the request path.
 //!
-//! Two scenarios:
+//! Three scenarios:
 //!
 //!   * `--workload spec` (default) — the mixed Spec-Bench suite, once for
 //!     AR and once for CAS-Spec.
@@ -12,10 +12,18 @@
 //!     at the same engine. The cache run must report `prefix_hit_tokens
 //!     > 0` and step fewer total tokens than the cold run (the stats
 //!     columns make the skipped prefill work visible).
+//!   * `--workload lockstep` — the same concurrent workload served with
+//!     the scheduler's lock-step lane fusion **off and on** at
+//!     `--max-batch` (default 4). Both runs must return byte-identical
+//!     token streams; the fused run must report `fused_lanes >
+//!     fused_steps` (verify steps actually shared forwards). With
+//!     `--json`, the last stdout line is a JSON record of both runs'
+//!     tok/s (captured by `scripts/bench_hotpath.sh`).
 //!
 //!     cargo run --release --example serve_bench           # hermetic (ref backend)
 //!     cargo run --release --example serve_bench -- --scale base --requests 12
 //!     cargo run --release --example serve_bench -- --workload shared-prefix
+//!     cargo run --release --example serve_bench -- --workload lockstep
 //!     make artifacts first to run against pretrained weights/PJRT
 
 use std::sync::{Arc, Mutex};
@@ -42,7 +50,10 @@ fn main() -> Result<()> {
     match workload.as_str() {
         "spec" => spec_scenario(&args, &scale, requests, clients, max_new),
         "shared-prefix" => shared_prefix_scenario(&args, &scale, requests, clients),
-        other => anyhow::bail!("unknown --workload {other:?} (spec | shared-prefix)"),
+        "lockstep" => lockstep_scenario(&args, &scale, requests, max_new),
+        other => {
+            anyhow::bail!("unknown --workload {other:?} (spec | shared-prefix | lockstep)")
+        }
     }
 }
 
@@ -63,6 +74,7 @@ fn spec_scenario(
         &format!("serve_bench — scale={scale}, {requests} requests, {clients} clients, {max_new} tokens"),
         &["engine", "wall (s)", "tok/s", "mean (ms)", "p50", "p90", "p99", "mean acc"],
     );
+    let mut threads = 0;
     for (i, engine) in ["ar", "cas-spec"].into_iter().enumerate() {
         let run = run_one(&RunSpec {
             scale,
@@ -71,11 +83,17 @@ fn spec_scenario(
             n_clients: clients,
             port: 7600 + i as u16,
             prefix_cache_mb: 0,
+            max_batch: 8,
+            lockstep: true,
         })?;
+        threads = run.stats.get("threads").and_then(|v| v.as_u64()).unwrap_or(0);
         t.row(run.latency_row(engine));
     }
     println!("{}", t.to_text());
-    println!("(lossless: both engines return identical token streams — asserted per request)");
+    println!(
+        "(lossless: both engines return identical token streams — asserted per request; \
+         threads={threads}, lockstep on)"
+    );
     Ok(())
 }
 
@@ -107,6 +125,7 @@ fn shared_prefix_scenario(
     let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
     let mut stepped: Vec<u64> = Vec::new();
     let mut hits: Vec<u64> = Vec::new();
+    let mut threads = 0;
     for (i, mb) in [0usize, cache_mb].into_iter().enumerate() {
         let run = run_one(&RunSpec {
             scale,
@@ -115,13 +134,17 @@ fn shared_prefix_scenario(
             n_clients: clients,
             port: 7610 + i as u16,
             prefix_cache_mb: mb,
+            max_batch: 8,
+            lockstep: true,
         })?;
         t.row(run.cache_row(mb));
+        threads = run.stats.get("threads").and_then(|v| v.as_u64()).unwrap_or(0);
         stepped.push(run.stats.req("tokens_stepped")?.as_u64().unwrap_or(0));
         hits.push(run.stats.req("prefix_hit_tokens")?.as_u64().unwrap_or(0));
         outputs.push(run.tokens);
     }
     println!("{}", t.to_text());
+    println!("(threads={threads})");
 
     anyhow::ensure!(outputs[0] == outputs[1], "cache changed generated tokens!");
     anyhow::ensure!(hits[1] > 0, "warm run reported no prefix hits");
@@ -139,6 +162,98 @@ fn shared_prefix_scenario(
     Ok(())
 }
 
+/// Lock-step fusion A/B: same engine and workload, per-lane stepping vs
+/// fused verify steps. Fusion must not change a single token while
+/// improving aggregate tok/s at `max_batch >= 4` (concurrent clients keep
+/// the running batch full, so every cycle fuses several verify lanes).
+fn lockstep_scenario(
+    args: &Args,
+    scale: &str,
+    requests: usize,
+    max_new: usize,
+) -> Result<()> {
+    let engine = args.str_or("engine", "cas-spec").to_string();
+    let max_batch = args.usize_or("max-batch", 4)?;
+    let clients = args.usize_or("clients", max_batch.max(2))?;
+    let json = args.has("json");
+    anyhow::ensure!(max_batch >= 2, "--max-batch must be >= 2 to fuse anything");
+
+    let lang = Language::build(20250711);
+    let n_per = requests.div_ceil(6).max(1);
+    let suite = Suite::spec_bench(&lang, 7, n_per, max_new);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(requests).collect();
+
+    let mut t = Table::new(
+        &format!(
+            "serve_bench lockstep — scale={scale}, engine={engine}, \
+             {requests} requests, max_batch={max_batch}, {clients} clients"
+        ),
+        &["lockstep", "wall (s)", "tok/s", "fused_steps", "fused_lanes", "threads"],
+    );
+    let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut tok_s: Vec<f64> = Vec::new();
+    let mut fused: Vec<(u64, u64)> = Vec::new();
+    for (i, lockstep) in [false, true].into_iter().enumerate() {
+        let run = run_one(&RunSpec {
+            scale,
+            engine: &engine,
+            items: &items,
+            n_clients: clients,
+            port: 7620 + i as u16,
+            prefix_cache_mb: 0,
+            max_batch,
+            lockstep,
+        })?;
+        let s = |k: &str| run.stats.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+        let rate = run.total_tokens as f64 / run.wall.as_secs_f64();
+        t.row(vec![
+            if lockstep { "on" } else { "off" }.into(),
+            format!("{:.2}", run.wall.as_secs_f64()),
+            format!("{rate:.1}"),
+            s("fused_steps").to_string(),
+            s("fused_lanes").to_string(),
+            s("threads").to_string(),
+        ]);
+        tok_s.push(rate);
+        fused.push((s("fused_steps"), s("fused_lanes")));
+        outputs.push(run.tokens);
+    }
+    println!("{}", t.to_text());
+
+    anyhow::ensure!(outputs[0] == outputs[1], "lock-step fusion changed generated tokens!");
+    anyhow::ensure!(fused[0] == (0, 0), "per-lane run must not fuse");
+    anyhow::ensure!(fused[1].0 > 0, "fused run issued no fused steps");
+    anyhow::ensure!(
+        fused[1].1 > fused[1].0,
+        "fused steps never shared a forward (lanes {} <= steps {})",
+        fused[1].1,
+        fused[1].0
+    );
+    println!(
+        "(lossless: fused/per-lane token streams identical; mean fusion width {:.2}, \
+         tok/s {:.1} -> {:.1})",
+        fused[1].1 as f64 / fused[1].0 as f64,
+        tok_s[0],
+        tok_s[1]
+    );
+    if json {
+        // keep this the LAST stdout line: scripts/bench_hotpath.sh tails it
+        println!(
+            "{{\"scale\":\"{scale}\",\"engine\":\"{engine}\",\"requests\":{requests},\
+             \"max_batch\":{max_batch},\"tok_s_per_lane\":{:.3},\"tok_s_lockstep\":{:.3},\
+             \"lockstep_speedup\":{:.4},\"fused_steps\":{},\"fused_lanes\":{},\
+             \"mean_fusion_width\":{:.3}}}",
+            tok_s[0],
+            tok_s[1],
+            tok_s[1] / tok_s[0].max(1e-9),
+            fused[1].0,
+            fused[1].1,
+            fused[1].1 as f64 / fused[1].0.max(1) as f64,
+        );
+    }
+    Ok(())
+}
+
 struct RunSpec<'a> {
     scale: &'a str,
     engine: &'a str,
@@ -146,6 +261,8 @@ struct RunSpec<'a> {
     n_clients: usize,
     port: u16,
     prefix_cache_mb: usize,
+    max_batch: usize,
+    lockstep: bool,
 }
 
 struct RunOutcome {
@@ -199,6 +316,8 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
     cfg.engines = vec![spec.engine.into()];
     cfg.addr = format!("127.0.0.1:{}", spec.port);
     cfg.prefix_cache_mb = spec.prefix_cache_mb;
+    cfg.max_batch = spec.max_batch;
+    cfg.lockstep = spec.lockstep;
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
 

@@ -38,6 +38,15 @@ pub struct RunConfig {
     /// Committed prompt blocks are shared across requests through a
     /// radix trie (`cache` module); reuse is bit-exact.
     pub prefix_cache_mb: usize,
+    /// Backend worker-thread budget (0 = auto: `CAS_SPEC_THREADS`, else
+    /// `available_parallelism`; 1 = fully serial). Threading is
+    /// bit-neutral — see `runtime::resolve_threads`.
+    pub threads: usize,
+    /// Lock-step lane fusion in the serving scheduler: co-batched
+    /// requests' target-verify steps execute as one fused `step_batch`
+    /// call per cycle (bit-identical to per-lane stepping; `false` keeps
+    /// the per-lane path for A/B benchmarking).
+    pub lockstep: bool,
     pub opts: EngineOpts,
 }
 
@@ -54,6 +63,8 @@ impl Default for RunConfig {
             addr: "127.0.0.1:7599".into(),
             max_batch: 8,
             prefix_cache_mb: 0,
+            threads: 0,
+            lockstep: true,
             opts: EngineOpts::default(),
         }
     }
@@ -77,6 +88,8 @@ impl RunConfig {
                 "prefix_cache_mb" => {
                     self.prefix_cache_mb = v.as_usize().ok_or_else(bad(k))?
                 }
+                "threads" => self.threads = v.as_usize().ok_or_else(bad(k))?,
+                "lockstep" => self.lockstep = v.as_bool().ok_or_else(bad(k))?,
                 "draft_k" => self.opts.draft_k = v.as_usize().ok_or_else(bad(k))?,
                 "conf_stop" => self.opts.conf_stop = v.as_f64().ok_or_else(bad(k))?,
                 "dytc" => apply_dytc(&mut self.opts.dytc, v)?,
@@ -111,6 +124,14 @@ impl RunConfig {
         }
         self.max_batch = a.usize_or("max-batch", self.max_batch)?;
         self.prefix_cache_mb = a.usize_or("prefix-cache-mb", self.prefix_cache_mb)?;
+        self.threads = a.usize_or("threads", self.threads)?;
+        if let Some(ls) = a.str_opt("lockstep") {
+            self.lockstep = match ls {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" => false,
+                other => return Err(anyhow!("--lockstep: expected on|off, got {other:?}")),
+            };
+        }
         self.opts.draft_k = a.usize_or("draft-k", self.opts.draft_k)?;
         self.opts.conf_stop = a.f64_or("conf-stop", self.opts.conf_stop)?;
         self.opts.dytc.k_max = a.usize_or("k-max", self.opts.dytc.k_max)?;
@@ -132,6 +153,12 @@ impl RunConfig {
     /// Prefix-cache budget in bytes (the `prefix_cache_mb` knob).
     pub fn prefix_cache_bytes(&self) -> usize {
         self.prefix_cache_mb << 20
+    }
+
+    /// The effective worker-thread budget: the `threads` knob when set
+    /// (> 0), else `CAS_SPEC_THREADS` / `available_parallelism`.
+    pub fn resolved_threads(&self) -> usize {
+        crate::runtime::resolve_threads((self.threads > 0).then_some(self.threads))
     }
 
     /// Resolve the configured backend choice; "auto" defers to
@@ -212,6 +239,34 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.apply_json(&Json::parse(r#"{"prefix_cache_mb":4}"#).unwrap()).unwrap();
         assert_eq!(cfg.prefix_cache_mb, 4);
+    }
+
+    #[test]
+    fn threads_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert_eq!(cfg.threads, 0, "threads defaults to auto");
+        assert!(cfg.resolved_threads() >= 1);
+        let cfg = RunConfig::from_args(&args("--threads 3")).unwrap();
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.resolved_threads(), 3);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"threads":2}"#).unwrap()).unwrap();
+        assert_eq!(cfg.threads, 2);
+        assert!(RunConfig::from_args(&args("--threads zero")).is_err());
+    }
+
+    #[test]
+    fn lockstep_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert!(cfg.lockstep, "lock-step fusion defaults on");
+        let cfg = RunConfig::from_args(&args("--lockstep off")).unwrap();
+        assert!(!cfg.lockstep);
+        let cfg = RunConfig::from_args(&args("--lockstep on")).unwrap();
+        assert!(cfg.lockstep);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"lockstep":false}"#).unwrap()).unwrap();
+        assert!(!cfg.lockstep);
+        assert!(RunConfig::from_args(&args("--lockstep sideways")).is_err());
     }
 
     #[test]

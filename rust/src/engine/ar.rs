@@ -5,10 +5,10 @@
 use anyhow::Result;
 
 use crate::model::Variant;
-use crate::runtime::{argmax, ScaleRuntime};
-use crate::spec::VariantSession;
+use crate::runtime::{ScaleRuntime, StepOutput};
+use crate::spec::{DraftTree, VariantSession};
 
-use super::common::{GenState, RoundStep};
+use super::common::{absorb_verify, target_plumbing, GenState, PendingVerify, RoundStep};
 use super::{Engine, RequestRun};
 
 /// The autoregressive baseline engine.
@@ -24,7 +24,8 @@ impl<'rt> ArEngine<'rt> {
 }
 
 /// Per-request AR state: the target session plus generation bookkeeping.
-/// Each "round" decodes exactly one token.
+/// Each "round" decodes exactly one token (a root-only verify tree whose
+/// bonus IS the decoded token).
 pub struct ArRun<'rt> {
     target: VariantSession<'rt>,
     st: GenState,
@@ -43,11 +44,27 @@ impl RoundStep for ArRun<'_> {
         self.target.capacity_left() > 1
     }
 
-    fn round_impl(&mut self) -> Result<()> {
-        let logits = self.target.decode_one(self.st.root)?;
-        let next = argmax(logits);
-        self.st.stats.target_calls += 1;
-        self.st.emit(&[next]);
+    fn draft_round(&mut self) -> Result<Option<PendingVerify>> {
+        // nothing to draft: verify the bare root; its greedy bonus is the
+        // next token
+        Ok(Some(PendingVerify {
+            tree: DraftTree::chain(self.st.root, &[], 1),
+            t_shape: 1,
+        }))
+    }
+
+    target_plumbing!();
+
+    fn absorb_round(
+        &mut self,
+        pending: PendingVerify,
+        out: StepOutput,
+        t_shape: usize,
+    ) -> Result<()> {
+        let (accepted, bonus) =
+            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut self.st.stats)?;
+        debug_assert!(accepted.is_empty(), "root-only tree accepts nothing");
+        self.st.emit(&[bonus]);
         Ok(())
     }
 }

@@ -15,11 +15,12 @@ use anyhow::Result;
 
 use crate::model::Variant;
 use crate::pld::PldMatcher;
-use crate::runtime::{ScaleRuntime, VERIFY_T};
+use crate::runtime::{ScaleRuntime, StepOutput, VERIFY_T};
 use crate::spec::VariantSession;
 
 use super::common::{
-    draft_chain, draft_chain_vc, verify_chain_round, BranchCache, GenState, RoundStep,
+    absorb_verify, draft_chain, draft_chain_vc, pending_chain, target_plumbing,
+    BranchCache, GenState, PendingVerify, RoundStep,
 };
 use super::{Engine, EngineOpts, RequestRun};
 
@@ -78,6 +79,9 @@ pub struct CascadeRun<'rt> {
     k_model: usize,
     k_pld: usize,
     inner_k: usize,
+    /// Matcher length at the start of the in-flight round (speculative
+    /// matcher growth rolls back to this mark after verification).
+    matcher_mark: usize,
     st: GenState,
 }
 
@@ -96,15 +100,15 @@ impl RoundStep for CascadeRun<'_> {
             && self.draft.capacity_left() >= VERIFY_T + 1
     }
 
-    fn round_impl(&mut self) -> Result<()> {
+    fn draft_round(&mut self) -> Result<Option<PendingVerify>> {
         let st = &mut self.st;
         let max_chain = VERIFY_T - 1;
         let budget = max_chain.min(st.max_new.saturating_sub(st.out.len()));
         if budget == 0 {
-            return Ok(()); // no progress: the driver ends the run
+            return Ok(None); // no progress: the driver ends the run
         }
         let root = st.root;
-        let committed_len = self.matcher.len();
+        self.matcher_mark = self.matcher.len();
         self.matcher.extend(&[root]); // root commits this round regardless
         let committed: Vec<u32> = st.committed_except_root().to_vec();
         self.bc.ensure(&mut self.draft, &committed, &[], &mut st.stats)?;
@@ -169,14 +173,25 @@ impl RoundStep for CascadeRun<'_> {
             }
         }
         chain.truncate(budget);
+        Ok(Some(pending_chain(root, &chain)))
+    }
 
-        // ---- target verification ----
+    target_plumbing!();
+
+    fn absorb_round(
+        &mut self,
+        pending: PendingVerify,
+        out: StepOutput,
+        t_shape: usize,
+    ) -> Result<()> {
+        let st = &mut self.st;
+        let root = st.root;
         let (accepted, bonus) =
-            verify_chain_round(&mut self.target, root, &chain, &mut st.stats)?;
+            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut st.stats)?;
 
         // ---- roll speculative state back to committed truth ----
         // (draft cache syncs lazily on the next round's ensure)
-        self.matcher.truncate(committed_len);
+        self.matcher.truncate(self.matcher_mark);
         self.matcher.extend(&[root]);
         self.matcher.extend(&accepted);
 
@@ -215,6 +230,7 @@ impl Engine for CascadeEngine<'_> {
             k_model: self.k_model,
             k_pld: self.k_pld,
             inner_k: self.inner_k,
+            matcher_mark: 0,
             st,
         }))
     }

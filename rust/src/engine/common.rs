@@ -1,22 +1,60 @@
 //! Shared machinery for the speculative engines: generation bookkeeping,
 //! chain-verification rounds, and draft-chain generation.
 
+use std::time::Duration;
+
 use anyhow::Result;
 
 use crate::pld::PldMatcher;
-use crate::runtime::{argmax, softmax_prob};
+use crate::runtime::{argmax, softmax_prob, KvCache, StepOutput};
 use crate::spec::{verify_greedy, DraftTree, VariantSession};
 use crate::tokenizer::EOS;
 
 use super::GenStats;
 
+/// The target-verify step a round has drafted but not yet executed: the
+/// draft tree plus its natural (smallest fitting) lowered step shape.
+///
+/// Yielded by [`RoundStep::draft_round`] and consumed by
+/// [`RoundStep::absorb_round`]. The driver in between decides *how* the
+/// step executes: the solo path ([`super::RequestRun::round`]) steps it on
+/// the run's own target session, while the server's lock-step scheduler
+/// collects one pending step per co-batched request and executes them as
+/// a single variant-grouped `step_batch` call — possibly at a wider
+/// shared shape, which is bit-neutral (pad rows are skipped, and logits
+/// rows are indexed per slot regardless of shape).
+pub struct PendingVerify {
+    /// The tree to verify (slot 0 = the round's root token).
+    pub tree: DraftTree,
+    /// Smallest lowered step shape that fits the tree.
+    pub t_shape: usize,
+}
+
+/// Poll-state stashed in [`GenState`] between `RequestRun::begin_round`
+/// and `finish_round` (the lock-step scheduler's two-phase round).
+pub struct InFlightRound {
+    /// The drafted-but-unexecuted verify step.
+    pub pending: PendingVerify,
+    /// `out.len()` when the round began (emitted-delta basis).
+    pub before: usize,
+    /// Drafting wall-clock already accrued for this round.
+    pub draft_wall: Duration,
+}
+
 /// The per-engine half of a resumable generation.
 ///
 /// Each engine defines a run struct holding its sessions and bookkeeping
-/// plus a [`GenState`], and implements one speculation round here. The
-/// blanket [`super::RequestRun`] impl in `engine` supplies the uniform
-/// driving logic: done/capacity gating, no-progress termination,
-/// wall-clock accounting, and emitted-token deltas per round.
+/// plus a [`GenState`], and implements one speculation round as two
+/// halves around the target-verify step: [`RoundStep::draft_round`]
+/// builds the round's draft tree (all drafting side effects happen here),
+/// and [`RoundStep::absorb_round`] consumes the verify logits (verify,
+/// commit, estimator updates, emission). The blanket
+/// [`super::RequestRun`] impl in `engine` supplies the uniform driving
+/// logic — done/capacity gating, no-progress termination, wall-clock
+/// accounting, emitted-token deltas — for both the solo path (`round`
+/// executes the step in place) and the lock-step fused path
+/// (`begin_round` / `take_lane` / `finish_round`, where the server
+/// executes many runs' pending steps in one batched call).
 pub trait RoundStep {
     /// Shared generation bookkeeping (output, root, EOS/budget state).
     fn state(&self) -> &GenState;
@@ -24,10 +62,64 @@ pub trait RoundStep {
     fn state_mut(&mut self) -> &mut GenState;
     /// Whether the run's KV caches have head-room for one more round.
     fn capacity_ok(&self) -> bool;
-    /// Execute one speculation round (never called when the run is done
-    /// or out of capacity). Emits tokens via [`GenState::emit`].
-    fn round_impl(&mut self) -> Result<()>;
+    /// Phase 1 — draft one round (never called when the run is done or
+    /// out of capacity) and yield the pending target-verify step.
+    /// Returning `None` means the round cannot make progress (e.g. the
+    /// token budget is exhausted); the driver then ends the run.
+    fn draft_round(&mut self) -> Result<Option<PendingVerify>>;
+    /// Execute a pending verify step on this run's own target session —
+    /// the solo, non-fused execution path. Implementations are one line
+    /// (`self.target.verify_tree(&pending.tree, t_shape)`); the fused
+    /// path bypasses this and steps the [`RoundStep::target_kv`] handle
+    /// through `ScaleRuntime::step_batch` instead.
+    fn step_target(&mut self, pending: &PendingVerify, t_shape: usize) -> Result<StepOutput>;
+    /// Phase 2 — verify/commit/bookkeep/emit given the executed step's
+    /// logits. `t_shape` is the shape the step actually ran at (`>=
+    /// pending.t_shape` when the fused scheduler padded the group to a
+    /// shared shape; verification indexes logits by slot, so the wider
+    /// shape is bit-neutral).
+    fn absorb_round(
+        &mut self,
+        pending: PendingVerify,
+        out: StepOutput,
+        t_shape: usize,
+    ) -> Result<()>;
+    /// The target session's KV handle — the lane the fused scheduler
+    /// steps on this run's behalf.
+    fn target_kv(&mut self) -> &mut KvCache;
+    /// Remaining target-cache rows (the fused scheduler's guard when it
+    /// pads a lane up to the group's shared step shape).
+    fn target_headroom(&self) -> usize;
 }
+
+/// Expands the three target-session plumbing methods every [`RoundStep`]
+/// impl needs — `step_target`, `target_kv`, `target_headroom` — in terms
+/// of the run struct's `target: VariantSession` field, so the six engines
+/// don't each copy them. A macro rather than a trait-provided `fn
+/// target(&mut self) -> &mut VariantSession<'_>` accessor because that
+/// accessor cannot be written: `&mut` is invariant in the session's
+/// runtime lifetime, so the run's `VariantSession<'rt>` cannot be lent at
+/// the shorter `&mut self` lifetime.
+macro_rules! target_plumbing {
+    () => {
+        fn step_target(
+            &mut self,
+            pending: &$crate::engine::common::PendingVerify,
+            t_shape: usize,
+        ) -> ::anyhow::Result<$crate::runtime::StepOutput> {
+            self.target.verify_tree(&pending.tree, t_shape)
+        }
+
+        fn target_kv(&mut self) -> &mut $crate::runtime::KvCache {
+            self.target.kv_mut()
+        }
+
+        fn target_headroom(&self) -> usize {
+            self.target.capacity_left()
+        }
+    };
+}
+pub(crate) use target_plumbing;
 
 /// Output accumulator shared by all engines. Tracks the emitted tokens,
 /// the current root (= newest emitted token whose KV is not yet in the
@@ -43,6 +135,9 @@ pub struct GenState {
     pub max_new: usize,
     /// Accumulated statistics.
     pub stats: GenStats,
+    /// Two-phase round in flight (set by `RequestRun::begin_round`,
+    /// consumed by `finish_round`; always `None` on the solo path).
+    pub round_in_flight: Option<InFlightRound>,
 }
 
 impl GenState {
@@ -58,6 +153,7 @@ impl GenState {
             done: first == EOS || max_new <= 1,
             max_new,
             stats: GenStats { prefill, ..Default::default() },
+            round_in_flight: None,
         };
         s.stats.target_calls = 0; // prefill counted separately
         Ok(s)
@@ -92,23 +188,31 @@ impl GenState {
     }
 }
 
-/// One chain-verification round against the target:
-/// verify `root ++ chain`, commit the accepted prefix (contiguous — the
-/// commit fast path), and return (accepted_tokens, bonus).
-pub fn verify_chain_round(
+/// Build the pending chain-verification step for `root ++ chain` (the
+/// phase-1 tail of every chain-drafting engine).
+pub fn pending_chain(root: u32, chain: &[u32]) -> PendingVerify {
+    let t_shape = chain_step_shape(chain.len() + 1);
+    PendingVerify { tree: DraftTree::chain(root, chain, t_shape), t_shape }
+}
+
+/// Phase-2 half of a chain/tree verification round: greedily verify the
+/// executed step's logits against `tree`, commit the accepted slots
+/// (contiguous fast path for chains), record the deepest accepted slot's
+/// logits row, and return `(accepted_tokens, bonus)`. `commit_shape` is
+/// the shape handed to the commit op (the executed step shape for
+/// chains, `VERIFY_T` for the tree engines — identity padding beyond the
+/// accepted slots makes any covering shape equivalent).
+pub fn absorb_verify(
     target: &mut VariantSession,
-    root: u32,
-    chain: &[u32],
+    tree: &DraftTree,
+    out: &StepOutput,
+    commit_shape: usize,
     stats: &mut GenStats,
 ) -> Result<(Vec<u32>, u32)> {
-    let t_shape = chain_step_shape(chain.len() + 1);
-    let tree = DraftTree::chain(root, chain, t_shape);
-    let out = target.verify_tree(&tree, t_shape)?;
     stats.target_calls += 1;
     let vocab = target.vocab();
-    let v = verify_greedy(&tree, &out.logits, vocab);
-    // accepted slots on a chain are exactly 0..=n — contiguous fast path
-    target.commit_slots(t_shape, &v.accepted_slots)?;
+    let v = verify_greedy(tree, &out.logits, vocab);
+    target.commit_slots(commit_shape, &v.accepted_slots)?;
     let last = *v.accepted_slots.last().unwrap();
     target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
     Ok((v.accepted_tokens, v.bonus))

@@ -34,12 +34,13 @@ use crate::dytc::{
 };
 use crate::model::Variant;
 use crate::pld::PldMatcher;
-use crate::runtime::{ScaleRuntime, VERIFY_T};
+use crate::runtime::{ScaleRuntime, StepOutput, VERIFY_T};
 use crate::spec::{verify_greedy, DraftTree, VariantSession};
 use crate::tokenizer::EOS;
 
 use super::common::{
-    chain_step_shape, draft_chain, draft_chain_vc, BranchCache, GenState, RoundStep,
+    chain_step_shape, draft_chain, draft_chain_vc, target_plumbing, BranchCache,
+    GenState, PendingVerify, RoundStep,
 };
 use super::{Engine, EngineOpts, RequestRun};
 
@@ -172,6 +173,10 @@ pub struct DytcRun<'rt> {
     matcher: PldMatcher,
     caches: Vec<BranchCache>,
     sched: &'rt RefCell<Sched>,
+    /// Expansions of the in-flight round (estimator updates at absorb).
+    round_expansions: Vec<Expansion>,
+    /// Matcher length at the start of the in-flight round.
+    matcher_mark: usize,
     st: GenState,
 }
 
@@ -208,6 +213,8 @@ impl<'rt> DytcRun<'rt> {
             matcher,
             caches,
             sched,
+            round_expansions: Vec::new(),
+            matcher_mark: 0,
             st,
         })
     }
@@ -226,17 +233,20 @@ impl RoundStep for DytcRun<'_> {
         self.target.capacity_left() > VERIFY_T
     }
 
-    fn round_impl(&mut self) -> Result<()> {
+    fn draft_round(&mut self) -> Result<Option<PendingVerify>> {
         let st = &mut self.st;
-        // engine-wide scheduler state: held for this round only (the
-        // worker is single-threaded, runs advance strictly in turn)
+        // engine-wide scheduler state: held for the drafting phase only
+        // (the worker is single-threaded; under lock-step fusion other
+        // runs' phases interleave between this run's draft and absorb,
+        // each re-borrowing for their own phase)
         let mut sched_guard = self.sched.borrow_mut();
         let sched = &mut *sched_guard;
+        self.matcher_mark = self.matcher.len();
         let matcher = &mut self.matcher;
         let caches = &mut self.caches;
 
         let root = st.root;
-        let committed_len = matcher.len();
+        let committed_len = self.matcher_mark;
         matcher.extend(&[root]);
         let mut committed: Vec<u32> = Vec::with_capacity(self.prompt.len() + st.out.len());
         committed.extend_from_slice(&self.prompt);
@@ -410,10 +420,30 @@ impl RoundStep for DytcRun<'_> {
             }
         }
 
-        // ---------------- verify + commit ----------------
+        // ---------------- the pending verify step ----------------
+        self.round_expansions = expansions;
         let t_shape = chain_step_shape(tree.len());
-        let out = self.target.verify_tree(&tree, t_shape)?;
+        Ok(Some(PendingVerify { tree, t_shape }))
+    }
+
+    target_plumbing!();
+
+    fn absorb_round(
+        &mut self,
+        pending: PendingVerify,
+        out: StepOutput,
+        t_shape: usize,
+    ) -> Result<()> {
+        let st = &mut self.st;
+        let root = st.root;
+        let tree = &pending.tree;
+        let mut sched_guard = self.sched.borrow_mut();
+        let sched = &mut *sched_guard;
+
         st.stats.target_calls += 1;
+        // Under lock-step fusion `out.elapsed` is the fused batch step's
+        // latency — exactly what a verify costs in that serving regime,
+        // so the online cost model keeps measuring the real tradeoff.
         sched.target_step_secs = if sched.target_step_secs == 0.0 {
             out.elapsed.as_secs_f64()
         } else {
@@ -422,13 +452,13 @@ impl RoundStep for DytcRun<'_> {
         sched.latency.observe(FAM_TARGET, t_shape, out.elapsed.as_secs_f64());
 
         let vocab = self.target.vocab();
-        let v = verify_greedy(&tree, &out.logits, vocab);
+        let v = verify_greedy(tree, &out.logits, vocab);
         self.target.commit_slots(VERIFY_T, &v.accepted_slots)?;
         let last = *v.accepted_slots.last().unwrap();
         self.target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
 
         // ---- estimator updates from first-token outcomes ----
-        for exp in &expansions {
+        for exp in &self.round_expansions {
             if let Some(&(_, ok)) =
                 v.slot_outcomes.iter().find(|(s, _)| *s == exp.first_slot)
             {
@@ -440,9 +470,9 @@ impl RoundStep for DytcRun<'_> {
         }
 
         // ---- restore committed state (draft caches sync lazily) ----
-        matcher.truncate(committed_len);
-        matcher.extend(&[root]);
-        matcher.extend(&v.accepted_tokens);
+        self.matcher.truncate(self.matcher_mark);
+        self.matcher.extend(&[root]);
+        self.matcher.extend(&v.accepted_tokens);
 
         let mut emitted = v.accepted_tokens.clone();
         emitted.push(v.bonus);

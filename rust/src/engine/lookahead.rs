@@ -21,10 +21,12 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::model::Variant;
-use crate::runtime::{argmax, ScaleRuntime};
-use crate::spec::{verify_greedy, DraftTree, VariantSession};
+use crate::runtime::{argmax, ScaleRuntime, StepOutput};
+use crate::spec::VariantSession;
 
-use super::common::{chain_step_shape, GenState, RoundStep};
+use super::common::{
+    absorb_verify, pending_chain, target_plumbing, GenState, PendingVerify, RoundStep,
+};
 use super::{Engine, EngineOpts, RequestRun};
 
 /// Pool context length (bigram keys, like Lade's default N-1 context).
@@ -91,29 +93,36 @@ impl RoundStep for LookaheadRun<'_> {
         self.target.capacity_left() > crate::runtime::VERIFY_T
     }
 
-    fn round_impl(&mut self) -> Result<()> {
+    fn draft_round(&mut self) -> Result<Option<PendingVerify>> {
         let st = &mut self.st;
         let budget = self.k.min(st.max_new.saturating_sub(st.out.len()));
         if budget == 0 {
-            return Ok(()); // no progress: the driver ends the run
+            return Ok(None); // no progress: the driver ends the run
         }
         let root = st.root;
         self.hist.push(root);
 
         let chain = self.pool.lookup(&self.hist, budget).unwrap_or_default();
-        let t_shape = chain_step_shape(chain.len() + 1);
-        let tree = DraftTree::chain(root, &chain, t_shape);
-        let out = self.target.verify_tree(&tree, t_shape)?;
-        st.stats.target_calls += 1;
+        Ok(Some(pending_chain(root, &chain)))
+    }
+
+    target_plumbing!();
+
+    fn absorb_round(
+        &mut self,
+        pending: PendingVerify,
+        out: StepOutput,
+        t_shape: usize,
+    ) -> Result<()> {
+        let st = &mut self.st;
+        let root = st.root;
         let vocab = self.target.vocab();
-        let v = verify_greedy(&tree, &out.logits, vocab);
-        self.target.commit_slots(t_shape, &v.accepted_slots)?;
-        let last = *v.accepted_slots.last().unwrap();
-        self.target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
+        let (accepted, bonus) =
+            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut st.stats)?;
 
         // --- harvest Jacobi-style n-grams from ALL slots (incl. the
         // rejected tail): slot token -> target's argmax continuation ---
-        let slot_tokens: Vec<u32> = tree.nodes.iter().map(|n| n.token).collect();
+        let slot_tokens: Vec<u32> = pending.tree.nodes.iter().map(|n| n.token).collect();
         for (i, tok) in slot_tokens.iter().enumerate() {
             let guess = argmax(&out.logits[i * vocab..(i + 1) * vocab]);
             // context = (previous path token, slot token)
@@ -125,9 +134,8 @@ impl RoundStep for LookaheadRun<'_> {
             self.pool.insert([prev, *tok], vec![guess]);
         }
 
-        let mut emitted = v.accepted_tokens.clone();
-        emitted.push(v.bonus);
-        let accepted = v.accepted_tokens;
+        let mut emitted = accepted.clone();
+        emitted.push(bonus);
         self.hist.extend_from_slice(&accepted);
         // longer pool entries from committed text
         if self.hist.len() >= POOL_CTX + 3 {

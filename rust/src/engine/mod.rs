@@ -31,12 +31,16 @@
 //!     one engine and interleaves them, so requests join and leave the
 //!     running batch at speculation-round boundaries.
 //!
-//! Engines put their per-round logic in [`common::RoundStep`]; a blanket
-//! impl lifts any `RoundStep` into a [`RequestRun`] with uniform
-//! done/capacity gating and wall-clock accounting, and the default
-//! `generate` simply drives a run to completion — so the sequential and
-//! batched paths execute the *same* round code (losslessness under
-//! batching is structural, not re-proved per engine).
+//! Engines put their per-round logic in [`common::RoundStep`], split into
+//! a drafting half and a verify-absorbing half around the round's target
+//! step; a blanket impl lifts any `RoundStep` into a [`RequestRun`] with
+//! uniform done/capacity gating and wall-clock accounting, and the
+//! default `generate` simply drives a run to completion. The same split
+//! powers the server's lock-step lane fusion (`begin_round` /
+//! `take_lane` / `finish_round`): co-batched requests' pending verify
+//! steps execute as one `step_batch` call per cycle, through the *same*
+//! round code the sequential path runs — so losslessness under batching
+//! and fusion is structural, not re-proved per engine.
 
 #![warn(missing_docs)]
 
@@ -50,11 +54,11 @@ pub mod tree_static;
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::dytc::DytcParams;
 use crate::model::Variant;
-use crate::runtime::ScaleRuntime;
+use crate::runtime::{BatchLane, ScaleRuntime, StepOutput};
 
 /// Per-generation statistics.
 #[derive(Debug, Clone, Default)]
@@ -107,6 +111,24 @@ pub struct RoundOutcome {
     pub done: bool,
 }
 
+/// Disposition of [`RequestRun::begin_round`]: either the round resolved
+/// without a target step, or a verify step is pending execution.
+#[derive(Debug)]
+pub enum RoundPhase {
+    /// The run finished during gating/drafting (done, out of capacity, or
+    /// no progress possible); the outcome is final for this round and no
+    /// step must be executed.
+    Done(RoundOutcome),
+    /// A target-verify step is pending. `t_shape` is its natural
+    /// (smallest fitting) step shape; the caller executes the lane from
+    /// [`RequestRun::take_lane`] — solo or fused with other runs' pending
+    /// steps — and hands the logits back via [`RequestRun::finish_round`].
+    Pending {
+        /// Natural step shape of the pending verify tree.
+        t_shape: usize,
+    },
+}
+
 /// A resumable in-flight generation: one request's decoding state,
 /// advanced one speculation round at a time.
 ///
@@ -114,11 +136,42 @@ pub struct RoundOutcome {
 /// the first greedy token emitted when `begin` returns; each `round` call
 /// then performs one draft-verify-commit round. Dropping a run discards
 /// its KV caches (every run owns fresh per-request caches).
+///
+/// # Poll-style rounds (lock-step lane fusion)
+///
+/// `round` drafts *and* executes the round's target-verify step. The
+/// server's lock-step scheduler instead splits the round so co-batched
+/// requests share one fused forward per cycle:
+///
+/// ```text
+///   begin_round  -> gate + draft; the pending verify step is stashed
+///   take_lane    -> the pending tree serialized at the (possibly wider)
+///                   group shape + this run's target KV handle
+///   ..caller runs ONE ScaleRuntime::step_batch over all lanes..
+///   finish_round -> verify/commit/emit from the externally-run logits
+/// ```
+///
+/// Both drivers execute the same drafting and verification code, so
+/// fused serving is bit-identical to per-lane serving by construction.
 pub trait RequestRun {
     /// Whether the run has finished (further `round` calls are no-ops).
     fn is_done(&self) -> bool;
     /// Advance one speculation round and return the tokens it emitted.
     fn round(&mut self) -> Result<RoundOutcome>;
+    /// Phase 1 of a poll-style round: gate + draft. On
+    /// [`RoundPhase::Pending`] the pending step stays stashed in the run
+    /// until `take_lane` / `finish_round`.
+    fn begin_round(&mut self) -> Result<RoundPhase>;
+    /// Remaining target-cache rows — the scheduler's guard before padding
+    /// this run's lane up to a wider group step shape.
+    fn target_headroom(&self) -> usize;
+    /// Serialize the stashed pending step at `t_shape` (>= its natural
+    /// shape) and yield the batch lane (target KV + tree inputs) for a
+    /// `ScaleRuntime::step_batch` call. Errors if no round is in flight.
+    fn take_lane(&mut self, t_shape: usize) -> Result<BatchLane<'_>>;
+    /// Phase 2: absorb the executed step (verify/commit/emit). `t_shape`
+    /// must be the shape the lane was actually stepped at.
+    fn finish_round(&mut self, out: StepOutput, t_shape: usize) -> Result<RoundOutcome>;
     /// All tokens emitted so far (prompt excluded).
     fn tokens(&self) -> &[u32];
     /// Statistics accumulated so far.
@@ -138,25 +191,105 @@ impl<T: common::RoundStep> RequestRun for T {
     }
 
     fn round(&mut self) -> Result<RoundOutcome> {
+        // One code path for both drivers: the solo round IS the poll
+        // lifecycle with the step executed in place, so gating,
+        // no-progress termination, and accounting can never diverge
+        // between per-lane and lock-step serving.
+        match self.begin_round()? {
+            RoundPhase::Done(o) => Ok(o),
+            RoundPhase::Pending { t_shape } => {
+                let fl = self
+                    .state_mut()
+                    .round_in_flight
+                    .take()
+                    .expect("begin_round stashed the pending step");
+                match self.step_target(&fl.pending, t_shape) {
+                    Ok(out) => {
+                        self.state_mut().round_in_flight = Some(fl);
+                        self.finish_round(out, t_shape)
+                    }
+                    // abandon the round (fl drops): restoring it would
+                    // leave a stale pending step behind a caller that
+                    // treats the error as transient and re-drafts
+                    Err(e) => Err(e),
+                }
+            }
+        }
+    }
+
+    fn begin_round(&mut self) -> Result<RoundPhase> {
         if self.state().done {
-            return Ok(RoundOutcome { emitted: Vec::new(), done: true });
+            return Ok(RoundPhase::Done(RoundOutcome { emitted: Vec::new(), done: true }));
         }
         if !self.capacity_ok() {
             self.state_mut().done = true;
-            return Ok(RoundOutcome { emitted: Vec::new(), done: true });
+            return Ok(RoundPhase::Done(RoundOutcome { emitted: Vec::new(), done: true }));
         }
+        debug_assert!(
+            self.state().round_in_flight.is_none(),
+            "begin_round with a round already in flight (finish_round not called?)"
+        );
         let before = self.state().out.len();
         let t0 = Instant::now();
-        self.round_impl()?;
-        let wall = t0.elapsed();
+        let drafted = self.draft_round()?;
+        let draft_wall = t0.elapsed();
         let st = self.state_mut();
-        st.stats.wall += wall;
-        if st.out.len() == before && !st.done {
-            // a round that cannot make progress (e.g. exhausted budget)
-            // ends the run instead of spinning forever
+        match drafted {
+            Some(pending) => {
+                let t_shape = pending.t_shape;
+                st.round_in_flight =
+                    Some(common::InFlightRound { pending, before, draft_wall });
+                Ok(RoundPhase::Pending { t_shape })
+            }
+            None => {
+                // no progress possible: end the run, mirroring `round`
+                st.stats.wall += draft_wall;
+                st.done = true;
+                Ok(RoundPhase::Done(RoundOutcome { emitted: Vec::new(), done: true }))
+            }
+        }
+    }
+
+    fn target_headroom(&self) -> usize {
+        common::RoundStep::target_headroom(self)
+    }
+
+    fn take_lane(&mut self, t_shape: usize) -> Result<BatchLane<'_>> {
+        let (live, tokens, mask, depths) = {
+            let fl = self
+                .state()
+                .round_in_flight
+                .as_ref()
+                .ok_or_else(|| anyhow!("take_lane without a round in flight"))?;
+            if t_shape < fl.pending.t_shape {
+                return Err(anyhow!(
+                    "fused shape {t_shape} narrower than pending {}",
+                    fl.pending.t_shape
+                ));
+            }
+            let (tokens, mask, depths) = fl.pending.tree.serialize(t_shape, 0);
+            (fl.pending.tree.len(), tokens, mask, depths)
+        };
+        Ok(BatchLane { kv: self.target_kv(), live, tokens, mask, depths })
+    }
+
+    fn finish_round(&mut self, out: StepOutput, t_shape: usize) -> Result<RoundOutcome> {
+        let fl = self
+            .state_mut()
+            .round_in_flight
+            .take()
+            .ok_or_else(|| anyhow!("finish_round without a round in flight"))?;
+        // `out.elapsed` is the fused step's full latency — which is what
+        // this lane actually waited for, so it belongs in its wall time.
+        let step_wall = out.elapsed;
+        let t0 = Instant::now();
+        self.absorb_round(fl.pending, out, t_shape)?;
+        let st = self.state_mut();
+        st.stats.wall += fl.draft_wall + step_wall + t0.elapsed();
+        if st.out.len() == fl.before && !st.done {
             st.done = true;
         }
-        let emitted = st.out[before..].to_vec();
+        let emitted = st.out[fl.before..].to_vec();
         Ok(RoundOutcome { emitted, done: st.done })
     }
 
@@ -337,6 +470,76 @@ mod tests {
             let fin = run.finish();
             assert_eq!(fin.tokens, g.tokens, "{name}: resumable path diverged");
             assert!(fin.tokens.len() <= 8, "{name}: budget exceeded");
+        }
+    }
+
+    #[test]
+    fn poll_round_path_matches_generate() {
+        // The lock-step lifecycle (begin_round -> take_lane -> one-lane
+        // step_batch -> finish_round) must produce exactly generate()'s
+        // tokens for every engine — the fused scheduler's correctness in
+        // miniature, at the natural step shape.
+        let srt = all_variants_runtime();
+        let opts = EngineOpts::default();
+        let prompt = [1u32, 30, 40, 50, 60];
+        for name in ENGINES {
+            let mut eng = build_engine(name, &srt, &opts).unwrap();
+            let want = eng.generate(&prompt, 8).unwrap().tokens;
+
+            let mut run = eng.begin(&prompt, 8).unwrap();
+            loop {
+                match run.begin_round().unwrap() {
+                    RoundPhase::Done(o) => {
+                        assert!(o.done, "{name}: Done phase must finish the run");
+                        break;
+                    }
+                    RoundPhase::Pending { t_shape } => {
+                        let mut lanes = vec![run.take_lane(t_shape).unwrap()];
+                        let outs = srt.step_batch(t_shape, &mut lanes).unwrap();
+                        drop(lanes);
+                        let out = outs.into_iter().next().unwrap();
+                        let o = run.finish_round(out, t_shape).unwrap();
+                        if o.done {
+                            break;
+                        }
+                    }
+                }
+            }
+            assert_eq!(run.tokens(), &want[..], "{name}: poll-style path diverged");
+        }
+    }
+
+    #[test]
+    fn poll_round_padded_shape_matches_generate() {
+        // The fused scheduler may widen a lane to the group's shared
+        // shape; stepping every pending verify at VERIFY_T instead of its
+        // natural shape must not change a single token (pad rows are
+        // skipped; logits are indexed per slot).
+        let srt = all_variants_runtime();
+        let opts = EngineOpts::default();
+        let prompt = [2u32, 35, 45, 55];
+        for name in ["ar", "lade", "pld", "swift", "vc", "hc", "vchc", "tr", "cas-spec"] {
+            let mut eng = build_engine(name, &srt, &opts).unwrap();
+            let want = eng.generate(&prompt, 6).unwrap().tokens;
+
+            let mut run = eng.begin(&prompt, 6).unwrap();
+            loop {
+                match run.begin_round().unwrap() {
+                    RoundPhase::Done(_) => break,
+                    RoundPhase::Pending { t_shape } => {
+                        let wide = t_shape.max(crate::runtime::VERIFY_T);
+                        assert!(run.target_headroom() >= wide, "test premise");
+                        let mut lanes = vec![run.take_lane(wide).unwrap()];
+                        let outs = srt.step_batch(wide, &mut lanes).unwrap();
+                        drop(lanes);
+                        let out = outs.into_iter().next().unwrap();
+                        if run.finish_round(out, wide).unwrap().done {
+                            break;
+                        }
+                    }
+                }
+            }
+            assert_eq!(run.tokens(), &want[..], "{name}: padded-shape path diverged");
         }
     }
 

@@ -15,10 +15,13 @@ use anyhow::Result;
 
 use crate::model::Variant;
 use crate::pld::PldMatcher;
-use crate::runtime::ScaleRuntime;
+use crate::runtime::{ScaleRuntime, StepOutput};
 use crate::spec::VariantSession;
 
-use super::common::{draft_chain, verify_chain_round, BranchCache, GenState, RoundStep};
+use super::common::{
+    absorb_verify, draft_chain, pending_chain, target_plumbing, BranchCache, GenState,
+    PendingVerify, RoundStep,
+};
 use super::{Engine, EngineOpts, RequestRun};
 
 enum Draft<'rt> {
@@ -98,11 +101,11 @@ impl RoundStep for SdRun<'_> {
         self.target.capacity_left() > crate::runtime::VERIFY_T
     }
 
-    fn round_impl(&mut self) -> Result<()> {
+    fn draft_round(&mut self) -> Result<Option<PendingVerify>> {
         let st = &mut self.st;
         let budget = self.k.min(st.max_new.saturating_sub(st.out.len()));
         if budget == 0 {
-            return Ok(()); // no progress: the driver ends the run
+            return Ok(None); // no progress: the driver ends the run
         }
         let root = st.root;
         // The root is committed by this round unconditionally; the PLD
@@ -131,9 +134,21 @@ impl RoundStep for SdRun<'_> {
             }
         };
 
-        // ---- verify (a bare root step when the draft had nothing) ----
+        // a bare root step when the draft had nothing
+        Ok(Some(pending_chain(root, &chain)))
+    }
+
+    target_plumbing!();
+
+    fn absorb_round(
+        &mut self,
+        pending: PendingVerify,
+        out: StepOutput,
+        t_shape: usize,
+    ) -> Result<()> {
+        let st = &mut self.st;
         let (accepted, bonus) =
-            verify_chain_round(&mut self.target, root, &chain, &mut st.stats)?;
+            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut st.stats)?;
 
         // ---- bookkeeping (draft cache syncs lazily next round) ----
         self.matcher.extend(&accepted);

@@ -15,12 +15,13 @@ use anyhow::Result;
 
 use crate::model::Variant;
 use crate::pld::PldMatcher;
-use crate::runtime::{argmax, softmax_prob, ScaleRuntime, VERIFY_T};
-use crate::spec::{verify_greedy, DraftTree, VariantSession};
+use crate::runtime::{argmax, softmax_prob, ScaleRuntime, StepOutput, VERIFY_T};
+use crate::spec::{DraftTree, VariantSession};
 use crate::tokenizer::EOS;
 
 use super::common::{
-    chain_step_shape, draft_chain, draft_chain_vc, BranchCache, GenState, RoundStep,
+    absorb_verify, chain_step_shape, draft_chain, draft_chain_vc, target_plumbing,
+    BranchCache, GenState, PendingVerify, RoundStep,
 };
 use super::{Engine, EngineOpts, RequestRun};
 
@@ -60,6 +61,8 @@ pub struct TreeRun<'rt> {
     k_main: usize,
     k_sib: usize,
     inner_k: usize,
+    /// Matcher length at the start of the in-flight round.
+    matcher_mark: usize,
     st: GenState,
 }
 
@@ -77,10 +80,10 @@ impl RoundStep for TreeRun<'_> {
             && self.draft.capacity_left() >= VERIFY_T + 2
     }
 
-    fn round_impl(&mut self) -> Result<()> {
+    fn draft_round(&mut self) -> Result<Option<PendingVerify>> {
         let st = &mut self.st;
         let root = st.root;
-        let committed_len = self.matcher.len();
+        self.matcher_mark = self.matcher.len();
         self.matcher.extend(&[root]);
         let committed: Vec<u32> = st.committed_except_root().to_vec();
         self.bc.ensure(&mut self.draft, &committed, &[], &mut st.stats)?;
@@ -152,22 +155,33 @@ impl RoundStep for TreeRun<'_> {
             }
         }
 
-        // --- single-step tree verification ---
+        // --- the pending single-step tree verification ---
         let t_shape = chain_step_shape(tree.len());
-        let out = self.target.verify_tree(&tree, t_shape)?;
-        st.stats.target_calls += 1;
-        let vocab = self.target.vocab();
-        let v = verify_greedy(&tree, &out.logits, vocab);
-        self.target.commit_slots(VERIFY_T, &v.accepted_slots)?;
-        let last = *v.accepted_slots.last().unwrap();
-        self.target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
+        Ok(Some(PendingVerify { tree, t_shape }))
+    }
 
-        self.matcher.truncate(committed_len);
+    target_plumbing!();
+
+    fn absorb_round(
+        &mut self,
+        pending: PendingVerify,
+        out: StepOutput,
+        _t_shape: usize,
+    ) -> Result<()> {
+        let st = &mut self.st;
+        let root = st.root;
+        // commit at VERIFY_T regardless of the executed shape (identity
+        // padding beyond the accepted slots makes any covering shape
+        // equivalent; this mirrors the pre-split engine)
+        let (accepted, bonus) =
+            absorb_verify(&mut self.target, &pending.tree, &out, VERIFY_T, &mut st.stats)?;
+
+        self.matcher.truncate(self.matcher_mark);
         self.matcher.extend(&[root]);
-        self.matcher.extend(&v.accepted_tokens);
+        self.matcher.extend(&accepted);
 
-        let mut emitted = v.accepted_tokens.clone();
-        emitted.push(v.bonus);
+        let mut emitted = accepted;
+        emitted.push(bonus);
         st.emit(&emitted);
         Ok(())
     }
@@ -201,6 +215,7 @@ impl Engine for TreeEngine<'_> {
             k_main: self.k_main,
             k_sib: self.k_sib,
             inner_k: self.inner_k,
+            matcher_mark: 0,
             st,
         }))
     }

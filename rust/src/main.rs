@@ -69,6 +69,12 @@ FLAGS
   --seed N            workload seed               (default: 42)
   --max-batch N       serve: max concurrent requests per decode batch
                       (continuous batching; default: 8, 1 = sequential)
+  --threads N         backend worker threads (default: 0 = auto via
+                      CAS_SPEC_THREADS / available_parallelism; 1 =
+                      serial; outputs are bit-identical for any value)
+  --lockstep on|off   serve: fuse co-batched requests' target-verify
+                      steps into one step_batch call per cycle
+                      (default: on; off = per-lane stepping, same tokens)
   --prefix-cache-mb N cross-request prefix/KV cache budget in MiB
                       (default: 0 = off; shared prompt prefixes are
                       reused bit-exactly across requests)
@@ -87,6 +93,8 @@ fn info(args: &Args) -> Result<()> {
     println!("artifacts: {}", m.dir.display());
     println!("backend: {}", rt.backend_name());
     println!("max_batch: {}", cfg.max_batch);
+    println!("threads: {}", cfg.resolved_threads());
+    println!("lockstep: {}", if cfg.lockstep { "on" } else { "off" });
     println!("prefix_cache_mb: {}", cfg.prefix_cache_mb);
     println!("lang_seed: {}  vocab: {}", m.lang_seed, m.vocab);
     println!("step shapes: {:?}  commit shapes: {:?}", m.step_shapes, m.commit_shapes);
@@ -113,7 +121,8 @@ fn info(args: &Args) -> Result<()> {
 fn run(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     let engine_name = cfg.engines.first().cloned().unwrap_or_else(|| "cas-spec".into());
-    let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
+    let mut rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
+    rt.set_threads(cfg.resolved_threads());
     let mut srt = rt.load_scale(&cfg.scale, &required_variants(&engine_name))?;
     srt.enable_prefix_cache(cfg.prefix_cache_bytes());
     let mut eng = build_engine(&engine_name, &srt, &cfg.opts)?;
@@ -156,7 +165,8 @@ fn load_for_engines(
 
 fn bench(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
-    let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
+    let mut rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
+    rt.set_threads(cfg.resolved_threads());
     let srt = load_for_engines(&rt, &cfg, &cfg.engines)?;
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);
@@ -178,7 +188,8 @@ fn check(args: &Args) -> Result<()> {
     if !args.has("engines") {
         cfg.engines = ENGINES.iter().map(|s| s.to_string()).collect();
     }
-    let rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
+    let mut rt = Runtime::open_with(&cfg.artifacts, cfg.backend_select()?)?;
+    rt.set_threads(cfg.resolved_threads());
     let srt = load_for_engines(&rt, &cfg, &cfg.engines)?;
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);

@@ -81,6 +81,29 @@ use crate::model::{Manifest, ScaleInfo, Variant};
 /// Step shapes lowered by aot.py (must match python `model.STEP_SHAPES`).
 /// The reference backend computes the same shapes directly.
 pub const STEP_SHAPES: [usize; 4] = [1, 8, 16, 64];
+
+/// Resolve the worker-thread budget for backend forward passes.
+///
+/// Precedence: an explicit value (CLI `--threads` / config `threads`) >
+/// the `CAS_SPEC_THREADS` environment variable > the machine's
+/// `available_parallelism`. The result is clamped to ≥ 1; `1` selects the
+/// fully serial path. Threading never changes outputs — the reference
+/// backend parallelizes only across units (lanes, heads) that share no
+/// accumulator, so any budget is bit-identical to serial.
+pub fn resolve_threads(explicit: Option<usize>) -> usize {
+    explicit
+        .filter(|n| *n > 0)
+        .or_else(|| {
+            std::env::var("CAS_SPEC_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|n| *n > 0)
+        })
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .max(1)
+}
 /// Tree-verification width of the target model (== max tree size M_tree_max).
 pub const VERIFY_T: usize = 16;
 
@@ -155,8 +178,12 @@ pub struct LaneStep<'a> {
 
 /// The device operations a serving backend must provide.
 ///
-/// Implementations are single-threaded (PJRT handles are not `Send`; the
-/// server keeps the whole runtime on a dedicated worker thread).
+/// Implementations are externally single-threaded (PJRT handles are not
+/// `Send`; the server keeps the whole runtime on a dedicated worker
+/// thread). A backend may still parallelize *internally* with scoped
+/// threads — the reference backend splits lanes and attention heads
+/// across a [`resolve_threads`] budget — as long as outputs stay
+/// bit-identical to the serial path.
 pub trait Backend {
     /// Short identifier ("ref" / "pjrt") for logs and stats.
     fn name(&self) -> &'static str;
@@ -296,6 +323,9 @@ pub struct Runtime {
     /// The model contract (scales, variants, artifact file names).
     pub manifest: Manifest,
     kind: RuntimeKind,
+    /// Worker-thread budget handed to backends at `load_scale`
+    /// (environment-resolved at open; override via [`Runtime::set_threads`]).
+    threads: usize,
     #[cfg(feature = "pjrt")]
     client: Option<xla::PjRtClient>,
 }
@@ -330,6 +360,7 @@ impl Runtime {
         Runtime {
             manifest,
             kind: RuntimeKind::Ref,
+            threads: resolve_threads(None),
             #[cfg(feature = "pjrt")]
             client: None,
         }
@@ -341,12 +372,29 @@ impl Runtime {
             anyhow!("backend pjrt: no manifest at {}", artifacts_dir.display())
         })?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { manifest, kind: RuntimeKind::Pjrt, client: Some(client) })
+        Ok(Runtime {
+            manifest,
+            kind: RuntimeKind::Pjrt,
+            threads: resolve_threads(None),
+            client: Some(client),
+        })
     }
 
     #[cfg(not(feature = "pjrt"))]
     fn open_pjrt(_artifacts_dir: &Path, _disk: Option<Manifest>) -> Result<Runtime> {
         Err(anyhow!("backend pjrt requested, but built without the `pjrt` cargo feature"))
+    }
+
+    /// Override the worker-thread budget (clamped to ≥ 1; 1 = serial).
+    /// Call before [`Runtime::load_scale`] — already-loaded scales keep
+    /// the budget they were created with.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// The worker-thread budget `load_scale` hands to backends.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Which backend `load_scale` will instantiate ("ref" / "pjrt").
@@ -378,7 +426,12 @@ impl Runtime {
                 } else {
                     None
                 };
-                Box::new(reference::RefBackend::new(&info, variants, weights.as_ref())?)
+                Box::new(reference::RefBackend::new_with_threads(
+                    &info,
+                    variants,
+                    weights.as_ref(),
+                    self.threads,
+                )?)
             }
             #[cfg(feature = "pjrt")]
             RuntimeKind::Pjrt => {
@@ -390,7 +443,13 @@ impl Runtime {
             .iter()
             .map(|v| (*v, RefCell::new(VariantCounters::default())))
             .collect();
-        Ok(ScaleRuntime { info, backend, counters, prefix_cache: None })
+        Ok(ScaleRuntime {
+            info,
+            backend,
+            counters,
+            prefix_cache: None,
+            threads: self.threads,
+        })
     }
 }
 
@@ -403,6 +462,9 @@ pub struct ScaleRuntime {
     backend: Box<dyn Backend>,
     counters: BTreeMap<Variant, RefCell<VariantCounters>>,
     prefix_cache: Option<PrefixCache>,
+    /// Worker-thread budget the backend was loaded with (stats/bench
+    /// reporting; 1 = serial).
+    threads: usize,
 }
 
 /// One lane of a [`ScaleRuntime::step_batch`] call. The cache handle
@@ -425,6 +487,12 @@ impl ScaleRuntime {
     /// Short identifier of the live backend ("ref" / "pjrt").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Worker-thread budget the backend runs forward passes with
+    /// (reported in server stats and bench records; 1 = serial).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Variants this scale was loaded with.
@@ -733,6 +801,25 @@ mod tests {
             panic!("forced pjrt must error in a ref-only build");
         };
         assert!(format!("{err:#}").contains("pjrt"));
+    }
+
+    #[test]
+    fn resolve_threads_explicit_wins_and_clamps() {
+        assert_eq!(resolve_threads(Some(3)), 3);
+        // 0 means "auto": falls through to env/parallelism, never yields 0
+        assert!(resolve_threads(Some(0)) >= 1);
+        assert!(resolve_threads(None) >= 1);
+    }
+
+    #[test]
+    fn runtime_threads_propagate_to_scale() {
+        let mut rt = Runtime::open_with(Path::new("/nope"), BackendSelect::Ref).unwrap();
+        rt.set_threads(2);
+        assert_eq!(rt.threads(), 2);
+        let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+        assert_eq!(srt.threads(), 2);
+        rt.set_threads(0);
+        assert_eq!(rt.threads(), 1, "budget clamps to >= 1");
     }
 
     #[test]

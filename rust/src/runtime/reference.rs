@@ -17,6 +17,28 @@
 //! of a batched call — which is what the lossless test suite and
 //! `tests/batch_step.rs` exercise end-to-end.
 //!
+//! # Hot-path kernels
+//!
+//! The inner loops are cache-blocked and (optionally) threaded, with the
+//! hard constraint that **every f32 accumulation keeps the serial order**:
+//!
+//!   * [`matmul_bias`] tiles over rows and output columns only; each
+//!     output element still accumulates `bias + Σ_i x[i]·w[i][o]` with the
+//!     input dimension ascending, so blocking never reassociates a sum.
+//!   * attention streams each head's committed K/V rows as one contiguous
+//!     slice and visits heads outermost (better K/V locality); the
+//!     per-(token, head) score/softmax/weighted-sum order is unchanged.
+//!   * activation buffers come from a per-backend scratch pool
+//!     ([`LaneScratch`]), so steady-state decode steps allocate only their
+//!     output logits.
+//!   * threading ([`RefBackend::new_with_threads`], default
+//!     `CAS_SPEC_THREADS` / `available_parallelism`) uses
+//!     `std::thread::scope` across *lanes* of a batched step (lanes are
+//!     row-independent by construction) and across *heads* within a
+//!     single large-T lane. No parallel unit shares an accumulator, so
+//!     outputs are bitwise identical for any thread count — pinned by
+//!     this module's tests and `tests/batch_step.rs`.
+//!
 //! Batched steps ([`super::Backend::step_batch`]) run the forward with the
 //! layer loop outermost and the lane loop inside: each layer's weights are
 //! streamed through the cache hierarchy once for the whole lane group
@@ -27,6 +49,7 @@
 //! `Rc`-shared across variants, mirroring the PJRT backend's shared device
 //! buffers (the paper's self-speculative property at the host level).
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
@@ -80,6 +103,10 @@ pub struct RefBackend {
     lnf_b: Vec<f32>,
     ee: Option<EeAdapter>,
     variants: BTreeMap<Variant, RefVariant>,
+    /// Worker-thread budget for a forward pass (1 = fully serial).
+    threads: usize,
+    /// Reusable per-lane activation buffers (see [`LaneScratch`]).
+    scratch: RefCell<Vec<LaneScratch>>,
 }
 
 /// Fetch one tensor, validating its shape against the model contract.
@@ -118,13 +145,27 @@ impl Layer {
 }
 
 impl RefBackend {
-    /// Load a scale for `variants`. `weights` is the on-disk tensor
-    /// container when artifacts exist; `None` synthesizes deterministic
-    /// seeded weights so no files are needed at all.
+    /// Load a scale for `variants` with the environment-resolved thread
+    /// budget (`CAS_SPEC_THREADS`, else `available_parallelism`).
+    /// `weights` is the on-disk tensor container when artifacts exist;
+    /// `None` synthesizes deterministic seeded weights so no files are
+    /// needed at all.
     pub fn new(
         info: &ScaleInfo,
         variants: &[Variant],
         weights: Option<&Weights>,
+    ) -> Result<RefBackend> {
+        Self::new_with_threads(info, variants, weights, super::resolve_threads(None))
+    }
+
+    /// [`RefBackend::new`] with an explicit worker-thread budget
+    /// (1 = the fully serial path; outputs are bitwise identical for any
+    /// value — threading never crosses an accumulation boundary).
+    pub fn new_with_threads(
+        info: &ScaleInfo,
+        variants: &[Variant],
+        weights: Option<&Weights>,
+        threads: usize,
     ) -> Result<RefBackend> {
         let synthesized;
         let w = match weights {
@@ -185,7 +226,14 @@ impl RefBackend {
             lnf_b: tensor(w, info, "lnf_b")?,
             ee,
             variants: vmap,
+            threads: threads.max(1),
+            scratch: RefCell::new(Vec::new()),
         })
+    }
+
+    /// The worker-thread budget this backend runs with.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     fn variant(&self, v: Variant) -> Result<&RefVariant> {
@@ -218,38 +266,52 @@ fn ln_rows(src: &[f32], g: &[f32], b: &[f32], dst: &mut [f32], rows: usize, d: u
     }
 }
 
-/// dst[r] = src[r] @ w + bias, with w row-major (din, dout).
-/// Accumulation order is fixed (ascending input dim), which the
-/// determinism contract relies on.
-fn matmul_bias(
+/// Rows per register/L1 tile of [`matmul_bias`]: the `(din, MM_OUT_BLOCK)`
+/// weight tile is re-streamed once per row, so it stays hot across a
+/// whole row block.
+const MM_ROW_BLOCK: usize = 8;
+/// Output columns per tile: the accumulator strip `out[o0..o1]` lives in
+/// registers/L1 while the input dimension streams through it.
+const MM_OUT_BLOCK: usize = 64;
+
+/// Cache-blocked dense matmul: `dst[r] = src[r] @ w (+ bias)`, with `w`
+/// row-major `(din, dout)` and `bias: None` meaning a zero start.
+///
+/// Blocking tiles rows and output columns **only**; each output element
+/// still accumulates `bias + Σ_i src[r][i]·w[i][o]` with `i` strictly
+/// ascending, so the result is bit-identical to the naive scalar loop —
+/// the determinism contract the lossless suite relies on. (The rows=1 /
+/// `bias: None` case is the old `matvec`.)
+///
+/// Public so `benches/hotpath.rs` can compare it against an inline naive
+/// kernel; not a stable API.
+pub fn matmul_bias(
     src: &[f32],
     w: &[f32],
-    bias: &[f32],
+    bias: Option<&[f32]>,
     dst: &mut [f32],
     rows: usize,
     din: usize,
     dout: usize,
 ) {
-    for r in 0..rows {
-        let x = &src[r * din..(r + 1) * din];
-        let out = &mut dst[r * dout..(r + 1) * dout];
-        out.copy_from_slice(bias);
-        for (i, &xi) in x.iter().enumerate() {
-            let wr = &w[i * dout..(i + 1) * dout];
-            for o in 0..dout {
-                out[o] += xi * wr[o];
+    for r0 in (0..rows).step_by(MM_ROW_BLOCK) {
+        let r1 = (r0 + MM_ROW_BLOCK).min(rows);
+        for o0 in (0..dout).step_by(MM_OUT_BLOCK) {
+            let o1 = (o0 + MM_OUT_BLOCK).min(dout);
+            for r in r0..r1 {
+                let x = &src[r * din..(r + 1) * din];
+                let out = &mut dst[r * dout + o0..r * dout + o1];
+                match bias {
+                    Some(b) => out.copy_from_slice(&b[o0..o1]),
+                    None => out.fill(0.0),
+                }
+                for (i, &xi) in x.iter().enumerate() {
+                    let wr = &w[i * dout + o0..i * dout + o1];
+                    for (o, wv) in out.iter_mut().zip(wr) {
+                        *o += xi * *wv;
+                    }
+                }
             }
-        }
-    }
-}
-
-/// One row-vector times matrix: out = x @ w, w row-major (din, dout).
-fn matvec(x: &[f32], w: &[f32], out: &mut [f32], din: usize, dout: usize) {
-    out.fill(0.0);
-    for (i, &xi) in x.iter().enumerate().take(din) {
-        let wr = &w[i * dout..(i + 1) * dout];
-        for o in 0..dout {
-            out[o] += xi * wr[o];
         }
     }
 }
@@ -288,8 +350,7 @@ fn host_cache(kv: &KvState) -> Result<&Vec<f32>> {
     }
 }
 
-/// Per-lane working state inside a (possibly batched) forward pass: the
-/// lane's inputs plus its private activation buffers. Rows never mix
+/// One lane's inputs for a (possibly batched) forward pass. Rows never mix
 /// across lanes; only weight *reads* are shared.
 struct LaneRun<'a> {
     cache: &'a mut Vec<f32>,
@@ -299,14 +360,6 @@ struct LaneRun<'a> {
     tokens: &'a [u32],
     mask: &'a [f32],
     depths: &'a [i32],
-    /// (live, d) residual stream.
-    h: Vec<f32>,
-    /// (live, 3d) fused qkv projections of the current layer.
-    qkv: Vec<f32>,
-    /// (live, d) LN scratch.
-    hn: Vec<f32>,
-    /// (live, d) attention outputs.
-    attn: Vec<f32>,
 }
 
 impl<'a> LaneRun<'a> {
@@ -320,42 +373,334 @@ impl<'a> LaneRun<'a> {
         mask: &'a [f32],
         depths: &'a [i32],
     ) -> Self {
-        LaneRun {
-            cache,
-            pos,
-            t_shape,
-            live,
-            tokens,
-            mask,
-            depths,
-            h: Vec::new(),
-            qkv: Vec::new(),
-            hn: Vec::new(),
-            attn: Vec::new(),
+        LaneRun { cache, pos, t_shape, live, tokens, mask, depths }
+    }
+}
+
+/// Reusable per-lane activation buffers. The backend keeps a pool of these
+/// (`RefBackend::scratch`) so steady-state decode steps allocate nothing
+/// but their output logits: `forward_lanes` takes one set per lane and
+/// returns them afterwards. Every region is fully overwritten before it is
+/// read, so reuse cannot leak state between steps.
+#[derive(Default)]
+struct LaneScratch {
+    /// (t, d) residual stream.
+    h: Vec<f32>,
+    /// (t, 3d) fused qkv projections of the current layer.
+    qkv: Vec<f32>,
+    /// (t, d) LN scratch.
+    hn: Vec<f32>,
+    /// (t, d) attention outputs, token-major.
+    attn: Vec<f32>,
+    /// (nh, t, dh) attention outputs, head-major (parallel-friendly).
+    head_out: Vec<f32>,
+    /// (t, d) projection scratch (wo / wo2 / ee outputs).
+    proj: Vec<f32>,
+    /// (t, 4d) MLP hidden activations.
+    mlp: Vec<f32>,
+    /// Attention score buffer (one row at a time).
+    scores: Vec<f32>,
+    /// Per-worker score buffers for head-parallel attention (reused
+    /// across layers and steps so worker threads allocate nothing).
+    worker_scores: Vec<Vec<f32>>,
+}
+
+impl LaneScratch {
+    fn prepare(&mut self, t: usize, d: usize, dh2: usize) {
+        self.h.resize(t * d, 0.0);
+        self.qkv.resize(t * 3 * d, 0.0);
+        self.hn.resize(t * d, 0.0);
+        self.attn.resize(t * d, 0.0);
+        self.head_out.resize(t * d, 0.0);
+        self.proj.resize(t * d, 0.0);
+        self.mlp.resize(t * dh2, 0.0);
+    }
+}
+
+/// Read-only model views for one variant's forward pass. Everything is a
+/// plain reference to `Sync` data (the `Rc`-shared layer weights are lent
+/// as `&Layer`), so a `&ForwardCtx` can cross into `std::thread::scope`
+/// workers.
+struct ForwardCtx<'m> {
+    layers: Vec<&'m Layer>,
+    emb: &'m [f32],
+    emb_t: &'m [f32],
+    pos_emb: &'m [f32],
+    lnf_g: &'m [f32],
+    lnf_b: &'m [f32],
+    ee: Option<&'m EeAdapter>,
+    ee_active: bool,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    vocab: usize,
+    dh2: usize,
+    scale: f32,
+    /// Elems per layer in the KV cache.
+    plane: usize,
+    /// Elems per head within a K/V plane.
+    head: usize,
+}
+
+/// Minimum live-token count before head-parallel attention is considered
+/// (prefill chunks and full-width verify trees).
+const HEAD_PAR_MIN_T: usize = 16;
+/// Minimum per-layer attention work — measured as `t · (pos + t)`
+/// score/value row visits — before the per-layer `thread::scope`
+/// spawn/join cost (tens of µs) amortizes. Below this, serial heads win.
+const HEAD_PAR_MIN_WORK: usize = 2048;
+
+/// Tree attention for heads `h0 .. h0 + out.len()/(t·dh)`, written
+/// head-major `(head, token, dh)` into `out`. Each head's committed K/V
+/// rows are streamed as one contiguous slice; the per-(token, head)
+/// score → softmax → weighted-sum order is exactly the serial kernel's,
+/// so outputs are bit-identical under any head partition.
+#[allow(clippy::too_many_arguments)]
+fn attention_heads(
+    ctx: &ForwardCtx<'_>,
+    cache: &[f32],
+    qkv: &[f32],
+    mask: &[f32],
+    pos: usize,
+    t: usize,
+    t_shape: usize,
+    kbase: usize,
+    vbase: usize,
+    h0: usize,
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    let (d, dh) = (ctx.d, ctx.dh);
+    let nheads = out.len() / (t * dh);
+    for hr in 0..nheads {
+        let hh = h0 + hr;
+        // committed K/V for this head: `pos` contiguous rows
+        let kc = &cache[kbase + hh * ctx.head..][..pos * dh];
+        let vc = &cache[vbase + hh * ctx.head..][..pos * dh];
+        for i in 0..t {
+            let mrow = &mask[i * t_shape..i * t_shape + t_shape];
+            let q = &qkv[i * 3 * d + hh * dh..][..dh];
+            scores.clear();
+            let mut mx = f32::NEG_INFINITY;
+            for kr in kc.chunks_exact(dh) {
+                let sc = dot(q, kr) * ctx.scale;
+                scores.push(sc);
+                mx = mx.max(sc);
+            }
+            for j in 0..t {
+                if mrow[j] > 0.5 {
+                    let kr = &qkv[j * 3 * d + d + hh * dh..][..dh];
+                    let sc = dot(q, kr) * ctx.scale;
+                    scores.push(sc);
+                    mx = mx.max(sc);
+                }
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let inv = 1.0 / denom;
+            let orow = &mut out[hr * t * dh + i * dh..][..dh];
+            orow.fill(0.0);
+            let mut idx = 0;
+            for vr in vc.chunks_exact(dh) {
+                let wgt = scores[idx] * inv;
+                idx += 1;
+                for x in 0..dh {
+                    orow[x] += wgt * vr[x];
+                }
+            }
+            for j in 0..t {
+                if mrow[j] > 0.5 {
+                    let wgt = scores[idx] * inv;
+                    idx += 1;
+                    let vr = &qkv[j * 3 * d + 2 * d + hh * dh..][..dh];
+                    for x in 0..dh {
+                        orow[x] += wgt * vr[x];
+                    }
+                }
+            }
         }
     }
 }
 
+/// Run one lane start to finish: embed, every layer (LN → qkv → tree
+/// attention → wo residual → MLP residual → KV write), EE adapter, final
+/// LN, tied logits. `head_threads > 1` parallelizes the attention head
+/// loop (bit-identical: heads share no accumulator; the head-major buffer
+/// is transposed into the token-major one by exact copies).
+fn forward_one(
+    ctx: &ForwardCtx<'_>,
+    ln: &mut LaneRun<'_>,
+    sc: &mut LaneScratch,
+    head_threads: usize,
+) -> Vec<f32> {
+    let (d, nh, dh, s) = (ctx.d, ctx.nh, ctx.dh, ctx.s);
+    let (vocab, dh2) = (ctx.vocab, ctx.dh2);
+    let t = ln.live;
+    sc.prepare(t, d, dh2);
+    let LaneScratch { h, qkv, hn, attn, head_out, proj, mlp, scores, worker_scores } = sc;
+
+    // ---- embed: h = emb[tok] + pos_emb[pos + depth] ----
+    for i in 0..t {
+        let tok = ln.tokens[i] as usize;
+        let pid = (ln.pos as i64 + ln.depths[i] as i64).clamp(0, s as i64 - 1) as usize;
+        let dst = &mut h[i * d..(i + 1) * d];
+        let e = &ctx.emb[tok * d..(tok + 1) * d];
+        let pe = &ctx.pos_emb[pid * d..(pid + 1) * d];
+        for j in 0..d {
+            dst[j] = e[j] + pe[j];
+        }
+    }
+
+    for (li, layer) in ctx.layers.iter().enumerate() {
+        let kbase = li * ctx.plane;
+        let vbase = kbase + nh * ctx.head;
+        ln_rows(h, &layer.ln1_g, &layer.ln1_b, hn, t, d);
+        matmul_bias(
+            &hn[..t * d],
+            &layer.wqkv,
+            Some(&layer.bqkv),
+            &mut qkv[..t * 3 * d],
+            t,
+            d,
+            3 * d,
+        );
+
+        // --- tree attention: committed cache rows, then ancestors ---
+        {
+            let cache: &[f32] = &ln.cache[..];
+            let (pos, mask, t_shape) = (ln.pos, ln.mask, ln.t_shape);
+            let heads = &mut head_out[..nh * t * dh];
+            let par_work = t * (pos + t);
+            if head_threads > 1
+                && nh > 1
+                && t >= HEAD_PAR_MIN_T
+                && par_work >= HEAD_PAR_MIN_WORK
+            {
+                let workers = head_threads.min(nh);
+                let per = nh.div_ceil(workers);
+                worker_scores.resize_with(workers, Vec::new);
+                std::thread::scope(|scope| {
+                    for ((w, chunk), wsc) in heads
+                        .chunks_mut(per * t * dh)
+                        .enumerate()
+                        .zip(worker_scores.iter_mut())
+                    {
+                        let qkv = &*qkv;
+                        scope.spawn(move || {
+                            attention_heads(
+                                ctx, cache, qkv, mask, pos, t, t_shape, kbase, vbase,
+                                w * per, chunk, wsc,
+                            );
+                        });
+                    }
+                });
+            } else {
+                attention_heads(
+                    ctx, cache, qkv, mask, pos, t, t_shape, kbase, vbase, 0, heads,
+                    scores,
+                );
+            }
+            // transpose head-major (nh, t, dh) -> token-major (t, d)
+            for hh in 0..nh {
+                for i in 0..t {
+                    attn[i * d + hh * dh..i * d + (hh + 1) * dh]
+                        .copy_from_slice(&heads[hh * t * dh + i * dh..][..dh]);
+                }
+            }
+        }
+
+        // h = (h + attn @ wo) + bo
+        matmul_bias(&attn[..t * d], &layer.wo, None, &mut proj[..t * d], t, d, d);
+        for i in 0..t {
+            let hr = &mut h[i * d..(i + 1) * d];
+            let pr = &proj[i * d..(i + 1) * d];
+            for j in 0..d {
+                hr[j] = (hr[j] + pr[j]) + layer.bo[j];
+            }
+        }
+
+        // h = (h + gelu(ln2(h) @ wi + bi) @ wo2) + bo2
+        ln_rows(h, &layer.ln2_g, &layer.ln2_b, hn, t, d);
+        matmul_bias(&hn[..t * d], &layer.wi, None, &mut mlp[..t * dh2], t, d, dh2);
+        for i in 0..t {
+            let mrow = &mut mlp[i * dh2..(i + 1) * dh2];
+            for (o, bv) in mrow.iter_mut().zip(&layer.bi) {
+                *o = gelu(*o + bv);
+            }
+        }
+        matmul_bias(&mlp[..t * dh2], &layer.wo2, None, &mut proj[..t * d], t, dh2, d);
+        for i in 0..t {
+            let hr = &mut h[i * d..(i + 1) * d];
+            let pr = &proj[i * d..(i + 1) * d];
+            for j in 0..d {
+                hr[j] = (hr[j] + pr[j]) + layer.bo2[j];
+            }
+        }
+
+        // write this layer's live-token KV at slots pos..pos+t (junk
+        // beyond the accepted prefix is compacted away by commit and
+        // never attended past `pos`)
+        for i in 0..t {
+            for hh in 0..nh {
+                let kq = &qkv[i * 3 * d + d + hh * dh..][..dh];
+                ln.cache[kbase + hh * ctx.head + (ln.pos + i) * dh..][..dh]
+                    .copy_from_slice(kq);
+                let vq = &qkv[i * 3 * d + 2 * d + hh * dh..][..dh];
+                ln.cache[vbase + hh * ctx.head + (ln.pos + i) * dh..][..dh]
+                    .copy_from_slice(vq);
+            }
+        }
+    }
+
+    // ---- epilogue: EE adapter, final LN, tied logits ----
+    if ctx.ee_active {
+        let ee = ctx.ee.expect("validated before the forward: ee adapter loaded");
+        ln_rows(h, &ee.ln_g, &ee.ln_b, hn, t, d);
+        matmul_bias(&hn[..t * d], &ee.w, None, &mut proj[..t * d], t, d, d);
+        for i in 0..t {
+            let hr = &mut h[i * d..(i + 1) * d];
+            let pr = &proj[i * d..(i + 1) * d];
+            for j in 0..d {
+                hr[j] = (hr[j] + pr[j]) + ee.b[j];
+            }
+        }
+    }
+
+    // final LN + tied-embedding logits; pad rows stay zero
+    ln_rows(h, ctx.lnf_g, ctx.lnf_b, hn, t, d);
+    let mut logits = vec![0f32; ln.t_shape * vocab];
+    matmul_bias(&hn[..t * d], ctx.emb_t, None, &mut logits[..t * vocab], t, d, vocab);
+    logits
+}
+
 impl RefBackend {
     /// Run the forward pass for a group of lanes that all execute
-    /// variant `v`'s layer stack. The layer loop is outermost so each
-    /// layer's (`Rc`-shared) weights are streamed once per layer for the
-    /// whole group — the batched-serving memory win — while every per-row
-    /// operation keeps the exact arithmetic and summation order of a
-    /// single-lane step, so per-lane results are bit-identical to solo
-    /// steps by construction.
+    /// variant `v`'s layer stack. Lanes are fully row-independent, so the
+    /// worker-thread budget splits them across `std::thread::scope`
+    /// workers (a single large-T lane parallelizes across attention heads
+    /// instead); every per-row operation keeps the exact arithmetic and
+    /// summation order of a serial single-lane step, so per-lane results
+    /// are bit-identical to solo serial steps by construction.
     fn forward_lanes(&self, v: Variant, lanes: &mut [LaneRun<'_>]) -> Result<Vec<Vec<f32>>> {
         let var = self.variant(v)?;
         let (d, nh, dh) = (self.info.d_model, self.info.n_heads, self.info.d_head);
         let (s, vocab) = (self.info.s_max, self.info.vocab);
-        let dh2 = 4 * d;
-        let scale = 1.0 / (dh as f32).sqrt();
         let plane = 2 * nh * s * dh; // elems per layer in the cache
         let head = s * dh; // elems per head within a k/v plane
         let expect: usize = var.info.kv_shape.iter().product();
+        let ee_active = v == Variant::Ee;
+        let ee = if ee_active {
+            Some(self.ee.as_ref().ok_or_else(|| anyhow!("ee adapter not loaded"))?)
+        } else {
+            None
+        };
 
-        // ---- validate + embed each lane: h = emb[tok] + pos_emb[...] ----
-        for ln in lanes.iter_mut() {
+        // ---- validate every lane before any compute starts ----
+        for ln in lanes.iter() {
             if ln.cache.len() != expect {
                 return Err(anyhow!(
                     "kv cache has {} elems, expected {expect}",
@@ -380,163 +725,75 @@ impl RefBackend {
                     return Err(anyhow!("token {tok} out of vocab {vocab}"));
                 }
             }
-            let t = ln.live;
-            ln.h = vec![0f32; t * d];
-            for i in 0..t {
-                let tok = ln.tokens[i] as usize;
-                let pid =
-                    (ln.pos as i64 + ln.depths[i] as i64).clamp(0, s as i64 - 1) as usize;
-                let dst = &mut ln.h[i * d..(i + 1) * d];
-                let e = &self.emb[tok * d..(tok + 1) * d];
-                let pe = &self.pos_emb[pid * d..(pid + 1) * d];
-                for j in 0..d {
-                    dst[j] = e[j] + pe[j];
-                }
-            }
-            ln.qkv = vec![0f32; t * 3 * d];
-            ln.hn = vec![0f32; t * d];
-            ln.attn = vec![0f32; t * d];
         }
 
-        // shared small scratch, fully overwritten before each use
-        let mut proj = vec![0f32; d];
-        let mut mlp = vec![0f32; dh2];
-        let mut scores: Vec<f32> = Vec::new();
+        let ctx = ForwardCtx {
+            layers: var.layers.iter().map(|l| l.as_ref()).collect(),
+            emb: &self.emb,
+            emb_t: &self.emb_t,
+            pos_emb: &self.pos_emb,
+            lnf_g: &self.lnf_g,
+            lnf_b: &self.lnf_b,
+            ee,
+            ee_active,
+            d,
+            nh,
+            dh,
+            s,
+            vocab,
+            dh2: 4 * d,
+            scale: 1.0 / (dh as f32).sqrt(),
+            plane,
+            head,
+        };
 
-        for (li, layer) in var.layers.iter().enumerate() {
-            let kbase = li * plane;
-            let vbase = kbase + nh * head;
-            for ln in lanes.iter_mut() {
-                let t = ln.live;
-                ln_rows(&ln.h, &layer.ln1_g, &layer.ln1_b, &mut ln.hn, t, d);
-                matmul_bias(&ln.hn, &layer.wqkv, &layer.bqkv, &mut ln.qkv, t, d, 3 * d);
+        // take one scratch set per lane from the pool (allocate the gap)
+        let mut scratch: Vec<LaneScratch> = {
+            let mut pool = self.scratch.borrow_mut();
+            let keep = pool.len().saturating_sub(lanes.len());
+            let mut got: Vec<LaneScratch> = pool.drain(keep..).collect();
+            got.resize_with(lanes.len(), LaneScratch::default);
+            got
+        };
 
-                // --- tree attention: committed cache rows, then ancestors ---
-                for i in 0..t {
-                    let mrow = &ln.mask[i * ln.t_shape..i * ln.t_shape + ln.t_shape];
-                    for hh in 0..nh {
-                        let q = &ln.qkv[i * 3 * d + hh * dh..][..dh];
-                        scores.clear();
-                        let mut mx = f32::NEG_INFINITY;
-                        for sp in 0..ln.pos {
-                            let kr = &ln.cache[kbase + hh * head + sp * dh..][..dh];
-                            let sc = dot(q, kr) * scale;
-                            scores.push(sc);
-                            mx = mx.max(sc);
-                        }
-                        for j in 0..t {
-                            if mrow[j] > 0.5 {
-                                let kr = &ln.qkv[j * 3 * d + d + hh * dh..][..dh];
-                                let sc = dot(q, kr) * scale;
-                                scores.push(sc);
-                                mx = mx.max(sc);
-                            }
-                        }
-                        let mut denom = 0f32;
-                        for sc in scores.iter_mut() {
-                            *sc = (*sc - mx).exp();
-                            denom += *sc;
-                        }
-                        let inv = 1.0 / denom;
-                        let out = &mut ln.attn[i * d + hh * dh..][..dh];
-                        out.fill(0.0);
-                        let mut idx = 0;
-                        for sp in 0..ln.pos {
-                            let wgt = scores[idx] * inv;
-                            idx += 1;
-                            let vr = &ln.cache[vbase + hh * head + sp * dh..][..dh];
-                            for x in 0..dh {
-                                out[x] += wgt * vr[x];
-                            }
-                        }
-                        for j in 0..t {
-                            if mrow[j] > 0.5 {
-                                let wgt = scores[idx] * inv;
-                                idx += 1;
-                                let vr = &ln.qkv[j * 3 * d + 2 * d + hh * dh..][..dh];
-                                for x in 0..dh {
-                                    out[x] += wgt * vr[x];
-                                }
-                            }
-                        }
-                    }
-                }
-
-                // h = (h + attn @ wo) + bo
-                for i in 0..t {
-                    matvec(&ln.attn[i * d..(i + 1) * d], &layer.wo, &mut proj, d, d);
-                    let hr = &mut ln.h[i * d..(i + 1) * d];
-                    for j in 0..d {
-                        hr[j] = (hr[j] + proj[j]) + layer.bo[j];
-                    }
-                }
-
-                // h = (h + gelu(ln2(h) @ wi + bi) @ wo2) + bo2
-                ln_rows(&ln.h, &layer.ln2_g, &layer.ln2_b, &mut ln.hn, t, d);
-                for i in 0..t {
-                    matvec(&ln.hn[i * d..(i + 1) * d], &layer.wi, &mut mlp, d, dh2);
-                    for (o, bv) in mlp.iter_mut().zip(&layer.bi) {
-                        *o = gelu(*o + bv);
-                    }
-                    matvec(&mlp, &layer.wo2, &mut proj, dh2, d);
-                    let hr = &mut ln.h[i * d..(i + 1) * d];
-                    for j in 0..d {
-                        hr[j] = (hr[j] + proj[j]) + layer.bo2[j];
-                    }
-                }
-
-                // write this layer's live-token KV at slots pos..pos+t (junk
-                // beyond the accepted prefix is compacted away by commit and
-                // never attended past `pos`)
-                for i in 0..t {
-                    for hh in 0..nh {
-                        let kq = &ln.qkv[i * 3 * d + d + hh * dh..][..dh];
-                        ln.cache[kbase + hh * head + (ln.pos + i) * dh..][..dh]
-                            .copy_from_slice(kq);
-                        let vq = &ln.qkv[i * 3 * d + 2 * d + hh * dh..][..dh];
-                        ln.cache[vbase + hh * head + (ln.pos + i) * dh..][..dh]
-                            .copy_from_slice(vq);
-                    }
-                }
-            }
-        }
-
-        // ---- per-lane epilogue: EE adapter, final LN, tied logits ----
-        let mut outs = Vec::with_capacity(lanes.len());
-        for ln in lanes.iter_mut() {
-            let t = ln.live;
-
-            // early-exit adapter (ee variant only): h += ln(h) @ w + b
-            if v == Variant::Ee {
-                let ee = self
-                    .ee
-                    .as_ref()
-                    .ok_or_else(|| anyhow!("ee adapter not loaded"))?;
-                ln_rows(&ln.h, &ee.ln_g, &ee.ln_b, &mut ln.hn, t, d);
-                for i in 0..t {
-                    matvec(&ln.hn[i * d..(i + 1) * d], &ee.w, &mut proj, d, d);
-                    let hr = &mut ln.h[i * d..(i + 1) * d];
-                    for j in 0..d {
-                        hr[j] = (hr[j] + proj[j]) + ee.b[j];
-                    }
-                }
-            }
-
-            // final LN + tied-embedding logits; pad rows stay zero
-            ln_rows(&ln.h, &self.lnf_g, &self.lnf_b, &mut ln.hn, t, d);
-            let mut logits = vec![0f32; ln.t_shape * vocab];
-            for i in 0..t {
-                let row = &mut logits[i * vocab..(i + 1) * vocab];
-                for j in 0..d {
-                    let x = ln.hn[i * d + j];
-                    let er = &self.emb_t[j * vocab..(j + 1) * vocab];
-                    for o in 0..vocab {
-                        row[o] += x * er[o];
-                    }
-                }
-            }
-            outs.push(logits);
-        }
+        let workers = self.threads.min(lanes.len());
+        let outs: Vec<Vec<f32>> = if workers > 1 {
+            // lane-parallel: contiguous lane chunks per worker, results
+            // reassembled in lane order. Threads left over after one
+            // worker per lane become each worker's head budget (nested
+            // scoped threads), so a 2-lane batch on an 8-thread budget
+            // still uses the machine when the attention work is large.
+            let chunk = lanes.len().div_ceil(workers);
+            let head_budget = (self.threads / workers).max(1);
+            let ctx_ref = &ctx;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = lanes
+                    .chunks_mut(chunk)
+                    .zip(scratch.chunks_mut(chunk))
+                    .map(|(lc, scs)| {
+                        scope.spawn(move || {
+                            lc.iter_mut()
+                                .zip(scs.iter_mut())
+                                .map(|(ln, scr)| forward_one(ctx_ref, ln, scr, head_budget))
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("lane worker panicked"))
+                    .collect()
+            })
+        } else {
+            // serial over lanes; a single lane may go head-parallel
+            let head_threads = if lanes.len() == 1 { self.threads } else { 1 };
+            lanes
+                .iter_mut()
+                .zip(scratch.iter_mut())
+                .map(|(ln, scr)| forward_one(&ctx, ln, scr, head_threads))
+                .collect()
+        };
+        self.scratch.borrow_mut().append(&mut scratch);
         Ok(outs)
     }
 }
@@ -581,9 +838,9 @@ impl Backend for RefBackend {
         lanes: &mut [LaneStep<'_>],
     ) -> Result<Vec<Vec<f32>>> {
         // Group lanes by variant (preserving intra-group order) so each
-        // group shares one layer-outer forward; the common serving case —
-        // many requests in the same phase, hence the same variant — gets
-        // the full weight-sharing win. Output order is restored at the end.
+        // group shares one layer stack; the common serving case — many
+        // requests in the same phase, hence the same variant — gets the
+        // full weight-sharing win. Output order is restored at the end.
         let mut variants: Vec<Variant> = Vec::new();
         for l in lanes.iter() {
             if !variants.contains(&l.variant) {
@@ -707,6 +964,11 @@ mod tests {
         RefBackend::new(&info, &Variant::ALL, None).unwrap()
     }
 
+    fn backend_threads(threads: usize) -> RefBackend {
+        let info = ScaleInfo::synthetic("small", 6, 128, 4);
+        RefBackend::new_with_threads(&info, &Variant::ALL, None, threads).unwrap()
+    }
+
     fn host(kv: &KvState) -> &[f32] {
         match kv {
             KvState::Host(c) => c,
@@ -718,6 +980,62 @@ mod tests {
     fn chain_inputs(tokens: &[u32], t_shape: usize) -> (Vec<u32>, Vec<f32>, Vec<i32>) {
         let tree = crate::spec::DraftTree::chain(tokens[0], &tokens[1..], t_shape);
         tree.serialize(t_shape, 0)
+    }
+
+    /// The pre-blocking scalar kernel, kept verbatim as the ground truth
+    /// the blocked kernel must match bit-for-bit.
+    fn matmul_naive(
+        src: &[f32],
+        w: &[f32],
+        bias: Option<&[f32]>,
+        dst: &mut [f32],
+        rows: usize,
+        din: usize,
+        dout: usize,
+    ) {
+        for r in 0..rows {
+            let x = &src[r * din..(r + 1) * din];
+            let out = &mut dst[r * dout..(r + 1) * dout];
+            match bias {
+                Some(b) => out.copy_from_slice(b),
+                None => out.fill(0.0),
+            }
+            for (i, &xi) in x.iter().enumerate() {
+                let wr = &w[i * dout..(i + 1) * dout];
+                for o in 0..dout {
+                    out[o] += xi * wr[o];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_bitwise() {
+        // odd sizes straddling both tile boundaries, with and without bias
+        let mut rng = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            ((rng >> 11) as f64 / (1u64 << 53) as f64) as f32 - 0.5
+        };
+        for (rows, din, dout) in [(1, 7, 1), (5, 33, 130), (9, 64, 64), (17, 128, 97)] {
+            let src: Vec<f32> = (0..rows * din).map(|_| next()).collect();
+            let w: Vec<f32> = (0..din * dout).map(|_| next()).collect();
+            let bias: Vec<f32> = (0..dout).map(|_| next()).collect();
+            for b in [None, Some(&bias[..])] {
+                let mut got = vec![0f32; rows * dout];
+                let mut want = vec![1f32; rows * dout]; // junk start: must be overwritten
+                matmul_bias(&src, &w, b, &mut got, rows, din, dout);
+                matmul_naive(&src, &w, b, &mut want, rows, din, dout);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "blocked matmul diverged at rows={rows} din={din} dout={dout} bias={}",
+                    b.is_some(),
+                );
+            }
+        }
     }
 
     #[test]
@@ -810,6 +1128,86 @@ mod tests {
             assert_eq!(batched[i], solo_logits[i], "lane {i} logits diverged");
             assert_eq!(host(&kvs[i]), &solo_caches[i][..], "lane {i} KV diverged");
         }
+    }
+
+    #[test]
+    fn threaded_forward_bitwise_equals_serial() {
+        // threads=4 vs threads=1: batched lanes (lane-parallel path) and a
+        // T=64 single-lane prefill (head-parallel path) must both produce
+        // byte-identical logits and KV bytes.
+        let serial = backend_threads(1);
+        let threaded = backend_threads(4);
+
+        // lane-parallel: 4 lanes across 4 workers
+        let specs: [(Variant, Vec<u32>); 4] = [
+            (Variant::Target, vec![1, 30, 40]),
+            (Variant::Ls40, vec![2, 31]),
+            (Variant::Target, vec![5, 33, 44, 55]),
+            (Variant::Ee, vec![3, 32]),
+        ];
+        let mut results: Vec<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = Vec::new();
+        for be in [&serial, &threaded] {
+            let mut kvs: Vec<KvState> =
+                specs.iter().map(|(v, _)| be.new_kv(*v).unwrap()).collect();
+            let inputs: Vec<(Vec<u32>, Vec<f32>, Vec<i32>)> =
+                specs.iter().map(|(_, toks)| chain_inputs(toks, 8)).collect();
+            let mut lanes: Vec<LaneStep<'_>> = kvs
+                .iter_mut()
+                .zip(specs.iter())
+                .zip(inputs.iter())
+                .map(|((kv, (v, toks)), (tk, mk, dp))| LaneStep {
+                    variant: *v,
+                    kv,
+                    pos: 0,
+                    live: toks.len(),
+                    tokens: tk,
+                    mask: mk,
+                    depths: dp,
+                })
+                .collect();
+            let out = be.step_batch(8, &mut lanes).unwrap();
+            drop(lanes);
+            let caches: Vec<Vec<f32>> = kvs.iter().map(|kv| host(kv).to_vec()).collect();
+            results.push((out, caches));
+        }
+        assert_eq!(results[0].0, results[1].0, "lane-parallel logits diverged");
+        assert_eq!(results[0].1, results[1].1, "lane-parallel KV diverged");
+
+        // head-parallel: one T=64 prefill lane
+        let toks: Vec<u32> = (0..64u32).map(|i| 26 + (i * 7) % 240).collect();
+        let (t64, m64, d64) = chain_inputs(&toks, 64);
+        let mut kv_s = serial.new_kv(Variant::Target).unwrap();
+        let lg_s = serial
+            .step(Variant::Target, &mut kv_s, 0, 64, 64, &t64, &m64, &d64)
+            .unwrap();
+        let mut kv_t = threaded.new_kv(Variant::Target).unwrap();
+        let lg_t = threaded
+            .step(Variant::Target, &mut kv_t, 0, 64, 64, &t64, &m64, &d64)
+            .unwrap();
+        assert_eq!(lg_s, lg_t, "head-parallel prefill logits diverged");
+        assert_eq!(host(&kv_s), host(&kv_t), "head-parallel prefill KV diverged");
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // the same step twice in a row (second run reuses pooled scratch)
+        // must be bit-identical to a fresh backend's first run
+        let be = backend_threads(1);
+        let (t8, m8, d8) = chain_inputs(&[1, 30, 40], 8);
+        let mut kv1 = be.new_kv(Variant::Target).unwrap();
+        let first = be
+            .step(Variant::Target, &mut kv1, 0, 8, 3, &t8, &m8, &d8)
+            .unwrap();
+        // a different-shaped step dirties the pool buffers in between
+        let (t1, m1, d1) = chain_inputs(&[7], 1);
+        let mut kv2 = be.new_kv(Variant::Ls40).unwrap();
+        be.step(Variant::Ls40, &mut kv2, 0, 1, 1, &t1, &m1, &d1).unwrap();
+        let mut kv3 = be.new_kv(Variant::Target).unwrap();
+        let again = be
+            .step(Variant::Target, &mut kv3, 0, 8, 3, &t8, &m8, &d8)
+            .unwrap();
+        assert_eq!(first, again, "scratch reuse changed step output");
+        assert_eq!(host(&kv1), host(&kv3), "scratch reuse changed KV bytes");
     }
 
     #[test]

@@ -28,6 +28,20 @@
 //!     boundaries instead of waiting for each other, and each reply goes
 //!     out on its own channel the moment its request completes.
 //!
+//! # Lock-step lane fusion
+//!
+//! With `--lockstep on` (the default) a cycle's rounds execute in lock
+//! step: every active run *drafts* first (`RequestRun::begin_round`),
+//! then all pending target-verify steps run as **one fused
+//! `ScaleRuntime::step_batch` call** (lanes padded to the group's widest
+//! step shape when their caches have headroom), and each run absorbs its
+//! own logits (`finish_round`). Co-batched requests therefore share one
+//! target forward per cycle instead of issuing one `step` each —
+//! bit-identically, because the engines' drafting and verification code
+//! is exactly what the per-lane path runs (`--lockstep off` keeps that
+//! path for A/B benchmarking; `tests/server_integration.rs` pins the
+//! transcripts equal).
+//!
 //! Greedy losslessness is preserved under batching by construction:
 //! per-request KV state is fully isolated in its run, and the engines'
 //! round code is the same code `generate` runs sequentially.
@@ -44,7 +58,8 @@
 //! -> {"cmd": "stats"}
 //! <- {"served": 12, "errors": 0, "total_tokens": 768, "total_secs": 1.9,
 //!     "tok_s": 404.2, "queue_depth": 0, "running": 3, "peak_batch": 4,
-//!     "max_batch": 8, "tokens_stepped": 3210, "prefix_cache_mb": 32,
+//!     "max_batch": 8, "threads": 8, "lockstep": true, "fused_steps": 40,
+//!     "fused_lanes": 118, "tokens_stepped": 3210, "prefix_cache_mb": 32,
 //!     "prefix_lookups": 24, "prefix_hit_tokens": 512, "evictions": 0,
 //!     "engine": "cas-spec", "scale": "base", "backend": "ref"}
 //! -> {"cmd": "shutdown"}   <- {"ok": true}
@@ -76,8 +91,8 @@ use anyhow::{anyhow, Result};
 
 use crate::cache::CacheStats;
 use crate::config::RunConfig;
-use crate::engine::{build_engine, required_variants, Engine, RequestRun};
-use crate::runtime::{Runtime, ScaleRuntime};
+use crate::engine::{build_engine, required_variants, Engine, RequestRun, RoundPhase};
+use crate::runtime::{BatchLane, Runtime, ScaleRuntime};
 use crate::util::json::Json;
 
 /// One parsed generate request.
@@ -112,6 +127,13 @@ struct Active<'e> {
     queued_ms: f64,
     /// Admission time (service time = now - started at completion).
     started: Instant,
+    /// Step shape of this run's pending verify lane within the current
+    /// lock-step cycle (None outside a cycle / after absorbing).
+    pending_shape: Option<usize>,
+    /// Error raised while building this run's lane this cycle; the run is
+    /// retired with it after the fused step (set only on invariant
+    /// breaks — the other lanes keep serving).
+    pending_err: Option<String>,
 }
 
 /// Aggregate serving counters reported by `stats`.
@@ -127,6 +149,12 @@ struct SchedCounters {
     busy_secs: f64,
     /// High-water mark of the running batch size.
     peak_batch: usize,
+    /// Fused `step_batch` calls issued by the lock-step scheduler.
+    fused_steps: u64,
+    /// Lanes served by those fused calls (fused_lanes / fused_steps =
+    /// mean verify-fusion width; > 1 proves co-batched requests actually
+    /// shared forwards).
+    fused_lanes: u64,
 }
 
 /// Serve until a shutdown command arrives. Blocks the calling thread.
@@ -144,12 +172,20 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
     let wcfg = cfg.clone();
     let worker = thread::spawn(move || -> Result<()> {
         let engine_name = wcfg.engines[0].clone();
-        let rt = Runtime::open_with(&wcfg.artifacts, wcfg.backend_select()?)?;
+        let mut rt = Runtime::open_with(&wcfg.artifacts, wcfg.backend_select()?)?;
+        rt.set_threads(wcfg.resolved_threads());
         let mut srt = rt.load_scale(&wcfg.scale, &required_variants(&engine_name))?;
         // attach the cross-request prefix cache before any session opens
         srt.enable_prefix_cache(wcfg.prefix_cache_bytes());
         let eng = build_engine(&engine_name, &srt, &wcfg.opts)?;
-        run_scheduler(&rx, &srt, eng.as_ref(), &engine_name, wcfg.max_batch.max(1))
+        run_scheduler(
+            &rx,
+            &srt,
+            eng.as_ref(),
+            &engine_name,
+            wcfg.max_batch.max(1),
+            wcfg.lockstep,
+        )
     });
 
     // ---- acceptor: one reader thread per connection ----
@@ -186,7 +222,9 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
 ///     drain channel  -> queue (Generate) / reply (Stats) / flag (Shutdown)
 ///     admit          -> queue front fills the running batch to max_batch
 ///                       (engine.begin: per-request sessions + prefill)
-///     round          -> every active run advances ONE speculation round
+///     round          -> every active run advances ONE speculation round;
+///                       with lock-step fusion (default) all pending
+///                       verify steps run as one fused step_batch call
 ///     retire         -> finished runs reply on their own channel, freeing
 ///                       slots that next cycle's admissions reuse
 /// ```
@@ -199,6 +237,7 @@ fn run_scheduler(
     eng: &dyn Engine,
     engine_name: &str,
     max_batch: usize,
+    lockstep: bool,
 ) -> Result<()> {
     let mut queue: VecDeque<Queued> = VecDeque::new();
     let mut running: Vec<Active<'_>> = Vec::new();
@@ -235,6 +274,8 @@ fn run_scheduler(
                         engine: engine_name,
                         scale: &srt.info.name,
                         backend: srt.backend_name(),
+                        threads: srt.threads(),
+                        lockstep,
                     };
                     let _ = reply.send(stats_json(&c, &view).to_string());
                 }
@@ -278,6 +319,8 @@ fn run_scheduler(
                     run,
                     queued_ms,
                     started,
+                    pending_shape: None,
+                    pending_err: None,
                 }),
                 Err(e) => {
                     c.errors += 1;
@@ -293,36 +336,185 @@ fn run_scheduler(
         }
         let batch_now = running.len();
         let t0 = Instant::now();
-        let mut i = 0;
-        while i < running.len() {
-            match running[i].run.round() {
-                Err(e) => {
-                    let a = running.remove(i);
-                    c.errors += 1;
-                    let _ = a.reply.send(error_json(a.id, &format!("{e:#}")));
-                }
-                Ok(o) if o.done => {
-                    let a = running.remove(i);
-                    let gen = a.run.finish();
-                    c.served += 1;
-                    c.total_tokens += gen.tokens.len() as u64;
-                    let resp = Json::obj(vec![
-                        ("id", Json::Num(a.id as f64)),
-                        ("tokens", Json::arr_u32(&gen.tokens)),
-                        ("text", Json::Str(crate::tokenizer::render(&gen.tokens))),
-                        ("ms", Json::Num(a.started.elapsed().as_secs_f64() * 1e3)),
-                        ("queued_ms", Json::Num(a.queued_ms)),
-                        ("rounds", Json::Num(gen.stats.rounds as f64)),
-                        ("mean_accepted", Json::Num(gen.stats.mean_accepted())),
-                        ("batch", Json::Num(batch_now as f64)),
-                        ("engine", Json::Str(engine_name.to_string())),
-                    ]);
-                    let _ = a.reply.send(resp.to_string());
-                }
-                Ok(_) => i += 1,
-            }
+        if lockstep {
+            advance_fused(&mut running, srt, &mut c, engine_name, batch_now);
+        } else {
+            advance_per_lane(&mut running, &mut c, engine_name, batch_now);
         }
         c.busy_secs += t0.elapsed().as_secs_f64();
+    }
+}
+
+/// Retire a finished run: build its response line and count it.
+fn retire_done(a: Active<'_>, c: &mut SchedCounters, engine_name: &str, batch_now: usize) {
+    let gen = a.run.finish();
+    c.served += 1;
+    c.total_tokens += gen.tokens.len() as u64;
+    let resp = Json::obj(vec![
+        ("id", Json::Num(a.id as f64)),
+        ("tokens", Json::arr_u32(&gen.tokens)),
+        ("text", Json::Str(crate::tokenizer::render(&gen.tokens))),
+        ("ms", Json::Num(a.started.elapsed().as_secs_f64() * 1e3)),
+        ("queued_ms", Json::Num(a.queued_ms)),
+        ("rounds", Json::Num(gen.stats.rounds as f64)),
+        ("mean_accepted", Json::Num(gen.stats.mean_accepted())),
+        ("batch", Json::Num(batch_now as f64)),
+        ("engine", Json::Str(engine_name.to_string())),
+    ]);
+    let _ = a.reply.send(resp.to_string());
+}
+
+/// Retire a failed run with an error reply.
+fn retire_err(a: Active<'_>, c: &mut SchedCounters, msg: &str) {
+    c.errors += 1;
+    let _ = a.reply.send(error_json(a.id, msg));
+}
+
+/// The pre-fusion advance: every active run drafts AND executes its own
+/// target-verify step (`RequestRun::round`). Kept behind `--lockstep off`
+/// as the per-lane baseline the fused path is benchmarked against.
+fn advance_per_lane(
+    running: &mut Vec<Active<'_>>,
+    c: &mut SchedCounters,
+    engine_name: &str,
+    batch_now: usize,
+) {
+    let mut i = 0;
+    while i < running.len() {
+        match running[i].run.round() {
+            Err(e) => {
+                let a = running.remove(i);
+                retire_err(a, c, &format!("{e:#}"));
+            }
+            Ok(o) if o.done => {
+                let a = running.remove(i);
+                retire_done(a, c, engine_name, batch_now);
+            }
+            Ok(_) => i += 1,
+        }
+    }
+}
+
+/// One lock-step cycle: every run drafts (`begin_round`), all pending
+/// target-verify steps execute as one fused `step_batch` call — lanes
+/// padded to the group's widest shape when their caches have headroom —
+/// and every run absorbs its own logits (`finish_round`). Bit-identical
+/// to [`advance_per_lane`] because the engines' drafting/verification
+/// code is shared; only the step execution is fused.
+fn advance_fused<'e>(
+    running: &mut Vec<Active<'e>>,
+    srt: &ScaleRuntime,
+    c: &mut SchedCounters,
+    engine_name: &str,
+    batch_now: usize,
+) {
+    // ---- phase 1: gate + draft; retire early finishers ----
+    let mut group_t = 0usize;
+    let mut i = 0;
+    while i < running.len() {
+        match running[i].run.begin_round() {
+            Err(e) => {
+                let a = running.remove(i);
+                retire_err(a, c, &format!("{e:#}"));
+            }
+            Ok(RoundPhase::Done(_)) => {
+                let a = running.remove(i);
+                retire_done(a, c, engine_name, batch_now);
+            }
+            Ok(RoundPhase::Pending { t_shape }) => {
+                running[i].pending_shape = Some(t_shape);
+                group_t = group_t.max(t_shape);
+                i += 1;
+            }
+        }
+    }
+    if group_t == 0 {
+        return;
+    }
+
+    // ---- phase 2: pad lanes to the group shape where headroom allows;
+    // lanes near s_max keep their natural shape (a rare follow-up group)
+    // so the widened step can never overflow their cache ----
+    for a in running.iter_mut() {
+        if a.pending_shape.is_some() && a.run.target_headroom() >= group_t {
+            a.pending_shape = Some(group_t);
+        }
+    }
+
+    // ---- phase 3: one fused step_batch per distinct shape (normally
+    // exactly one), widest first; members absorb in lane order ----
+    let mut shapes: Vec<usize> = running.iter().filter_map(|a| a.pending_shape).collect();
+    shapes.sort_unstable_by(|a, b| b.cmp(a));
+    shapes.dedup();
+    for shape in shapes {
+        let mut lanes: Vec<BatchLane<'_>> = Vec::new();
+        for a in running.iter_mut() {
+            if a.pending_shape == Some(shape) {
+                match a.run.take_lane(shape) {
+                    Ok(lane) => lanes.push(lane),
+                    Err(e) => {
+                        // invariant break in ONE run: pull it out of the
+                        // group and retire it after the step — the other
+                        // lanes keep serving
+                        a.pending_shape = None;
+                        a.pending_err = Some(format!("{e:#}"));
+                    }
+                }
+            }
+        }
+        let stepped = srt.step_batch(shape, &mut lanes);
+        drop(lanes);
+        let mut i = 0;
+        while i < running.len() {
+            if let Some(msg) = running[i].pending_err.take() {
+                let a = running.remove(i);
+                retire_err(a, c, &msg);
+            } else {
+                i += 1;
+            }
+        }
+        match stepped {
+            Err(e) => {
+                // the whole group failed: retire its members with errors
+                let msg = format!("fused step failed: {e:#}");
+                let mut i = 0;
+                while i < running.len() {
+                    if running[i].pending_shape == Some(shape) {
+                        let a = running.remove(i);
+                        retire_err(a, c, &msg);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            Ok(outs) => {
+                if !outs.is_empty() {
+                    c.fused_steps += 1;
+                    c.fused_lanes += outs.len() as u64;
+                }
+                let mut outs = outs.into_iter();
+                let mut i = 0;
+                while i < running.len() {
+                    if running[i].pending_shape != Some(shape) {
+                        i += 1;
+                        continue;
+                    }
+                    running[i].pending_shape = None;
+                    let out = outs.next().expect("one StepOutput per group lane");
+                    match running[i].run.finish_round(out, shape) {
+                        Err(e) => {
+                            let a = running.remove(i);
+                            retire_err(a, c, &format!("{e:#}"));
+                        }
+                        Ok(o) if o.done => {
+                            let a = running.remove(i);
+                            retire_done(a, c, engine_name, batch_now);
+                        }
+                        Ok(_) => i += 1,
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -339,6 +531,10 @@ struct StatsView<'a> {
     engine: &'a str,
     scale: &'a str,
     backend: &'a str,
+    /// Backend worker-thread budget (bench records are self-describing).
+    threads: usize,
+    /// Whether the lock-step fused scheduler is active.
+    lockstep: bool,
 }
 
 fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
@@ -354,6 +550,10 @@ fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
         ("running", Json::Num(v.running as f64)),
         ("peak_batch", Json::Num(c.peak_batch as f64)),
         ("max_batch", Json::Num(v.max_batch as f64)),
+        ("threads", Json::Num(v.threads as f64)),
+        ("lockstep", Json::Bool(v.lockstep)),
+        ("fused_steps", Json::Num(c.fused_steps as f64)),
+        ("fused_lanes", Json::Num(c.fused_lanes as f64)),
         ("tokens_stepped", Json::Num(v.tokens_stepped as f64)),
         ("prefix_cache_mb", Json::Num((cache.budget >> 20) as f64)),
         ("prefix_lookups", Json::Num(cache.lookups as f64)),
@@ -550,6 +750,8 @@ mod tests {
             total_tokens: 120,
             busy_secs: 0.5,
             peak_batch: 4,
+            fused_steps: 10,
+            fused_lanes: 25,
         };
         let v = StatsView {
             queue_depth: 2,
@@ -560,12 +762,18 @@ mod tests {
             engine: "pld",
             scale: "small",
             backend: "ref",
+            threads: 4,
+            lockstep: true,
         };
         let j = stats_json(&c, &v);
         assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("running").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.get("peak_batch").unwrap().as_usize().unwrap(), 4);
         assert_eq!(j.get("max_batch").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 4);
+        assert!(j.get("lockstep").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("fused_steps").unwrap().as_u64().unwrap(), 10);
+        assert_eq!(j.get("fused_lanes").unwrap().as_u64().unwrap(), 25);
         assert!((j.get("tok_s").unwrap().as_f64().unwrap() - 240.0).abs() < 1e-9);
         assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "ref");
         assert_eq!(j.get("tokens_stepped").unwrap().as_u64().unwrap(), 900);
@@ -595,9 +803,12 @@ mod tests {
             engine: "cas-spec",
             scale: "base",
             backend: "ref",
+            threads: 1,
+            lockstep: false,
         };
         let j = stats_json(&c, &v);
         assert_eq!(j.get("prefix_cache_mb").unwrap().as_usize().unwrap(), 32);
+        assert!(!j.get("lockstep").unwrap().as_bool().unwrap());
         assert_eq!(j.get("prefix_lookups").unwrap().as_u64().unwrap(), 5);
         assert_eq!(j.get("prefix_hit_tokens").unwrap().as_u64().unwrap(), 64);
         assert_eq!(j.get("evictions").unwrap().as_u64().unwrap(), 2);

@@ -183,6 +183,16 @@ impl<'rt> VariantSession<'rt> {
         self.rt.rollback(&mut self.kv, pos);
     }
 
+    /// The raw KV cache handle — the lock-step scheduler's fused-execution
+    /// hook: `engine::RequestRun::take_lane` lends it to a
+    /// `ScaleRuntime::step_batch` call that executes this session's
+    /// pending verify step together with other requests' steps. The step
+    /// writes speculative rows exactly as [`Self::verify_tree`] would
+    /// (committed length is untouched until `commit_slots`).
+    pub(crate) fn kv_mut(&mut self) -> &mut KvCache {
+        &mut self.kv
+    }
+
     /// Remaining cache capacity for in-flight tokens.
     pub fn capacity_left(&self) -> usize {
         self.rt.info.s_max - self.kv.pos

@@ -1,23 +1,34 @@
 //! Bit-exactness of the batched step path (`Backend::step_batch`).
 //!
-//! Two independent guarantees are pinned here:
+//! Four independent guarantees are pinned here:
 //!
 //!   1. the trait's **default implementation** (loop per lane — what the
 //!      PJRT backend uses) matches per-lane `step` calls bit-for-bit;
 //!   2. the reference backend's **overridden** genuinely-batched forward
 //!      (layer-outer, lane-inner, shared weight reads) also matches
 //!      per-lane `step` bit-for-bit, across mixed variants, positions and
-//!      live counts.
+//!      live counts;
+//!   3. **threading is bit-neutral**: `threads=4` generations are
+//!      byte-identical to `threads=1` for all 12 engines (lane-parallel
+//!      and head-parallel paths);
+//!   4. **lock-step fusion is bit-neutral**: driving concurrent runs
+//!      through `begin_round`/`take_lane`/fused `step_batch`/
+//!      `finish_round` — the server scheduler's cycle, at the padded
+//!      group shape — reproduces `generate()` exactly.
 //!
 //! Bit-exactness here is what makes greedy losslessness survive
-//! continuous batching without any per-engine re-proof.
+//! continuous batching, threading, and lane fusion without any
+//! per-engine re-proof.
 
 use std::path::Path;
 
 use anyhow::Result;
+use cas_spec::engine::{build_engine, EngineOpts, RequestRun, RoundPhase, ENGINES};
 use cas_spec::model::{ScaleInfo, Variant};
 use cas_spec::runtime::reference::RefBackend;
-use cas_spec::runtime::{Backend, BackendSelect, BatchLane, KvState, LaneStep, Runtime};
+use cas_spec::runtime::{
+    Backend, BackendSelect, BatchLane, KvState, LaneStep, Runtime, ScaleRuntime,
+};
 use cas_spec::spec::DraftTree;
 
 fn backend() -> RefBackend {
@@ -208,6 +219,107 @@ fn ref_and_default_batch_agree() {
     }
     assert_eq!(results[0].0, results[1].0, "logits differ between paths");
     assert_eq!(results[0].1, results[1].1, "KV caches differ between paths");
+}
+
+/// A hermetic all-variants runtime with an explicit thread budget.
+fn runtime_with_threads(threads: usize) -> ScaleRuntime {
+    let mut rt = Runtime::open_with(Path::new("/missing-artifacts"), BackendSelect::Ref)
+        .expect("ref runtime");
+    rt.set_threads(threads);
+    rt.load_scale("small", &Variant::ALL).expect("load small")
+}
+
+#[test]
+fn engines_byte_identical_across_thread_counts() {
+    // threads=4 vs threads=1 generations must be byte-identical for all
+    // 12 engines. The 40-token prompt prefills at T>=16, exercising the
+    // head-parallel attention path; every verify/draft step runs through
+    // the same kernels on both runtimes.
+    let srt1 = runtime_with_threads(1);
+    let srt4 = runtime_with_threads(4);
+    let opts = EngineOpts::default();
+    let prompt: Vec<u32> = (0..40u32).map(|i| 26 + (i * 7) % 240).collect();
+    for name in ENGINES {
+        let mut e1 = build_engine(name, &srt1, &opts).unwrap();
+        let mut e4 = build_engine(name, &srt4, &opts).unwrap();
+        let g1 = e1.generate(&prompt, 10).unwrap().tokens;
+        let g4 = e4.generate(&prompt, 10).unwrap().tokens;
+        assert_eq!(g1, g4, "{name}: threaded generation diverged from serial");
+    }
+}
+
+/// Drive concurrent runs exactly like the server's lock-step scheduler:
+/// draft all, fuse every pending verify into ONE step_batch at the
+/// group's widest shape, absorb in lane order — until all runs finish.
+fn drive_lockstep(runs: &mut [Box<dyn RequestRun + '_>], srt: &ScaleRuntime) {
+    loop {
+        let mut shapes: Vec<Option<usize>> = Vec::with_capacity(runs.len());
+        let mut group_t = 0usize;
+        for run in runs.iter_mut() {
+            if run.is_done() {
+                shapes.push(None);
+                continue;
+            }
+            match run.begin_round().unwrap() {
+                RoundPhase::Done(_) => shapes.push(None),
+                RoundPhase::Pending { t_shape } => {
+                    group_t = group_t.max(t_shape);
+                    shapes.push(Some(t_shape));
+                }
+            }
+        }
+        if group_t == 0 {
+            break; // no run has a pending step: everything finished
+        }
+        let mut lanes: Vec<BatchLane<'_>> = Vec::new();
+        for (run, sh) in runs.iter_mut().zip(&shapes) {
+            if sh.is_some() {
+                assert!(run.target_headroom() >= group_t, "test stays below s_max");
+                lanes.push(run.take_lane(group_t).unwrap());
+            }
+        }
+        let outs = srt.step_batch(group_t, &mut lanes).unwrap();
+        drop(lanes);
+        let mut outs = outs.into_iter();
+        for (run, sh) in runs.iter_mut().zip(&shapes) {
+            if sh.is_some() {
+                run.finish_round(outs.next().unwrap(), group_t).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn lockstep_fused_runs_match_generate() {
+    // Fused execution on a threaded runtime vs solo generate on a serial
+    // runtime: the strongest combination — lane fusion, shape padding,
+    // and thread parallelism together must not move a single token.
+    let srt_serial = runtime_with_threads(1);
+    let srt_fused = runtime_with_threads(4);
+    let opts = EngineOpts::default();
+    let prompts: [&[u32]; 3] = [&[1, 30, 40, 50], &[2, 35, 45, 55, 65], &[3, 36, 46]];
+    for name in ["ar", "lade", "pld", "swift", "kangaroo", "vchc", "tr", "cas-spec"] {
+        let mut solo_eng = build_engine(name, &srt_serial, &opts).unwrap();
+        let solo: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| solo_eng.generate(p, 6).unwrap().tokens)
+            .collect();
+
+        let eng = build_engine(name, &srt_fused, &opts).unwrap();
+        let mut runs: Vec<Box<dyn RequestRun + '_>> = prompts
+            .iter()
+            .map(|p| eng.begin(p, 6).unwrap())
+            .collect();
+        drive_lockstep(&mut runs, &srt_fused);
+        for (i, run) in runs.iter().enumerate() {
+            assert!(run.is_done(), "{name}: lane {i} still running");
+            assert_eq!(
+                run.tokens(),
+                &solo[i][..],
+                "{name}: lane {i} diverged under lock-step fusion"
+            );
+        }
+    }
 }
 
 #[test]

@@ -6,7 +6,10 @@
 //! test for the continuous-batching scheduler: N concurrent clients must
 //! share one running batch (stats `peak_batch` > 1) and every response
 //! must equal the same request served alone (greedy losslessness under
-//! batching).
+//! batching). `lockstep_fused_serving_matches_per_lane` extends it to
+//! lock-step lane fusion: fused-verify serving must produce byte-identical
+//! transcripts to per-lane serving while `fused_lanes > fused_steps`
+//! proves co-batched requests shared forwards.
 //!
 //! Hermetic: the worker falls back to the reference backend when no
 //! artifacts exist, so this always runs.
@@ -226,6 +229,90 @@ fn continuous_batching_is_lossless_and_interleaves() {
 
     control.shutdown().unwrap();
     server.join().unwrap().unwrap();
+}
+
+/// Serve `items` from concurrent clients (one per request) on a fresh
+/// server; returns tokens ordered by request index plus the final stats.
+fn serve_concurrent(
+    items: &[WorkItem],
+    port: u16,
+    max_batch: usize,
+    lockstep: bool,
+) -> (Vec<Vec<u32>>, cas_spec::util::json::Json) {
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()];
+    cfg.addr = format!("127.0.0.1:{port}");
+    cfg.max_batch = max_batch;
+    cfg.lockstep = lockstep;
+    cfg.prefix_cache_mb = env_prefix_cache_mb();
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut control = wait_ready(&addr);
+
+    let mut handles = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let addr = addr.clone();
+        let item = item.clone();
+        handles.push(thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = c.generate(i as u64, &item.prompt, item.max_new).unwrap();
+            assert!(resp.get("error").is_none(), "server error: {resp}");
+            let got: Vec<u32> = resp
+                .req("tokens")
+                .unwrap()
+                .usize_arr()
+                .unwrap()
+                .into_iter()
+                .map(|t| t as u32)
+                .collect();
+            (i, got)
+        }));
+    }
+    let mut outputs = vec![Vec::new(); items.len()];
+    for h in handles {
+        let (i, got) = h.join().unwrap();
+        outputs[i] = got;
+    }
+    let stats = control.stats().unwrap();
+    control.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    (outputs, stats)
+}
+
+#[test]
+fn lockstep_fused_serving_matches_per_lane() {
+    // The lock-step acceptance test: the same 6-request concurrent
+    // workload served with per-lane stepping (--lockstep off) and with
+    // fused verify steps (default) must produce byte-identical
+    // transcripts, while the fused server's stats prove co-batched
+    // requests actually shared forwards (fused_lanes > fused_steps).
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 55, 1, 40);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(6).collect();
+    assert!(items.len() >= 6, "spec_bench must yield 6 categories");
+
+    let (per_lane_tokens, per_lane_stats) = serve_concurrent(&items, 7535, 4, false);
+    let (fused_tokens, fused_stats) = serve_concurrent(&items, 7536, 4, true);
+
+    assert_eq!(
+        fused_tokens, per_lane_tokens,
+        "lock-step fusion changed the served transcripts"
+    );
+
+    assert!(!per_lane_stats.req("lockstep").unwrap().as_bool().unwrap());
+    assert_eq!(per_lane_stats.req("fused_steps").unwrap().as_u64().unwrap(), 0);
+
+    assert!(fused_stats.req("lockstep").unwrap().as_bool().unwrap());
+    let steps = fused_stats.req("fused_steps").unwrap().as_u64().unwrap();
+    let lanes = fused_stats.req("fused_lanes").unwrap().as_u64().unwrap();
+    assert!(steps > 0, "fused server issued no fused steps");
+    assert!(
+        lanes > steps,
+        "6 concurrent requests never shared a fused verify (lanes={lanes}, steps={steps})"
+    );
+    assert!(fused_stats.req("threads").unwrap().as_usize().unwrap() >= 1);
 }
 
 /// Serve `suite` sequentially on a fresh server; returns the per-request

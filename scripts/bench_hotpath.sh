@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Perf trajectory recorder: runs the hot-path kernel bench (serial vs
+# blocked vs threaded) and the serve_bench lock-step A/B, then writes the
+# combined record to BENCH_hotpath.json at the repo root. Append-friendly:
+# each invocation overwrites the file with the latest record; commit it to
+# keep the trajectory in history.
+#
+# Usage: scripts/bench_hotpath.sh [scale] [reps]
+#   scale  model scale for both benches          (default: small)
+#   reps   kernel-bench repetitions              (default: 5)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+scale="${1:-small}"
+reps="${2:-5}"
+
+echo "== hotpath kernel bench (scale=$scale, reps=$reps) =="
+kernels=$(cd rust && cargo bench --bench hotpath -- --scale "$scale" --reps "$reps" --json | tee /dev/stderr | tail -n 1)
+
+echo "== serve_bench lock-step A/B (scale=$scale) =="
+serving=$(cd rust && cargo run --release --example serve_bench -- \
+  --workload lockstep --scale "$scale" --requests 8 --max-batch 4 --json \
+  | tee /dev/stderr | tail -n 1)
+
+python3 - "$kernels" "$serving" <<'EOF' > BENCH_hotpath.json
+import json, subprocess, sys
+record = {
+    "kernels": json.loads(sys.argv[1]),
+    "serving": json.loads(sys.argv[2]),
+    "git": subprocess.run(
+        ["git", "rev-parse", "--short", "HEAD"],
+        capture_output=True, text=True, check=False,
+    ).stdout.strip() or None,
+}
+json.dump(record, sys.stdout, indent=2)
+print()
+EOF
+
+echo "wrote BENCH_hotpath.json"
