@@ -10,6 +10,7 @@ use anyhow::{anyhow, Result};
 use crate::dytc::DytcParams;
 use crate::engine::EngineOpts;
 use crate::runtime::BackendSelect;
+use crate::spec::SamplingParams;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -47,6 +48,14 @@ pub struct RunConfig {
     /// call per cycle (bit-identical to per-lane stepping; `false` keeps
     /// the per-lane path for A/B benchmarking).
     pub lockstep: bool,
+    /// Sampling temperature for CLI/bench generation (0 = greedy via
+    /// `verify_greedy`; > 0 routes through the coupled rejection
+    /// sampler). The server takes sampling per request, not from here.
+    pub temperature: f64,
+    /// Nucleus (top-p) truncation for sampled decoding; 1.0 disables.
+    pub top_p: f64,
+    /// Seed of the per-request SplitMix64 sampling stream.
+    pub sample_seed: u64,
     pub opts: EngineOpts,
 }
 
@@ -65,6 +74,9 @@ impl Default for RunConfig {
             prefix_cache_mb: 0,
             threads: 0,
             lockstep: true,
+            temperature: 0.0,
+            top_p: 1.0,
+            sample_seed: 0,
             opts: EngineOpts::default(),
         }
     }
@@ -90,6 +102,9 @@ impl RunConfig {
                 }
                 "threads" => self.threads = v.as_usize().ok_or_else(bad(k))?,
                 "lockstep" => self.lockstep = v.as_bool().ok_or_else(bad(k))?,
+                "temperature" => self.temperature = v.as_f64().ok_or_else(bad(k))?,
+                "top_p" => self.top_p = v.as_f64().ok_or_else(bad(k))?,
+                "sample_seed" => self.sample_seed = v.as_u64().ok_or_else(bad(k))?,
                 "draft_k" => self.opts.draft_k = v.as_usize().ok_or_else(bad(k))?,
                 "conf_stop" => self.opts.conf_stop = v.as_f64().ok_or_else(bad(k))?,
                 "dytc" => apply_dytc(&mut self.opts.dytc, v)?,
@@ -132,6 +147,9 @@ impl RunConfig {
                 other => return Err(anyhow!("--lockstep: expected on|off, got {other:?}")),
             };
         }
+        self.temperature = a.f64_or("temperature", self.temperature)?;
+        self.top_p = a.f64_or("top-p", self.top_p)?;
+        self.sample_seed = a.u64_or("sample-seed", self.sample_seed)?;
         self.opts.draft_k = a.usize_or("draft-k", self.opts.draft_k)?;
         self.opts.conf_stop = a.f64_or("conf-stop", self.opts.conf_stop)?;
         self.opts.dytc.k_max = a.usize_or("k-max", self.opts.dytc.k_max)?;
@@ -153,6 +171,16 @@ impl RunConfig {
     /// Prefix-cache budget in bytes (the `prefix_cache_mb` knob).
     pub fn prefix_cache_bytes(&self) -> usize {
         self.prefix_cache_mb << 20
+    }
+
+    /// The configured sampling parameters, or `None` when `temperature`
+    /// is 0 (greedy decoding — no sampler is constructed anywhere).
+    pub fn sampling(&self) -> Option<SamplingParams> {
+        (self.temperature > 0.0).then_some(SamplingParams {
+            temperature: self.temperature,
+            top_p: self.top_p,
+            seed: self.sample_seed,
+        })
     }
 
     /// The effective worker-thread budget: the `threads` knob when set
@@ -267,6 +295,29 @@ mod tests {
         cfg.apply_json(&Json::parse(r#"{"lockstep":false}"#).unwrap()).unwrap();
         assert!(!cfg.lockstep);
         assert!(RunConfig::from_args(&args("--lockstep sideways")).is_err());
+    }
+
+    #[test]
+    fn sampling_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert_eq!(cfg.temperature, 0.0, "sampling defaults off");
+        assert!(cfg.sampling().is_none(), "temperature 0 builds no params");
+        let cfg =
+            RunConfig::from_args(&args("--temperature 0.7 --top-p 0.9 --sample-seed 5"))
+                .unwrap();
+        let sp = cfg.sampling().expect("temperature > 0 enables sampling");
+        assert_eq!(sp.temperature, 0.7);
+        assert_eq!(sp.top_p, 0.9);
+        assert_eq!(sp.seed, 5);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"temperature":1.2,"top_p":0.8,"sample_seed":77}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.temperature, 1.2);
+        assert_eq!(cfg.top_p, 0.8);
+        assert_eq!(cfg.sample_seed, 77);
+        assert!(RunConfig::from_args(&args("--temperature warm")).is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::model::Variant;
 use crate::runtime::{ScaleRuntime, StepOutput};
-use crate::spec::{DraftTree, VariantSession};
+use crate::spec::{DraftTree, SamplingParams, VariantSession};
 
 use super::common::{absorb_verify, target_plumbing, GenState, PendingVerify, RoundStep};
 use super::{Engine, RequestRun};
@@ -62,7 +62,7 @@ impl RoundStep for ArRun<'_> {
         t_shape: usize,
     ) -> Result<()> {
         let (accepted, bonus) =
-            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut self.st.stats)?;
+            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut self.st)?;
         debug_assert!(accepted.is_empty(), "root-only tree accepts nothing");
         self.st.emit(&[bonus]);
         Ok(())
@@ -74,13 +74,14 @@ impl Engine for ArEngine<'_> {
         "ar"
     }
 
-    fn begin<'e>(
+    fn begin_sampled<'e>(
         &'e self,
         prompt: &[u32],
         max_new: usize,
+        sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let st = GenState::start(&mut target, prompt, max_new)?;
+        let st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
         Ok(Box::new(ArRun { target, st }))
     }
 }

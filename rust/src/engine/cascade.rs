@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::model::Variant;
 use crate::pld::PldMatcher;
 use crate::runtime::{ScaleRuntime, StepOutput, VERIFY_T};
-use crate::spec::VariantSession;
+use crate::spec::{SamplingParams, VariantSession};
 
 use super::common::{
     absorb_verify, draft_chain, draft_chain_vc, pending_chain, target_plumbing,
@@ -184,10 +184,9 @@ impl RoundStep for CascadeRun<'_> {
         out: StepOutput,
         t_shape: usize,
     ) -> Result<()> {
-        let st = &mut self.st;
-        let root = st.root;
+        let root = self.st.root;
         let (accepted, bonus) =
-            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut st.stats)?;
+            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut self.st)?;
 
         // ---- roll speculative state back to committed truth ----
         // (draft cache syncs lazily on the next round's ensure)
@@ -197,7 +196,7 @@ impl RoundStep for CascadeRun<'_> {
 
         let mut emitted = accepted;
         emitted.push(bonus);
-        st.emit(&emitted);
+        self.st.emit(&emitted);
         Ok(())
     }
 }
@@ -207,15 +206,16 @@ impl Engine for CascadeEngine<'_> {
         self.name
     }
 
-    fn begin<'e>(
+    fn begin_sampled<'e>(
         &'e self,
         prompt: &[u32],
         max_new: usize,
+        sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
         let mut draft = VariantSession::new(self.rt, Variant::Ls40)?;
 
-        let mut st = GenState::start(&mut target, prompt, max_new)?;
+        let mut st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
         let matcher = PldMatcher::new(prompt);
         draft.feed(prompt)?;
         st.stats.draft_calls += 1;

@@ -7,7 +7,9 @@ use anyhow::Result;
 
 use crate::pld::PldMatcher;
 use crate::runtime::{argmax, softmax_prob, KvCache, StepOutput};
-use crate::spec::{verify_greedy, DraftTree, VariantSession};
+use crate::spec::{
+    verify_greedy, verify_sampled, DraftTree, Sampler, SamplingParams, VariantSession,
+};
 use crate::tokenizer::EOS;
 
 use super::GenStats;
@@ -138,15 +140,35 @@ pub struct GenState {
     /// Two-phase round in flight (set by `RequestRun::begin_round`,
     /// consumed by `finish_round`; always `None` on the solo path).
     pub round_in_flight: Option<InFlightRound>,
+    /// Sampled-decoding state: `Some` when the request asked for
+    /// `temperature > 0`, `None` on the greedy (`verify_greedy`) path.
+    pub sampler: Option<Sampler>,
 }
 
 impl GenState {
     /// Prefill the target with `prompt` and emit the first greedy token.
     pub fn start(target: &mut VariantSession, prompt: &[u32], max_new: usize) -> Result<Self> {
+        GenState::start_with(target, prompt, max_new, None)
+    }
+
+    /// Prefill the target with `prompt` and emit the first token —
+    /// greedy, or the position-0 coupled sample when `sampling` asks for
+    /// `temperature > 0`.
+    pub fn start_with(
+        target: &mut VariantSession,
+        prompt: &[u32],
+        max_new: usize,
+        sampling: Option<SamplingParams>,
+    ) -> Result<Self> {
+        let sampler = sampling.and_then(|sp| sp.sampler());
         let t0 = std::time::Instant::now();
         target.feed(prompt)?;
         let prefill = t0.elapsed();
-        let first = argmax(target.last_logits().unwrap());
+        let row = target.last_logits().unwrap();
+        let first = match &sampler {
+            Some(s) => s.sample_token(row, 0),
+            None => argmax(row),
+        };
         let mut s = GenState {
             out: vec![first],
             root: first,
@@ -154,6 +176,7 @@ impl GenState {
             max_new,
             stats: GenStats { prefill, ..Default::default() },
             round_in_flight: None,
+            sampler,
         };
         s.stats.target_calls = 0; // prefill counted separately
         Ok(s)
@@ -195,23 +218,28 @@ pub fn pending_chain(root: u32, chain: &[u32]) -> PendingVerify {
     PendingVerify { tree: DraftTree::chain(root, chain, t_shape), t_shape }
 }
 
-/// Phase-2 half of a chain/tree verification round: greedily verify the
-/// executed step's logits against `tree`, commit the accepted slots
-/// (contiguous fast path for chains), record the deepest accepted slot's
-/// logits row, and return `(accepted_tokens, bonus)`. `commit_shape` is
-/// the shape handed to the commit op (the executed step shape for
-/// chains, `VERIFY_T` for the tree engines — identity padding beyond the
-/// accepted slots makes any covering shape equivalent).
+/// Phase-2 half of a chain/tree verification round: verify the executed
+/// step's logits against `tree` — greedily, or by coupled rejection
+/// sampling when the request's [`GenState::sampler`] is set — commit the
+/// accepted slots (contiguous fast path for chains), record the deepest
+/// accepted slot's logits row, and return `(accepted_tokens, bonus)`.
+/// `commit_shape` is the shape handed to the commit op (the executed
+/// step shape for chains, `VERIFY_T` for the tree engines — identity
+/// padding beyond the accepted slots makes any covering shape
+/// equivalent).
 pub fn absorb_verify(
     target: &mut VariantSession,
     tree: &DraftTree,
     out: &StepOutput,
     commit_shape: usize,
-    stats: &mut GenStats,
+    st: &mut GenState,
 ) -> Result<(Vec<u32>, u32)> {
-    stats.target_calls += 1;
+    st.stats.target_calls += 1;
     let vocab = target.vocab();
-    let v = verify_greedy(tree, &out.logits, vocab);
+    let v = match st.sampler.as_ref() {
+        Some(s) => verify_sampled(tree, &out.logits, vocab, s, st.out.len()),
+        None => verify_greedy(tree, &out.logits, vocab),
+    };
     target.commit_slots(commit_shape, &v.accepted_slots)?;
     let last = *v.accepted_slots.last().unwrap();
     target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);

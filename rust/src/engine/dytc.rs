@@ -35,7 +35,7 @@ use crate::dytc::{
 use crate::model::Variant;
 use crate::pld::PldMatcher;
 use crate::runtime::{ScaleRuntime, StepOutput, VERIFY_T};
-use crate::spec::{verify_greedy, DraftTree, VariantSession};
+use crate::spec::{verify_greedy, verify_sampled, DraftTree, SamplingParams, VariantSession};
 use crate::tokenizer::EOS;
 
 use super::common::{
@@ -187,6 +187,7 @@ impl<'rt> DytcRun<'rt> {
         with_ee: bool,
         prompt: &[u32],
         max_new: usize,
+        sampling: Option<SamplingParams>,
     ) -> Result<Self> {
         let mut target = VariantSession::new(rt, Variant::Target)?;
         let ls40 = VariantSession::new(rt, Variant::Ls40)?;
@@ -197,7 +198,7 @@ impl<'rt> DytcRun<'rt> {
             None
         };
 
-        let st = GenState::start(&mut target, prompt, max_new)?;
+        let st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
         let matcher = PldMatcher::new(prompt);
         // Draft sessions are prefilled lazily on first use: a request whose
         // scheduling never touches a DSIA variant (pure PLD rounds) pays
@@ -452,7 +453,13 @@ impl RoundStep for DytcRun<'_> {
         sched.latency.observe(FAM_TARGET, t_shape, out.elapsed.as_secs_f64());
 
         let vocab = self.target.vocab();
-        let v = verify_greedy(tree, &out.logits, vocab);
+        // sampled requests verify through the coupled rejection sampler;
+        // slot_outcomes keep the same shape, so the estimator updates
+        // below keep learning from sampled traffic too
+        let v = match st.sampler.as_ref() {
+            Some(s) => verify_sampled(tree, &out.logits, vocab, s, st.out.len()),
+            None => verify_greedy(tree, &out.logits, vocab),
+        };
         self.target.commit_slots(VERIFY_T, &v.accepted_slots)?;
         let last = *v.accepted_slots.last().unwrap();
         self.target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
@@ -486,10 +493,11 @@ impl Engine for DytcEngine<'_> {
         self.name
     }
 
-    fn begin<'e>(
+    fn begin_sampled<'e>(
         &'e self,
         prompt: &[u32],
         max_new: usize,
+        sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         // every run shares the engine's scheduler state by reference, so
         // sequential generates and concurrently batched runs all keep the
@@ -500,6 +508,7 @@ impl Engine for DytcEngine<'_> {
             self.with_ee,
             prompt,
             max_new,
+            sampling,
         )?))
     }
 }

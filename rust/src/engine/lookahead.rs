@@ -22,7 +22,7 @@ use anyhow::Result;
 
 use crate::model::Variant;
 use crate::runtime::{argmax, ScaleRuntime, StepOutput};
-use crate::spec::VariantSession;
+use crate::spec::{SamplingParams, VariantSession};
 
 use super::common::{
     absorb_verify, pending_chain, target_plumbing, GenState, PendingVerify, RoundStep,
@@ -114,11 +114,10 @@ impl RoundStep for LookaheadRun<'_> {
         out: StepOutput,
         t_shape: usize,
     ) -> Result<()> {
-        let st = &mut self.st;
-        let root = st.root;
+        let root = self.st.root;
         let vocab = self.target.vocab();
         let (accepted, bonus) =
-            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut st.stats)?;
+            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut self.st)?;
 
         // --- harvest Jacobi-style n-grams from ALL slots (incl. the
         // rejected tail): slot token -> target's argmax continuation ---
@@ -143,7 +142,7 @@ impl RoundStep for LookaheadRun<'_> {
             let ctx: [u32; POOL_CTX] = self.hist[n - 5..n - 3].try_into().unwrap();
             self.pool.insert(ctx, self.hist[n - 3..].to_vec());
         }
-        st.emit(&emitted);
+        self.st.emit(&emitted);
         Ok(())
     }
 }
@@ -153,13 +152,14 @@ impl Engine for LookaheadEngine<'_> {
         "lade"
     }
 
-    fn begin<'e>(
+    fn begin_sampled<'e>(
         &'e self,
         prompt: &[u32],
         max_new: usize,
+        sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let st = GenState::start(&mut target, prompt, max_new)?;
+        let st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
 
         let mut pool = Pool::new();
         // seed the pool from the prompt's own n-grams

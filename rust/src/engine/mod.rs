@@ -59,6 +59,7 @@ use anyhow::{anyhow, Result};
 use crate::dytc::DytcParams;
 use crate::model::Variant;
 use crate::runtime::{BatchLane, ScaleRuntime, StepOutput};
+use crate::spec::SamplingParams;
 
 /// Per-generation statistics.
 #[derive(Debug, Clone, Default)]
@@ -313,26 +314,55 @@ impl<T: common::RoundStep> RequestRun for T {
 /// requests go through [`Engine::generate`], concurrent ones each get
 /// their own [`RequestRun`] via [`Engine::begin`] (per-request KV state
 /// lives entirely in the run, so many runs can be live at once).
+///
+/// Every entry point has a sampled twin taking an optional
+/// [`SamplingParams`]: `None` (or `temperature <= 0`) is greedy decoding
+/// through `verify_greedy`, unchanged; `Some` with `temperature > 0`
+/// routes verification through the coupled rejection sampler
+/// (`spec::verify_sample`), which keeps both losslessness guarantees —
+/// the output distribution equals sampled autoregressive decoding, and
+/// for a fixed seed the transcript is byte-identical to sampled AR.
 pub trait Engine {
     /// The engine's registry name (one of [`ENGINES`]).
     fn name(&self) -> &str;
 
     /// Begin a resumable generation: allocate this request's sessions,
-    /// prefill the prompt and emit the first greedy token. Takes `&self`
-    /// so multiple runs can be in flight on one engine — the continuous-
-    /// batching server relies on this.
+    /// prefill the prompt and emit the first token (greedy, or the
+    /// position-0 sample when `sampling` asks for `temperature > 0`).
+    /// Takes `&self` so multiple runs can be in flight on one engine —
+    /// the continuous-batching server relies on this.
+    fn begin_sampled<'e>(
+        &'e self,
+        prompt: &[u32],
+        max_new: usize,
+        sampling: Option<SamplingParams>,
+    ) -> Result<Box<dyn RequestRun + 'e>>;
+
+    /// [`Engine::begin_sampled`] without sampling: the greedy path.
     fn begin<'e>(
         &'e self,
         prompt: &[u32],
         max_new: usize,
-    ) -> Result<Box<dyn RequestRun + 'e>>;
+    ) -> Result<Box<dyn RequestRun + 'e>> {
+        self.begin_sampled(prompt, max_new, None)
+    }
 
     /// Run a whole request to completion (prefill + rounds until EOS,
     /// budget, or capacity). The default drives [`Engine::begin`]'s run to
     /// the end; engines with cross-request scheduler state (DyTC) share it
     /// with their runs by reference, so it keeps adapting either way.
     fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<Generation> {
-        let mut run = self.begin(prompt, max_new)?;
+        self.generate_sampled(prompt, max_new, None)
+    }
+
+    /// [`Engine::generate`] with optional sampled decoding.
+    fn generate_sampled(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sampling: Option<SamplingParams>,
+    ) -> Result<Generation> {
+        let mut run = self.begin_sampled(prompt, max_new, sampling)?;
         while !run.is_done() {
             run.round()?;
         }
@@ -569,6 +599,61 @@ mod tests {
             assert_eq!(r1.finish().tokens, solo1, "{name}: run 1 diverged");
             assert_eq!(r2.finish().tokens, solo2, "{name}: run 2 diverged");
         }
+    }
+
+    #[test]
+    fn sampled_generation_is_deterministic_and_lossless_vs_ar() {
+        // For a fixed seed, every engine's sampled transcript must be
+        // byte-identical to sampled autoregressive decoding (the coupled
+        // verifier makes the output a pure function of seed + prompt +
+        // target model) and reproducible across runs.
+        let srt = all_variants_runtime();
+        let opts = EngineOpts::default();
+        let prompt = [1u32, 30, 40, 50];
+        let sp = SamplingParams { temperature: 0.8, top_p: 0.95, seed: 13 };
+        let mut ar = build_engine("ar", &srt, &opts).unwrap();
+        let want = ar.generate_sampled(&prompt, 8, Some(sp)).unwrap().tokens;
+        for name in ENGINES {
+            let mut eng = build_engine(name, &srt, &opts).unwrap();
+            let a = eng.generate_sampled(&prompt, 8, Some(sp)).unwrap().tokens;
+            let b = eng.generate_sampled(&prompt, 8, Some(sp)).unwrap().tokens;
+            assert_eq!(a, b, "{name}: sampled run not reproducible");
+            assert_eq!(a, want, "{name}: sampled output diverged from sampled AR");
+        }
+    }
+
+    #[test]
+    fn temperature_zero_routes_through_greedy() {
+        // temperature = 0 must be bit-identical to the plain greedy path
+        // (no sampler is even constructed).
+        let srt = all_variants_runtime();
+        let opts = EngineOpts::default();
+        let prompt = [2u32, 35, 45, 55];
+        let zero = SamplingParams { temperature: 0.0, top_p: 0.9, seed: 999 };
+        for name in ["ar", "swift", "cas-spec"] {
+            let mut eng = build_engine(name, &srt, &opts).unwrap();
+            let greedy = eng.generate(&prompt, 6).unwrap().tokens;
+            let sampled0 = eng.generate_sampled(&prompt, 6, Some(zero)).unwrap().tokens;
+            let none = eng.generate_sampled(&prompt, 6, None).unwrap().tokens;
+            assert_eq!(sampled0, greedy, "{name}: temperature 0 diverged from greedy");
+            assert_eq!(none, greedy, "{name}: None sampling diverged from greedy");
+        }
+    }
+
+    #[test]
+    fn sampling_actually_samples() {
+        // At a high temperature, some seed must diverge from greedy —
+        // otherwise the sampled path is silently routing to argmax.
+        let srt = all_variants_runtime();
+        let opts = EngineOpts::default();
+        let prompt = [1u32, 30, 40, 50];
+        let mut eng = build_engine("ar", &srt, &opts).unwrap();
+        let greedy = eng.generate(&prompt, 8).unwrap().tokens;
+        let diverged = (0..16u64).any(|seed| {
+            let sp = SamplingParams { temperature: 1.5, top_p: 1.0, seed };
+            eng.generate_sampled(&prompt, 8, Some(sp)).unwrap().tokens != greedy
+        });
+        assert!(diverged, "16 sampled seeds all equal greedy output");
     }
 
     #[test]

@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::model::Variant;
 use crate::pld::PldMatcher;
 use crate::runtime::{ScaleRuntime, StepOutput};
-use crate::spec::VariantSession;
+use crate::spec::{SamplingParams, VariantSession};
 
 use super::common::{
     absorb_verify, draft_chain, pending_chain, target_plumbing, BranchCache, GenState,
@@ -146,15 +146,14 @@ impl RoundStep for SdRun<'_> {
         out: StepOutput,
         t_shape: usize,
     ) -> Result<()> {
-        let st = &mut self.st;
         let (accepted, bonus) =
-            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut st.stats)?;
+            absorb_verify(&mut self.target, &pending.tree, &out, t_shape, &mut self.st)?;
 
         // ---- bookkeeping (draft cache syncs lazily next round) ----
         self.matcher.extend(&accepted);
         let mut emitted = accepted;
         emitted.push(bonus);
-        st.emit(&emitted);
+        self.st.emit(&emitted);
         Ok(())
     }
 }
@@ -168,10 +167,11 @@ impl Engine for SdEngine<'_> {
         }
     }
 
-    fn begin<'e>(
+    fn begin_sampled<'e>(
         &'e self,
         prompt: &[u32],
         max_new: usize,
+        sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
         let mut draft: Draft = match self.draft_kind {
@@ -182,7 +182,7 @@ impl Engine for SdEngine<'_> {
             },
         };
 
-        let mut st = GenState::start(&mut target, prompt, max_new)?;
+        let mut st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
 
         // PLD corpus / draft cache both start at the committed prompt.
         let matcher = PldMatcher::new(prompt);

@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::model::Variant;
 use crate::pld::PldMatcher;
 use crate::runtime::{argmax, softmax_prob, ScaleRuntime, StepOutput, VERIFY_T};
-use crate::spec::{DraftTree, VariantSession};
+use crate::spec::{DraftTree, SamplingParams, VariantSession};
 use crate::tokenizer::EOS;
 
 use super::common::{
@@ -168,13 +168,12 @@ impl RoundStep for TreeRun<'_> {
         out: StepOutput,
         _t_shape: usize,
     ) -> Result<()> {
-        let st = &mut self.st;
-        let root = st.root;
+        let root = self.st.root;
         // commit at VERIFY_T regardless of the executed shape (identity
         // padding beyond the accepted slots makes any covering shape
         // equivalent; this mirrors the pre-split engine)
         let (accepted, bonus) =
-            absorb_verify(&mut self.target, &pending.tree, &out, VERIFY_T, &mut st.stats)?;
+            absorb_verify(&mut self.target, &pending.tree, &out, VERIFY_T, &mut self.st)?;
 
         self.matcher.truncate(self.matcher_mark);
         self.matcher.extend(&[root]);
@@ -182,7 +181,7 @@ impl RoundStep for TreeRun<'_> {
 
         let mut emitted = accepted;
         emitted.push(bonus);
-        st.emit(&emitted);
+        self.st.emit(&emitted);
         Ok(())
     }
 }
@@ -192,15 +191,16 @@ impl Engine for TreeEngine<'_> {
         self.name
     }
 
-    fn begin<'e>(
+    fn begin_sampled<'e>(
         &'e self,
         prompt: &[u32],
         max_new: usize,
+        sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
         let mut draft = VariantSession::new(self.rt, Variant::Ls40)?;
 
-        let mut st = GenState::start(&mut target, prompt, max_new)?;
+        let mut st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
         let matcher = PldMatcher::new(prompt);
         draft.feed(prompt)?;
         st.stats.draft_calls += 1;

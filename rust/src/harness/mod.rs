@@ -12,6 +12,7 @@ use anyhow::{anyhow, Result};
 use crate::engine::{build_engine, EngineOpts};
 use crate::metrics::{speedups, EngineReport, Record};
 use crate::runtime::ScaleRuntime;
+use crate::spec::SamplingParams;
 use crate::util::table::Table;
 use crate::workload::{Suite, CATEGORIES};
 
@@ -35,6 +36,23 @@ pub fn run_suite(
     check_lossless: bool,
     verbose: bool,
 ) -> Result<SuiteRun> {
+    run_suite_with(rt, suite, engines, opts, check_lossless, verbose, None)
+}
+
+/// [`run_suite`] with an optional sampled-decoding configuration applied to
+/// every request (including the AR baseline). Because verification couples
+/// each position's draw to the target row via the same seeded stream,
+/// speculative engines remain token-for-token equal to sampled AR, so the
+/// losslessness check is as strict as in the greedy harness.
+pub fn run_suite_with(
+    rt: &ScaleRuntime,
+    suite: &Suite,
+    engines: &[String],
+    opts: &EngineOpts,
+    check_lossless: bool,
+    verbose: bool,
+    sampling: Option<SamplingParams>,
+) -> Result<SuiteRun> {
     let mut names: Vec<String> = Vec::new();
     if !engines.iter().any(|e| e == "ar") {
         names.push("ar".into());
@@ -48,7 +66,7 @@ pub fn run_suite(
         let mut eng = build_engine(name, rt, opts)?;
         let mut rep = EngineReport { engine: name.clone(), records: Vec::new() };
         for item in &suite.items {
-            let gen = eng.generate(&item.prompt, item.max_new)?;
+            let gen = eng.generate_sampled(&item.prompt, item.max_new, sampling)?;
             if name == "ar" {
                 ar_outputs.insert(item.id, gen.tokens.clone());
             } else if check_lossless {

@@ -16,7 +16,7 @@ use anyhow::Result;
 use cas_spec::analytic;
 use cas_spec::config::RunConfig;
 use cas_spec::engine::{build_engine, required_variants, ENGINES};
-use cas_spec::harness::run_suite;
+use cas_spec::harness::run_suite_with;
 use cas_spec::model::Variant;
 use cas_spec::runtime::Runtime;
 use cas_spec::tokenizer;
@@ -78,6 +78,11 @@ FLAGS
   --prefix-cache-mb N cross-request prefix/KV cache budget in MiB
                       (default: 0 = off; shared prompt prefixes are
                       reused bit-exactly across requests)
+  --temperature T     sampled decoding temperature (default: 0 = greedy;
+                      > 0 enables seeded rejection-sampling verification,
+                      still token-identical to sampled AR)
+  --top-p P           nucleus truncation in (0, 1]  (default: 1.0)
+  --sample-seed N     sampling RNG seed             (default: 0)
   --config FILE       JSON config (see config/mod.rs)
   --markdown          emit tables as markdown
   --verbose           per-request progress lines
@@ -130,7 +135,7 @@ fn run(args: &Args) -> Result<()> {
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, cfg.seed, 1, cfg.max_new);
     for item in &suite.items {
-        let gen = eng.generate(&item.prompt, item.max_new)?;
+        let gen = eng.generate_sampled(&item.prompt, item.max_new, cfg.sampling())?;
         println!(
             "[{}] {} tokens, {:.1} ms decode ({:.1} tok/s), {:.2} tok/round, {} target calls",
             item.category,
@@ -170,7 +175,15 @@ fn bench(args: &Args) -> Result<()> {
     let srt = load_for_engines(&rt, &cfg, &cfg.engines)?;
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);
-    let run = run_suite(&srt, &suite, &cfg.engines, &cfg.opts, false, args.has("verbose"))?;
+    let run = run_suite_with(
+        &srt,
+        &suite,
+        &cfg.engines,
+        &cfg.opts,
+        false,
+        args.has("verbose"),
+        cfg.sampling(),
+    )?;
     let t = run.speedup_table(&format!(
         "speedup vs AR — scale={} n={} max_new={}",
         cfg.scale, cfg.n_per_category, cfg.max_new
@@ -193,12 +206,21 @@ fn check(args: &Args) -> Result<()> {
     let srt = load_for_engines(&rt, &cfg, &cfg.engines)?;
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, cfg.seed, cfg.n_per_category, cfg.max_new);
-    run_suite(&srt, &suite, &cfg.engines, &cfg.opts, true, args.has("verbose"))?;
+    run_suite_with(
+        &srt,
+        &suite,
+        &cfg.engines,
+        &cfg.opts,
+        true,
+        args.has("verbose"),
+        cfg.sampling(),
+    )?;
     println!(
-        "lossless ✓ — {} engines × {} prompts × {} tokens identical to AR",
+        "lossless ✓ — {} engines × {} prompts × {} tokens identical to {}AR",
         cfg.engines.len(),
         suite.len(),
-        cfg.max_new
+        cfg.max_new,
+        if cfg.sampling().is_some() { "sampled " } else { "" }
     );
     Ok(())
 }

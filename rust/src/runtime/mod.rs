@@ -731,17 +731,31 @@ impl ScaleRuntime {
     }
 }
 
-/// Argmax over one logits row.
+/// Argmax over one logits row, first index winning ties. NaNs are
+/// skipped (a NaN can never be the maximum); with no finite value in the
+/// row there is no meaningful answer — debug builds assert, release
+/// builds fall back to slot 0 (all −inf picks the first −inf slot, which
+/// at least is deterministic).
 pub fn argmax(row: &[f32]) -> u32 {
-    let mut best = 0usize;
+    let mut best = usize::MAX;
     let mut bv = f32::NEG_INFINITY;
+    let mut finite = false;
     for (i, v) in row.iter().enumerate() {
-        if *v > bv {
+        if v.is_nan() {
+            continue;
+        }
+        finite |= v.is_finite();
+        if best == usize::MAX || *v > bv {
             bv = *v;
             best = i;
         }
     }
-    best as u32
+    debug_assert!(finite, "argmax over a row with no finite value");
+    if best == usize::MAX {
+        0
+    } else {
+        best as u32
+    }
 }
 
 /// Numerically-stable softmax probability of `idx` within a logits row.
@@ -762,11 +776,48 @@ mod tests {
     }
 
     #[test]
+    fn argmax_first_index_wins_ties() {
+        assert_eq!(argmax(&[1.0, 7.0, 7.0, 7.0]), 1);
+        assert_eq!(argmax(&[4.0, 4.0]), 0);
+    }
+
+    #[test]
+    fn argmax_skips_nans() {
+        // regression: NaN comparisons are always false, so the old
+        // implementation returned slot 0 whenever slot 0 held a NaN
+        assert_eq!(argmax(&[f32::NAN, 2.0, f32::NAN, 1.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN, 0.5]), 2);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY, 3.0]), 2);
+        // a real maximum after a NaN still wins over earlier finite values
+        assert_eq!(argmax(&[1.0, f32::NAN, 9.0]), 2);
+    }
+
+    #[test]
     fn softmax_prob_normalized() {
         let row = [1.0f32, 2.0, 3.0];
         let total: f64 = (0..3).map(|i| softmax_prob(&row, i)).sum();
         assert!((total - 1.0).abs() < 1e-9);
         assert!(softmax_prob(&row, 2) > softmax_prob(&row, 0));
+    }
+
+    #[test]
+    fn softmax_prob_sums_to_one_on_wide_row() {
+        let row: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 5.0).collect();
+        let total: f64 = (0..row.len()).map(|i| softmax_prob(&row, i)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "sum {total}");
+    }
+
+    #[test]
+    fn softmax_prob_neg_inf_logit_is_zero() {
+        let row = [0.0f32, f32::NEG_INFINITY, 1.0];
+        assert_eq!(softmax_prob(&row, 1), 0.0);
+        let total: f64 = (0..3).map(|i| softmax_prob(&row, i)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn softmax_prob_single_element_row_is_one() {
+        assert_eq!(softmax_prob(&[-3.5f32], 0), 1.0);
     }
 
     #[test]

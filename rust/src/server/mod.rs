@@ -48,20 +48,29 @@
 //!
 //! # Wire protocol
 //!
-//! One JSON object per line (documented in README.md §Server protocol):
+//! One JSON object per line (documented in README.md §Server protocol).
+//! `id` is mandatory; requests without a usable id are rejected with an
+//! error reply carrying `"id": null` (a defaulted id would collide two
+//! bad clients on reply routing). The optional sampling fields enable
+//! distribution-lossless sampled decoding per request: `temperature`
+//! (default 0 = greedy), `top_p` (default 1), `seed` (default = the
+//! request id) — same seed, same transcript, across solo / batched /
+//! fused / prefix-cached serving alike:
 //!
 //! ```text
-//! -> {"id": 1, "prompt": [1, 30, ...], "max_new": 64}
+//! -> {"id": 1, "prompt": [1, 30, ...], "max_new": 64,
+//!     "temperature": 0.7, "top_p": 0.9, "seed": 7}
 //! <- {"id": 1, "tokens": [...], "text": "a1 ...", "ms": 123.4,
 //!     "queued_ms": 0.2, "rounds": 17, "mean_accepted": 3.4,
 //!     "batch": 3, "engine": "cas-spec"}
 //! -> {"cmd": "stats"}
-//! <- {"served": 12, "errors": 0, "total_tokens": 768, "total_secs": 1.9,
-//!     "tok_s": 404.2, "queue_depth": 0, "running": 3, "peak_batch": 4,
-//!     "max_batch": 8, "threads": 8, "lockstep": true, "fused_steps": 40,
-//!     "fused_lanes": 118, "tokens_stepped": 3210, "prefix_cache_mb": 32,
-//!     "prefix_lookups": 24, "prefix_hit_tokens": 512, "evictions": 0,
-//!     "engine": "cas-spec", "scale": "base", "backend": "ref"}
+//! <- {"served": 12, "errors": 0, "total_tokens": 768, "busy_secs": 1.9,
+//!     "tok_s": 404.2, "sampled": 2, "queue_depth": 0, "running": 3,
+//!     "peak_batch": 4, "max_batch": 8, "threads": 8, "lockstep": true,
+//!     "fused_steps": 40, "fused_lanes": 118, "tokens_stepped": 3210,
+//!     "prefix_cache_mb": 32, "prefix_lookups": 24,
+//!     "prefix_hit_tokens": 512, "evictions": 0, "engine": "cas-spec",
+//!     "scale": "base", "backend": "ref"}
 //! -> {"cmd": "shutdown"}   <- {"ok": true}
 //! ```
 //!
@@ -93,6 +102,7 @@ use crate::cache::CacheStats;
 use crate::config::RunConfig;
 use crate::engine::{build_engine, required_variants, Engine, RequestRun, RoundPhase};
 use crate::runtime::{BatchLane, Runtime, ScaleRuntime};
+use crate::spec::SamplingParams;
 use crate::util::json::Json;
 
 /// One parsed generate request.
@@ -103,6 +113,9 @@ pub struct Request {
     pub prompt: Vec<u32>,
     /// Token budget for the generation.
     pub max_new: usize,
+    /// Sampled-decoding parameters (`None` = greedy; built from the
+    /// request's `temperature` / `top_p` / `seed` fields).
+    pub sampling: Option<SamplingParams>,
 }
 
 enum Job {
@@ -155,6 +168,8 @@ struct SchedCounters {
     /// mean verify-fusion width; > 1 proves co-batched requests actually
     /// shared forwards).
     fused_lanes: u64,
+    /// Requests admitted with sampling enabled (`temperature > 0`).
+    sampled: u64,
 }
 
 /// Serve until a shutdown command arrives. Blocks the calling thread.
@@ -310,8 +325,11 @@ fn run_scheduler(
             // the most expensive per-request step would vanish between
             // queued_ms and ms and inflate tok_s
             let started = Instant::now();
-            let admitted = eng.begin(&q.req.prompt, q.req.max_new);
+            let admitted = eng.begin_sampled(&q.req.prompt, q.req.max_new, q.req.sampling);
             c.busy_secs += started.elapsed().as_secs_f64();
+            if q.req.sampling.is_some() {
+                c.sampled += 1;
+            }
             match admitted {
                 Ok(run) => running.push(Active {
                     id: q.req.id,
@@ -544,8 +562,9 @@ fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
         ("served", Json::Num(c.served as f64)),
         ("errors", Json::Num(c.errors as f64)),
         ("total_tokens", Json::Num(c.total_tokens as f64)),
-        ("total_secs", Json::Num(c.busy_secs)),
+        ("busy_secs", Json::Num(c.busy_secs)),
         ("tok_s", Json::Num(tok_s)),
+        ("sampled", Json::Num(c.sampled as f64)),
         ("queue_depth", Json::Num(v.queue_depth as f64)),
         ("running", Json::Num(v.running as f64)),
         ("peak_batch", Json::Num(c.peak_batch as f64)),
@@ -620,10 +639,15 @@ fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Job>) -> bool {
                 }
             }
             Err(e) => {
+                // null id: the request's own id (if any) was unusable, and
+                // echoing a defaulted one would misroute the error.
                 let _ = writeln!(
                     writer,
                     "{}",
-                    Json::obj(vec![("error", Json::Str(format!("{e} (from {peer:?})")))])
+                    Json::obj(vec![
+                        ("id", Json::Null),
+                        ("error", Json::Str(format!("{e} (from {peer:?})"))),
+                    ])
                 );
             }
         }
@@ -646,7 +670,12 @@ fn parse_line(line: &str) -> Result<ParsedLine> {
             other => Err(anyhow!("unknown cmd {other:?}")),
         };
     }
-    let id = j.get("id").and_then(|v| v.as_u64()).unwrap_or(0);
+    // a request without a usable id cannot have its reply routed; reject
+    // it instead of silently defaulting (two such clients would collide).
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("missing or malformed request id"))?;
     let prompt: Vec<u32> = j
         .req("prompt")?
         .usize_arr()
@@ -658,7 +687,26 @@ fn parse_line(line: &str) -> Result<ParsedLine> {
         return Err(anyhow!("empty prompt"));
     }
     let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(64);
-    Ok(ParsedLine::Request(Request { id, prompt, max_new }))
+    let temperature = match j.get("temperature") {
+        None => 0.0,
+        Some(v) => v.as_f64().ok_or_else(|| anyhow!("temperature must be a number"))?,
+    };
+    if !temperature.is_finite() || temperature < 0.0 {
+        return Err(anyhow!("temperature must be finite and >= 0"));
+    }
+    let top_p = match j.get("top_p") {
+        None => 1.0,
+        Some(v) => v.as_f64().ok_or_else(|| anyhow!("top_p must be a number"))?,
+    };
+    if !(top_p > 0.0 && top_p <= 1.0) {
+        return Err(anyhow!("top_p must be in (0, 1]"));
+    }
+    let seed = match j.get("seed") {
+        None => id,
+        Some(v) => v.as_u64().ok_or_else(|| anyhow!("seed must be a non-negative integer"))?,
+    };
+    let sampling = (temperature > 0.0).then_some(SamplingParams { temperature, top_p, seed });
+    Ok(ParsedLine::Request(Request { id, prompt, max_new, sampling }))
 }
 
 /// Minimal blocking client used by examples and tests. One request may be
@@ -696,6 +744,28 @@ impl Client {
         self.request_raw(&req.to_string())
     }
 
+    /// Like [`Client::generate`] but with sampling enabled: the server
+    /// draws tokens at the given temperature / top-p from the request's
+    /// seed, so repeating the call with the same seed yields a
+    /// byte-identical transcript regardless of serving mode.
+    pub fn generate_sampled(
+        &mut self,
+        id: u64,
+        prompt: &[u32],
+        max_new: usize,
+        s: SamplingParams,
+    ) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("prompt", Json::arr_u32(prompt)),
+            ("max_new", Json::Num(max_new as f64)),
+            ("temperature", Json::Num(s.temperature)),
+            ("top_p", Json::Num(s.top_p)),
+            ("seed", Json::Num(s.seed as f64)),
+        ]);
+        self.request_raw(&req.to_string())
+    }
+
     /// Fetch the server's aggregate serving counters.
     pub fn stats(&mut self) -> Result<Json> {
         self.request_raw(r#"{"cmd":"stats"}"#)
@@ -720,7 +790,32 @@ mod tests {
                 assert_eq!(r.id, 3);
                 assert_eq!(r.prompt, vec![1, 2, 3]);
                 assert_eq!(r.max_new, 8);
+                assert!(r.sampling.is_none(), "no temperature field means greedy");
             }
+            _ => panic!("expected request"),
+        }
+    }
+
+    #[test]
+    fn parse_sampled_request_fields() {
+        let line = r#"{"id": 9, "prompt": [1], "max_new": 4, "temperature": 0.7, "top_p": 0.9}"#;
+        match parse_line(line).unwrap() {
+            ParsedLine::Request(r) => {
+                let s = r.sampling.expect("temperature > 0 enables sampling");
+                assert!((s.temperature - 0.7).abs() < 1e-12);
+                assert!((s.top_p - 0.9).abs() < 1e-12);
+                assert_eq!(s.seed, 9, "seed defaults to the request id");
+            }
+            _ => panic!("expected request"),
+        }
+        // an explicit seed wins over the id default
+        match parse_line(r#"{"id": 9, "prompt": [1], "temperature": 1.0, "seed": 42}"#).unwrap() {
+            ParsedLine::Request(r) => assert_eq!(r.sampling.unwrap().seed, 42),
+            _ => panic!("expected request"),
+        }
+        // temperature 0 stays greedy even with a seed present
+        match parse_line(r#"{"id": 9, "prompt": [1], "temperature": 0.0, "seed": 42}"#).unwrap() {
+            ParsedLine::Request(r) => assert!(r.sampling.is_none()),
             _ => panic!("expected request"),
         }
     }
@@ -738,8 +833,18 @@ mod tests {
     #[test]
     fn rejects_bad_requests() {
         assert!(parse_line("not json").is_err());
-        assert!(parse_line(r#"{"prompt": []}"#).is_err());
-        assert!(parse_line(r#"{"max_new": 4}"#).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": []}"#).is_err());
+        assert!(parse_line(r#"{"id": 1, "max_new": 4}"#).is_err());
+        // a missing or malformed id is an error, not a silent id-0 default
+        assert!(parse_line(r#"{"prompt": [1, 2]}"#).is_err());
+        assert!(parse_line(r#"{"id": "seven", "prompt": [1]}"#).is_err());
+        assert!(parse_line(r#"{"id": 1.5, "prompt": [1]}"#).is_err());
+        // malformed sampling fields are rejected up front
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "temperature": "warm"}"#).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "temperature": -0.5}"#).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "top_p": 0.0}"#).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "top_p": 1.5}"#).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "seed": "abc"}"#).is_err());
     }
 
     #[test]
@@ -752,6 +857,7 @@ mod tests {
             peak_batch: 4,
             fused_steps: 10,
             fused_lanes: 25,
+            sampled: 2,
         };
         let v = StatsView {
             queue_depth: 2,
@@ -775,6 +881,11 @@ mod tests {
         assert_eq!(j.get("fused_steps").unwrap().as_u64().unwrap(), 10);
         assert_eq!(j.get("fused_lanes").unwrap().as_u64().unwrap(), 25);
         assert!((j.get("tok_s").unwrap().as_f64().unwrap() - 240.0).abs() < 1e-9);
+        // the busy-time counter ships under its real name: tok_s above is
+        // total_tokens / busy_secs, and the old "total_secs" alias is gone
+        assert!((j.get("busy_secs").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        assert!(j.get("total_secs").is_none(), "stats key renamed to busy_secs");
+        assert_eq!(j.get("sampled").unwrap().as_u64().unwrap(), 2);
         assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "ref");
         assert_eq!(j.get("tokens_stepped").unwrap().as_u64().unwrap(), 900);
         // cache disabled: prefix fields present and zeroed

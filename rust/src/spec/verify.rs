@@ -134,6 +134,26 @@ mod tests {
     }
 
     #[test]
+    fn tied_logits_accept_the_first_index() {
+        // pins argmax's first-index tie-break rule: when two tokens share
+        // the peak logit, greedy verification wants the LOWER token id —
+        // a draft proposing the higher one must be rejected.
+        let vocab = 8usize;
+        let mut row = vec![0f32; vocab];
+        row[2] = 10.0;
+        row[5] = 10.0; // tied peak at a higher index
+        let t = DraftTree::chain(1, &[5], 16);
+        let logits: Vec<f32> = row.iter().chain(row.iter()).copied().collect();
+        let v = verify_greedy(&t, &logits, vocab);
+        assert!(v.accepted_tokens.is_empty(), "tied higher index must lose");
+        assert_eq!(v.bonus, 2, "bonus takes the first tied index");
+        // and a draft proposing the lower index is accepted
+        let t2 = DraftTree::chain(1, &[2], 16);
+        let v2 = verify_greedy(&t2, &logits, vocab);
+        assert_eq!(v2.accepted_tokens, vec![2]);
+    }
+
+    #[test]
     fn equivalence_with_sequential_greedy() {
         // Property: for a random chain drafted from a deterministic "model"
         // (next = (3*cur+1) % V), verification accepts exactly the correct

@@ -1,0 +1,466 @@
+//! Distribution-lossless *sampled* verification of a draft tree
+//! (temperature / top-p decoding — the general case of the paper's
+//! losslessness guarantee; `verify.rs` keeps the greedy temperature-0
+//! fast path).
+//!
+//! # Rejection-sampling verification with deterministic drafts
+//!
+//! Standard speculative sampling (Draft & Verify, arXiv 2309.08168)
+//! accepts a draft token `x` with probability `min(1, p_t(x)/p_d(x))`
+//! and, on rejection, resamples from the normalized residual
+//! `max(0, p_t − p_d)`. Correctness of that rule requires `p_d` to be
+//! the law the draft token was *actually drawn from*. Every drafter in
+//! this repo proposes greedily (argmax), so the true proposal law at a
+//! node is the **point mass** at the drafted token — the `prob` values
+//! recorded on [`DraftTree`] nodes are the drafts' softmax confidences,
+//! used by the DyTC scheduler, not a sampling distribution. Substituting
+//! `p_d = δ_x` into the rule gives its exact specialization:
+//!
+//!   * accept drafted token `x` with probability
+//!     `min(1, p_t(x)/1) = p_t(x)`;
+//!   * on rejection, the residual `max(0, p_t − δ_x)` normalizes to
+//!     `p_t` with `x` masked out — i.e. `p_t` conditioned on `≠ x`;
+//!   * a rejected sibling is retried against that residual: accept with
+//!     `p_t(x₂)/(1 − p_t(x₁))`, recursively (SpecInfer-style multi-draft
+//!     verification);
+//!   * when every child is rejected, the bonus token is the residual
+//!     sample; at an accepted leaf it is a fresh sample from the target
+//!     row.
+//!
+//! # Maximal coupling: one uniform per emitted position
+//!
+//! The scheme above is implemented as a *maximal coupling*: each output
+//! position `i` gets one uniform `u_i` — draw `i` of a per-request
+//! `SplitMix64` stream — and the emitted token at position `i` is the
+//! inverse-CDF sample of the temperature/top-p-adjusted target row under
+//! `u_i`. Verification accepts a drafted child iff its token equals that
+//! sample. This is *the same* accept/residual law (the event
+//! `sample = x` has probability `p_t(x)`; conditioned on `sample ≠ x`
+//! the sample is exactly the normalized residual), but the emitted
+//! sequence becomes a pure function of `(seed, prompt, target model)` —
+//! independent of what was drafted. Consequences:
+//!
+//!   * every engine's sampled transcript is byte-identical to sampled
+//!     autoregressive decoding (sequence-level reproducibility for a
+//!     fixed seed, on top of the distributional guarantee);
+//!   * solo, continuously-batched, lock-step-fused and prefix-cached
+//!     serving all emit identical bytes, for the same structural reason
+//!     greedy serving does;
+//!   * DyTC's wall-clock-driven scheduling (which makes tree *shapes*
+//!     nondeterministic) cannot perturb the output.
+//!
+//! Distributional losslessness — sampled-speculative token frequencies
+//! matching sampled-AR across seeds — is pinned by the chi-square test in
+//! `tests/lossless.rs`; the sampler itself is chi-squared against the
+//! analytic softmax below.
+
+use super::tree::DraftTree;
+use super::verify::VerifyOutcome;
+use crate::util::rng::SplitMix64;
+
+/// SplitMix64's additive constant; state `seed + i·γ` is the stream
+/// `SplitMix64::new(seed)` advanced by `i` draws, giving O(1) random
+/// access to draw `i`.
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Per-request sampled-decoding parameters, threaded from the config /
+/// wire protocol down to verification.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0` means greedy decoding (the
+    /// `verify_greedy` fast path — no sampler is constructed).
+    pub temperature: f64,
+    /// Nucleus truncation: smallest prefix of the sorted distribution
+    /// with cumulative mass `>= top_p` keeps its (renormalized) mass.
+    /// `1.0` disables truncation.
+    pub top_p: f64,
+    /// Per-request seed of the SplitMix64 uniform stream (draw `i`
+    /// decides output position `i`).
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    /// Whether these parameters mean greedy decoding (temperature 0).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// The sampler for these parameters, or `None` for greedy
+    /// (temperature-0 requests route through `verify_greedy` unchanged).
+    pub fn sampler(&self) -> Option<Sampler> {
+        if self.is_greedy() {
+            None
+        } else {
+            Some(Sampler { params: *self })
+        }
+    }
+}
+
+/// A per-request token sampler: the temperature/top-p transform plus the
+/// position-indexed uniform stream. Stateless (draws are random-access),
+/// so verification needs only `&self` and replays are trivially
+/// bit-reproducible.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    params: SamplingParams,
+}
+
+impl Sampler {
+    /// The parameters this sampler was built from.
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Draw `pos` of the request's SplitMix64 uniform stream.
+    fn unit(&self, pos: usize) -> f64 {
+        SplitMix64::new(self.params.seed.wrapping_add((pos as u64).wrapping_mul(GAMMA)))
+            .next_f64()
+    }
+
+    /// Temperature/top-p-adjusted probabilities of a logits row (sums to
+    /// 1). NaNs carry no mass; −inf logits get probability 0.
+    pub fn probs(&self, row: &[f32]) -> Vec<f64> {
+        let mut m = f32::NEG_INFINITY;
+        for &v in row {
+            if !v.is_nan() && v > m {
+                m = v;
+            }
+        }
+        debug_assert!(m.is_finite(), "sampling over a row with no finite logit");
+        let t = self.params.temperature;
+        let mut p: Vec<f64> = row
+            .iter()
+            .map(|&v| if v.is_nan() { 0.0 } else { (((v - m) as f64) / t).exp() })
+            .collect();
+        normalize(&mut p);
+
+        if self.params.top_p < 1.0 {
+            // nucleus: keep the smallest high-probability prefix whose
+            // mass reaches top_p (ties broken by token id — deterministic)
+            let mut idx: Vec<usize> = (0..p.len()).collect();
+            idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap().then(a.cmp(&b)));
+            let mut keep = vec![false; p.len()];
+            let mut cum = 0.0;
+            for &i in &idx {
+                keep[i] = true;
+                cum += p[i];
+                if cum >= self.params.top_p {
+                    break;
+                }
+            }
+            for (pi, k) in p.iter_mut().zip(&keep) {
+                if !k {
+                    *pi = 0.0;
+                }
+            }
+            normalize(&mut p);
+        }
+        p
+    }
+
+    /// The token emitted at output position `pos` given target logits
+    /// `row`: the inverse-CDF sample of [`Sampler::probs`] under the
+    /// position's uniform.
+    pub fn sample_token(&self, row: &[f32], pos: usize) -> u32 {
+        pick(&self.probs(row), self.unit(pos))
+    }
+}
+
+fn normalize(p: &mut [f64]) {
+    let total: f64 = p.iter().sum();
+    debug_assert!(total > 0.0, "probability mass vanished");
+    for v in p.iter_mut() {
+        *v /= total;
+    }
+}
+
+/// Inverse-CDF pick in token-id order; zero-mass tokens have empty
+/// intervals and can never be selected. Falls back to the last
+/// positive-mass token if float roundoff leaves `u` past the total.
+fn pick(p: &[f64], u: f64) -> u32 {
+    let mut cum = 0.0;
+    let mut last = 0usize;
+    for (i, &pi) in p.iter().enumerate() {
+        if pi <= 0.0 {
+            continue;
+        }
+        cum += pi;
+        last = i;
+        if u < cum {
+            return i as u32;
+        }
+    }
+    last as u32
+}
+
+/// Sampled counterpart of `verify_greedy`: walk the tree from the root,
+/// at each node accepting the child whose token equals the position's
+/// coupled sample of the target row (= accept with probability `p_t`,
+/// retry rejected siblings against the masked residual — see the module
+/// docs); the bonus token is the sample at the deepest accepted slot.
+/// `base_pos` is the output position the root's next token lands at
+/// (`GenState.out.len()` at absorb time).
+///
+/// `logits` is row-major `(t_shape, vocab)`; only real tree slots are
+/// read. Requires `tree.len() >= 1`.
+pub fn verify_sampled(
+    tree: &DraftTree,
+    logits: &[f32],
+    vocab: usize,
+    sampler: &Sampler,
+    base_pos: usize,
+) -> VerifyOutcome {
+    let row = |slot: usize| &logits[slot * vocab..(slot + 1) * vocab];
+
+    let mut accepted_slots = vec![0usize];
+    let mut accepted_tokens = Vec::new();
+    let mut slot_outcomes = Vec::new();
+    let mut cur = 0usize;
+    let mut pos = base_pos;
+    loop {
+        let want = sampler.sample_token(row(cur), pos);
+        let mut next = None;
+        for c in tree.children(cur) {
+            let ok = tree.nodes[c].token == want;
+            slot_outcomes.push((c, ok));
+            if ok && next.is_none() {
+                next = Some(c);
+            }
+        }
+        match next {
+            Some(c) => {
+                accepted_slots.push(c);
+                accepted_tokens.push(tree.nodes[c].token);
+                cur = c;
+                pos += 1;
+            }
+            None => {
+                return VerifyOutcome {
+                    accepted_slots,
+                    accepted_tokens,
+                    bonus: want,
+                    slot_outcomes,
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sampler(temperature: f64, top_p: f64, seed: u64) -> Sampler {
+        SamplingParams { temperature, top_p, seed }.sampler().expect("temp > 0")
+    }
+
+    #[test]
+    fn greedy_params_build_no_sampler() {
+        assert!(SamplingParams::default().is_greedy());
+        assert!(SamplingParams::default().sampler().is_none());
+        assert!(SamplingParams { temperature: 0.7, ..Default::default() }
+            .sampler()
+            .is_some());
+    }
+
+    #[test]
+    fn probs_normalize_and_respect_temperature() {
+        let row = [1.0f32, 2.0, 3.0, f32::NEG_INFINITY];
+        let p = sampler(1.0, 1.0, 0).probs(&row);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(p[3], 0.0, "-inf logit carries no mass");
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // lower temperature sharpens the distribution
+        let cold = sampler(0.25, 1.0, 0).probs(&row);
+        assert!(cold[2] > p[2]);
+    }
+
+    #[test]
+    fn top_p_truncates_and_renormalizes() {
+        // softmax(0, ln2, ln4) = (1/7, 2/7, 4/7); top_p=0.8 keeps {2, 1}
+        let row = [0.0f32, 2.0f32.ln(), 4.0f32.ln()];
+        let p = sampler(1.0, 0.8, 0).probs(&row);
+        assert_eq!(p[0], 0.0, "tail token truncated");
+        assert!((p[1] - 2.0 / 6.0).abs() < 1e-6);
+        assert!((p[2] - 4.0 / 6.0).abs() < 1e-6);
+        // top_p small enough keeps only the top token
+        let p1 = sampler(1.0, 0.1, 0).probs(&row);
+        assert_eq!(p1[2], 1.0);
+        assert_eq!(p1[0] + p1[1], 0.0);
+    }
+
+    #[test]
+    fn sample_token_is_position_keyed_and_reproducible() {
+        let row = [0.0f32, 0.0, 0.0, 0.0];
+        let s = sampler(1.0, 1.0, 99);
+        let a: Vec<u32> = (0..32).map(|i| s.sample_token(&row, i)).collect();
+        let b: Vec<u32> = (0..32).map(|i| s.sample_token(&row, i)).collect();
+        assert_eq!(a, b, "random access must be reproducible");
+        // the position stream IS the sequential per-request stream
+        let mut seq = SplitMix64::new(99);
+        for (i, &tok) in a.iter().enumerate() {
+            assert_eq!(tok, pick(&s.probs(&row), seq.next_f64()), "draw {i}");
+        }
+        // a different seed gives a different stream somewhere
+        let s2 = sampler(1.0, 1.0, 100);
+        assert!((0..32).any(|i| s2.sample_token(&row, i) != a[i]));
+    }
+
+    /// 99.99% chi-square critical value via the Wilson–Hilferty cube
+    /// approximation (z = 3.719) — accurate to a few percent for df >= 4.
+    fn chi2_crit(df: usize) -> f64 {
+        let d = df as f64;
+        let z = 3.719;
+        d * (1.0 - 2.0 / (9.0 * d) + z * (2.0 / (9.0 * d)).sqrt()).powi(3)
+    }
+
+    #[test]
+    fn sampled_frequencies_match_softmax_chi_square() {
+        // Draws across positions are the SplitMix64 stream; frequencies
+        // must match the analytic adjusted softmax (distributional
+        // losslessness of the sampler itself). Deterministic: fixed seed.
+        let row = [0.0f32, 0.5, 1.0, 1.5, -0.5, 0.25, -1.0, 2.0];
+        let s = sampler(1.3, 1.0, 7);
+        let p = s.probs(&row);
+        let n = 20_000usize;
+        let mut counts = [0u64; 8];
+        for i in 0..n {
+            counts[s.sample_token(&row, i) as usize] += 1;
+        }
+        let stat: f64 = (0..8)
+            .map(|i| {
+                let exp = p[i] * n as f64;
+                (counts[i] as f64 - exp).powi(2) / exp
+            })
+            .sum();
+        assert!(
+            stat < chi2_crit(7),
+            "chi-square {stat:.2} rejects sampler vs softmax (counts {counts:?})"
+        );
+        // positive control: the same counts against a wrong expectation
+        // (uniform) must be rejected decisively
+        let wrong: f64 = (0..8)
+            .map(|i| {
+                let exp = n as f64 / 8.0;
+                (counts[i] as f64 - exp).powi(2) / exp
+            })
+            .sum();
+        assert!(wrong > chi2_crit(7) * 10.0, "control not rejected: {wrong:.2}");
+    }
+
+    #[test]
+    fn truncated_tokens_are_never_sampled() {
+        let row = [3.0f32, 0.0, -2.0, f32::NEG_INFINITY];
+        let s = sampler(1.0, 0.9, 3);
+        for i in 0..5_000 {
+            let t = s.sample_token(&row, i);
+            assert_ne!(t, 3, "-inf token sampled");
+            assert_ne!(t, 2, "outside-nucleus token sampled");
+        }
+    }
+
+    /// Fake logits: one row per slot, `peaks[slot]` strongly favored.
+    fn peaked_logits(peaks: &[u32], vocab: usize) -> Vec<f32> {
+        let mut l = vec![0f32; peaks.len() * vocab];
+        for (i, p) in peaks.iter().enumerate() {
+            l[i * vocab + *p as usize] = 50.0; // ~certain even at temp 1
+        }
+        l
+    }
+
+    #[test]
+    fn accepts_chain_matching_the_coupled_samples() {
+        // near-deterministic rows: the sample equals the peak, so a chain
+        // drafted on the peaks is fully accepted and the bonus is peaked
+        let t = DraftTree::chain(1, &[2, 3], 16);
+        let logits = peaked_logits(&[2, 3, 7], 8);
+        let s = sampler(1.0, 1.0, 11);
+        let v = verify_sampled(&t, &logits, 8, &s, 4);
+        assert_eq!(v.accepted_slots, vec![0, 1, 2]);
+        assert_eq!(v.accepted_tokens, vec![2, 3]);
+        assert_eq!(v.bonus, 7);
+    }
+
+    #[test]
+    fn rejects_at_first_mismatch_with_residual_bonus() {
+        let t = DraftTree::chain(1, &[2, 9, 4], 16); // 9 diverges
+        let logits = peaked_logits(&[2, 3, 0, 0], 16);
+        let s = sampler(1.0, 1.0, 5);
+        let v = verify_sampled(&t, &logits, 16, &s, 0);
+        assert_eq!(v.accepted_tokens, vec![2]);
+        assert_eq!(v.bonus, 3, "bonus = coupled sample at last accepted slot");
+        assert!(v.slot_outcomes.contains(&(1, true)));
+        assert!(v.slot_outcomes.contains(&(2, false)));
+    }
+
+    #[test]
+    fn sibling_branch_acceptance() {
+        // root(1) -> a(5), b(6); rows peak 6 then 8 after b.
+        let mut t = DraftTree::new(1, 16);
+        let _a = t.add_child(0, 5, 0.5, 0, 0.5);
+        let b = t.add_child(0, 6, 0.5, 0, 0.5);
+        t.add_child(b, 8, 0.5, 0, 0.25);
+        let logits = peaked_logits(&[6, 0, 8, 9], 16);
+        let s = sampler(1.0, 1.0, 21);
+        let v = verify_sampled(&t, &logits, 16, &s, 0);
+        assert_eq!(v.accepted_tokens, vec![6, 8]);
+        assert_eq!(v.bonus, 9);
+        assert!(v.slot_outcomes.contains(&(1, false)), "sibling a rejected");
+    }
+
+    #[test]
+    fn equals_autoregressive_sampling_for_any_draft() {
+        // THE coupling property: for a deterministic row model, the
+        // verified prefix+bonus equals position-by-position AR sampling
+        // no matter what the draft proposed. Flat-ish rows make the
+        // sample genuinely random (not argmax).
+        let vocab = 8usize;
+        let row_for = |tok: u32| -> Vec<f32> {
+            (0..vocab).map(|i| ((i as u32 ^ tok) % 4) as f32 * 0.7).collect()
+        };
+        let s = sampler(1.1, 1.0, 1234);
+        let root = 2u32;
+        let base_pos = 3usize;
+        // AR reference: sample 6 positions forward from the root
+        let mut ar = Vec::new();
+        let mut cur = root;
+        for i in 0..6 {
+            let t = s.sample_token(&row_for(cur), base_pos + i);
+            ar.push(t);
+            cur = t;
+        }
+        for wrong_at in 0..4usize {
+            // draft = AR tokens with one corrupted position
+            let mut chain: Vec<u32> = ar[..4].to_vec();
+            chain[wrong_at] = (chain[wrong_at] + 1) % vocab as u32;
+            let tree = DraftTree::chain(root, &chain, 16);
+            let logits: Vec<f32> = tree
+                .nodes
+                .iter()
+                .flat_map(|n| row_for(n.token))
+                .collect();
+            let v = verify_sampled(&tree, &logits, vocab, &s, base_pos);
+            assert_eq!(v.accepted_tokens.len(), wrong_at, "prefix length");
+            let mut got = v.accepted_tokens.clone();
+            got.push(v.bonus);
+            assert_eq!(got, ar[..wrong_at + 1], "diverged from AR sampling");
+        }
+    }
+
+    #[test]
+    fn root_only_tree_bonus_is_the_position_sample() {
+        let t = DraftTree::new(3, 16);
+        let row = [0.0f32, 0.3, 0.6, 0.1, -0.2, 0.4, 0.0, 0.2];
+        let s = sampler(1.0, 1.0, 77);
+        let v = verify_sampled(&t, &row, 8, &s, 12);
+        assert_eq!(v.accepted_slots, vec![0]);
+        assert!(v.accepted_tokens.is_empty());
+        assert_eq!(v.bonus, s.sample_token(&row, 12));
+    }
+}

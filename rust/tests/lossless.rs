@@ -6,10 +6,11 @@
 //! exist (`Runtime::open` falls back automatically), and on PJRT when
 //! `make artifacts` has run and the crate is built with `--features pjrt`.
 
-use cas_spec::engine::{EngineOpts, ENGINES};
-use cas_spec::harness::run_suite;
+use cas_spec::engine::{build_engine, EngineOpts, ENGINES};
+use cas_spec::harness::{run_suite, run_suite_with};
 use cas_spec::model::Variant;
 use cas_spec::runtime::Runtime;
+use cas_spec::spec::SamplingParams;
 use cas_spec::workload::{Language, Suite};
 
 fn open_runtime() -> Runtime {
@@ -59,6 +60,79 @@ fn engine_state_reuse_stays_lossless() {
         false,
     )
     .expect("stateful reuse violated losslessness");
+}
+
+#[test]
+fn all_engines_reproduce_sampled_ar() {
+    // Distribution-lossless sampled decoding: with temperature > 0 every
+    // engine must still emit byte-identical transcripts to sampled AR for
+    // the same seed, because verification couples each position's draw to
+    // the target row through one position-keyed random stream.
+    let rt = open_runtime();
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 7, 1, 20);
+    let engines: Vec<String> = ENGINES.iter().map(|s| s.to_string()).collect();
+    let sp = SamplingParams { temperature: 0.7, top_p: 0.9, seed: 1234 };
+    run_suite_with(&srt, &suite, &engines, &EngineOpts::default(), true, false, Some(sp))
+        .expect("sampled losslessness violated");
+}
+
+/// Two-sample chi-square homogeneity: sampled-AR token frequencies vs a
+/// speculative engine's, over DISJOINT seed ranges (sharing seeds would
+/// make the arms equal trivially through the coupling). Only the last
+/// token of each short generation is counted so draws are independent
+/// across seeds. Accepting H0 here is the distribution-losslessness
+/// claim, as opposed to the per-seed sequence equality asserted above.
+#[test]
+fn sampled_spec_matches_sampled_ar_distribution() {
+    let rt = open_runtime();
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 7, 1, 4);
+    let prompt = suite.items[0].prompt.clone();
+
+    const B: usize = 8; // project token ids onto mod-B buckets
+    const N: u64 = 150; // generations per arm
+    let mut counts = [[0f64; B]; 2];
+    let arms = [("ar", 1_000u64), ("swift", 5_000u64)];
+    for (arm, (engine, seed0)) in arms.into_iter().enumerate() {
+        let mut eng = build_engine(engine, &srt, &EngineOpts::default()).expect("engine");
+        for i in 0..N {
+            // temperature > 1 flattens the rows so the test has power
+            let sp = SamplingParams { temperature: 1.3, top_p: 1.0, seed: seed0 + i };
+            let g = eng.generate_sampled(&prompt, 2, Some(sp)).expect("generate");
+            let last = *g.tokens.last().expect("nonempty generation");
+            counts[arm][last as usize % B] += 1.0;
+        }
+    }
+
+    let n = N as f64;
+    let total = 2.0 * n;
+    let mut x2 = 0.0;
+    let mut df = -1i32; // buckets - 1, counting only non-empty buckets
+    for b in 0..B {
+        let col = counts[0][b] + counts[1][b];
+        if col == 0.0 {
+            continue;
+        }
+        df += 1;
+        for arm in 0..2 {
+            let e = n * col / total;
+            let d = counts[arm][b] - e;
+            x2 += d * d / e;
+        }
+    }
+    assert!(df >= 1, "degenerate bucketing");
+    // Wilson-Hilferty 99.99% critical value (z = 3.719): the false-alarm
+    // rate of this test is 1e-4, while a real distribution bug shifts X2
+    // by O(N) and blows far past it.
+    let d = df as f64;
+    let crit = d * (1.0 - 2.0 / (9.0 * d) + 3.719 * (2.0 / (9.0 * d)).sqrt()).powi(3);
+    assert!(
+        x2 < crit,
+        "sampled spec diverges from sampled AR: X2={x2:.2} >= crit={crit:.2} (df={df})"
+    );
 }
 
 #[test]

@@ -27,6 +27,7 @@ use cas_spec::engine::{build_engine, EngineOpts};
 use cas_spec::model::Variant;
 use cas_spec::runtime::Runtime;
 use cas_spec::server::{serve, Client};
+use cas_spec::spec::SamplingParams;
 use cas_spec::workload::{Language, Suite, WorkItem};
 
 /// Prefix-cache budget for the suite: the CI matrix leg sets
@@ -225,7 +226,8 @@ fn continuous_batching_is_lossless_and_interleaves() {
     assert_eq!(stats.req("queue_depth").unwrap().as_usize().unwrap(), 0);
     assert_eq!(stats.req("running").unwrap().as_usize().unwrap(), 0);
     assert!(stats.req("tok_s").unwrap().as_f64().unwrap() > 0.0);
-    assert!(stats.req("total_secs").unwrap().as_f64().unwrap() > 0.0);
+    assert!(stats.req("busy_secs").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(stats.req("sampled").unwrap().as_u64().unwrap(), 0);
 
     control.shutdown().unwrap();
     server.join().unwrap().unwrap();
@@ -349,6 +351,92 @@ fn serve_suite(
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();
     (outputs, stats)
+}
+
+/// Serve `items` with sampling enabled (temperature 0.7, seed = 100 +
+/// request index) from concurrent clients on a fresh server; returns
+/// tokens ordered by request index plus the final stats line.
+fn serve_concurrent_sampled(
+    items: &[WorkItem],
+    port: u16,
+    max_batch: usize,
+    lockstep: bool,
+    prefix_cache_mb: usize,
+) -> (Vec<Vec<u32>>, cas_spec::util::json::Json) {
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()];
+    cfg.addr = format!("127.0.0.1:{port}");
+    cfg.max_batch = max_batch;
+    cfg.lockstep = lockstep;
+    cfg.prefix_cache_mb = prefix_cache_mb;
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut control = wait_ready(&addr);
+
+    let mut handles = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let addr = addr.clone();
+        let item = item.clone();
+        handles.push(thread::spawn(move || {
+            let sp = SamplingParams { temperature: 0.7, top_p: 0.9, seed: 100 + i as u64 };
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = c.generate_sampled(i as u64, &item.prompt, item.max_new, sp).unwrap();
+            assert!(resp.get("error").is_none(), "server error: {resp}");
+            let got: Vec<u32> = resp
+                .req("tokens")
+                .unwrap()
+                .usize_arr()
+                .unwrap()
+                .into_iter()
+                .map(|t| t as u32)
+                .collect();
+            (i, got)
+        }));
+    }
+    let mut outputs = vec![Vec::new(); items.len()];
+    for h in handles {
+        let (i, got) = h.join().unwrap();
+        outputs[i] = got;
+    }
+    let stats = control.stats().unwrap();
+    control.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    (outputs, stats)
+}
+
+#[test]
+fn sampled_serving_is_deterministic_across_modes() {
+    // Sampled requests (temperature 0.7, per-request seed) must produce
+    // byte-identical transcripts whether served solo, batched, lock-step
+    // fused, or with the prefix cache on — and all equal to the engine
+    // run directly, which the harness separately pins to sampled AR.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 77, 1, 24);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(4).collect();
+
+    let mut direct = build_engine("pld", &srt, &EngineOpts::default()).unwrap();
+    let expected: Vec<Vec<u32>> = items
+        .iter()
+        .enumerate()
+        .map(|(i, it)| {
+            let sp = SamplingParams { temperature: 0.7, top_p: 0.9, seed: 100 + i as u64 };
+            direct.generate_sampled(&it.prompt, it.max_new, Some(sp)).unwrap().tokens
+        })
+        .collect();
+
+    let (solo, _) = serve_concurrent_sampled(&items, 7537, 1, true, 0);
+    let (batched, _) = serve_concurrent_sampled(&items, 7538, 3, false, 0);
+    let (fused, stats) = serve_concurrent_sampled(&items, 7539, 3, true, 0);
+    let (cached, _) = serve_concurrent_sampled(&items, 7540, 3, true, 8);
+
+    assert_eq!(solo, expected, "solo sampled serving differs from direct engine");
+    assert_eq!(batched, expected, "batched sampled serving diverged");
+    assert_eq!(fused, expected, "lock-step fused sampled serving diverged");
+    assert_eq!(cached, expected, "prefix-cached sampled serving diverged");
+    assert_eq!(stats.req("sampled").unwrap().as_u64().unwrap(), items.len() as u64);
 }
 
 #[test]
