@@ -1,7 +1,10 @@
 //! Hot-path microbenchmarks: per-(variant, step-shape) step latency, commit
-//! latency, PLD matcher throughput, the L3 overhead split — and the
+//! latency, PLD matcher throughput, the L3 overhead split, the
 //! serial-vs-blocked-vs-threaded kernel comparison behind the perf
-//! trajectory (`scripts/bench_hotpath.sh` -> `BENCH_hotpath.json`).
+//! trajectory (`scripts/bench_hotpath.sh` -> `BENCH_hotpath.json`) — and
+//! the int8 section: chunked q8 matmul vs an unsplit widened reference
+//! plus an aq8 T=64 step at threads=1 vs threads=N, both asserted
+//! bitwise-identical (the bench doubles as the kernel determinism check).
 //!
 //! This is the measurement harness behind EXPERIMENTS.md §Perf: it tells us
 //! where a step's time goes (XLA compute vs KV shuttle vs host bookkeeping)
@@ -132,8 +135,10 @@ fn main() -> anyhow::Result<()> {
     // ---- serial vs blocked vs threaded (the perf-trajectory record) ----
     let d = srt.info.d_model;
     let (mm_naive_ms, mm_blocked_ms) = matmul_compare(d, reps.max(3));
-    let step1_ms = step_t64_ms(&rt_with_threads(&scale, 1)?, reps)?;
-    let stepn_ms = step_t64_ms(&rt_with_threads(&scale, threads_n)?, reps)?;
+    let srt1 = rt_with_threads(&scale, 1, &[Variant::Target, Variant::Aq8])?;
+    let srtn = rt_with_threads(&scale, threads_n, &[Variant::Target, Variant::Aq8])?;
+    let step1_ms = step_t64_ms(&srt1, reps)?;
+    let stepn_ms = step_t64_ms(&srtn, reps)?;
 
     let mut t = Table::new(
         &format!("serial vs blocked vs threaded — scale={scale}, d={d}"),
@@ -153,6 +158,42 @@ fn main() -> anyhow::Result<()> {
     ]);
     println!("{}", t.to_text());
 
+    // ---- int8 kernels (fixed-split determinism is ASSERTED here) ----
+    let (q8_naive_ms, q8_ms) = matmul_q8_compare(d, reps.max(3));
+    let (q8_step1_ms, q8_bits1) = step_t64_aq8(&srt1, reps)?;
+    let (q8_stepn_ms, q8_bitsn) = step_t64_aq8(&srtn, reps)?;
+    assert_eq!(
+        q8_bits1, q8_bitsn,
+        "aq8 T=64 step diverged between threads=1 and threads={threads_n}"
+    );
+
+    let mut t = Table::new(
+        &format!("int8 kernels — scale={scale}, d={d} (bitwise checks passed)"),
+        &["kernel", "ms", "speedup"],
+    );
+    t.row(vec![
+        "matmul q8 (64,d)x(d,4d) unsplit i64".into(),
+        format!("{q8_naive_ms:.3}"),
+        "1.00".into(),
+    ]);
+    t.row(vec![
+        "matmul q8 (64,d)x(d,4d) chunked".into(),
+        format!("{q8_ms:.3}"),
+        format!("{:.2}", q8_naive_ms / q8_ms.max(1e-9)),
+    ]);
+    t.row(vec![
+        "  vs f32 blocked".into(),
+        format!("{mm_blocked_ms:.3}"),
+        format!("{:.2}", mm_blocked_ms / q8_ms.max(1e-9)),
+    ]);
+    t.row(vec!["aq8 step T=64, threads=1".into(), format!("{q8_step1_ms:.3}"), "-".into()]);
+    t.row(vec![
+        format!("aq8 step T=64, threads={threads_n}"),
+        format!("{q8_stepn_ms:.3}"),
+        format!("{:.2}", q8_step1_ms / q8_stepn_ms.max(1e-9)),
+    ]);
+    println!("{}", t.to_text());
+
     if json {
         // keep this the LAST stdout line: scripts/bench_hotpath.sh tails it
         println!(
@@ -160,19 +201,28 @@ fn main() -> anyhow::Result<()> {
              \"matmul_naive_ms\":{mm_naive_ms:.6},\"matmul_blocked_ms\":{mm_blocked_ms:.6},\
              \"matmul_speedup\":{:.4},\
              \"step_t64_ms_threads1\":{step1_ms:.6},\"step_t64_ms_threaded\":{stepn_ms:.6},\
-             \"threads_n\":{threads_n},\"thread_speedup\":{:.4}}}",
+             \"threads_n\":{threads_n},\"thread_speedup\":{:.4},\
+             \"matmul_q8_unsplit_ms\":{q8_naive_ms:.6},\"matmul_q8_ms\":{q8_ms:.6},\
+             \"q8_vs_f32_blocked\":{:.4},\
+             \"step_q8_t64_ms_threads1\":{q8_step1_ms:.6},\
+             \"step_q8_t64_ms_threaded\":{q8_stepn_ms:.6},\"q8_thread_bitwise\":true}}",
             mm_naive_ms / mm_blocked_ms.max(1e-9),
             step1_ms / stepn_ms.max(1e-9),
+            mm_blocked_ms / q8_ms.max(1e-9),
         );
     }
     Ok(())
 }
 
 /// A runtime pinned to an explicit thread budget.
-fn rt_with_threads(scale: &str, threads: usize) -> anyhow::Result<ScaleRuntime> {
+fn rt_with_threads(
+    scale: &str,
+    threads: usize,
+    variants: &[Variant],
+) -> anyhow::Result<ScaleRuntime> {
     let mut rt = Runtime::open(&Runtime::default_dir())?;
     rt.set_threads(threads);
-    rt.load_scale(scale, &[Variant::Target])
+    rt.load_scale(scale, variants)
 }
 
 /// The pre-blocking scalar matmul, timed against the blocked library
@@ -222,6 +272,96 @@ fn matmul_compare(d: usize, reps: usize) -> (f64, f64) {
         "blocked kernel diverged from serial"
     );
     (naive_ms, blocked_ms)
+}
+
+/// Int8 twin of [`matmul_compare`]: the chunked `matmul_bias_q8` kernel
+/// timed against an inline unsplit widened reference (one i64 accumulation
+/// over the full input dimension, same f32 epilogue), on the same
+/// prefill-sized (64, d) x (d, 4d) problem. Chunk partials are exact in
+/// i32 and integer addition is associative, so the two must agree BITWISE
+/// — asserted, which makes this the bench-side half of the fixed-split
+/// determinism check (the unit-test half lives in runtime/reference.rs).
+fn matmul_q8_compare(d: usize, reps: usize) -> (f64, f64) {
+    let rows = 64;
+    let dout = 4 * d;
+    let mut rng = SplitMix64::new(43);
+    let mut gen = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect()
+    };
+    let src = gen(rows * d);
+    let w = gen(dout * d); // transposed (dout, d) — QuantPlane layout
+    let bias = gen(dout);
+
+    // activations per-row, weights per-output-channel
+    let mut xq = vec![0i8; rows * d];
+    let mut xs = vec![0f32; rows];
+    for r in 0..rows {
+        xs[r] = reference::quantize_row(&src[r * d..(r + 1) * d], &mut xq[r * d..(r + 1) * d]);
+    }
+    let mut wq = vec![0i8; dout * d];
+    let mut ws = vec![0f32; dout];
+    for o in 0..dout {
+        ws[o] = reference::quantize_row(&w[o * d..(o + 1) * d], &mut wq[o * d..(o + 1) * d]);
+    }
+
+    let mut out_ref = vec![0f32; rows * dout];
+    let mut out_q8 = vec![0f32; rows * dout];
+
+    let start = Instant::now();
+    for _ in 0..reps {
+        for r in 0..rows {
+            let x = &xq[r * d..(r + 1) * d];
+            let out = &mut out_ref[r * dout..(r + 1) * dout];
+            for o in 0..dout {
+                let wrow = &wq[o * d..(o + 1) * d];
+                let mut acc = 0i64;
+                for (a, b) in x.iter().zip(wrow) {
+                    acc += *a as i64 * *b as i64;
+                }
+                out[o] = bias[o] + acc as f32 * xs[r] * ws[o];
+            }
+        }
+    }
+    let naive_ms = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    let start = Instant::now();
+    for _ in 0..reps {
+        reference::matmul_bias_q8(&xq, &xs, &wq, &ws, Some(&bias), &mut out_q8, rows, d, dout);
+    }
+    let q8_ms = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(&out_ref),
+        bits(&out_q8),
+        "chunked int8 kernel diverged from unsplit widened reference"
+    );
+    (naive_ms, q8_ms)
+}
+
+/// Mean T=64 aq8-step latency on a warmed cache, plus the step's logits
+/// bits so the caller can assert thread-count invariance of the whole
+/// quantized forward (not just the isolated matmul).
+fn step_t64_aq8(srt: &ScaleRuntime, reps: usize) -> anyhow::Result<(f64, Vec<u32>)> {
+    let mut kv = srt.new_kv(Variant::Aq8)?;
+    let warm: Vec<u32> = (0..128u32).map(|i| 26 + (i * 7) % 240).collect();
+    feed(srt, &mut kv, &warm)?;
+    let tree = DraftTree::chain(1, &[30; 63], 64);
+    let (toks, mask, depths) = tree.serialize(64, 0);
+    let mut bits = Vec::new();
+    for _ in 0..3 {
+        let pos0 = kv.pos;
+        let out = srt.step(&mut kv, 64, 64, &toks, &mask, &depths)?;
+        bits = out.logits.iter().map(|x| x.to_bits()).collect();
+        srt.rollback(&mut kv, pos0);
+    }
+    let start = Instant::now();
+    for _ in 0..reps {
+        let pos0 = kv.pos;
+        srt.step(&mut kv, 64, 64, &toks, &mask, &depths)?;
+        srt.rollback(&mut kv, pos0);
+    }
+    Ok((start.elapsed().as_secs_f64() * 1e3 / reps as f64, bits))
 }
 
 /// Mean T=64 target-step latency on a warmed cache.

@@ -48,12 +48,9 @@ pub struct DraftConfig {
 
 impl DraftConfig {
     pub fn model(variant: Variant, vc: bool, prior: f64) -> Self {
-        let base = match variant {
-            Variant::Ls40 => "ls40",
-            Variant::Ls60 => "ls60",
-            Variant::Ee => "ee",
-            Variant::Target => "target",
-        };
+        // name after the variant key so new variants (aq8, aq8ls40, ...)
+        // never need an arm here
+        let base = variant.key();
         DraftConfig {
             name: if vc { format!("vc({base},pld)") } else { base.to_string() },
             source: DraftSource::Model(variant),

@@ -2,11 +2,19 @@
 //! same DSIA draft + PLD ingredients CAS-Spec uses — but with *fixed*
 //! scheduling, no online adaptation:
 //!
-//!   * `vc`   — vertical cascade: the layer-sparse draft's own chain
-//!              drafting is accelerated by PLD underneath (M_t ← M_d1 ← M_dn).
-//!   * `hc`   — horizontal cascade: early chain tokens from the (slower,
-//!              higher-α) model draft, later tokens from PLD.
-//!   * `vchc` — both (the full CS-Drafting configuration of Fig. 3).
+//!   * `vc`      — vertical cascade: the layer-sparse draft's own chain
+//!                 drafting is accelerated by PLD underneath
+//!                 (M_t ← M_d1 ← M_dn).
+//!   * `hc`      — horizontal cascade: early chain tokens from the (slower,
+//!                 higher-α) model draft, later tokens from PLD.
+//!   * `vchc`    — both (the full CS-Drafting configuration of Fig. 3).
+//!   * `casc-aq` — Mixing-DSIA vertical *model* cascade: the sparse `ls60`
+//!                 draft proposes a chain, the int8-activation `aq8` draft
+//!                 verifies it as one chain step (appending its own bonus),
+//!                 and only the quantized-filtered chain reaches the
+//!                 target — the Tiny → 2B-int8 → 7B hierarchy of the
+//!                 speculative-cascade literature, realized self-
+//!                 speculatively.
 //!
 //! These are the baselines DyTC's +47%/+73% improvements are measured
 //! against (Fig. 3 / §5.2).
@@ -16,11 +24,11 @@ use anyhow::Result;
 use crate::model::Variant;
 use crate::pld::PldMatcher;
 use crate::runtime::{ScaleRuntime, StepOutput, VERIFY_T};
-use crate::spec::{SamplingParams, VariantSession};
+use crate::spec::{verify_greedy, DraftTree, SamplingParams, VariantSession};
 
 use super::common::{
-    absorb_verify, draft_chain, draft_chain_vc, pending_chain, target_plumbing,
-    BranchCache, GenState, PendingVerify, RoundStep,
+    absorb_verify, chain_step_shape, draft_chain, draft_chain_vc, pending_chain,
+    target_plumbing, BranchCache, GenState, PendingVerify, RoundStep,
 };
 use super::{Engine, EngineOpts, RequestRun};
 
@@ -29,6 +37,8 @@ enum Mode {
     Vc,
     Hc,
     VcHc,
+    /// Vertical model cascade through the quantized mid tier.
+    Aq,
 }
 
 /// Static-cascade engine (`vc` / `hc` / `vchc`).
@@ -66,13 +76,21 @@ impl<'rt> CascadeEngine<'rt> {
     pub fn new_vchc(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
         Ok(Self { rt, mode: Mode::VcHc, k_model: 6, k_pld: 7, inner_k: 7, name: "vchc" })
     }
+
+    /// Quantized vertical model cascade (`casc-aq`): ls60 → aq8 → target.
+    pub fn new_aq(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
+        Ok(Self { rt, mode: Mode::Aq, k_model: 12, k_pld: 0, inner_k: 7, name: "casc-aq" })
+    }
 }
 
-/// Per-request state: target + ls40 draft sessions, PLD corpus, and the
-/// draft's branch-aware cache tracker.
+/// Per-request state: target + primary draft sessions (ls40, or the
+/// quantized aq8 mid tier for `casc-aq`), the optional ls60 bottom draft
+/// (`casc-aq` only), PLD corpus, and branch-aware cache trackers.
 pub struct CascadeRun<'rt> {
     target: VariantSession<'rt>,
     draft: VariantSession<'rt>,
+    /// `casc-aq`'s bottom proposer (ls60) and its cache tracker.
+    bottom: Option<(VariantSession<'rt>, BranchCache)>,
     matcher: PldMatcher,
     bc: BranchCache,
     mode: Mode,
@@ -98,6 +116,10 @@ impl RoundStep for CascadeRun<'_> {
         // max_chain + 2 = VERIFY_T + 1 head-room on the draft side
         self.target.capacity_left() > VERIFY_T
             && self.draft.capacity_left() >= VERIFY_T + 1
+            && self
+                .bottom
+                .as_ref()
+                .map_or(true, |(b, _)| b.capacity_left() >= VERIFY_T + 1)
     }
 
     fn draft_round(&mut self) -> Result<Option<PendingVerify>> {
@@ -171,6 +193,50 @@ impl RoundStep for CascadeRun<'_> {
                     st.stats.pld_proposals += 1;
                 }
             }
+            Mode::Aq => {
+                // ls60 → aq8 vertical model cascade: the sparse bottom
+                // proposes a chain; the quantized mid tier verifies it as
+                // one chain step (the same verify machinery the target
+                // uses, one tier down) and appends its own bonus token.
+                // Only the mid-filtered chain reaches the target, so a
+                // cheap-but-wrong bottom proposal costs one aq8 step, not
+                // a target slot.
+                let k = self.k_model.min(budget);
+                let (bottom, bbc) = self.bottom.as_mut().expect("casc-aq bottom loaded");
+                bbc.ensure(bottom, &committed, &[], &mut st.stats)?;
+                let cd = draft_chain(bottom, root, k, None, &mut st.stats)?;
+                bbc.advanced(&[root]);
+                if cd.tokens.len() > 1 {
+                    bbc.advanced(&cd.tokens[..cd.tokens.len() - 1]);
+                }
+                if cd.tokens.is_empty() {
+                    // bottom had nothing (immediate EOS budget edge):
+                    // let the mid tier draft directly
+                    let md = draft_chain(&mut self.draft, root, k, None, &mut st.stats)?;
+                    self.bc.advanced(&[root]);
+                    if md.tokens.len() > 1 {
+                        self.bc.advanced(&md.tokens[..md.tokens.len() - 1]);
+                    }
+                    chain = md.tokens;
+                } else {
+                    let t_shape = chain_step_shape(cd.tokens.len() + 1);
+                    let tree = DraftTree::chain(root, &cd.tokens, t_shape);
+                    let out = self.draft.verify_tree(&tree, t_shape)?;
+                    st.stats.draft_calls += 1;
+                    let vocab = self.draft.vocab();
+                    let v = verify_greedy(&tree, &out.logits, vocab);
+                    self.draft.commit_slots(t_shape, &v.accepted_slots)?;
+                    let last = *v.accepted_slots.last().unwrap();
+                    self.draft
+                        .set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
+                    self.bc.advanced(&[root]);
+                    self.bc.advanced(&v.accepted_tokens);
+                    chain = v.accepted_tokens;
+                    if chain.len() < budget && chain.last() != Some(&crate::tokenizer::EOS) {
+                        chain.push(v.bonus);
+                    }
+                }
+            }
         }
         chain.truncate(budget);
         Ok(Some(pending_chain(root, &chain)))
@@ -213,17 +279,33 @@ impl Engine for CascadeEngine<'_> {
         sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let mut draft = VariantSession::new(self.rt, Variant::Ls40)?;
+        // casc-aq's primary draft is the quantized mid tier; everything
+        // else drafts with ls40
+        let draft_variant = match self.mode {
+            Mode::Aq => Variant::Aq8,
+            _ => Variant::Ls40,
+        };
+        let mut draft = VariantSession::new(self.rt, draft_variant)?;
 
         let mut st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
         let matcher = PldMatcher::new(prompt);
         draft.feed(prompt)?;
         st.stats.draft_calls += 1;
         let bc = BranchCache::new(draft.pos());
+        let bottom = if self.mode == Mode::Aq {
+            let mut b = VariantSession::new(self.rt, Variant::Ls60)?;
+            b.feed(prompt)?;
+            st.stats.draft_calls += 1;
+            let bbc = BranchCache::new(b.pos());
+            Some((b, bbc))
+        } else {
+            None
+        };
 
         Ok(Box::new(CascadeRun {
             target,
             draft,
+            bottom,
             matcher,
             bc,
             mode: self.mode,

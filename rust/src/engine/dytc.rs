@@ -102,18 +102,28 @@ impl Sched {
     }
 }
 
-/// The CAS-Spec engine (`cas-spec` / `cas-spec+`).
+/// The CAS-Spec engine (`cas-spec` / `cas-spec+` / `cas-spec-aq`).
 pub struct DytcEngine<'rt> {
     rt: &'rt ScaleRuntime,
     sched: RefCell<Sched>,
     name: &'static str,
     with_ee: bool,
+    with_quant: bool,
 }
 
 impl<'rt> DytcEngine<'rt> {
     /// Build the DyTC engine; `with_ee` adds the Kangaroo early-exit draft
-    /// to the configuration space (`cas-spec+`).
-    pub fn new(rt: &'rt ScaleRuntime, with_ee: bool, opts: &EngineOpts) -> Result<Self> {
+    /// to the configuration space (`cas-spec+`), `with_quant` adds the
+    /// int8-activation DSIA pair (`cas-spec-aq`): full-depth `aq8` (near-
+    /// target acceptance, cost just under target) and the mixed
+    /// sparse+quantized `aq8ls40` — so Alg. 2 searches over
+    /// sparse → quantized → target hierarchies, the Mixing-DSIA cascade.
+    pub fn new(
+        rt: &'rt ScaleRuntime,
+        with_ee: bool,
+        with_quant: bool,
+        opts: &EngineOpts,
+    ) -> Result<Self> {
         let mut configs = vec![
             cs(DraftConfig::model(Variant::Ls40, false, 0.80), 0.60),
             cs(DraftConfig::model(Variant::Ls40, true, 0.80), 0.50),
@@ -123,6 +133,11 @@ impl<'rt> DytcEngine<'rt> {
         if with_ee {
             configs.push(cs(DraftConfig::model(Variant::Ee, false, 0.70), 0.35));
             configs.push(cs(DraftConfig::model(Variant::Ee, true, 0.70), 0.30));
+        }
+        if with_quant {
+            configs.push(cs(DraftConfig::model(Variant::Aq8, false, 0.88), 0.72));
+            configs.push(cs(DraftConfig::model(Variant::Aq8Ls40, false, 0.72), 0.42));
+            configs.push(cs(DraftConfig::model(Variant::Aq8Ls40, true, 0.72), 0.36));
         }
         configs.push(cs(DraftConfig::pld(), 0.01));
         let pld_idx = configs.len() - 1;
@@ -136,8 +151,15 @@ impl<'rt> DytcEngine<'rt> {
                 target_step_secs: 0.0,
                 inner_k: 7,
             }),
-            name: if with_ee { "cas-spec+" } else { "cas-spec" },
+            name: if with_quant {
+                "cas-spec-aq"
+            } else if with_ee {
+                "cas-spec+"
+            } else {
+                "cas-spec"
+            },
             with_ee,
+            with_quant,
         })
     }
 }
@@ -169,6 +191,8 @@ pub struct DytcRun<'rt> {
     ls40: VariantSession<'rt>,
     ls60: VariantSession<'rt>,
     ee: Option<VariantSession<'rt>>,
+    aq8: Option<VariantSession<'rt>>,
+    aq8ls40: Option<VariantSession<'rt>>,
     prompt: Vec<u32>,
     matcher: PldMatcher,
     caches: Vec<BranchCache>,
@@ -185,6 +209,7 @@ impl<'rt> DytcRun<'rt> {
         rt: &'rt ScaleRuntime,
         sched: &'rt RefCell<Sched>,
         with_ee: bool,
+        with_quant: bool,
         prompt: &[u32],
         max_new: usize,
         sampling: Option<SamplingParams>,
@@ -197,19 +222,31 @@ impl<'rt> DytcRun<'rt> {
         } else {
             None
         };
+        let (aq8, aq8ls40) = if with_quant {
+            (
+                Some(VariantSession::new(rt, Variant::Aq8)?),
+                Some(VariantSession::new(rt, Variant::Aq8Ls40)?),
+            )
+        } else {
+            (None, None)
+        };
 
         let st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
         let matcher = PldMatcher::new(prompt);
         // Draft sessions are prefilled lazily on first use: a request whose
         // scheduling never touches a DSIA variant (pure PLD rounds) pays
         // nothing for it. BranchCache spans the full sequence incl. prompt.
-        let caches: Vec<BranchCache> = (0..3).map(|_| BranchCache::new(0)).collect();
+        // One cache slot per potential draft session (see `draft_round`'s
+        // variant → slot map).
+        let caches: Vec<BranchCache> = (0..5).map(|_| BranchCache::new(0)).collect();
 
         Ok(DytcRun {
             target,
             ls40,
             ls60,
             ee,
+            aq8,
+            aq8ls40,
             prompt: prompt.to_vec(),
             matcher,
             caches,
@@ -336,6 +373,10 @@ impl RoundStep for DytcRun<'_> {
                             Variant::Ls40 => (0usize, &mut self.ls40),
                             Variant::Ls60 => (1usize, &mut self.ls60),
                             Variant::Ee => (2usize, self.ee.as_mut().expect("ee loaded")),
+                            Variant::Aq8 => (3usize, self.aq8.as_mut().expect("aq8 loaded")),
+                            Variant::Aq8Ls40 => {
+                                (4usize, self.aq8ls40.as_mut().expect("aq8ls40 loaded"))
+                            }
                             Variant::Target => unreachable!("target is never a draft"),
                         };
                         if sess.capacity_left() < committed.len() + k + path.len() + 8 {
@@ -506,6 +547,7 @@ impl Engine for DytcEngine<'_> {
             self.rt,
             &self.sched,
             self.with_ee,
+            self.with_quant,
             prompt,
             max_new,
             sampling,

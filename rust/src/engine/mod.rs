@@ -17,8 +17,10 @@
 //! | `vchc`      | Fig. 3 "VC+HC"     | both (CS-Drafting)               |
 //! | `tr`        | Fig. 3 "Tr"        | static draft tree (SWIFT+tree)   |
 //! | `trvc`      | Fig. 3 "Tr+VC"     | static tree, VC-drafted chains   |
+//! | `casc-aq`   | Mixing-DSIA casc.  | ls60 → aq8 (int8) → target       |
 //! | `cas-spec`  | CAS-Spec           | DyTC over {ls40, ls60, PLD, VC}  |
 //! | `cas-spec+` | CAS-Spec†          | DyTC adding the Kangaroo draft   |
+//! | `cas-spec-aq` | CAS-Spec (Mixing) | DyTC adding the int8 drafts     |
 //!
 //! Two entry points per engine:
 //!
@@ -389,9 +391,9 @@ impl Default for EngineOpts {
 }
 
 /// All engine names, in the order they appear in the paper's tables.
-pub const ENGINES: [&str; 12] = [
-    "ar", "lade", "pld", "swift", "kangaroo", "vc", "hc", "vchc", "tr", "trvc",
-    "cas-spec", "cas-spec+",
+pub const ENGINES: [&str; 14] = [
+    "ar", "lade", "pld", "swift", "kangaroo", "vc", "hc", "vchc", "casc-aq", "tr",
+    "trvc", "cas-spec", "cas-spec+", "cas-spec-aq",
 ];
 
 /// DSIA variants an engine needs loaded (besides the target).
@@ -401,6 +403,10 @@ pub fn required_variants(kind: &str) -> Vec<Variant> {
         "ar" | "pld" | "lade" => {}
         "swift" | "vc" | "hc" | "vchc" | "tr" | "trvc" => v.push(Variant::Ls40),
         "kangaroo" => v.push(Variant::Ee),
+        "casc-aq" => {
+            v.push(Variant::Ls60);
+            v.push(Variant::Aq8);
+        }
         "cas-spec" => {
             v.push(Variant::Ls40);
             v.push(Variant::Ls60);
@@ -409,6 +415,12 @@ pub fn required_variants(kind: &str) -> Vec<Variant> {
             v.push(Variant::Ls40);
             v.push(Variant::Ls60);
             v.push(Variant::Ee);
+        }
+        "cas-spec-aq" => {
+            v.push(Variant::Ls40);
+            v.push(Variant::Ls60);
+            v.push(Variant::Aq8);
+            v.push(Variant::Aq8Ls40);
         }
         other => panic!("unknown engine {other:?}"),
     }
@@ -430,10 +442,12 @@ pub fn build_engine<'rt>(
         "vc" => Box::new(cascade::CascadeEngine::new_vc(rt, opts)?),
         "hc" => Box::new(cascade::CascadeEngine::new_hc(rt, opts)?),
         "vchc" => Box::new(cascade::CascadeEngine::new_vchc(rt, opts)?),
+        "casc-aq" => Box::new(cascade::CascadeEngine::new_aq(rt, opts)?),
         "tr" => Box::new(tree_static::TreeEngine::new(rt, false, opts)?),
         "trvc" => Box::new(tree_static::TreeEngine::new(rt, true, opts)?),
-        "cas-spec" => Box::new(dytc::DytcEngine::new(rt, false, opts)?),
-        "cas-spec+" => Box::new(dytc::DytcEngine::new(rt, true, opts)?),
+        "cas-spec" => Box::new(dytc::DytcEngine::new(rt, false, false, opts)?),
+        "cas-spec+" => Box::new(dytc::DytcEngine::new(rt, true, false, opts)?),
+        "cas-spec-aq" => Box::new(dytc::DytcEngine::new(rt, false, true, opts)?),
         other => anyhow::bail!("unknown engine {other:?}"),
     })
 }
@@ -548,7 +562,10 @@ mod tests {
         let srt = all_variants_runtime();
         let opts = EngineOpts::default();
         let prompt = [2u32, 35, 45, 55];
-        for name in ["ar", "lade", "pld", "swift", "vc", "hc", "vchc", "tr", "cas-spec"] {
+        for name in [
+            "ar", "lade", "pld", "swift", "vc", "hc", "vchc", "casc-aq", "tr",
+            "cas-spec", "cas-spec-aq",
+        ] {
             let mut eng = build_engine(name, &srt, &opts).unwrap();
             let want = eng.generate(&prompt, 6).unwrap().tokens;
 
@@ -666,6 +683,17 @@ mod tests {
         }
         assert_eq!(required_variants("pld"), vec![Variant::Target]);
         assert_eq!(required_variants("cas-spec+").len(), 4);
+        // the quantized engines pull in the int8 variants
+        assert!(required_variants("casc-aq").contains(&Variant::Aq8));
+        assert!(required_variants("casc-aq").contains(&Variant::Ls60));
+        assert_eq!(required_variants("cas-spec-aq").len(), 5);
+        assert!(required_variants("cas-spec-aq").contains(&Variant::Aq8Ls40));
+        // every required variant of every engine is a registered variant
+        for name in ENGINES {
+            for v in required_variants(name) {
+                assert!(Variant::ALL.contains(&v), "{name}: unregistered variant");
+            }
+        }
     }
 
     #[test]

@@ -88,7 +88,8 @@ FLAGS
   --verbose           per-request progress lines
 
 ENGINES
-  ar lade pld swift kangaroo vc hc vchc tr trvc cas-spec cas-spec+
+  ar lade pld swift kangaroo vc hc vchc casc-aq tr trvc
+  cas-spec cas-spec+ cas-spec-aq
 "#;
 
 fn info(args: &Args) -> Result<()> {

@@ -30,10 +30,22 @@ pub enum Variant {
     Ls60,
     /// Early exit + adapter — Kangaroo-style.
     Ee,
+    /// Full depth, int8 activations — the paper's quantization DSIA axis.
+    Aq8,
+    /// Mixed DSIA: layer sparsity 0.4 (the `Ls40` keep set) AND int8
+    /// activations — the sparse+quantized middle of a mixed cascade.
+    Aq8Ls40,
 }
 
 impl Variant {
-    pub const ALL: [Variant; 4] = [Variant::Target, Variant::Ls40, Variant::Ls60, Variant::Ee];
+    pub const ALL: [Variant; 6] = [
+        Variant::Target,
+        Variant::Ls40,
+        Variant::Ls60,
+        Variant::Ee,
+        Variant::Aq8,
+        Variant::Aq8Ls40,
+    ];
 
     pub fn key(&self) -> &'static str {
         match self {
@@ -41,6 +53,8 @@ impl Variant {
             Variant::Ls40 => "ls40",
             Variant::Ls60 => "ls60",
             Variant::Ee => "ee",
+            Variant::Aq8 => "aq8",
+            Variant::Aq8Ls40 => "aq8ls40",
         }
     }
 
@@ -50,8 +64,17 @@ impl Variant {
             "ls40" => Variant::Ls40,
             "ls60" => Variant::Ls60,
             "ee" => Variant::Ee,
+            "aq8" => Variant::Aq8,
+            "aq8ls40" => Variant::Aq8Ls40,
             _ => return Err(anyhow!("unknown variant {s:?}")),
         })
+    }
+
+    /// Whether this variant runs the int8-activation forward path
+    /// (weights stay f32; activations are per-row symmetric-quantized
+    /// around the four big matmuls — see `runtime::reference`).
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, Variant::Aq8 | Variant::Aq8Ls40)
     }
 }
 
@@ -250,6 +273,10 @@ pub fn variant_layers(n_layers: usize, early_exit_layer: usize, v: Variant) -> V
         // sparsity 0.6 -> keep 40%
         Variant::Ls60 => keep_set(n_layers, (0.4 * n_layers as f64).ceil() as usize),
         Variant::Ee => (0..early_exit_layer).collect(),
+        // quantization is an activation-path property, not a layer-set one:
+        // aq8 runs every layer, aq8ls40 runs exactly the ls40 keep set
+        Variant::Aq8 => (0..n_layers).collect(),
+        Variant::Aq8Ls40 => keep_set(n_layers, (0.6 * n_layers as f64).ceil() as usize),
     }
 }
 
@@ -446,10 +473,27 @@ mod tests {
 
     #[test]
     fn variant_keys_roundtrip() {
+        // the arity is asserted explicitly so growing the enum without
+        // updating ALL (or vice versa) fails here, not in a downstream
+        // iteration that silently skips the new variant
+        assert_eq!(Variant::ALL.len(), 6);
+        let mut seen = std::collections::BTreeSet::new();
         for v in Variant::ALL {
             assert_eq!(Variant::from_key(v.key()).unwrap(), v);
+            assert!(seen.insert(v.key()), "duplicate key {:?}", v.key());
         }
         assert!(Variant::from_key("bogus").is_err());
+    }
+
+    #[test]
+    fn quantized_predicate_matches_variants() {
+        for v in Variant::ALL {
+            assert_eq!(
+                v.is_quantized(),
+                matches!(v, Variant::Aq8 | Variant::Aq8Ls40),
+                "{v:?}"
+            );
+        }
     }
 
     #[test]
@@ -485,9 +529,17 @@ mod tests {
                 assert!(vi.layers.windows(2).all(|w| w[0] < w[1]));
                 assert!(vi.layers.iter().all(|li| *li < l));
                 // first/last always kept for the layer-sparse variants
-                if matches!(v, Variant::Ls40 | Variant::Ls60) {
+                if matches!(v, Variant::Ls40 | Variant::Ls60 | Variant::Aq8Ls40) {
                     assert_eq!(vi.layers[0], 0);
                     assert_eq!(*vi.layers.last().unwrap(), l - 1);
+                }
+                // quantization never changes the layer set: aq8 is
+                // full-depth, aq8ls40 shares ls40's keep set exactly
+                if v == Variant::Aq8 {
+                    assert_eq!(vi.layers, sc.variant(Variant::Target).unwrap().layers);
+                }
+                if v == Variant::Aq8Ls40 {
+                    assert_eq!(vi.layers, sc.variant(Variant::Ls40).unwrap().layers);
                 }
                 // every named parameter has a shape
                 for p in &vi.params {

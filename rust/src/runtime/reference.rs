@@ -48,6 +48,28 @@
 //! DSIA variants are parameter *subsets* of the target: layer weights are
 //! `Rc`-shared across variants, mirroring the PJRT backend's shared device
 //! buffers (the paper's self-speculative property at the host level).
+//!
+//! # Int8 activation quantization (`aq8` / `aq8ls40`)
+//!
+//! The quantized DSIA variants run the same layer stack with the four big
+//! per-layer matmuls (`wqkv`, `wo`, `wi`, `wo2`) executed as int8×int8
+//! integer dots: activations are per-row symmetric-quantized on the fly
+//! (`x_q = round(x·127/max|x|)`, one f32 scale per row), weights are
+//! quantized once at load into an [`Rc`]-shared per-layer sidecar
+//! ([`QuantPlanes`], per-output-channel scales, transposed for contiguous
+//! dot products), and the i8×i8 products accumulate in **fixed-split
+//! widened integer** form ([`matmul_bias_q8`]): i32 partials over
+//! [`Q8_CHUNK`]-sized slices of the input dimension, summed into an i64
+//! total. Integer addition is associative, so — unlike the f32 kernels,
+//! where bit-stability must be bought by freezing the summation order —
+//! the int8 path is byte-identical across any chunking or thread count
+//! *by construction*; the per-element f32 epilogue
+//! (`bias + acc·scale_x·scale_w`) is a fixed expression. Everything
+//! around the quantized matmuls (LN, attention, GELU, residuals, KV rows,
+//! logits) stays f32, so the KV cache layout and the verification
+//! contract are unchanged — a quantized draft only *proposes* tokens, and
+//! the target's unquantized verify step decides, which is why
+//! losslessness is preserved by construction.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -84,10 +106,69 @@ struct EeAdapter {
     b: Vec<f32>,
 }
 
+/// One weight matrix quantized for the int8 path: the row-major
+/// `(din, dout)` f32 plane transposed to `(dout, din)` i8 with one
+/// symmetric scale per output channel, so each output's integer dot
+/// streams a contiguous i8 row.
+pub struct QuantPlane {
+    /// Transposed `(dout, din)` int8 weights.
+    pub q: Vec<i8>,
+    /// Per-output-channel dequantization scales (`len == dout`).
+    pub scales: Vec<f32>,
+    /// Input dimension (row length of `q`).
+    pub din: usize,
+    /// Output dimension (row count of `q`).
+    pub dout: usize,
+}
+
+impl QuantPlane {
+    /// Quantize a row-major `(din, dout)` f32 weight plane. Built once at
+    /// load; the hot loop never re-quantizes weights.
+    fn from_row_major(w: &[f32], din: usize, dout: usize) -> QuantPlane {
+        debug_assert_eq!(w.len(), din * dout);
+        let mut q = vec![0i8; din * dout];
+        let mut scales = vec![0f32; dout];
+        let mut col = vec![0f32; din];
+        for o in 0..dout {
+            for i in 0..din {
+                col[i] = w[i * dout + o];
+            }
+            scales[o] = quantize_row(&col, &mut q[o * din..(o + 1) * din]);
+        }
+        QuantPlane { q, scales, din, dout }
+    }
+}
+
+/// Per-layer int8 sidecar for the four big matmuls of the quantized
+/// forward path. Like [`Layer`], `Rc`-shared across quantized variants
+/// (the self-speculative property extends to the sidecar: `aq8` and
+/// `aq8ls40` quantize each shared layer exactly once).
+pub struct QuantPlanes {
+    wqkv: QuantPlane,
+    wo: QuantPlane,
+    wi: QuantPlane,
+    wo2: QuantPlane,
+}
+
+impl QuantPlanes {
+    fn build(layer: &Layer, d: usize) -> QuantPlanes {
+        let dh2 = 4 * d;
+        QuantPlanes {
+            wqkv: QuantPlane::from_row_major(&layer.wqkv, d, 3 * d),
+            wo: QuantPlane::from_row_major(&layer.wo, d, d),
+            wi: QuantPlane::from_row_major(&layer.wi, d, dh2),
+            wo2: QuantPlane::from_row_major(&layer.wo2, dh2, d),
+        }
+    }
+}
+
 struct RefVariant {
     info: VariantInfo,
     /// Executed layers in order; `Rc`-shared across variants.
     layers: Vec<Rc<Layer>>,
+    /// Int8 weight sidecars aligned with `layers`; `Some` iff the variant
+    /// runs the quantized activation path ([`Variant::is_quantized`]).
+    quant: Option<Vec<Rc<QuantPlanes>>>,
 }
 
 /// A loaded scale on the reference backend.
@@ -186,6 +267,7 @@ impl RefBackend {
         }
 
         let mut layer_cache: BTreeMap<usize, Rc<Layer>> = BTreeMap::new();
+        let mut quant_cache: BTreeMap<usize, Rc<QuantPlanes>> = BTreeMap::new();
         let mut vmap = BTreeMap::new();
         let mut need_ee = false;
         for v in variants {
@@ -202,8 +284,25 @@ impl RefBackend {
                 };
                 layers.push(layer);
             }
+            let quant = if v.is_quantized() {
+                let mut planes = Vec::with_capacity(vi.layers.len());
+                for (li, layer) in vi.layers.iter().zip(&layers) {
+                    let qp = match quant_cache.get(li) {
+                        Some(q) => q.clone(),
+                        None => {
+                            let q = Rc::new(QuantPlanes::build(layer, info.d_model));
+                            quant_cache.insert(*li, q.clone());
+                            q
+                        }
+                    };
+                    planes.push(qp);
+                }
+                Some(planes)
+            } else {
+                None
+            };
             need_ee |= *v == Variant::Ee;
-            vmap.insert(*v, RefVariant { info: vi, layers });
+            vmap.insert(*v, RefVariant { info: vi, layers, quant });
         }
 
         let ee = if need_ee {
@@ -316,6 +415,120 @@ pub fn matmul_bias(
     }
 }
 
+/// Fixed accumulation split of the int8 kernel: i8×i8 products accumulate
+/// in i32 over `Q8_CHUNK`-sized slices of the input dimension, and the
+/// chunk partials sum into an i64 total. The boundaries are deterministic
+/// (`0, Q8_CHUNK, 2·Q8_CHUNK, …`) and integer addition is associative, so
+/// the result is byte-identical at any thread count or chunk regrouping —
+/// the bit-stability the f32 kernels can only get by freezing summation
+/// order. Overflow-safe by a wide margin: a chunk partial is at most
+/// `Q8_CHUNK · 127² < 2²¹` and the widened total is exact in i64.
+pub const Q8_CHUNK: usize = 64;
+
+/// Per-row symmetric activation quantization: `dst[i] =
+/// round(row[i]·127/max|row|)` clamped to `[-127, 127]`, returning the
+/// dequantization scale `max|row|/127`. An all-zero row yields scale `0`
+/// and all-zero codes (no division happens), so the dequantized product
+/// is exactly `0`.
+pub fn quantize_row(row: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(row.len(), dst.len());
+    let mut maxa = 0f32;
+    for v in row {
+        maxa = maxa.max(v.abs());
+    }
+    if maxa == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / maxa;
+    for (d, v) in dst.iter_mut().zip(row) {
+        *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    maxa / 127.0
+}
+
+/// Fixed-split widened i8×i8 dot product (see [`Q8_CHUNK`]): i32 chunk
+/// partials summed into i64. `chunk` is parameterized so the property
+/// tests can prove chunk-count invariance; the hot path uses [`Q8_CHUNK`].
+pub fn dot_q8_chunked(x: &[i8], w: &[i8], chunk: usize) -> i64 {
+    debug_assert_eq!(x.len(), w.len());
+    debug_assert!(chunk > 0);
+    let mut acc = 0i64;
+    let mut i = 0;
+    while i < x.len() {
+        let end = (i + chunk).min(x.len());
+        let mut part = 0i32;
+        for k in i..end {
+            part += x[k] as i32 * w[k] as i32;
+        }
+        acc += part as i64;
+        i = end;
+    }
+    acc
+}
+
+/// Int8 twin of [`matmul_bias`]: `dst[r][o] = bias[o] +
+/// dot_q8(xq[r], wq[o]) · x_scale[r] · w_scale[o]`, with `xq` the
+/// per-row-quantized `(rows, din)` activations and `wq` a transposed
+/// `(dout, din)` weight plane ([`QuantPlane`] layout). The integer dot is
+/// the fixed-split widened accumulation of [`dot_q8_chunked`]; the f32
+/// epilogue is one fixed per-element expression — so the output is
+/// byte-identical however the work is split.
+///
+/// Public so `benches/hotpath.rs` and the property tests can exercise the
+/// kernel directly; not a stable API.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_q8(
+    xq: &[i8],
+    x_scale: &[f32],
+    wq: &[i8],
+    w_scale: &[f32],
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+) {
+    for r in 0..rows {
+        let x = &xq[r * din..(r + 1) * din];
+        let xs = x_scale[r];
+        let out = &mut dst[r * dout..(r + 1) * dout];
+        for o in 0..dout {
+            let acc = dot_q8_chunked(x, &wq[o * din..(o + 1) * din], Q8_CHUNK);
+            let b = bias.map_or(0.0, |b| b[o]);
+            out[o] = b + acc as f32 * xs * w_scale[o];
+        }
+    }
+}
+
+/// Quantize `rows` activation rows of width `din` into `xq`/`xs`, then run
+/// the int8 matmul against a prebuilt weight sidecar plane.
+fn matmul_bias_q8_act(
+    src: &[f32],
+    plane: &QuantPlane,
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    rows: usize,
+    xq: &mut [i8],
+    xs: &mut [f32],
+) {
+    let din = plane.din;
+    for r in 0..rows {
+        xs[r] = quantize_row(&src[r * din..(r + 1) * din], &mut xq[r * din..(r + 1) * din]);
+    }
+    matmul_bias_q8(
+        &xq[..rows * din],
+        xs,
+        &plane.q,
+        &plane.scales,
+        bias,
+        dst,
+        rows,
+        din,
+        plane.dout,
+    );
+}
+
 /// tanh-approx GELU (matches the Pallas kernel and the L2 model).
 #[inline]
 fn gelu(x: f32) -> f32 {
@@ -403,10 +616,15 @@ struct LaneScratch {
     /// Per-worker score buffers for head-parallel attention (reused
     /// across layers and steps so worker threads allocate nothing).
     worker_scores: Vec<Vec<f32>>,
+    /// (t, 4d) int8 activation codes for the quantized matmuls (sized for
+    /// the widest input dimension; unused on the f32 path).
+    xq: Vec<i8>,
+    /// Per-row activation dequantization scales.
+    xs: Vec<f32>,
 }
 
 impl LaneScratch {
-    fn prepare(&mut self, t: usize, d: usize, dh2: usize) {
+    fn prepare(&mut self, t: usize, d: usize, dh2: usize, quantized: bool) {
         self.h.resize(t * d, 0.0);
         self.qkv.resize(t * 3 * d, 0.0);
         self.hn.resize(t * d, 0.0);
@@ -414,6 +632,10 @@ impl LaneScratch {
         self.head_out.resize(t * d, 0.0);
         self.proj.resize(t * d, 0.0);
         self.mlp.resize(t * dh2, 0.0);
+        if quantized {
+            self.xq.resize(t * dh2, 0);
+            self.xs.resize(t, 0.0);
+        }
     }
 }
 
@@ -423,6 +645,9 @@ impl LaneScratch {
 /// workers.
 struct ForwardCtx<'m> {
     layers: Vec<&'m Layer>,
+    /// Int8 weight sidecars aligned with `layers`; `Some` selects the
+    /// quantized activation path for the four big per-layer matmuls.
+    quant: Option<Vec<&'m QuantPlanes>>,
     emb: &'m [f32],
     emb_t: &'m [f32],
     pos_emb: &'m [f32],
@@ -540,8 +765,9 @@ fn forward_one(
     let (d, nh, dh, s) = (ctx.d, ctx.nh, ctx.dh, ctx.s);
     let (vocab, dh2) = (ctx.vocab, ctx.dh2);
     let t = ln.live;
-    sc.prepare(t, d, dh2);
-    let LaneScratch { h, qkv, hn, attn, head_out, proj, mlp, scores, worker_scores } = sc;
+    sc.prepare(t, d, dh2, ctx.quant.is_some());
+    let LaneScratch { h, qkv, hn, attn, head_out, proj, mlp, scores, worker_scores, xq, xs } =
+        sc;
 
     // ---- embed: h = emb[tok] + pos_emb[pos + depth] ----
     for i in 0..t {
@@ -558,16 +784,28 @@ fn forward_one(
     for (li, layer) in ctx.layers.iter().enumerate() {
         let kbase = li * ctx.plane;
         let vbase = kbase + nh * ctx.head;
+        let qp = ctx.quant.as_deref().map(|q| q[li]);
         ln_rows(h, &layer.ln1_g, &layer.ln1_b, hn, t, d);
-        matmul_bias(
-            &hn[..t * d],
-            &layer.wqkv,
-            Some(&layer.bqkv),
-            &mut qkv[..t * 3 * d],
-            t,
-            d,
-            3 * d,
-        );
+        match qp {
+            Some(q) => matmul_bias_q8_act(
+                &hn[..t * d],
+                &q.wqkv,
+                Some(&layer.bqkv),
+                &mut qkv[..t * 3 * d],
+                t,
+                xq,
+                xs,
+            ),
+            None => matmul_bias(
+                &hn[..t * d],
+                &layer.wqkv,
+                Some(&layer.bqkv),
+                &mut qkv[..t * 3 * d],
+                t,
+                d,
+                3 * d,
+            ),
+        }
 
         // --- tree attention: committed cache rows, then ancestors ---
         {
@@ -614,7 +852,12 @@ fn forward_one(
         }
 
         // h = (h + attn @ wo) + bo
-        matmul_bias(&attn[..t * d], &layer.wo, None, &mut proj[..t * d], t, d, d);
+        match qp {
+            Some(q) => {
+                matmul_bias_q8_act(&attn[..t * d], &q.wo, None, &mut proj[..t * d], t, xq, xs)
+            }
+            None => matmul_bias(&attn[..t * d], &layer.wo, None, &mut proj[..t * d], t, d, d),
+        }
         for i in 0..t {
             let hr = &mut h[i * d..(i + 1) * d];
             let pr = &proj[i * d..(i + 1) * d];
@@ -625,14 +868,26 @@ fn forward_one(
 
         // h = (h + gelu(ln2(h) @ wi + bi) @ wo2) + bo2
         ln_rows(h, &layer.ln2_g, &layer.ln2_b, hn, t, d);
-        matmul_bias(&hn[..t * d], &layer.wi, None, &mut mlp[..t * dh2], t, d, dh2);
+        match qp {
+            Some(q) => {
+                matmul_bias_q8_act(&hn[..t * d], &q.wi, None, &mut mlp[..t * dh2], t, xq, xs)
+            }
+            None => matmul_bias(&hn[..t * d], &layer.wi, None, &mut mlp[..t * dh2], t, d, dh2),
+        }
         for i in 0..t {
             let mrow = &mut mlp[i * dh2..(i + 1) * dh2];
             for (o, bv) in mrow.iter_mut().zip(&layer.bi) {
                 *o = gelu(*o + bv);
             }
         }
-        matmul_bias(&mlp[..t * dh2], &layer.wo2, None, &mut proj[..t * d], t, dh2, d);
+        match qp {
+            Some(q) => {
+                matmul_bias_q8_act(&mlp[..t * dh2], &q.wo2, None, &mut proj[..t * d], t, xq, xs)
+            }
+            None => {
+                matmul_bias(&mlp[..t * dh2], &layer.wo2, None, &mut proj[..t * d], t, dh2, d)
+            }
+        }
         for i in 0..t {
             let hr = &mut h[i * d..(i + 1) * d];
             let pr = &proj[i * d..(i + 1) * d];
@@ -729,6 +984,7 @@ impl RefBackend {
 
         let ctx = ForwardCtx {
             layers: var.layers.iter().map(|l| l.as_ref()).collect(),
+            quant: var.quant.as_ref().map(|qs| qs.iter().map(|q| q.as_ref()).collect()),
             emb: &self.emb,
             emb_t: &self.emb_t,
             pos_emb: &self.pos_emb,
@@ -1241,6 +1497,151 @@ mod tests {
         for (i, li) in ls40.info.layers.iter().enumerate() {
             assert!(Rc::ptr_eq(&ls40.layers[i], &target.layers[*li]));
         }
+    }
+
+    #[test]
+    fn quantized_variants_share_layers_and_quant_planes() {
+        let be = backend();
+        let target = &be.variants[&Variant::Target];
+        let aq8 = &be.variants[&Variant::Aq8];
+        let mixed = &be.variants[&Variant::Aq8Ls40];
+        // f32 layers are still the target's, Rc-shared
+        for (i, li) in aq8.info.layers.iter().enumerate() {
+            assert!(Rc::ptr_eq(&aq8.layers[i], &target.layers[*li]));
+        }
+        // the int8 sidecar exists only for quantized variants and each
+        // shared layer was quantized exactly once (Rc-shared sidecar)
+        assert!(target.quant.is_none());
+        let aq = aq8.quant.as_ref().expect("aq8 sidecar");
+        let mq = mixed.quant.as_ref().expect("aq8ls40 sidecar");
+        assert_eq!(aq.len(), aq8.info.layers.len());
+        assert_eq!(mq.len(), mixed.info.layers.len());
+        for (i, li) in mixed.info.layers.iter().enumerate() {
+            let j = aq8.info.layers.iter().position(|x| x == li).unwrap();
+            assert!(Rc::ptr_eq(&mq[i], &aq[j]), "layer {li} sidecar not shared");
+        }
+    }
+
+    #[test]
+    fn int8_matmul_matches_unsplit_widened_reference() {
+        // the fixed-split kernel must equal an unchunked i64 accumulation
+        // bitwise — integer adds are associative, so any split agrees
+        let mut rng = 0x2545f4914f6cdd1du64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            ((rng >> 11) as f64 / (1u64 << 53) as f64) as f32 - 0.5
+        };
+        for (rows, din, dout) in [(1, 7, 1), (3, 65, 33), (5, 128, 97), (2, 513, 16)] {
+            let src: Vec<f32> = (0..rows * din).map(|_| next()).collect();
+            let w: Vec<f32> = (0..din * dout).map(|_| next()).collect();
+            let bias: Vec<f32> = (0..dout).map(|_| next()).collect();
+            let plane = QuantPlane::from_row_major(&w, din, dout);
+            let mut xq = vec![0i8; rows * din];
+            let mut xs = vec![0f32; rows];
+            for r in 0..rows {
+                xs[r] = quantize_row(&src[r * din..(r + 1) * din], &mut xq[r * din..(r + 1) * din]);
+            }
+            for b in [None, Some(&bias[..])] {
+                let mut got = vec![1f32; rows * dout]; // junk start: must be overwritten
+                matmul_bias_q8(
+                    &xq, &xs, &plane.q, &plane.scales, b, &mut got, rows, din, dout,
+                );
+                for r in 0..rows {
+                    for o in 0..dout {
+                        let mut acc = 0i64;
+                        for i in 0..din {
+                            acc += xq[r * din + i] as i64 * plane.q[o * din + i] as i64;
+                        }
+                        let want = b.map_or(0.0, |b| b[o])
+                            + acc as f32 * xs[r] * plane.scales[o];
+                        assert_eq!(
+                            got[r * dout + o].to_bits(),
+                            want.to_bits(),
+                            "rows={rows} din={din} dout={dout} r={r} o={o} bias={}",
+                            b.is_some(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_step_bitwise_identical_across_threads() {
+        // the acceptance criterion: the int8 matmul path must produce
+        // byte-identical logits and KV at threads=1 vs threads=4, on both
+        // the head-parallel prefill and the lane-parallel batched path
+        let serial = backend_threads(1);
+        let threaded = backend_threads(4);
+
+        // head-parallel: one T=64 quantized prefill lane
+        let toks: Vec<u32> = (0..64u32).map(|i| 26 + (i * 7) % 240).collect();
+        let (t64, m64, d64) = chain_inputs(&toks, 64);
+        let mut kv_s = serial.new_kv(Variant::Aq8).unwrap();
+        let lg_s = serial
+            .step(Variant::Aq8, &mut kv_s, 0, 64, 64, &t64, &m64, &d64)
+            .unwrap();
+        let mut kv_t = threaded.new_kv(Variant::Aq8).unwrap();
+        let lg_t = threaded
+            .step(Variant::Aq8, &mut kv_t, 0, 64, 64, &t64, &m64, &d64)
+            .unwrap();
+        assert_eq!(
+            lg_s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            lg_t.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "quantized prefill logits diverged across thread counts"
+        );
+        assert_eq!(host(&kv_s), host(&kv_t), "quantized prefill KV diverged");
+
+        // lane-parallel: mixed quantized/unquantized batch
+        let specs: [(Variant, Vec<u32>); 4] = [
+            (Variant::Aq8, vec![1, 30, 40]),
+            (Variant::Aq8Ls40, vec![2, 31]),
+            (Variant::Target, vec![5, 33, 44, 55]),
+            (Variant::Aq8, vec![3, 32, 47]),
+        ];
+        let mut results: Vec<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = Vec::new();
+        for be in [&serial, &threaded] {
+            let mut kvs: Vec<KvState> =
+                specs.iter().map(|(v, _)| be.new_kv(*v).unwrap()).collect();
+            let inputs: Vec<(Vec<u32>, Vec<f32>, Vec<i32>)> =
+                specs.iter().map(|(_, toks)| chain_inputs(toks, 8)).collect();
+            let mut lanes: Vec<LaneStep<'_>> = kvs
+                .iter_mut()
+                .zip(specs.iter())
+                .zip(inputs.iter())
+                .map(|((kv, (v, toks)), (tk, mk, dp))| LaneStep {
+                    variant: *v,
+                    kv,
+                    pos: 0,
+                    live: toks.len(),
+                    tokens: tk,
+                    mask: mk,
+                    depths: dp,
+                })
+                .collect();
+            let out = be.step_batch(8, &mut lanes).unwrap();
+            drop(lanes);
+            let caches: Vec<Vec<f32>> = kvs.iter().map(|kv| host(kv).to_vec()).collect();
+            results.push((out, caches));
+        }
+        assert_eq!(results[0].0, results[1].0, "quantized batched logits diverged");
+        assert_eq!(results[0].1, results[1].1, "quantized batched KV diverged");
+    }
+
+    #[test]
+    fn quantized_forward_actually_quantizes() {
+        // aq8 runs the same layer set as target; if the int8 path were a
+        // no-op the logits would match target's bitwise — they must not
+        let be = backend();
+        let (t8, m8, d8) = chain_inputs(&[1, 30, 40], 8);
+        let mut kv_t = be.new_kv(Variant::Target).unwrap();
+        let lg_t = be.step(Variant::Target, &mut kv_t, 0, 8, 3, &t8, &m8, &d8).unwrap();
+        let mut kv_q = be.new_kv(Variant::Aq8).unwrap();
+        let lg_q = be.step(Variant::Aq8, &mut kv_q, 0, 8, 3, &t8, &m8, &d8).unwrap();
+        assert_ne!(lg_t, lg_q, "quantized forward produced target's exact logits");
+        assert!(lg_q.iter().all(|v| v.is_finite()), "quantized logits not finite");
     }
 
     #[test]

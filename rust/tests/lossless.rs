@@ -44,6 +44,35 @@ fn lossless_across_seeds_and_lengths() {
 }
 
 #[test]
+fn quantized_engines_stay_lossless_across_seeds() {
+    // The int8-activation drafts (aq8 / aq8ls40) propose through a
+    // different numeric path than the target verifies with; losslessness
+    // must hold anyway because verification is unchanged. Sweep the two
+    // quantized engines — the ls60→aq8→target static cascade and the
+    // quantized-pool DyTC — across seeds and lengths, greedy and sampled.
+    let rt = open_runtime();
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let engines = vec!["casc-aq".to_string(), "cas-spec-aq".to_string()];
+    for (seed, max_new) in [(1u64, 18usize), (2, 33), (9, 10)] {
+        let suite = Suite::spec_bench(&lang, seed, 1, max_new);
+        run_suite(&srt, &suite, &engines, &EngineOpts::default(), true, false)
+            .unwrap_or_else(|e| panic!("greedy seed {seed} len {max_new}: {e:#}"));
+        let sp = SamplingParams { temperature: 0.8, top_p: 0.92, seed: seed * 71 };
+        run_suite_with(
+            &srt,
+            &suite,
+            &engines,
+            &EngineOpts::default(),
+            true,
+            false,
+            Some(sp),
+        )
+        .unwrap_or_else(|e| panic!("sampled seed {seed} len {max_new}: {e:#}"));
+    }
+}
+
+#[test]
 fn engine_state_reuse_stays_lossless() {
     // DyTC keeps estimator state across requests; repeated generates on the
     // same engine instance must stay lossless (run_suite reuses instances).

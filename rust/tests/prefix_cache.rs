@@ -143,6 +143,59 @@ fn draft_variants_have_their_own_namespace() {
 }
 
 #[test]
+fn quantized_variant_namespace_is_isolated_and_bit_exact() {
+    // aq8 runs the SAME layer set as the target but a different numeric
+    // path, so its KV rows differ bitwise from the target's for the same
+    // prompt. Cache namespaces must keep them apart: an aq8 prefill never
+    // reuses target blocks (or vice versa), and aq8's own reuse is
+    // bit-exact against a cold aq8 session.
+    let warm = runtime(8);
+    let (p1, _) = shared_prompts();
+
+    let mut t = VariantSession::new(&warm, Variant::Target).unwrap();
+    t.feed(&p1).unwrap();
+    let mut q = VariantSession::new(&warm, Variant::Aq8).unwrap();
+    q.feed(&p1).unwrap();
+    assert_eq!(
+        warm.counters(Variant::Aq8).tokens_reused,
+        0,
+        "aq8 prefill must miss on target-published blocks"
+    );
+    // the two variants' post-prefill logits genuinely differ — if they
+    // were equal, namespace isolation would be vacuous here
+    assert_ne!(
+        t.last_logits().unwrap(),
+        q.last_logits().unwrap(),
+        "aq8 and target produced identical logits; quantization inactive?"
+    );
+
+    // a second aq8 session reuses aq8's own blocks, bit-exactly vs cold
+    let mut q2 = VariantSession::new(&warm, Variant::Aq8).unwrap();
+    q2.feed(&p1).unwrap();
+    assert!(warm.counters(Variant::Aq8).tokens_reused > 0);
+    assert_eq!(q.last_logits().unwrap(), q2.last_logits().unwrap());
+    let cold = runtime(0);
+    let mut qc = VariantSession::new(&cold, Variant::Aq8).unwrap();
+    qc.feed(&p1).unwrap();
+    assert_eq!(
+        q2.last_logits().unwrap(),
+        qc.last_logits().unwrap(),
+        "cache-seeded aq8 prefill diverged from cold aq8"
+    );
+
+    // and the reverse direction: target still misses on aq8 blocks
+    let target_reused_before = warm.counters(Variant::Target).tokens_reused;
+    let mut t2 = VariantSession::new(&warm, Variant::Target).unwrap();
+    t2.feed(&p1).unwrap();
+    let c = warm.counters(Variant::Target);
+    assert!(
+        c.tokens_reused > target_reused_before,
+        "target should reuse its OWN earlier blocks"
+    );
+    assert_eq!(t.last_logits().unwrap(), t2.last_logits().unwrap());
+}
+
+#[test]
 fn export_import_roundtrip_continues_bitwise() {
     // The ScaleRuntime-level primitive under the cache: committed rows
     // exported from one request's KV seed a fresh cache that continues

@@ -7,6 +7,7 @@
 use cas_spec::analytic::{simulate, t_hc, t_sd, t_vc, Scheme};
 use cas_spec::dytc::{expected_accepted, find_best_config, step_objective, AcceptanceEstimator};
 use cas_spec::pld::PldMatcher;
+use cas_spec::runtime::reference::{dot_q8_chunked, quantize_row, Q8_CHUNK};
 use cas_spec::spec::{verify_greedy, DraftTree};
 use cas_spec::util::rng::SplitMix64;
 
@@ -202,6 +203,83 @@ fn prop_find_best_config_is_argmax() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn prop_quantize_dequantize_error_bounded() {
+    // per-row symmetric int8: |x - q·scale| ≤ scale/2 for every element
+    // (round-to-nearest; the max-|x| element maps exactly to ±127)
+    for (seed, mut rng) in rngs() {
+        let n = 1 + rng.next_below(300) as usize;
+        let row: Vec<f32> =
+            (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 8.0).collect();
+        let mut q = vec![0i8; n];
+        let scale = quantize_row(&row, &mut q);
+        let maxa = row.iter().fold(0f32, |m, v| m.max(v.abs()));
+        if maxa == 0.0 {
+            assert_eq!(scale, 0.0, "seed {seed}");
+            assert!(q.iter().all(|&c| c == 0), "seed {seed}");
+            continue;
+        }
+        assert!(scale > 0.0, "seed {seed}");
+        // scale/2 plus a few ulps of slack for the f32 round-trip
+        let bound = scale * 0.5 + maxa * 1e-6;
+        for (i, (&x, &c)) in row.iter().zip(&q).enumerate() {
+            let err = (x - c as f32 * scale).abs();
+            assert!(err <= bound, "seed {seed} i={i}: err {err} > {bound}");
+            assert!((-127..=127).contains(&(c as i32)), "seed {seed} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_quantize_degenerate_rows() {
+    // all-zero rows must not divide by zero, and single-element rows
+    // round-trip their one value exactly (it IS the max-|x| element)
+    let mut q1 = [0i8; 1];
+    assert_eq!(quantize_row(&[0.0], &mut q1), 0.0);
+    assert_eq!(q1[0], 0);
+    let mut qz = [0i8; 64];
+    assert_eq!(quantize_row(&[0.0; 64], &mut qz), 0.0);
+    assert!(qz.iter().all(|&c| c == 0));
+    for (seed, mut rng) in rngs().take(64) {
+        let x = (rng.next_f64() as f32 - 0.5) * 20.0;
+        let scale = quantize_row(&[x], &mut q1);
+        if x == 0.0 {
+            assert_eq!(scale, 0.0, "seed {seed}");
+        } else {
+            assert_eq!(q1[0], if x > 0.0 { 127 } else { -127 }, "seed {seed}");
+            let err = (x - q1[0] as f32 * scale).abs();
+            assert!(err <= x.abs() * 1e-5, "seed {seed}: {x} vs {}", q1[0] as f32 * scale);
+        }
+    }
+}
+
+#[test]
+fn prop_fixed_split_accumulation_is_split_invariant() {
+    // integer accumulation is associative, so the chunked i32→i64 dot is
+    // byte-identical for ANY chunk size — and for any contiguous split of
+    // the input (the serial-vs-4-thread partition included)
+    for (seed, mut rng) in rngs() {
+        let n = 1 + rng.next_below(700) as usize;
+        let x: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i64 - 127) as i8).collect();
+        let w: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i64 - 127) as i8).collect();
+        let want = dot_q8_chunked(&x, &w, Q8_CHUNK);
+        // across chunk counts (incl. degenerate and oversized chunks)
+        for chunk in [1usize, 3, 17, Q8_CHUNK, n, n + 13] {
+            assert_eq!(dot_q8_chunked(&x, &w, chunk), want, "seed {seed} chunk={chunk}");
+        }
+        // across a 4-way contiguous partition (the thread-split shape):
+        // partial sums over sub-ranges recombine to the same bits
+        let step = n.div_ceil(4);
+        let mut split_sum = 0i64;
+        for part in 0..4 {
+            let lo = (part * step).min(n);
+            let hi = ((part + 1) * step).min(n);
+            split_sum += dot_q8_chunked(&x[lo..hi], &w[lo..hi], Q8_CHUNK);
+        }
+        assert_eq!(split_sum, want, "seed {seed}: 4-way split diverged");
     }
 }
 

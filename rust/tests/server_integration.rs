@@ -17,13 +17,18 @@
 //! The whole suite honors `CAS_SPEC_PREFIX_CACHE_MB` (CI runs it with
 //! the cross-request prefix cache off *and* on — losslessness must hold
 //! either way); `prefix_cache_stats_prove_reuse` additionally forces the
-//! cache on and asserts the reuse counters move.
+//! cache on and asserts the reuse counters move. It also honors
+//! `CAS_SPEC_SERVER_ENGINE` (default `pld`): CI re-runs the suite with
+//! the quantized cascade `casc-aq` so int8-activation drafting is proven
+//! lossless end to end through the server, at `CAS_SPEC_THREADS=1` and
+//! at default threads. Every expected transcript is computed against AR
+//! or the direct engine, so any lossless engine must pass unchanged.
 
 use std::thread;
 use std::time::Duration;
 
 use cas_spec::config::RunConfig;
-use cas_spec::engine::{build_engine, EngineOpts};
+use cas_spec::engine::{build_engine, required_variants, EngineOpts};
 use cas_spec::model::Variant;
 use cas_spec::runtime::Runtime;
 use cas_spec::server::{serve, Client};
@@ -38,6 +43,15 @@ fn env_prefix_cache_mb() -> usize {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(0)
+}
+
+/// Engine under test: the CI matrix leg sets `CAS_SPEC_SERVER_ENGINE`
+/// (e.g. to the quantized cascade `casc-aq`) to push the whole suite
+/// through a different lossless engine; defaults to `pld`. The server's
+/// worker loads whatever variants the engine requires, so quantized
+/// engines exercise the int8 forward path end to end.
+fn env_engine() -> String {
+    std::env::var("CAS_SPEC_SERVER_ENGINE").unwrap_or_else(|_| "pld".into())
 }
 
 /// Wait until the server accepts connections AND its worker answers a
@@ -71,7 +85,7 @@ fn serve_generate_stats_shutdown() {
 
     let mut cfg = RunConfig::default();
     cfg.scale = "small".into();
-    cfg.engines = vec!["pld".into()]; // lossless => same tokens as AR
+    cfg.engines = vec![env_engine()]; // lossless => same tokens as AR
     cfg.addr = "127.0.0.1:7531".into();
     cfg.prefix_cache_mb = env_prefix_cache_mb();
     let addr = cfg.addr.clone();
@@ -131,7 +145,7 @@ fn serve_generate_stats_shutdown() {
     // stats reflect the served requests
     let stats = client.stats().unwrap();
     assert!(stats.req("served").unwrap().as_u64().unwrap() >= 3);
-    assert_eq!(stats.req("engine").unwrap().as_str().unwrap(), "pld");
+    assert_eq!(stats.req("engine").unwrap().as_str().unwrap(), env_engine());
     let backend = stats.req("backend").unwrap().as_str().unwrap().to_string();
     assert!(backend == "ref" || backend == "pjrt", "unexpected backend {backend:?}");
 
@@ -161,7 +175,7 @@ fn continuous_batching_is_lossless_and_interleaves() {
 
     let mut cfg = RunConfig::default();
     cfg.scale = "small".into();
-    cfg.engines = vec!["pld".into()]; // lossless => same tokens as AR
+    cfg.engines = vec![env_engine()]; // lossless => same tokens as AR
     cfg.addr = "127.0.0.1:7532".into();
     cfg.max_batch = 3;
     cfg.prefix_cache_mb = env_prefix_cache_mb();
@@ -243,7 +257,7 @@ fn serve_concurrent(
 ) -> (Vec<Vec<u32>>, cas_spec::util::json::Json) {
     let mut cfg = RunConfig::default();
     cfg.scale = "small".into();
-    cfg.engines = vec!["pld".into()];
+    cfg.engines = vec![env_engine()];
     cfg.addr = format!("127.0.0.1:{port}");
     cfg.max_batch = max_batch;
     cfg.lockstep = lockstep;
@@ -326,7 +340,7 @@ fn serve_suite(
 ) -> (Vec<Vec<u32>>, cas_spec::util::json::Json) {
     let mut cfg = RunConfig::default();
     cfg.scale = "small".into();
-    cfg.engines = vec!["pld".into()];
+    cfg.engines = vec![env_engine()];
     cfg.addr = format!("127.0.0.1:{port}");
     cfg.prefix_cache_mb = prefix_cache_mb;
     let addr = cfg.addr.clone();
@@ -365,7 +379,7 @@ fn serve_concurrent_sampled(
 ) -> (Vec<Vec<u32>>, cas_spec::util::json::Json) {
     let mut cfg = RunConfig::default();
     cfg.scale = "small".into();
-    cfg.engines = vec!["pld".into()];
+    cfg.engines = vec![env_engine()];
     cfg.addr = format!("127.0.0.1:{port}");
     cfg.max_batch = max_batch;
     cfg.lockstep = lockstep;
@@ -412,12 +426,14 @@ fn sampled_serving_is_deterministic_across_modes() {
     // fused, or with the prefix cache on — and all equal to the engine
     // run directly, which the harness separately pins to sampled AR.
     let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
-    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    // load whatever the engine under test needs (quantized engines pull
+    // in their draft variants)
+    let srt = rt.load_scale("small", &required_variants(&env_engine())).unwrap();
     let lang = Language::build(rt.manifest.lang_seed);
     let suite = Suite::spec_bench(&lang, 77, 1, 24);
     let items: Vec<WorkItem> = suite.items.into_iter().take(4).collect();
 
-    let mut direct = build_engine("pld", &srt, &EngineOpts::default()).unwrap();
+    let mut direct = build_engine(&env_engine(), &srt, &EngineOpts::default()).unwrap();
     let expected: Vec<Vec<u32>> = items
         .iter()
         .enumerate()

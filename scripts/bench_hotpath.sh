@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
 # Perf trajectory recorder: runs the hot-path kernel bench (serial vs
-# blocked vs threaded) and the serve_bench lock-step A/B, then writes the
+# blocked vs threaded, plus the int8 section — chunked q8 matmul vs the
+# unsplit widened reference and the aq8 step thread-parity check, both
+# asserted bitwise) and the serve_bench lock-step A/B, then writes the
 # combined record to BENCH_hotpath.json at the repo root. Append-friendly:
 # each invocation overwrites the file with the latest record; commit it to
 # keep the trajectory in history.
