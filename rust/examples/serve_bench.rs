@@ -20,10 +20,19 @@
 //!     `--json`, the last stdout line is a JSON record of both runs'
 //!     tok/s (captured by `scripts/bench_hotpath.sh`).
 //!
+//! Any scenario also takes `--trace`: each server run streams its JSONL
+//! trace to a temp file, and after the run the driver replays the stream
+//! and asserts the lifecycle invariants — timestamps monotone, per
+//! request `enqueue.t_us <= admit.t_us <= retire.t_us`, and (for
+//! speculative engines) `1 + sum(round.emitted) == retire.tokens`: the
+//! prefill token plus every round's accepted+bonus delta accounts for
+//! exactly the emitted stream.
+//!
 //!     cargo run --release --example serve_bench           # hermetic (ref backend)
 //!     cargo run --release --example serve_bench -- --scale base --requests 12
 //!     cargo run --release --example serve_bench -- --workload shared-prefix
 //!     cargo run --release --example serve_bench -- --workload lockstep
+//!     cargo run --release --example serve_bench -- --trace
 //!     make artifacts first to run against pretrained weights/PJRT
 
 use std::sync::{Arc, Mutex};
@@ -59,7 +68,7 @@ fn main() -> Result<()> {
 
 /// The mixed Spec-Bench workload: AR vs CAS-Spec latency/throughput.
 fn spec_scenario(
-    _args: &Args,
+    args: &Args,
     scale: &str,
     requests: usize,
     clients: usize,
@@ -85,6 +94,7 @@ fn spec_scenario(
             prefix_cache_mb: 0,
             max_batch: 8,
             lockstep: true,
+            trace: args.has("trace"),
         })?;
         threads = run.stats.get("threads").and_then(|v| v.as_u64()).unwrap_or(0);
         t.row(run.latency_row(engine));
@@ -136,6 +146,7 @@ fn shared_prefix_scenario(
             prefix_cache_mb: mb,
             max_batch: 8,
             lockstep: true,
+            trace: args.has("trace"),
         })?;
         t.row(run.cache_row(mb));
         threads = run.stats.get("threads").and_then(|v| v.as_u64()).unwrap_or(0);
@@ -203,6 +214,7 @@ fn lockstep_scenario(
             prefix_cache_mb: 0,
             max_batch,
             lockstep,
+            trace: args.has("trace"),
         })?;
         let s = |k: &str| run.stats.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
         let rate = run.total_tokens as f64 / run.wall.as_secs_f64();
@@ -263,6 +275,9 @@ struct RunSpec<'a> {
     prefix_cache_mb: usize,
     max_batch: usize,
     lockstep: bool,
+    /// Stream the server's JSONL trace to a temp file and assert the
+    /// lifecycle invariants after the run.
+    trace: bool,
 }
 
 struct RunOutcome {
@@ -318,6 +333,11 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
     cfg.prefix_cache_mb = spec.prefix_cache_mb;
     cfg.max_batch = spec.max_batch;
     cfg.lockstep = spec.lockstep;
+    let trace_path = spec.trace.then(|| {
+        std::env::temp_dir()
+            .join(format!("serve_bench_trace_{}_{}.jsonl", std::process::id(), spec.port))
+    });
+    cfg.trace_file = trace_path.clone();
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
 
@@ -376,7 +396,13 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
     let mut client = Client::connect(&addr)?;
     let stats = client.stats()?;
     client.shutdown()?;
-    server.join().unwrap()?;
+    server.join().unwrap()?; // serve() joins its worker: the trace file is complete
+
+    if let Some(path) = &trace_path {
+        let events = validate_trace(path)?;
+        let _ = std::fs::remove_file(path);
+        println!("(trace: {events} events validated — lifecycle ordering + token accounting)");
+    }
 
     let mut res = results.lock().unwrap().clone();
     res.sort_by_key(|(id, ..)| *id);
@@ -385,4 +411,85 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
     let lat = latency_summary(res.iter().map(|(_, d, ..)| *d).collect());
     let tokens = res.into_iter().map(|(_, _, t, _)| t).collect();
     Ok(RunOutcome { wall, total_tokens, mean_acc, lat, stats, tokens })
+}
+
+/// Replay a server's JSONL trace stream and assert the lifecycle
+/// invariants the scheduler promises: monotone timestamps, per request
+/// `enqueue <= admit <= retire` ordering, and — for requests with round
+/// spans — `1 + sum(round.emitted) == retire.tokens` (the prefill token
+/// plus every round's accepted+bonus delta is exactly the emitted
+/// stream). Returns the number of events checked.
+fn validate_trace(path: &std::path::Path) -> Result<usize> {
+    use std::collections::BTreeMap;
+
+    #[derive(Default)]
+    struct ReqTrace {
+        enqueue: Option<u64>,
+        admit: Option<u64>,
+        retire: Option<u64>,
+        tokens: u64,
+        round_emitted: u64,
+        rounds: u64,
+    }
+
+    let text = std::fs::read_to_string(path)?;
+    let mut reqs: BTreeMap<u64, ReqTrace> = BTreeMap::new();
+    let mut last_t = 0u64;
+    let mut n = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("unparseable trace line {line:?}: {e}"))?;
+        let t = j
+            .req("t_us")?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("t_us not a number in {line:?}"))?;
+        anyhow::ensure!(t >= last_t, "trace timestamps went backwards ({t} < {last_t})");
+        last_t = t;
+        let ev = j
+            .req("ev")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("ev not a string in {line:?}"))?
+            .to_string();
+        n += 1;
+        // lifecycle events carry the request id; engine-internal events
+        // (fused, cache_*, dytc_obs) don't and are only timestamp-checked
+        let Some(id) = j.get("id").and_then(|v| v.as_u64()) else { continue };
+        let r = reqs.entry(id).or_default();
+        match ev.as_str() {
+            "enqueue" => r.enqueue = Some(t),
+            "admit" => r.admit = Some(t),
+            "retire" => {
+                r.retire = Some(t);
+                r.tokens = j.req("tokens")?.as_u64().unwrap_or(0);
+            }
+            "round" => {
+                r.rounds += 1;
+                r.round_emitted += j.req("emitted")?.as_u64().unwrap_or(0);
+            }
+            _ => {}
+        }
+    }
+    anyhow::ensure!(n > 0, "trace stream is empty");
+    anyhow::ensure!(!reqs.is_empty(), "trace has no request lifecycle events");
+    for (id, r) in &reqs {
+        let (enq, adm, ret) = (r.enqueue, r.admit, r.retire);
+        anyhow::ensure!(
+            enq.is_some() && adm.is_some() && ret.is_some(),
+            "request {id}: incomplete lifecycle (enqueue={enq:?} admit={adm:?} retire={ret:?})"
+        );
+        anyhow::ensure!(
+            enq <= adm && adm <= ret,
+            "request {id}: lifecycle out of order (enqueue={enq:?} admit={adm:?} retire={ret:?})"
+        );
+        if r.rounds > 0 {
+            anyhow::ensure!(
+                1 + r.round_emitted == r.tokens,
+                "request {id}: token accounting broken — prefill(1) + round deltas ({}) != \
+                 retired tokens ({})",
+                r.round_emitted,
+                r.tokens
+            );
+        }
+    }
+    Ok(n)
 }

@@ -56,6 +56,11 @@ pub struct RunConfig {
     pub top_p: f64,
     /// Seed of the per-request SplitMix64 sampling stream.
     pub sample_seed: u64,
+    /// Stream structured trace events (JSONL, one event per line) to
+    /// this path while serving; `None` (the default) leaves tracing off
+    /// — no event timestamps are ever taken. See `obs` and
+    /// docs/ARCHITECTURE.md §Observability for the event schema.
+    pub trace_file: Option<PathBuf>,
     pub opts: EngineOpts,
 }
 
@@ -77,6 +82,7 @@ impl Default for RunConfig {
             temperature: 0.0,
             top_p: 1.0,
             sample_seed: 0,
+            trace_file: None,
             opts: EngineOpts::default(),
         }
     }
@@ -105,6 +111,9 @@ impl RunConfig {
                 "temperature" => self.temperature = v.as_f64().ok_or_else(bad(k))?,
                 "top_p" => self.top_p = v.as_f64().ok_or_else(bad(k))?,
                 "sample_seed" => self.sample_seed = v.as_u64().ok_or_else(bad(k))?,
+                "trace_file" => {
+                    self.trace_file = Some(v.as_str().ok_or_else(bad(k))?.into())
+                }
                 "draft_k" => self.opts.draft_k = v.as_usize().ok_or_else(bad(k))?,
                 "conf_stop" => self.opts.conf_stop = v.as_f64().ok_or_else(bad(k))?,
                 "dytc" => apply_dytc(&mut self.opts.dytc, v)?,
@@ -150,6 +159,9 @@ impl RunConfig {
         self.temperature = a.f64_or("temperature", self.temperature)?;
         self.top_p = a.f64_or("top-p", self.top_p)?;
         self.sample_seed = a.u64_or("sample-seed", self.sample_seed)?;
+        if let Some(p) = a.str_opt("trace-file") {
+            self.trace_file = Some(p.into());
+        }
         self.opts.draft_k = a.usize_or("draft-k", self.opts.draft_k)?;
         self.opts.conf_stop = a.f64_or("conf-stop", self.opts.conf_stop)?;
         self.opts.dytc.k_max = a.usize_or("k-max", self.opts.dytc.k_max)?;
@@ -318,6 +330,20 @@ mod tests {
         assert_eq!(cfg.top_p, 0.8);
         assert_eq!(cfg.sample_seed, 77);
         assert!(RunConfig::from_args(&args("--temperature warm")).is_err());
+    }
+
+    #[test]
+    fn trace_file_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert!(cfg.trace_file.is_none(), "tracing defaults off");
+        let cfg = RunConfig::from_args(&args("--trace-file /tmp/trace.jsonl")).unwrap();
+        assert_eq!(cfg.trace_file.as_deref(), Some(Path::new("/tmp/trace.jsonl")));
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"trace_file":"t.jsonl"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.trace_file.as_deref(), Some(Path::new("t.jsonl")));
+        assert!(cfg
+            .apply_json(&Json::parse(r#"{"trace_file":7}"#).unwrap())
+            .is_err());
     }
 
     #[test]

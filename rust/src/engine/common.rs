@@ -92,12 +92,16 @@ pub trait RoundStep {
     /// Remaining target-cache rows (the fused scheduler's guard when it
     /// pads a lane up to the group's shared step shape).
     fn target_headroom(&self) -> usize;
+    /// The runtime this run steps against — the blanket driver reaches
+    /// its observability hub ([`crate::runtime::ScaleRuntime::obs`])
+    /// through this to emit round events and fold round histograms.
+    fn runtime(&self) -> &crate::runtime::ScaleRuntime;
 }
 
-/// Expands the three target-session plumbing methods every [`RoundStep`]
-/// impl needs — `step_target`, `target_kv`, `target_headroom` — in terms
-/// of the run struct's `target: VariantSession` field, so the six engines
-/// don't each copy them. A macro rather than a trait-provided `fn
+/// Expands the target-session plumbing methods every [`RoundStep`]
+/// impl needs — `step_target`, `target_kv`, `target_headroom`,
+/// `runtime` — in terms of the run struct's `target: VariantSession`
+/// field, so the six engines don't each copy them. A macro rather than a trait-provided `fn
 /// target(&mut self) -> &mut VariantSession<'_>` accessor because that
 /// accessor cannot be written: `&mut` is invariant in the session's
 /// runtime lifetime, so the run's `VariantSession<'rt>` cannot be lent at
@@ -118,6 +122,10 @@ macro_rules! target_plumbing {
 
         fn target_headroom(&self) -> usize {
             self.target.capacity_left()
+        }
+
+        fn runtime(&self) -> &$crate::runtime::ScaleRuntime {
+            self.target.runtime()
         }
     };
 }
@@ -143,6 +151,9 @@ pub struct GenState {
     /// Sampled-decoding state: `Some` when the request asked for
     /// `temperature > 0`, `None` on the greedy (`verify_greedy`) path.
     pub sampler: Option<Sampler>,
+    /// Server-assigned request id for trace correlation (`None` outside
+    /// the server; set via [`super::RequestRun::set_trace_id`]).
+    pub trace_id: Option<u64>,
 }
 
 impl GenState {
@@ -177,6 +188,7 @@ impl GenState {
             stats: GenStats { prefill, ..Default::default() },
             round_in_flight: None,
             sampler,
+            trace_id: None,
         };
         s.stats.target_calls = 0; // prefill counted separately
         Ok(s)

@@ -422,6 +422,25 @@ impl RoundStep for DytcRun<'_> {
                     continue;
                 }
             };
+            // DyTC decision accounting: the predicted α̂ and cost prior
+            // that find_best_config chose on, paired later with the
+            // realized first-slot outcome in absorb_round
+            let obs = self.target.runtime().obs();
+            let predicted = alphas_all[ci];
+            let cost_prior = costs_all[ci];
+            obs.dytc_decision(&sched.configs[ci].cfg.name, predicted);
+            {
+                let cs = &sched.configs[ci];
+                let trace_id = st.trace_id;
+                let k_attached = toks.len();
+                obs.record(|t_us| {
+                    let id = trace_id.map_or("null".into(), |i| i.to_string());
+                    format!(
+                        "{{\"t_us\":{t_us},\"ev\":\"dytc\",\"id\":{id},\"config\":\"{}\",\"k\":{k_attached},\"alpha\":{predicted},\"cost\":{cost_prior},\"obs\":{}}}",
+                        cs.cfg.name, cs.est.observations
+                    )
+                });
+            }
             let draft_secs = t_draft.elapsed().as_secs_f64();
             if !toks.is_empty() {
                 sched.update_cost(ci, draft_secs / toks.len() as f64);
@@ -506,11 +525,21 @@ impl RoundStep for DytcRun<'_> {
         self.target.set_last_logits(&out.logits[last * vocab..(last + 1) * vocab]);
 
         // ---- estimator updates from first-token outcomes ----
+        let obs = self.target.runtime().obs();
         for exp in &self.round_expansions {
             if let Some(&(_, ok)) =
                 v.slot_outcomes.iter().find(|(s, _)| *s == exp.first_slot)
             {
                 sched.configs[exp.config].est.observe(ok);
+                // realized half of the predicted-vs-realized pair
+                let name = &sched.configs[exp.config].cfg.name;
+                obs.dytc_realized(name, ok);
+                obs.record(|t_us| {
+                    format!(
+                        "{{\"t_us\":{t_us},\"ev\":\"dytc_obs\",\"config\":\"{name}\",\"ok\":{}}}",
+                        u8::from(ok)
+                    )
+                });
             }
         }
         for c in sched.configs.iter_mut() {

@@ -179,6 +179,10 @@ pub trait RequestRun {
     fn tokens(&self) -> &[u32];
     /// Statistics accumulated so far.
     fn stats(&self) -> &GenStats;
+    /// Tag this run with the server's request id so per-round trace
+    /// events can be correlated to one request. A no-op by default
+    /// (harness/bench runs have no wire id).
+    fn set_trace_id(&mut self, _id: u64) {}
     /// Consume the run into its final [`Generation`].
     fn finish(self: Box<Self>) -> Generation;
 }
@@ -285,15 +289,36 @@ impl<T: common::RoundStep> RequestRun for T {
         // `out.elapsed` is the fused step's full latency — which is what
         // this lane actually waited for, so it belongs in its wall time.
         let step_wall = out.elapsed;
+        // tree slot 0 is the round's root (already emitted)
+        let proposed = fl.pending.tree.len().saturating_sub(1);
+        let draft_wall = fl.draft_wall;
         let t0 = Instant::now();
         self.absorb_round(fl.pending, out, t_shape)?;
+        let absorb_wall = t0.elapsed();
         let st = self.state_mut();
-        st.stats.wall += fl.draft_wall + step_wall + t0.elapsed();
+        st.stats.wall += draft_wall + step_wall + absorb_wall;
         if st.out.len() == fl.before && !st.done {
             st.done = true;
         }
         let emitted = st.out[fl.before..].to_vec();
-        Ok(RoundOutcome { emitted, done: st.done })
+        let done = st.done;
+        let trace_id = st.trace_id;
+        // round observability: every value above was already measured
+        // for stats accounting — tracing adds no clock reads
+        let obs = self.runtime().obs();
+        let round_us = (draft_wall + step_wall + absorb_wall).as_micros() as u64;
+        obs.observe_round_us(round_us);
+        obs.observe_accepted(emitted.len() as u64);
+        obs.record(|t_us| {
+            let id = trace_id.map_or("null".into(), |i| i.to_string());
+            format!(
+                "{{\"t_us\":{t_us},\"ev\":\"round\",\"id\":{id},\"proposed\":{proposed},\"emitted\":{},\"t_shape\":{t_shape},\"draft_us\":{},\"step_us\":{}}}",
+                emitted.len(),
+                draft_wall.as_micros(),
+                step_wall.as_micros()
+            )
+        });
+        Ok(RoundOutcome { emitted, done })
     }
 
     fn tokens(&self) -> &[u32] {
@@ -302,6 +327,10 @@ impl<T: common::RoundStep> RequestRun for T {
 
     fn stats(&self) -> &GenStats {
         &self.state().stats
+    }
+
+    fn set_trace_id(&mut self, id: u64) {
+        self.state_mut().trace_id = Some(id);
     }
 
     fn finish(self: Box<Self>) -> Generation {

@@ -19,8 +19,9 @@
 //!   run-to-completion and a resumable per-round entry point), the
 //!   analytic EWIF machinery ([`analytic`]), the synthetic Spec-Bench
 //!   workload ([`workload`]), a continuous-batching serving front-end
-//!   ([`server`]) with a cross-request prefix/KV cache ([`cache`]) and
-//!   the bench harness ([`harness`]).
+//!   ([`server`]) with a cross-request prefix/KV cache ([`cache`]),
+//!   a structured tracing + metrics layer ([`obs`]) and the bench
+//!   harness ([`harness`]).
 //!
 //! See docs/ARCHITECTURE.md for the paper-to-code map, the `Backend`
 //! bit-determinism contract, and the serving-loop dataflow.
@@ -38,6 +39,7 @@ pub mod engine;
 pub mod harness;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod pld;
 pub mod runtime;
 pub mod server;

@@ -83,9 +83,17 @@ FLAGS
                       still token-identical to sampled AR)
   --top-p P           nucleus truncation in (0, 1]  (default: 1.0)
   --sample-seed N     sampling RNG seed             (default: 0)
+  --trace-file PATH   serve: stream structured trace events (JSONL,
+                      one event per line) to PATH; default off.
+                      Read-only on the decode path — transcripts are
+                      byte-identical with tracing on or off
   --config FILE       JSON config (see config/mod.rs)
   --markdown          emit tables as markdown
   --verbose           per-request progress lines
+
+ENV
+  CAS_SPEC_LOG        stderr log level: error | warn | info | debug
+                      (default: info)
 
 ENGINES
   ar lade pld swift kangaroo vc hc vchc casc-aq tr trvc

@@ -5,6 +5,7 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::engine::GenStats;
+use crate::obs::Histogram;
 
 /// One completed generation measurement.
 #[derive(Debug, Clone)]
@@ -142,6 +143,27 @@ pub fn latency_summary(mut durs: Vec<Duration>) -> LatencySummary {
     }
 }
 
+/// Latency summary derived from a log-bucketed [`Histogram`] whose samples
+/// are microseconds. Percentiles resolve to bucket lower bounds, so they
+/// are within one power-of-two bucket of the exact nearest-rank value
+/// (`latency_summary` stays the exact-path API); the mean is exact because
+/// the histogram keeps a running sum.
+pub fn latency_summary_from_hist(h: &Histogram) -> LatencySummary {
+    let n = h.count();
+    if n == 0 {
+        return latency_summary(vec![]);
+    }
+    let mean_us = (h.sum() / n as u128) as u64;
+    let pick = |q: f64| Duration::from_micros(h.quantile(q));
+    LatencySummary {
+        n: n as usize,
+        mean: Duration::from_micros(mean_us),
+        p50: pick(0.50),
+        p90: pick(0.90),
+        p99: pick(0.99),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +218,27 @@ mod tests {
     #[test]
     fn empty_latency() {
         assert_eq!(latency_summary(vec![]).n, 0);
+    }
+
+    #[test]
+    fn hist_summary_tracks_exact_within_a_bucket() {
+        use crate::obs::bucket_of;
+        let samples: Vec<u64> = (1..=100).map(|ms| ms * 1000).collect();
+        let mut h = Histogram::default();
+        for &s in &samples {
+            h.observe(s);
+        }
+        let hs = latency_summary_from_hist(&h);
+        let exact = latency_summary(samples.iter().map(|&us| Duration::from_micros(us)).collect());
+        assert_eq!(hs.n, exact.n);
+        assert_eq!(hs.mean, exact.mean, "running sum keeps the mean exact");
+        for (got, want) in [(hs.p50, exact.p50), (hs.p90, exact.p90), (hs.p99, exact.p99)] {
+            assert_eq!(
+                bucket_of(got.as_micros() as u64),
+                bucket_of(want.as_micros() as u64),
+                "histogram percentile must land in the exact value's bucket"
+            );
+        }
+        assert_eq!(latency_summary_from_hist(&Histogram::default()).n, 0);
     }
 }

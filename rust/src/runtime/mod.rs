@@ -77,6 +77,7 @@ use anyhow::{anyhow, Result};
 use crate::cache::PrefixCache;
 use crate::model::weights::Weights;
 use crate::model::{Manifest, ScaleInfo, Variant};
+use crate::obs::Obs;
 
 /// Step shapes lowered by aot.py (must match python `model.STEP_SHAPES`).
 /// The reference backend computes the same shapes directly.
@@ -449,6 +450,7 @@ impl Runtime {
             counters,
             prefix_cache: None,
             threads: self.threads,
+            obs: Obs::new(),
         })
     }
 }
@@ -465,6 +467,9 @@ pub struct ScaleRuntime {
     /// Worker-thread budget the backend was loaded with (stats/bench
     /// reporting; 1 = serial).
     threads: usize,
+    /// Observability hub: trace sink + histograms + DyTC accounting.
+    /// Always present; tracing itself is off until enabled.
+    obs: Obs,
 }
 
 /// One lane of a [`ScaleRuntime::step_batch`] call. The cache handle
@@ -511,6 +516,14 @@ impl ScaleRuntime {
     /// The attached prefix cache, when one is enabled.
     pub fn prefix_cache(&self) -> Option<&PrefixCache> {
         self.prefix_cache.as_ref()
+    }
+
+    /// The observability hub shared by every layer above this runtime
+    /// (sessions, engines, the serving scheduler). Histograms are
+    /// always folded; trace events only flow after
+    /// [`crate::obs::Obs::enable_trace`].
+    pub fn obs(&self) -> &Obs {
+        &self.obs
     }
 
     /// Copy committed KV rows `start .. start + len` out of a cache
@@ -591,6 +604,9 @@ impl ScaleRuntime {
             c.tokens_stepped += live as u64;
             c.time += elapsed;
         }
+        // observability reuses the already-measured elapsed — no extra
+        // clock reads on the decode path
+        self.obs.observe_step_us(variant.key(), elapsed.as_micros() as u64);
         Ok(StepOutput { logits, elapsed })
     }
 
@@ -654,7 +670,16 @@ impl ScaleRuntime {
                 c.tokens_stepped += l.live as u64;
                 c.time += share;
             }
+            self.obs.observe_step_us(l.kv.variant.key(), share.as_micros() as u64);
         }
+        self.obs.observe_fused_width(lanes.len() as u64);
+        self.obs.record(|t_us| {
+            let total_live: usize = lanes.iter().map(|l| l.live).sum();
+            format!(
+                "{{\"t_us\":{t_us},\"ev\":\"fused\",\"lanes\":{},\"t_shape\":{t_shape},\"live\":{total_live}}}",
+                lanes.len()
+            )
+        });
         Ok(logits
             .into_iter()
             .map(|lg| {

@@ -61,18 +61,38 @@
 //! -> {"id": 1, "prompt": [1, 30, ...], "max_new": 64,
 //!     "temperature": 0.7, "top_p": 0.9, "seed": 7}
 //! <- {"id": 1, "tokens": [...], "text": "a1 ...", "ms": 123.4,
-//!     "queued_ms": 0.2, "rounds": 17, "mean_accepted": 3.4,
+//!     "queued_ms": 0.2, "prefill_ms": 12.1, "decode_ms": 104.8,
+//!     "rounds": 17, "mean_accepted": 3.4,
 //!     "batch": 3, "engine": "cas-spec"}
 //! -> {"cmd": "stats"}
 //! <- {"served": 12, "errors": 0, "total_tokens": 768, "busy_secs": 1.9,
-//!     "tok_s": 404.2, "sampled": 2, "queue_depth": 0, "running": 3,
+//!     "uptime_secs": 4.2, "tok_s": 404.2, "sampled": 2,
+//!     "queue_depth": 0, "running": 3,
 //!     "peak_batch": 4, "max_batch": 8, "threads": 8, "lockstep": true,
 //!     "fused_steps": 40, "fused_lanes": 118, "tokens_stepped": 3210,
 //!     "prefix_cache_mb": 32, "prefix_lookups": 24,
 //!     "prefix_hit_tokens": 512, "evictions": 0, "engine": "cas-spec",
 //!     "scale": "base", "backend": "ref"}
+//! -> {"cmd": "metrics"}
+//! <- {"metrics": "cas_spec_served_total 12\n...Prometheus text..."}
 //! -> {"cmd": "shutdown"}   <- {"ok": true}
 //! ```
+//!
+//! `uptime_secs` is monotonic seconds since the worker started, so one
+//! stats reply yields utilization as `busy_secs / uptime_secs`. The
+//! `metrics` reply wraps multi-line Prometheus exposition text (counters,
+//! log-bucketed histogram buckets with per-variant/per-config labels) in
+//! a single JSON string — see docs/ARCHITECTURE.md §Observability.
+//!
+//! # Event tracing
+//!
+//! With `--trace-file PATH` (config `trace_file`) the worker streams
+//! structured JSONL events — request admission/queue/retire, per-round
+//! spans, fused steps, cache traffic, DyTC decisions — through
+//! [`crate::obs::Obs`]. Tracing is read-only on the decode path:
+//! transcripts are byte-identical with tracing on or off (pinned in
+//! `tests/server_integration.rs`), and with tracing off no event
+//! closure — and no event timestamp — ever runs.
 //!
 //! # Cross-request prefix cache
 //!
@@ -104,6 +124,7 @@ use crate::engine::{build_engine, required_variants, Engine, RequestRun, RoundPh
 use crate::runtime::{BatchLane, Runtime, ScaleRuntime};
 use crate::spec::SamplingParams;
 use crate::util::json::Json;
+use crate::util::log;
 
 /// One parsed generate request.
 pub struct Request {
@@ -121,6 +142,7 @@ pub struct Request {
 enum Job {
     Generate(Request, mpsc::Sender<String>),
     Stats(mpsc::Sender<String>),
+    Metrics(mpsc::Sender<String>),
     Shutdown,
 }
 
@@ -176,9 +198,13 @@ struct SchedCounters {
 pub fn serve(cfg: &RunConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
-    eprintln!(
-        "cas-spec server on {} (engine={}, max_batch={})",
-        cfg.addr, cfg.engines[0], cfg.max_batch
+    log::info(
+        "cas-spec server up",
+        &[
+            ("addr", cfg.addr.clone()),
+            ("engine", cfg.engines[0].clone()),
+            ("max_batch", cfg.max_batch.to_string()),
+        ],
     );
 
     let (tx, rx) = mpsc::channel::<Job>();
@@ -192,6 +218,12 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
         let mut srt = rt.load_scale(&wcfg.scale, &required_variants(&engine_name))?;
         // attach the cross-request prefix cache before any session opens
         srt.enable_prefix_cache(wcfg.prefix_cache_bytes());
+        // event tracing is opt-in; the JSONL stream is complete when
+        // serve() returns because this worker thread is joined there
+        if let Some(path) = &wcfg.trace_file {
+            srt.obs().enable_trace(Some(path))?;
+            log::info("trace stream enabled", &[("file", path.display().to_string())]);
+        }
         let eng = build_engine(&engine_name, &srt, &wcfg.opts)?;
         run_scheduler(
             &rx,
@@ -257,6 +289,14 @@ fn run_scheduler(
     let mut queue: VecDeque<Queued> = VecDeque::new();
     let mut running: Vec<Active<'_>> = Vec::new();
     let mut c = SchedCounters::default();
+    // worker start: the monotonic basis for `uptime_secs` in stats
+    let up0 = Instant::now();
+    srt.obs().record(|t_us| {
+        format!(
+            "{{\"t_us\":{t_us},\"ev\":\"serve\",\"engine\":\"{engine_name}\",\"scale\":\"{}\"}}",
+            srt.info.name
+        )
+    });
 
     loop {
         // ---- drain the admission channel ----
@@ -291,10 +331,18 @@ fn run_scheduler(
                         backend: srt.backend_name(),
                         threads: srt.threads(),
                         lockstep,
+                        uptime_secs: up0.elapsed().as_secs_f64(),
                     };
                     let _ = reply.send(stats_json(&c, &view).to_string());
                 }
+                Job::Metrics(reply) => {
+                    let _ = reply.send(metrics_json(&c, srt, up0.elapsed().as_secs_f64()));
+                }
                 Job::Generate(req, reply) => {
+                    let id = req.id;
+                    srt.obs().record(|t_us| {
+                        format!("{{\"t_us\":{t_us},\"ev\":\"enqueue\",\"id\":{id}}}")
+                    });
                     queue.push_back(Queued { req, reply, enqueued: Instant::now() });
                 }
             }
@@ -320,6 +368,13 @@ fn run_scheduler(
         while running.len() < max_batch.min(admit_cap) {
             let Some(q) = queue.pop_front() else { break };
             let queued_ms = q.enqueued.elapsed().as_secs_f64() * 1e3;
+            srt.obs().observe_queue_wait_us((queued_ms * 1e3) as u64);
+            srt.obs().record(|t_us| {
+                format!(
+                    "{{\"t_us\":{t_us},\"ev\":\"admit\",\"id\":{},\"queued_ms\":{queued_ms}}}",
+                    q.req.id
+                )
+            });
             // `started` is taken BEFORE begin() so the response's `ms` and
             // the stats' busy_secs both include prompt prefill — otherwise
             // the most expensive per-request step would vanish between
@@ -331,15 +386,25 @@ fn run_scheduler(
                 c.sampled += 1;
             }
             match admitted {
-                Ok(run) => running.push(Active {
-                    id: q.req.id,
-                    reply: q.reply,
-                    run,
-                    queued_ms,
-                    started,
-                    pending_shape: None,
-                    pending_err: None,
-                }),
+                Ok(mut run) => {
+                    run.set_trace_id(q.req.id);
+                    srt.obs().record(|t_us| {
+                        format!(
+                            "{{\"t_us\":{t_us},\"ev\":\"prefill\",\"id\":{},\"ms\":{}}}",
+                            q.req.id,
+                            run.stats().prefill.as_secs_f64() * 1e3
+                        )
+                    });
+                    running.push(Active {
+                        id: q.req.id,
+                        reply: q.reply,
+                        run,
+                        queued_ms,
+                        started,
+                        pending_shape: None,
+                        pending_err: None,
+                    });
+                }
                 Err(e) => {
                     c.errors += 1;
                     let _ = q.reply.send(error_json(q.req.id, &format!("{e:#}")));
@@ -357,23 +422,42 @@ fn run_scheduler(
         if lockstep {
             advance_fused(&mut running, srt, &mut c, engine_name, batch_now);
         } else {
-            advance_per_lane(&mut running, &mut c, engine_name, batch_now);
+            advance_per_lane(&mut running, srt, &mut c, engine_name, batch_now);
         }
         c.busy_secs += t0.elapsed().as_secs_f64();
     }
 }
 
 /// Retire a finished run: build its response line and count it.
-fn retire_done(a: Active<'_>, c: &mut SchedCounters, engine_name: &str, batch_now: usize) {
+fn retire_done(
+    a: Active<'_>,
+    srt: &ScaleRuntime,
+    c: &mut SchedCounters,
+    engine_name: &str,
+    batch_now: usize,
+) {
     let gen = a.run.finish();
     c.served += 1;
     c.total_tokens += gen.tokens.len() as u64;
+    let ms = a.started.elapsed().as_secs_f64() * 1e3;
+    srt.obs().record(|t_us| {
+        format!(
+            "{{\"t_us\":{t_us},\"ev\":\"retire\",\"id\":{},\"tokens\":{},\"ms\":{ms},\"rounds\":{}}}",
+            a.id,
+            gen.tokens.len(),
+            gen.stats.rounds
+        )
+    });
     let resp = Json::obj(vec![
         ("id", Json::Num(a.id as f64)),
         ("tokens", Json::arr_u32(&gen.tokens)),
         ("text", Json::Str(crate::tokenizer::render(&gen.tokens))),
-        ("ms", Json::Num(a.started.elapsed().as_secs_f64() * 1e3)),
+        ("ms", Json::Num(ms)),
         ("queued_ms", Json::Num(a.queued_ms)),
+        // the per-phase breakdown was always measured (GenStats); now
+        // it ships on the wire next to the end-to-end `ms`
+        ("prefill_ms", Json::Num(gen.stats.prefill.as_secs_f64() * 1e3)),
+        ("decode_ms", Json::Num(gen.stats.wall.as_secs_f64() * 1e3)),
         ("rounds", Json::Num(gen.stats.rounds as f64)),
         ("mean_accepted", Json::Num(gen.stats.mean_accepted())),
         ("batch", Json::Num(batch_now as f64)),
@@ -383,8 +467,10 @@ fn retire_done(a: Active<'_>, c: &mut SchedCounters, engine_name: &str, batch_no
 }
 
 /// Retire a failed run with an error reply.
-fn retire_err(a: Active<'_>, c: &mut SchedCounters, msg: &str) {
+fn retire_err(a: Active<'_>, srt: &ScaleRuntime, c: &mut SchedCounters, msg: &str) {
     c.errors += 1;
+    srt.obs()
+        .record(|t_us| format!("{{\"t_us\":{t_us},\"ev\":\"error\",\"id\":{}}}", a.id));
     let _ = a.reply.send(error_json(a.id, msg));
 }
 
@@ -393,6 +479,7 @@ fn retire_err(a: Active<'_>, c: &mut SchedCounters, msg: &str) {
 /// as the per-lane baseline the fused path is benchmarked against.
 fn advance_per_lane(
     running: &mut Vec<Active<'_>>,
+    srt: &ScaleRuntime,
     c: &mut SchedCounters,
     engine_name: &str,
     batch_now: usize,
@@ -402,11 +489,11 @@ fn advance_per_lane(
         match running[i].run.round() {
             Err(e) => {
                 let a = running.remove(i);
-                retire_err(a, c, &format!("{e:#}"));
+                retire_err(a, srt, c, &format!("{e:#}"));
             }
             Ok(o) if o.done => {
                 let a = running.remove(i);
-                retire_done(a, c, engine_name, batch_now);
+                retire_done(a, srt, c, engine_name, batch_now);
             }
             Ok(_) => i += 1,
         }
@@ -433,11 +520,11 @@ fn advance_fused<'e>(
         match running[i].run.begin_round() {
             Err(e) => {
                 let a = running.remove(i);
-                retire_err(a, c, &format!("{e:#}"));
+                retire_err(a, srt, c, &format!("{e:#}"));
             }
             Ok(RoundPhase::Done(_)) => {
                 let a = running.remove(i);
-                retire_done(a, c, engine_name, batch_now);
+                retire_done(a, srt, c, engine_name, batch_now);
             }
             Ok(RoundPhase::Pending { t_shape }) => {
                 running[i].pending_shape = Some(t_shape);
@@ -486,7 +573,7 @@ fn advance_fused<'e>(
         while i < running.len() {
             if let Some(msg) = running[i].pending_err.take() {
                 let a = running.remove(i);
-                retire_err(a, c, &msg);
+                retire_err(a, srt, c, &msg);
             } else {
                 i += 1;
             }
@@ -499,7 +586,7 @@ fn advance_fused<'e>(
                 while i < running.len() {
                     if running[i].pending_shape == Some(shape) {
                         let a = running.remove(i);
-                        retire_err(a, c, &msg);
+                        retire_err(a, srt, c, &msg);
                     } else {
                         i += 1;
                     }
@@ -522,11 +609,11 @@ fn advance_fused<'e>(
                     match running[i].run.finish_round(out, shape) {
                         Err(e) => {
                             let a = running.remove(i);
-                            retire_err(a, c, &format!("{e:#}"));
+                            retire_err(a, srt, c, &format!("{e:#}"));
                         }
                         Ok(o) if o.done => {
                             let a = running.remove(i);
-                            retire_done(a, c, engine_name, batch_now);
+                            retire_done(a, srt, c, engine_name, batch_now);
                         }
                         Ok(_) => i += 1,
                     }
@@ -553,6 +640,9 @@ struct StatsView<'a> {
     threads: usize,
     /// Whether the lock-step fused scheduler is active.
     lockstep: bool,
+    /// Monotonic seconds since the worker started — the denominator that
+    /// makes `busy_secs` a utilization (`busy_secs / uptime_secs`).
+    uptime_secs: f64,
 }
 
 fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
@@ -563,6 +653,7 @@ fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
         ("errors", Json::Num(c.errors as f64)),
         ("total_tokens", Json::Num(c.total_tokens as f64)),
         ("busy_secs", Json::Num(c.busy_secs)),
+        ("uptime_secs", Json::Num(v.uptime_secs)),
         ("tok_s", Json::Num(tok_s)),
         ("sampled", Json::Num(c.sampled as f64)),
         ("queue_depth", Json::Num(v.queue_depth as f64)),
@@ -582,6 +673,32 @@ fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
         ("scale", Json::Str(v.scale.to_string())),
         ("backend", Json::Str(v.backend.to_string())),
     ])
+}
+
+/// Build the `{"cmd":"metrics"}` reply: Prometheus exposition text
+/// (scheduler counters, then the runtime observability hub's histograms
+/// and DyTC predicted-vs-realized counters) wrapped in a one-line JSON
+/// object — the wire protocol stays newline-delimited, and the client
+/// unescapes the text.
+fn metrics_json(c: &SchedCounters, srt: &ScaleRuntime, uptime_secs: f64) -> String {
+    let mut text = String::new();
+    text.push_str(&format!("cas_spec_served_total {}\n", c.served));
+    text.push_str(&format!("cas_spec_errors_total {}\n", c.errors));
+    text.push_str(&format!("cas_spec_tokens_total {}\n", c.total_tokens));
+    text.push_str(&format!("cas_spec_busy_seconds {}\n", c.busy_secs));
+    text.push_str(&format!("cas_spec_uptime_seconds {uptime_secs}\n"));
+    text.push_str(&format!("cas_spec_peak_batch {}\n", c.peak_batch));
+    text.push_str(&format!("cas_spec_fused_steps_total {}\n", c.fused_steps));
+    text.push_str(&format!("cas_spec_fused_lanes_total {}\n", c.fused_lanes));
+    text.push_str(&format!("cas_spec_sampled_total {}\n", c.sampled));
+    if let Some(cache) = srt.prefix_cache() {
+        let s = cache.stats();
+        text.push_str(&format!("cas_spec_prefix_lookups_total {}\n", s.lookups));
+        text.push_str(&format!("cas_spec_prefix_hit_tokens_total {}\n", s.hit_tokens));
+        text.push_str(&format!("cas_spec_prefix_evicted_blocks_total {}\n", s.evicted_blocks));
+    }
+    text.push_str(&srt.obs().render_prometheus());
+    Json::obj(vec![("metrics", Json::Str(text))]).to_string()
 }
 
 fn error_json(id: u64, msg: &str) -> String {
@@ -624,6 +741,14 @@ fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Job>) -> bool {
                     }
                 }
             }
+            Ok(ParsedLine::Metrics) => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(Job::Metrics(rtx)).is_ok() {
+                    if let Ok(resp) = rrx.recv() {
+                        let _ = writeln!(writer, "{resp}");
+                    }
+                }
+            }
             Ok(ParsedLine::Request(req)) => {
                 let (rtx, rrx) = mpsc::channel();
                 if tx.send(Job::Generate(req, rtx)).is_err() {
@@ -658,6 +783,7 @@ fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Job>) -> bool {
 enum ParsedLine {
     Request(Request),
     Stats,
+    Metrics,
     Shutdown,
 }
 
@@ -667,6 +793,7 @@ fn parse_line(line: &str) -> Result<ParsedLine> {
         return match cmd {
             "shutdown" => Ok(ParsedLine::Shutdown),
             "stats" => Ok(ParsedLine::Stats),
+            "metrics" => Ok(ParsedLine::Metrics),
             other => Err(anyhow!("unknown cmd {other:?}")),
         };
     }
@@ -771,6 +898,17 @@ impl Client {
         self.request_raw(r#"{"cmd":"stats"}"#)
     }
 
+    /// Fetch the Prometheus-style metrics exposition (multi-line text:
+    /// scheduler counters, per-variant step-latency histograms, DyTC
+    /// predicted-vs-realized acceptance counters).
+    pub fn metrics(&mut self) -> Result<String> {
+        let j = self.request_raw(r#"{"cmd":"metrics"}"#)?;
+        Ok(j.req("metrics")?
+            .as_str()
+            .ok_or_else(|| anyhow!("metrics field is not a string"))?
+            .to_string())
+    }
+
     /// Ask the server to shut down (it finishes accepting, abandons
     /// in-flight work with error replies, and exits).
     pub fn shutdown(&mut self) -> Result<()> {
@@ -824,6 +962,10 @@ mod tests {
     fn parse_commands() {
         assert!(matches!(parse_line(r#"{"cmd":"stats"}"#).unwrap(), ParsedLine::Stats));
         assert!(matches!(
+            parse_line(r#"{"cmd":"metrics"}"#).unwrap(),
+            ParsedLine::Metrics
+        ));
+        assert!(matches!(
             parse_line(r#"{"cmd":"shutdown"}"#).unwrap(),
             ParsedLine::Shutdown
         ));
@@ -870,8 +1012,14 @@ mod tests {
             backend: "ref",
             threads: 4,
             lockstep: true,
+            uptime_secs: 2.0,
         };
         let j = stats_json(&c, &v);
+        // utilization is computable from one reply: busy / uptime
+        assert!((j.get("uptime_secs").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
+        let busy = j.get("busy_secs").unwrap().as_f64().unwrap();
+        let up = j.get("uptime_secs").unwrap().as_f64().unwrap();
+        assert!((busy / up - 0.25).abs() < 1e-12);
         assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("running").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.get("peak_batch").unwrap().as_usize().unwrap(), 4);
@@ -916,8 +1064,10 @@ mod tests {
             backend: "ref",
             threads: 1,
             lockstep: false,
+            uptime_secs: 0.0,
         };
         let j = stats_json(&c, &v);
+        assert_eq!(j.get("uptime_secs").unwrap().as_f64().unwrap(), 0.0);
         assert_eq!(j.get("prefix_cache_mb").unwrap().as_usize().unwrap(), 32);
         assert!(!j.get("lockstep").unwrap().as_bool().unwrap());
         assert_eq!(j.get("prefix_lookups").unwrap().as_u64().unwrap(), 5);

@@ -56,6 +56,13 @@ impl<'rt> VariantSession<'rt> {
         self.kv.variant
     }
 
+    /// The runtime this session steps against (with the `'rt` lifetime,
+    /// so engines can hand the reference onward — e.g. to the
+    /// observability hub — without borrowing `self`).
+    pub fn runtime(&self) -> &'rt ScaleRuntime {
+        self.rt
+    }
+
     /// Number of committed tokens in the cache.
     pub fn pos(&self) -> usize {
         self.kv.pos
@@ -99,14 +106,28 @@ impl<'rt> VariantSession<'rt> {
         if tokens.len() < 2 {
             return Ok(0);
         }
-        let Some(hit) = cache.lookup(self.kv.variant, &tokens[..tokens.len() - 1]) else {
+        let lookup_len = tokens.len() - 1;
+        let Some(hit) = cache.lookup(self.kv.variant, &tokens[..lookup_len]) else {
+            self.rt.obs().record(|t_us| {
+                format!(
+                    "{{\"t_us\":{t_us},\"ev\":\"cache_lookup\",\"variant\":\"{}\",\"tokens\":{lookup_len},\"hit\":0}}",
+                    self.kv.variant.key()
+                )
+            });
             return Ok(0);
         };
         let rt = self.rt;
         let kv = &mut self.kv;
         hit.for_each_block(|rows| rt.import_rows(kv, BLOCK_TOKENS, rows))?;
         debug_assert_eq!(self.kv.pos, hit.tokens());
-        Ok(hit.tokens())
+        let hit_tokens = hit.tokens();
+        rt.obs().record(|t_us| {
+            format!(
+                "{{\"t_us\":{t_us},\"ev\":\"cache_lookup\",\"variant\":\"{}\",\"tokens\":{lookup_len},\"hit\":{hit_tokens}}}",
+                self.kv.variant.key()
+            )
+        });
+        Ok(hit_tokens)
     }
 
     /// Publish the whole-block prefix of the freshly committed `tokens`
@@ -117,8 +138,18 @@ impl<'rt> VariantSession<'rt> {
         debug_assert!(self.kv.pos >= tokens.len(), "publish before commit");
         let rt = self.rt;
         let kv = &self.kv;
-        let _ = cache.insert(kv.variant, tokens, |blk| {
-            rt.export_rows(kv, blk * BLOCK_TOKENS, BLOCK_TOKENS)
+        let evicted_before = cache.stats().evicted_blocks;
+        let added = cache
+            .insert(kv.variant, tokens, |blk| {
+                rt.export_rows(kv, blk * BLOCK_TOKENS, BLOCK_TOKENS)
+            })
+            .unwrap_or(0);
+        rt.obs().record(|t_us| {
+            let evicted = cache.stats().evicted_blocks - evicted_before;
+            format!(
+                "{{\"t_us\":{t_us},\"ev\":\"cache_insert\",\"variant\":\"{}\",\"blocks\":{added},\"evicted\":{evicted}}}",
+                kv.variant.key()
+            )
         });
     }
 

@@ -1,0 +1,122 @@
+//! Tiny leveled logger (`CAS_SPEC_LOG=error|warn|info|debug`, default `info`).
+//!
+//! The offline registry has no `log`/`tracing` crates, so this is the
+//! first-party equivalent: a process-wide level read once from the
+//! environment, four macros-free helper functions, and a structured
+//! `key=value` suffix convention. Lines go to stderr so stdout stays
+//! clean for tables and JSON output.
+
+use std::sync::OnceLock;
+
+/// Log severity, ordered so that `level <= threshold` means "emit".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or dropped-work conditions.
+    Error,
+    /// Suspicious but non-fatal conditions.
+    Warn,
+    /// Lifecycle messages (startup banner, shutdown). The default.
+    Info,
+    /// High-volume diagnostics (per-request, per-round).
+    Debug,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Parse a `CAS_SPEC_LOG` value. Unknown strings fall back to `Info`
+/// rather than erroring: a typo in a log filter should never take the
+/// server down.
+pub fn parse_level(s: &str) -> Level {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" | "warning" => Level::Warn,
+        "debug" => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+fn threshold() -> Level {
+    static THRESHOLD: OnceLock<Level> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| match std::env::var("CAS_SPEC_LOG") {
+        Ok(v) => parse_level(&v),
+        Err(_) => Level::Info,
+    })
+}
+
+/// True when a message at `level` would be emitted — lets callers skip
+/// building expensive `key=value` suffixes for suppressed levels.
+pub fn enabled(level: Level) -> bool {
+    level <= threshold()
+}
+
+/// Emit one line at `level`: `[level] msg key=value ...`.
+///
+/// `fields` is the structured suffix; pass `&[]` for a bare message.
+/// Values are emitted verbatim — callers quote them if they may contain
+/// spaces.
+pub fn log(level: Level, msg: &str, fields: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    let mut line = format!("[{}] {}", level.tag(), msg);
+    for (k, v) in fields {
+        line.push(' ');
+        line.push_str(k);
+        line.push('=');
+        line.push_str(v);
+    }
+    eprintln!("{line}");
+}
+
+/// `log(Level::Error, ..)` shorthand.
+pub fn error(msg: &str, fields: &[(&str, String)]) {
+    log(Level::Error, msg, fields);
+}
+
+/// `log(Level::Warn, ..)` shorthand.
+pub fn warn(msg: &str, fields: &[(&str, String)]) {
+    log(Level::Warn, msg, fields);
+}
+
+/// `log(Level::Info, ..)` shorthand.
+pub fn info(msg: &str, fields: &[(&str, String)]) {
+    log(Level::Info, msg, fields);
+}
+
+/// `log(Level::Debug, ..)` shorthand.
+pub fn debug(msg: &str, fields: &[(&str, String)]) {
+    log(Level::Debug, msg, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("error"), Level::Error);
+        assert_eq!(parse_level("WARN"), Level::Warn);
+        assert_eq!(parse_level("warning"), Level::Warn);
+        assert_eq!(parse_level("info"), Level::Info);
+        assert_eq!(parse_level("debug"), Level::Debug);
+        // unknown values fall back to info, never panic
+        assert_eq!(parse_level("verbose"), Level::Info);
+        assert_eq!(parse_level(""), Level::Info);
+    }
+
+    #[test]
+    fn level_ordering_matches_filtering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

@@ -5,5 +5,6 @@
 
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod rng;
 pub mod table;

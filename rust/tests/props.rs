@@ -6,6 +6,7 @@
 
 use cas_spec::analytic::{simulate, t_hc, t_sd, t_vc, Scheme};
 use cas_spec::dytc::{expected_accepted, find_best_config, step_objective, AcceptanceEstimator};
+use cas_spec::obs::{bucket_of, Histogram};
 use cas_spec::pld::PldMatcher;
 use cas_spec::runtime::reference::{dot_q8_chunked, quantize_row, Q8_CHUNK};
 use cas_spec::spec::{verify_greedy, DraftTree};
@@ -298,5 +299,39 @@ fn prop_expected_accepted_monotone() {
             expected_accepted(b, 5) >= expected_accepted(a, 5),
             "seed {seed}: not monotone in alpha"
         );
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_within_one_bucket_of_exact() {
+    for (seed, mut rng) in rngs() {
+        let n = 1 + rng.next_below(256) as usize;
+        // mix magnitudes so samples span many buckets
+        let samples: Vec<u64> = (0..n)
+            .map(|_| {
+                let shift = rng.next_below(48) as u32;
+                rng.next_u64() >> shift
+            })
+            .collect();
+        let mut h = Histogram::default();
+        for &s in &samples {
+            h.observe(s);
+        }
+        assert_eq!(h.count(), n as u64, "seed {seed}");
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for q in [0.5, 0.9, 0.99] {
+            // exact nearest-rank value, same rank rule the histogram uses
+            let rank = ((n as f64 * q).ceil() as usize).clamp(1, n);
+            let exact = sorted[rank - 1];
+            let approx = h.quantile(q);
+            assert_eq!(
+                bucket_of(approx),
+                bucket_of(exact),
+                "seed {seed} q={q}: histogram quantile {approx} not in exact \
+                 value {exact}'s bucket"
+            );
+            assert!(approx <= exact, "seed {seed} q={q}: lower bound exceeded");
+        }
     }
 }

@@ -490,3 +490,175 @@ fn prefix_cache_stats_prove_reuse() {
     );
     assert_eq!(warm_stats.req("evictions").unwrap().as_u64().unwrap(), 0);
 }
+
+#[test]
+fn trace_on_vs_off_transcripts_byte_identical() {
+    // The tracing acceptance test: tracing is read-only on the decode
+    // path, so the same engine run with the trace recorder enabled must
+    // produce byte-identical token streams. DyTC is the interesting case
+    // (trace timestamps sit inside its measured draft window, so the cost
+    // model may pick different cascade configs) — losslessness still pins
+    // the emitted tokens.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 19, 1, 24);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(3).collect();
+
+    for engine in ["ar", "pld", "cas-spec"] {
+        let srt_off = rt.load_scale("small", &required_variants(engine)).unwrap();
+        let srt_on = rt.load_scale("small", &required_variants(engine)).unwrap();
+        srt_on.obs().enable_trace(None).unwrap(); // ring buffer only
+        assert!(srt_on.obs().trace_enabled() && !srt_off.obs().trace_enabled());
+
+        let mut e_off = build_engine(engine, &srt_off, &EngineOpts::default()).unwrap();
+        let mut e_on = build_engine(engine, &srt_on, &EngineOpts::default()).unwrap();
+        for item in &items {
+            let off = e_off.generate(&item.prompt, item.max_new).unwrap().tokens;
+            let on = e_on.generate(&item.prompt, item.max_new).unwrap().tokens;
+            assert_eq!(on, off, "engine {engine}: tracing changed the transcript");
+        }
+        if engine != "ar" {
+            // speculative engines emit per-round spans
+            let lines = srt_on.obs().take_trace_lines();
+            assert!(
+                lines.iter().any(|l| l.contains("\"ev\":\"round\"")),
+                "engine {engine}: no round events traced"
+            );
+        }
+        assert!(srt_off.obs().take_trace_lines().is_empty(), "off runtime traced");
+    }
+}
+
+#[test]
+fn trace_jsonl_stream_is_wellformed() {
+    // --trace-file streaming: every line the server writes must parse as
+    // JSON with the two universal keys (`t_us`, `ev`), timestamps must be
+    // monotone (single worker thread, one epoch), and the request
+    // lifecycle events must all be present.
+    use cas_spec::util::json::Json;
+
+    let path = std::env::temp_dir().join(format!("cas_spec_trace_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 23, 1, 16);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(2).collect();
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec![env_engine()];
+    cfg.addr = "127.0.0.1:7541".into();
+    cfg.prefix_cache_mb = env_prefix_cache_mb();
+    cfg.trace_file = Some(path.clone());
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut client = wait_ready(&addr);
+    for (i, item) in items.iter().enumerate() {
+        let resp = client.generate(i as u64, &item.prompt, item.max_new).unwrap();
+        assert!(resp.get("error").is_none(), "server error: {resp}");
+    }
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap(); // serve() joins the worker: file is complete
+
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let _ = std::fs::remove_file(&path);
+    let mut evs = Vec::new();
+    let mut last_t = 0u64;
+    let mut n = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad trace line {line:?}: {e}"));
+        let t = j.req("t_us").unwrap().as_u64().unwrap();
+        assert!(t >= last_t, "timestamps must be monotone ({t} < {last_t})");
+        last_t = t;
+        evs.push(j.req("ev").unwrap().as_str().unwrap().to_string());
+        n += 1;
+    }
+    assert!(n > 0, "trace stream is empty");
+    for want in ["serve", "enqueue", "admit", "prefill", "round", "retire"] {
+        assert!(evs.iter().any(|e| e == want), "missing {want:?} event in {evs:?}");
+    }
+}
+
+#[test]
+fn metrics_cmd_exposes_histograms_and_dytc() {
+    // {"cmd":"metrics"} must expose per-variant step-latency histograms
+    // and the DyTC predicted-vs-realized counters, so the engine is
+    // forced to cas-spec (the DyTC cascade) regardless of the suite-wide
+    // CAS_SPEC_SERVER_ENGINE override.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 29, 1, 24);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(3).collect();
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["cas-spec".into()];
+    cfg.addr = "127.0.0.1:7542".into();
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut client = wait_ready(&addr);
+    for (i, item) in items.iter().enumerate() {
+        let resp = client.generate(i as u64, &item.prompt, item.max_new).unwrap();
+        assert!(resp.get("error").is_none(), "server error: {resp}");
+    }
+
+    let text = client.metrics().unwrap();
+    assert!(text.contains("cas_spec_served_total 3"), "served counter:\n{text}");
+    assert!(text.contains("cas_spec_uptime_seconds"), "uptime gauge:\n{text}");
+    assert!(
+        text.contains("cas_spec_step_latency_us_bucket{variant="),
+        "per-variant step histograms:\n{text}"
+    );
+    assert!(text.contains("cas_spec_queue_wait_us_count"), "queue-wait histogram:\n{text}");
+    assert!(
+        text.contains("cas_spec_dytc_decisions{config="),
+        "DyTC decision counters:\n{text}"
+    );
+    assert!(
+        text.contains("cas_spec_dytc_predicted_alpha{config="),
+        "DyTC predicted acceptance:\n{text}"
+    );
+    assert!(
+        text.contains("cas_spec_dytc_realized_accept{config="),
+        "DyTC realized acceptance:\n{text}"
+    );
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn responses_carry_prefill_and_decode_ms() {
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 31, 1, 16);
+    let item = suite.items[0].clone();
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec![env_engine()];
+    cfg.addr = "127.0.0.1:7543".into();
+    cfg.prefix_cache_mb = env_prefix_cache_mb();
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut client = wait_ready(&addr);
+
+    let resp = client.generate(0, &item.prompt, item.max_new).unwrap();
+    assert!(resp.get("error").is_none(), "server error: {resp}");
+    let prefill_ms = resp.req("prefill_ms").unwrap().as_f64().unwrap();
+    let decode_ms = resp.req("decode_ms").unwrap().as_f64().unwrap();
+    let ms = resp.req("ms").unwrap().as_f64().unwrap();
+    assert!(prefill_ms > 0.0, "prefill forward pass must take measurable time");
+    assert!(decode_ms > 0.0, "decode rounds must take measurable time");
+    assert!(ms > 0.0);
+
+    let stats = client.stats().unwrap();
+    let uptime = stats.req("uptime_secs").unwrap().as_f64().unwrap();
+    let busy = stats.req("busy_secs").unwrap().as_f64().unwrap();
+    assert!(uptime > 0.0, "worker uptime must be positive");
+    assert!(busy <= uptime + 0.5, "busy time cannot exceed uptime");
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
