@@ -19,6 +19,13 @@
 //!     fused_steps` (verify steps actually shared forwards). With
 //!     `--json`, the last stdout line is a JSON record of both runs'
 //!     tok/s (captured by `scripts/bench_hotpath.sh`).
+//!   * `--workload longprompt` — long prompts + short decodes, served
+//!     with chunked prefill **off and on** (`--prefill-chunk`, default
+//!     16). Both runs must return byte-identical token streams; the
+//!     chunked run must actually chunk (trace `prefill_chunk` events)
+//!     and its p99 per-round decode wall must not regress (chunking
+//!     bounds how long a newly admitted prompt can stall everyone
+//!     else's round).
 //!
 //! Any scenario also takes `--trace`: each server run streams its JSONL
 //! trace to a temp file, and after the run the driver replays the stream
@@ -60,8 +67,11 @@ fn main() -> Result<()> {
         "spec" => spec_scenario(&args, &scale, requests, clients, max_new),
         "shared-prefix" => shared_prefix_scenario(&args, &scale, requests, clients),
         "lockstep" => lockstep_scenario(&args, &scale, requests, max_new),
+        "longprompt" => longprompt_scenario(&args, &scale, requests, clients),
         other => {
-            anyhow::bail!("unknown --workload {other:?} (spec | shared-prefix | lockstep)")
+            anyhow::bail!(
+                "unknown --workload {other:?} (spec | shared-prefix | lockstep | longprompt)"
+            )
         }
     }
 }
@@ -94,6 +104,7 @@ fn spec_scenario(
             prefix_cache_mb: 0,
             max_batch: 8,
             lockstep: true,
+            prefill_chunk: 0,
             trace: args.has("trace"),
         })?;
         threads = run.stats.get("threads").and_then(|v| v.as_u64()).unwrap_or(0);
@@ -146,6 +157,7 @@ fn shared_prefix_scenario(
             prefix_cache_mb: mb,
             max_batch: 8,
             lockstep: true,
+            prefill_chunk: 0,
             trace: args.has("trace"),
         })?;
         t.row(run.cache_row(mb));
@@ -214,6 +226,7 @@ fn lockstep_scenario(
             prefix_cache_mb: 0,
             max_batch,
             lockstep,
+            prefill_chunk: 0,
             trace: args.has("trace"),
         })?;
         let s = |k: &str| run.stats.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
@@ -266,6 +279,98 @@ fn lockstep_scenario(
     Ok(())
 }
 
+/// Chunked-prefill A/B: long prompts + short decodes, monolithic vs
+/// chunked prefill at the same engine. Chunking must not change a single
+/// token, must actually split prompts (trace `prefill_chunk` events), and
+/// must not regress the p99 per-round decode wall — bounding how long a
+/// newly admitted long prompt can stall every co-batched request's round.
+fn longprompt_scenario(
+    args: &Args,
+    scale: &str,
+    requests: usize,
+    clients: usize,
+) -> Result<()> {
+    let engine = args.str_or("engine", "pld").to_string();
+    let prefix_len = args.usize_or("prefix-len", 160)?;
+    let suffix_len = args.usize_or("suffix-len", 16)?;
+    let max_new = args.usize_or("max-new", 16)?;
+    let chunk = args.usize_or("prefill-chunk", 16)?;
+    anyhow::ensure!(chunk > 0, "--prefill-chunk must be > 0 for this scenario");
+
+    let lang = Language::build(20250711);
+    let suite = Suite::shared_prefix(&lang, 7, requests, prefix_len, suffix_len, max_new);
+
+    let mut t = Table::new(
+        &format!(
+            "serve_bench longprompt — scale={scale}, engine={engine}, {requests} requests, \
+             prompt {} tokens, chunk {chunk}",
+            prefix_len + suffix_len
+        ),
+        &["prefill", "wall (s)", "tok/s", "chunk events", "round p99 (ms)"],
+    );
+    let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut round_p99: Vec<f64> = Vec::new();
+    let mut chunk_events: Vec<usize> = Vec::new();
+    for (i, pc) in [0usize, chunk].into_iter().enumerate() {
+        let run = run_one(&RunSpec {
+            scale,
+            engine: &engine,
+            items: &suite.items,
+            n_clients: clients,
+            port: 7630 + i as u16,
+            prefix_cache_mb: 0,
+            max_batch: 8,
+            lockstep: true,
+            prefill_chunk: pc,
+            // the chunked run always traces: the chunk-event assertion
+            // below needs the stream
+            trace: pc > 0 || args.has("trace"),
+        })?;
+        let p99 = p99_ms(&run.round_ms);
+        t.row(vec![
+            if pc == 0 { "monolithic".into() } else { format!("chunk {pc}") },
+            format!("{:.2}", run.wall.as_secs_f64()),
+            format!("{:.1}", run.total_tokens as f64 / run.wall.as_secs_f64()),
+            run.prefill_chunk_events.to_string(),
+            format!("{p99:.2}"),
+        ]);
+        round_p99.push(p99);
+        chunk_events.push(run.prefill_chunk_events);
+        outputs.push(run.tokens);
+    }
+    println!("{}", t.to_text());
+
+    anyhow::ensure!(outputs[0] == outputs[1], "chunked prefill changed generated tokens!");
+    anyhow::ensure!(
+        chunk_events[1] > 0,
+        "chunked run emitted no prefill_chunk trace events (prompts never split)"
+    );
+    // non-regression with generous slack: tiny rounds make p99 noisy in CI
+    anyhow::ensure!(
+        round_p99[1] <= round_p99[0] * 4.0 + 5.0,
+        "chunked prefill regressed p99 round wall ({:.2} ms -> {:.2} ms)",
+        round_p99[0],
+        round_p99[1]
+    );
+    println!(
+        "(lossless: chunked/monolithic token streams identical; {} prefill chunks, \
+         round p99 {:.2} -> {:.2} ms)",
+        chunk_events[1], round_p99[0], round_p99[1]
+    );
+    Ok(())
+}
+
+/// p99 of a sample in milliseconds (nearest-rank; 0 for an empty sample).
+fn p99_ms(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((v.len() as f64 * 0.99).ceil() as usize).clamp(1, v.len()) - 1;
+    v[idx]
+}
+
 struct RunSpec<'a> {
     scale: &'a str,
     engine: &'a str,
@@ -275,6 +380,8 @@ struct RunSpec<'a> {
     prefix_cache_mb: usize,
     max_batch: usize,
     lockstep: bool,
+    /// Prefill chunk size in tokens (0 = monolithic prefill).
+    prefill_chunk: usize,
     /// Stream the server's JSONL trace to a temp file and assert the
     /// lifecycle invariants after the run.
     trace: bool,
@@ -289,6 +396,11 @@ struct RunOutcome {
     stats: Json,
     /// Generated tokens, ordered by request id (for lossless comparison).
     tokens: Vec<Vec<u32>>,
+    /// Mean decode wall per speculation round, one entry per request
+    /// (decode_ms / rounds), ordered by request id.
+    round_ms: Vec<f64>,
+    /// `prefill_chunk` trace events observed (0 without tracing).
+    prefill_chunk_events: usize,
 }
 
 impl RunOutcome {
@@ -333,6 +445,7 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
     cfg.prefix_cache_mb = spec.prefix_cache_mb;
     cfg.max_batch = spec.max_batch;
     cfg.lockstep = spec.lockstep;
+    cfg.opts.prefill_chunk = spec.prefill_chunk;
     let trace_path = spec.trace.then(|| {
         std::env::temp_dir()
             .join(format!("serve_bench_trace_{}_{}.jsonl", std::process::id(), spec.port))
@@ -356,7 +469,8 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
     Client::connect(&addr)?.stats()?;
 
     let queue: Arc<Mutex<Vec<WorkItem>>> = Arc::new(Mutex::new(spec.items.to_vec()));
-    type Obs = (usize, Duration, Vec<u32>, f64);
+    // (id, latency, tokens, mean_accepted, decode ms per round)
+    type Obs = (usize, Duration, Vec<u32>, f64, f64);
     let results: Arc<Mutex<Vec<Obs>>> = Arc::new(Mutex::new(Vec::new()));
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -383,7 +497,10 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
                     .map(|t| t as u32)
                     .collect();
                 let acc = resp.req("mean_accepted")?.as_f64().unwrap_or(0.0);
-                results.lock().unwrap().push((item.id, lat, toks, acc));
+                let decode_ms = resp.req("decode_ms")?.as_f64().unwrap_or(0.0);
+                let rounds = resp.req("rounds")?.as_f64().unwrap_or(0.0);
+                let round_ms = decode_ms / rounds.max(1.0);
+                results.lock().unwrap().push((item.id, lat, toks, acc, round_ms));
             }
             Ok(())
         }));
@@ -398,28 +515,41 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
     client.shutdown()?;
     server.join().unwrap()?; // serve() joins its worker: the trace file is complete
 
+    let mut prefill_chunk_events = 0usize;
     if let Some(path) = &trace_path {
-        let events = validate_trace(path)?;
+        let (events, chunks) = validate_trace(path)?;
+        prefill_chunk_events = chunks;
         let _ = std::fs::remove_file(path);
         println!("(trace: {events} events validated — lifecycle ordering + token accounting)");
     }
 
     let mut res = results.lock().unwrap().clone();
     res.sort_by_key(|(id, ..)| *id);
-    let total_tokens: usize = res.iter().map(|(_, _, t, _)| t.len()).sum();
-    let mean_acc = res.iter().map(|(.., a)| a).sum::<f64>() / res.len() as f64;
+    let total_tokens: usize = res.iter().map(|(_, _, t, _, _)| t.len()).sum();
+    let mean_acc = res.iter().map(|(_, _, _, a, _)| a).sum::<f64>() / res.len() as f64;
     let lat = latency_summary(res.iter().map(|(_, d, ..)| *d).collect());
-    let tokens = res.into_iter().map(|(_, _, t, _)| t).collect();
-    Ok(RunOutcome { wall, total_tokens, mean_acc, lat, stats, tokens })
+    let round_ms: Vec<f64> = res.iter().map(|(.., r)| *r).collect();
+    let tokens = res.into_iter().map(|(_, _, t, _, _)| t).collect();
+    Ok(RunOutcome {
+        wall,
+        total_tokens,
+        mean_acc,
+        lat,
+        stats,
+        tokens,
+        round_ms,
+        prefill_chunk_events,
+    })
 }
 
 /// Replay a server's JSONL trace stream and assert the lifecycle
 /// invariants the scheduler promises: monotone timestamps, per request
-/// `enqueue <= admit <= retire` ordering, and — for requests with round
+/// either `enqueue <= shed` (queue-full rejection, never admitted) or
+/// `enqueue <= admit <= retire|error`, and — for requests with round
 /// spans — `1 + sum(round.emitted) == retire.tokens` (the prefill token
 /// plus every round's accepted+bonus delta is exactly the emitted
-/// stream). Returns the number of events checked.
-fn validate_trace(path: &std::path::Path) -> Result<usize> {
+/// stream). Returns (events checked, `prefill_chunk` events seen).
+fn validate_trace(path: &std::path::Path) -> Result<(usize, usize)> {
     use std::collections::BTreeMap;
 
     #[derive(Default)]
@@ -427,6 +557,8 @@ fn validate_trace(path: &std::path::Path) -> Result<usize> {
         enqueue: Option<u64>,
         admit: Option<u64>,
         retire: Option<u64>,
+        shed: Option<u64>,
+        error: Option<u64>,
         tokens: u64,
         round_emitted: u64,
         rounds: u64,
@@ -436,6 +568,7 @@ fn validate_trace(path: &std::path::Path) -> Result<usize> {
     let mut reqs: BTreeMap<u64, ReqTrace> = BTreeMap::new();
     let mut last_t = 0u64;
     let mut n = 0usize;
+    let mut chunks = 0usize;
     for line in text.lines() {
         let j = Json::parse(line)
             .map_err(|e| anyhow::anyhow!("unparseable trace line {line:?}: {e}"))?;
@@ -458,6 +591,8 @@ fn validate_trace(path: &std::path::Path) -> Result<usize> {
         match ev.as_str() {
             "enqueue" => r.enqueue = Some(t),
             "admit" => r.admit = Some(t),
+            "shed" => r.shed = Some(t),
+            "error" => r.error = Some(t),
             "retire" => {
                 r.retire = Some(t);
                 r.tokens = j.req("tokens")?.as_u64().unwrap_or(0);
@@ -466,6 +601,7 @@ fn validate_trace(path: &std::path::Path) -> Result<usize> {
                 r.rounds += 1;
                 r.round_emitted += j.req("emitted")?.as_u64().unwrap_or(0);
             }
+            "prefill_chunk" => chunks += 1,
             _ => {}
         }
     }
@@ -473,8 +609,31 @@ fn validate_trace(path: &std::path::Path) -> Result<usize> {
     anyhow::ensure!(!reqs.is_empty(), "trace has no request lifecycle events");
     for (id, r) in &reqs {
         let (enq, adm, ret) = (r.enqueue, r.admit, r.retire);
+        anyhow::ensure!(enq.is_some(), "request {id}: missing enqueue event");
+        if let Some(shed) = r.shed {
+            // shed at the queue: rejected before admission, no other terminal
+            anyhow::ensure!(
+                adm.is_none() && ret.is_none() && r.error.is_none(),
+                "request {id}: shed but also admitted/retired/errored"
+            );
+            anyhow::ensure!(
+                enq <= Some(shed),
+                "request {id}: shed before enqueue (enqueue={enq:?} shed={shed})"
+            );
+            continue;
+        }
+        if let Some(err) = r.error {
+            // errored requests terminate with `error` instead of `retire`
+            // (admit is optional: admission-time rejections never admit)
+            anyhow::ensure!(ret.is_none(), "request {id}: both error and retire events");
+            anyhow::ensure!(
+                enq <= Some(err) && adm.map_or(true, |a| a <= err),
+                "request {id}: error out of order (enqueue={enq:?} admit={adm:?} error={err})"
+            );
+            continue;
+        }
         anyhow::ensure!(
-            enq.is_some() && adm.is_some() && ret.is_some(),
+            adm.is_some() && ret.is_some(),
             "request {id}: incomplete lifecycle (enqueue={enq:?} admit={adm:?} retire={ret:?})"
         );
         anyhow::ensure!(
@@ -491,5 +650,5 @@ fn validate_trace(path: &std::path::Path) -> Result<usize> {
             );
         }
     }
-    Ok(n)
+    Ok((n, chunks))
 }

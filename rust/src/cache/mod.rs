@@ -37,8 +37,17 @@
 //! the session's own KV cache, step only the suffix, then publish the
 //! newly computed blocks. Interior mutability (`RefCell`) matches the
 //! single-threaded serving worker that owns the runtime.
+//!
+//! The cache is one client of the scale-wide [`pool::KvPool`]: every
+//! resident block byte is charged against the same budget live session KV
+//! reserves from, and the trie sheds LRU blocks both to its own local
+//! budget and to global pool pressure ([`PrefixCache::shrink`] lets a
+//! session reservation reclaim cache residency on demand). Cached blocks
+//! are strictly lower priority than live sessions.
 
 #![warn(missing_docs)]
+
+pub mod pool;
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -46,6 +55,8 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, Result};
 
 use crate::model::Variant;
+
+pub use pool::{KvLease, KvPool, PoolStats};
 
 /// Committed tokens per cached KV block. Lookups and inserts operate on
 /// whole blocks only, so reuse granularity — and the trie's split points
@@ -181,6 +192,8 @@ struct Inner {
     clock: u64,
     trees: BTreeMap<Variant, Tree>,
     stats: CacheStats,
+    /// Shared scale-wide KV accounting pool this cache charges against.
+    pool: KvPool,
 }
 
 /// The cross-request prefix cache: per-variant radix tries over a shared
@@ -233,8 +246,18 @@ impl Drop for PrefixHit<'_> {
 
 impl PrefixCache {
     /// A cache with the given resident-byte budget (block data bytes; the
-    /// trie's token/pointer overhead is not counted).
+    /// trie's token/pointer overhead is not counted), charging against a
+    /// private unbounded pool.
     pub fn new(budget_bytes: usize) -> PrefixCache {
+        PrefixCache::with_pool(KvPool::new(0), budget_bytes)
+    }
+
+    /// A cache with a local byte budget that also charges every resident
+    /// block against `pool` — the shared scale-wide KV budget. Residency
+    /// is bounded by the *tighter* of the two: the local budget caps the
+    /// cache's own footprint, and global pool pressure (live sessions
+    /// filling the budget) sheds cached blocks first.
+    pub fn with_pool(pool: KvPool, budget_bytes: usize) -> PrefixCache {
         PrefixCache {
             inner: RefCell::new(Inner {
                 budget: budget_bytes,
@@ -242,6 +265,7 @@ impl PrefixCache {
                 clock: 0,
                 trees: BTreeMap::new(),
                 stats: CacheStats::default(),
+                pool,
             }),
         }
     }
@@ -341,6 +365,7 @@ impl PrefixCache {
                     tree.nodes[cur].children.push(node);
                     added += n_blocks - consumed;
                     inner.bytes += new_bytes;
+                    inner.pool.charge_cache(new_bytes);
                     inner.stats.inserted_blocks += (n_blocks - consumed) as u64;
                     consumed = n_blocks;
                 }
@@ -375,37 +400,66 @@ impl PrefixCache {
         Ok(added)
     }
 
-    /// Evict LRU unpinned leaves until resident bytes fit the budget.
-    fn evict_to_budget(inner: &mut Inner) {
-        while inner.bytes > inner.budget {
-            let mut victim: Option<(Variant, usize, u64)> = None;
-            for (v, tree) in inner.trees.iter() {
-                for (i, n) in tree.nodes.iter().enumerate() {
-                    if i == 0 || !n.live || n.pins > 0 || !n.children.is_empty() {
-                        continue;
-                    }
-                    if victim.map(|(_, _, lu)| n.last_used < lu).unwrap_or(true) {
-                        victim = Some((*v, i, n.last_used));
-                    }
+    /// Evict the single LRU unpinned leaf; returns bytes freed (0 when
+    /// everything left is pinned or structural).
+    fn evict_one(inner: &mut Inner) -> usize {
+        let mut victim: Option<(Variant, usize, u64)> = None;
+        for (v, tree) in inner.trees.iter() {
+            for (i, n) in tree.nodes.iter().enumerate() {
+                if i == 0 || !n.live || n.pins > 0 || !n.children.is_empty() {
+                    continue;
+                }
+                if victim.map(|(_, _, lu)| n.last_used < lu).unwrap_or(true) {
+                    victim = Some((*v, i, n.last_used));
                 }
             }
-            let Some((v, i, _)) = victim else {
-                break; // everything left is pinned or structural
-            };
-            let tree = inner.trees.get_mut(&v).expect("victim tree exists");
-            let node = &mut tree.nodes[i];
-            let freed: usize =
-                node.blocks.iter().map(|b| b.len() * std::mem::size_of::<f32>()).sum();
-            let n_blocks = node.blocks.len();
-            let parent = node.parent;
-            node.live = false;
-            node.tokens = Vec::new();
-            node.blocks = Vec::new();
-            tree.nodes[parent].children.retain(|&c| c != i);
-            tree.free.push(i);
-            inner.bytes -= freed;
-            inner.stats.evicted_blocks += n_blocks as u64;
         }
+        let Some((v, i, _)) = victim else {
+            return 0;
+        };
+        let tree = inner.trees.get_mut(&v).expect("victim tree exists");
+        let node = &mut tree.nodes[i];
+        let freed: usize =
+            node.blocks.iter().map(|b| b.len() * std::mem::size_of::<f32>()).sum();
+        let n_blocks = node.blocks.len();
+        let parent = node.parent;
+        node.live = false;
+        node.tokens = Vec::new();
+        node.blocks = Vec::new();
+        tree.nodes[parent].children.retain(|&c| c != i);
+        tree.free.push(i);
+        inner.bytes -= freed;
+        inner.pool.release_cache(freed);
+        inner.stats.evicted_blocks += n_blocks as u64;
+        freed
+    }
+
+    /// Evict LRU unpinned leaves until resident bytes fit the local
+    /// budget AND the shared pool is back under its global budget.
+    fn evict_to_budget(inner: &mut Inner) {
+        while inner.bytes > inner.budget || inner.pool.overage() > 0 {
+            if Self::evict_one(inner) == 0 {
+                break; // everything left is pinned or structural
+            }
+        }
+    }
+
+    /// Evict unpinned blocks until at least `want` bytes have been freed
+    /// or nothing more is evictable; returns bytes actually freed. The
+    /// runtime calls this so a live-session KV reservation can reclaim
+    /// cache residency under the shared pool budget (cached blocks are
+    /// strictly lower priority than live sessions).
+    pub fn shrink(&self, want: usize) -> usize {
+        let mut inner = self.inner.borrow_mut();
+        let mut freed = 0usize;
+        while freed < want {
+            let f = Self::evict_one(&mut inner);
+            if f == 0 {
+                break;
+            }
+            freed += f;
+        }
+        freed
     }
 
     /// Accounting snapshot (bytes/budget filled in at call time).
@@ -629,5 +683,54 @@ mod tests {
         let u = seq(&[], 1, 2);
         let res = c.insert(Variant::Target, &u, |_| Ok(vec![0f32; ELEMS + 1]));
         assert!(res.is_err(), "inconsistent block geometry must be rejected");
+    }
+
+    #[test]
+    fn pool_accounting_mirrors_resident_bytes() {
+        let pool = KvPool::new(0);
+        let c = PrefixCache::with_pool(pool.clone(), 4 * BLOCK_BYTES);
+        insert(&c, Variant::Target, &seq(&[], 2, 1));
+        assert_eq!(pool.stats().cache_bytes, c.stats().bytes);
+        // overflow the local budget: evictions release pool charges too
+        insert(&c, Variant::Target, &seq(&[], 2, 2));
+        insert(&c, Variant::Target, &seq(&[], 2, 3));
+        let s = c.stats();
+        assert!(s.evicted_blocks > 0);
+        assert_eq!(pool.stats().cache_bytes, s.bytes, "pool charge drifted");
+    }
+
+    #[test]
+    fn global_pool_pressure_sheds_cache_before_local_budget() {
+        // local budget is generous; the shared pool is the tight bound
+        let pool = KvPool::new(3 * BLOCK_BYTES);
+        let c = PrefixCache::with_pool(pool.clone(), 1 << 20);
+        insert(&c, Variant::Target, &seq(&[], 2, 1));
+        insert(&c, Variant::Target, &seq(&[], 2, 2));
+        let s = c.stats();
+        assert!(s.bytes <= 3 * BLOCK_BYTES, "cache ignored pool budget");
+        assert!(s.evicted_blocks >= 1);
+        assert_eq!(pool.overage(), 0);
+    }
+
+    #[test]
+    fn shrink_reclaims_unpinned_blocks_for_sessions() {
+        let pool = KvPool::new(0);
+        let c = PrefixCache::with_pool(pool.clone(), 1 << 20);
+        insert(&c, Variant::Target, &seq(&[], 2, 1));
+        insert(&c, Variant::Target, &seq(&[], 2, 2));
+        let before = c.stats().bytes;
+        let freed = c.shrink(BLOCK_BYTES);
+        assert!(freed >= BLOCK_BYTES, "shrink freed too little");
+        assert_eq!(c.stats().bytes, before - freed);
+        assert_eq!(pool.stats().cache_bytes, c.stats().bytes);
+
+        // a pinned path resists shrink
+        let hit = c.lookup(Variant::Target, &seq(&[], 2, 2));
+        if hit.is_some() {
+            let resident = c.stats().bytes;
+            let freed = c.shrink(usize::MAX);
+            assert!(freed < resident || resident == 0, "pinned blocks were freed");
+            assert!(c.lookup(Variant::Target, &seq(&[], 2, 2)).is_some());
+        }
     }
 }

@@ -1,0 +1,286 @@
+//! Global budgeted accounting pool for all KV memory.
+//!
+//! One [`KvPool`] per loaded scale: every live session KV allocation holds
+//! a [`KvLease`] from it, and the prefix cache charges its cached blocks
+//! against the same byte budget, so "how much KV fits" is a single number
+//! across both uses. The pool does not own storage — backends keep their
+//! flat compute layouts, and the radix trie keeps its block vectors — it
+//! owns *admission*: a reservation either fits under the budget or fails,
+//! and the serving scheduler turns that failure into queueing or
+//! preemption instead of an allocator OOM. Swapped-out KV (exported to the
+//! host swap area) is tracked separately and does not count against the
+//! budget: the whole point of a swap is that the bytes left the pool.
+//!
+//! A budget of `0` means unbounded (the default for library use: nothing
+//! changes for callers that never set a budget).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{bail, Result};
+
+/// Shared accounting state behind every [`KvPool`] handle.
+#[derive(Debug, Default)]
+struct PoolInner {
+    /// Byte budget across sessions + cache (`0` = unbounded).
+    budget: usize,
+    /// Bytes reserved by live session KV leases.
+    session_bytes: usize,
+    /// Bytes charged by the prefix cache's resident blocks.
+    cache_bytes: usize,
+    /// Bytes currently held in the host swap area (outside the budget).
+    swap_bytes: usize,
+    /// High-water mark of `session_bytes + cache_bytes`.
+    peak_bytes: usize,
+    /// Completed swap-outs.
+    swaps_out: u64,
+    /// Completed swap-ins.
+    swaps_in: u64,
+}
+
+/// Cloneable handle to the shared KV byte-budget accounting pool.
+///
+/// All clones see the same accounting; the handle is cheap to copy into
+/// leases and the prefix cache.
+#[derive(Clone, Debug, Default)]
+pub struct KvPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+/// Point-in-time snapshot of the pool's accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Byte budget (`0` = unbounded).
+    pub budget: usize,
+    /// Live session KV bytes.
+    pub session_bytes: usize,
+    /// Prefix-cache resident bytes.
+    pub cache_bytes: usize,
+    /// Bytes in the host swap area.
+    pub swap_bytes: usize,
+    /// High-water mark of budgeted bytes.
+    pub peak_bytes: usize,
+    /// Completed swap-outs.
+    pub swaps_out: u64,
+    /// Completed swap-ins.
+    pub swaps_in: u64,
+}
+
+impl PoolStats {
+    /// Bytes currently counted against the budget.
+    pub fn used(&self) -> usize {
+        self.session_bytes + self.cache_bytes
+    }
+}
+
+/// A session KV reservation. Releases its bytes back to the pool on drop,
+/// so accounting follows `KvCache` lifetime exactly.
+#[derive(Debug)]
+pub struct KvLease {
+    pool: KvPool,
+    bytes: usize,
+}
+
+impl KvLease {
+    /// Bytes this lease holds.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for KvLease {
+    fn drop(&mut self) {
+        let mut g = self.pool.lock();
+        g.session_bytes = g.session_bytes.saturating_sub(self.bytes);
+    }
+}
+
+impl KvPool {
+    /// New pool with the given byte budget (`0` = unbounded).
+    pub fn new(budget: usize) -> Self {
+        KvPool {
+            inner: Arc::new(Mutex::new(PoolInner { budget, ..PoolInner::default() })),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        // accounting is plain integers: a poisoned lock is still consistent
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Set the byte budget (`0` = unbounded). Existing reservations are
+    /// never revoked; pressure resolves through eviction and preemption.
+    pub fn set_budget(&self, bytes: usize) {
+        self.lock().budget = bytes;
+    }
+
+    /// The byte budget (`0` = unbounded).
+    pub fn budget(&self) -> usize {
+        self.lock().budget
+    }
+
+    /// Bytes counted against the budget (sessions + cache).
+    pub fn used(&self) -> usize {
+        let g = self.lock();
+        g.session_bytes + g.cache_bytes
+    }
+
+    /// Whether `bytes` more would fit under the budget right now.
+    pub fn can_fit(&self, bytes: usize) -> bool {
+        let g = self.lock();
+        g.budget == 0 || g.session_bytes + g.cache_bytes + bytes <= g.budget
+    }
+
+    /// Whether `bytes` more of *session* KV would fit, treating all cache
+    /// bytes as reclaimable (the scheduler's admission test: cached blocks
+    /// yield to live sessions via eviction).
+    pub fn session_fit(&self, bytes: usize) -> bool {
+        let g = self.lock();
+        g.budget == 0 || g.session_bytes + bytes <= g.budget
+    }
+
+    /// How many bytes over budget the pool would be after reserving
+    /// `extra` more (0 when unbounded or fitting) — the amount the prefix
+    /// cache must shed before the reservation can succeed.
+    pub fn overage_with(&self, extra: usize) -> usize {
+        let g = self.lock();
+        if g.budget == 0 {
+            return 0;
+        }
+        (g.session_bytes + g.cache_bytes + extra).saturating_sub(g.budget)
+    }
+
+    /// Bytes the pool is over budget right now (0 when unbounded).
+    pub fn overage(&self) -> usize {
+        self.overage_with(0)
+    }
+
+    /// Reserve `bytes` of session KV, or fail if the budget cannot fit it.
+    pub fn reserve(&self, bytes: usize) -> Result<KvLease> {
+        {
+            let mut g = self.lock();
+            if g.budget != 0 && g.session_bytes + g.cache_bytes + bytes > g.budget {
+                bail!(
+                    "kv pool budget exceeded: {} in use + {} requested > {} budget",
+                    g.session_bytes + g.cache_bytes,
+                    bytes,
+                    g.budget
+                );
+            }
+            g.session_bytes += bytes;
+            g.peak_bytes = g.peak_bytes.max(g.session_bytes + g.cache_bytes);
+        }
+        Ok(KvLease { pool: self.clone(), bytes })
+    }
+
+    /// Charge `bytes` of prefix-cache residency against the budget.
+    pub fn charge_cache(&self, bytes: usize) {
+        let mut g = self.lock();
+        g.cache_bytes += bytes;
+        g.peak_bytes = g.peak_bytes.max(g.session_bytes + g.cache_bytes);
+    }
+
+    /// Release `bytes` of prefix-cache residency.
+    pub fn release_cache(&self, bytes: usize) {
+        let mut g = self.lock();
+        g.cache_bytes = g.cache_bytes.saturating_sub(bytes);
+    }
+
+    /// Record a completed swap-out of `bytes` to the host swap area.
+    pub fn note_swap_out(&self, bytes: usize) {
+        let mut g = self.lock();
+        g.swaps_out += 1;
+        g.swap_bytes += bytes;
+    }
+
+    /// Record a completed swap-in of `bytes` from the host swap area.
+    pub fn note_swap_in(&self, bytes: usize) {
+        let mut g = self.lock();
+        g.swaps_in += 1;
+        g.swap_bytes = g.swap_bytes.saturating_sub(bytes);
+    }
+
+    /// Snapshot the accounting.
+    pub fn stats(&self) -> PoolStats {
+        let g = self.lock();
+        PoolStats {
+            budget: g.budget,
+            session_bytes: g.session_bytes,
+            cache_bytes: g.cache_bytes,
+            swap_bytes: g.swap_bytes,
+            peak_bytes: g.peak_bytes,
+            swaps_out: g.swaps_out,
+            swaps_in: g.swaps_in,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_and_drop_track_session_bytes() {
+        let pool = KvPool::new(100);
+        let a = pool.reserve(40).unwrap();
+        let b = pool.reserve(60).unwrap();
+        assert_eq!(pool.used(), 100);
+        assert_eq!(pool.stats().peak_bytes, 100);
+        drop(a);
+        assert_eq!(pool.used(), 60);
+        drop(b);
+        assert_eq!(pool.used(), 0);
+        assert_eq!(pool.stats().peak_bytes, 100, "peak survives release");
+    }
+
+    #[test]
+    fn budget_rejects_overcommit() {
+        let pool = KvPool::new(100);
+        let _a = pool.reserve(80).unwrap();
+        let err = pool.reserve(21).unwrap_err();
+        assert!(format!("{err:#}").contains("budget exceeded"));
+        // a fitting reservation still works
+        let b = pool.reserve(20).unwrap();
+        assert_eq!(b.bytes(), 20);
+    }
+
+    #[test]
+    fn zero_budget_is_unbounded() {
+        let pool = KvPool::new(0);
+        let _a = pool.reserve(usize::MAX / 4).unwrap();
+        assert!(pool.can_fit(usize::MAX / 4));
+        assert_eq!(pool.overage(), 0);
+    }
+
+    #[test]
+    fn cache_charges_share_the_budget() {
+        let pool = KvPool::new(100);
+        pool.charge_cache(70);
+        assert!(!pool.can_fit(40));
+        assert!(pool.session_fit(40), "cache bytes are reclaimable");
+        assert_eq!(pool.overage_with(40), 10);
+        assert!(pool.reserve(40).is_err());
+        pool.release_cache(30);
+        let _l = pool.reserve(40).unwrap();
+        assert_eq!(pool.used(), 80);
+    }
+
+    #[test]
+    fn swap_notes_track_the_swap_area() {
+        let pool = KvPool::new(0);
+        pool.note_swap_out(64);
+        pool.note_swap_out(32);
+        pool.note_swap_in(64);
+        let s = pool.stats();
+        assert_eq!((s.swaps_out, s.swaps_in, s.swap_bytes), (2, 1, 32));
+    }
+
+    #[test]
+    fn clones_share_accounting() {
+        let pool = KvPool::new(50);
+        let other = pool.clone();
+        let _l = pool.reserve(30).unwrap();
+        assert_eq!(other.used(), 30);
+        other.set_budget(200);
+        assert_eq!(pool.budget(), 200);
+    }
+}

@@ -39,6 +39,15 @@ pub struct RunConfig {
     /// Committed prompt blocks are shared across requests through a
     /// radix trie (`cache` module); reuse is bit-exact.
     pub prefix_cache_mb: usize,
+    /// Global KV byte budget in MiB for live sessions *and* the prefix
+    /// cache together (0 = unbounded). When concurrent sessions would
+    /// exceed it, the server preempts (swaps out) runs to host memory
+    /// and resumes them later — transcripts stay byte-identical.
+    pub kv_budget_mb: usize,
+    /// Admission-queue bound (0 = unbounded): requests arriving when the
+    /// queue already holds this many are shed with a `queue full` error
+    /// reply (counted as `shed` in stats, not `errors`).
+    pub max_queue: usize,
     /// Backend worker-thread budget (0 = auto: `CAS_SPEC_THREADS`, else
     /// `available_parallelism`; 1 = fully serial). Threading is
     /// bit-neutral — see `runtime::resolve_threads`.
@@ -77,6 +86,8 @@ impl Default for RunConfig {
             addr: "127.0.0.1:7599".into(),
             max_batch: 8,
             prefix_cache_mb: 0,
+            kv_budget_mb: 0,
+            max_queue: 0,
             threads: 0,
             lockstep: true,
             temperature: 0.0,
@@ -105,6 +116,11 @@ impl RunConfig {
                 "max_batch" => self.max_batch = v.as_usize().ok_or_else(bad(k))?,
                 "prefix_cache_mb" => {
                     self.prefix_cache_mb = v.as_usize().ok_or_else(bad(k))?
+                }
+                "kv_budget_mb" => self.kv_budget_mb = v.as_usize().ok_or_else(bad(k))?,
+                "max_queue" => self.max_queue = v.as_usize().ok_or_else(bad(k))?,
+                "prefill_chunk" => {
+                    self.opts.prefill_chunk = v.as_usize().ok_or_else(bad(k))?
                 }
                 "threads" => self.threads = v.as_usize().ok_or_else(bad(k))?,
                 "lockstep" => self.lockstep = v.as_bool().ok_or_else(bad(k))?,
@@ -148,6 +164,9 @@ impl RunConfig {
         }
         self.max_batch = a.usize_or("max-batch", self.max_batch)?;
         self.prefix_cache_mb = a.usize_or("prefix-cache-mb", self.prefix_cache_mb)?;
+        self.kv_budget_mb = a.usize_or("kv-budget-mb", self.kv_budget_mb)?;
+        self.max_queue = a.usize_or("max-queue", self.max_queue)?;
+        self.opts.prefill_chunk = a.usize_or("prefill-chunk", self.opts.prefill_chunk)?;
         self.threads = a.usize_or("threads", self.threads)?;
         if let Some(ls) = a.str_opt("lockstep") {
             self.lockstep = match ls {
@@ -183,6 +202,12 @@ impl RunConfig {
     /// Prefix-cache budget in bytes (the `prefix_cache_mb` knob).
     pub fn prefix_cache_bytes(&self) -> usize {
         self.prefix_cache_mb << 20
+    }
+
+    /// Global KV pool budget in bytes (the `kv_budget_mb` knob;
+    /// 0 = unbounded).
+    pub fn kv_budget_bytes(&self) -> usize {
+        self.kv_budget_mb << 20
     }
 
     /// The configured sampling parameters, or `None` when `temperature`
@@ -279,6 +304,42 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.apply_json(&Json::parse(r#"{"prefix_cache_mb":4}"#).unwrap()).unwrap();
         assert_eq!(cfg.prefix_cache_mb, 4);
+    }
+
+    #[test]
+    fn kv_budget_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert_eq!(cfg.kv_budget_mb, 0, "kv budget defaults unbounded");
+        assert_eq!(cfg.kv_budget_bytes(), 0);
+        let cfg = RunConfig::from_args(&args("--kv-budget-mb 6")).unwrap();
+        assert_eq!(cfg.kv_budget_mb, 6);
+        assert_eq!(cfg.kv_budget_bytes(), 6 << 20);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"kv_budget_mb":12}"#).unwrap()).unwrap();
+        assert_eq!(cfg.kv_budget_mb, 12);
+    }
+
+    #[test]
+    fn max_queue_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert_eq!(cfg.max_queue, 0, "admission queue defaults unbounded");
+        let cfg = RunConfig::from_args(&args("--max-queue 4")).unwrap();
+        assert_eq!(cfg.max_queue, 4);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"max_queue":2}"#).unwrap()).unwrap();
+        assert_eq!(cfg.max_queue, 2);
+    }
+
+    #[test]
+    fn prefill_chunk_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert_eq!(cfg.opts.prefill_chunk, 0, "prefill defaults monolithic");
+        let cfg = RunConfig::from_args(&args("--prefill-chunk 3")).unwrap();
+        assert_eq!(cfg.opts.prefill_chunk, 3);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"prefill_chunk":8}"#).unwrap()).unwrap();
+        assert_eq!(cfg.opts.prefill_chunk, 8);
+        assert!(RunConfig::from_args(&args("--prefill-chunk whole")).is_err());
     }
 
     #[test]

@@ -14,12 +14,13 @@ use super::{Engine, RequestRun};
 /// The autoregressive baseline engine.
 pub struct ArEngine<'rt> {
     rt: &'rt ScaleRuntime,
+    prefill_chunk: usize,
 }
 
 impl<'rt> ArEngine<'rt> {
     /// Build the baseline engine over a loaded scale.
-    pub fn new(rt: &'rt ScaleRuntime) -> Result<Self> {
-        Ok(ArEngine { rt })
+    pub fn new(rt: &'rt ScaleRuntime, opts: &super::EngineOpts) -> Result<Self> {
+        Ok(ArEngine { rt, prefill_chunk: opts.prefill_chunk })
     }
 }
 
@@ -55,6 +56,13 @@ impl RoundStep for ArRun<'_> {
 
     target_plumbing!();
 
+    fn for_each_session(
+        &mut self,
+        f: &mut dyn FnMut(&mut VariantSession<'_>) -> Result<()>,
+    ) -> Result<()> {
+        f(&mut self.target)
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,
@@ -81,7 +89,8 @@ impl Engine for ArEngine<'_> {
         sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
+        let st =
+            GenState::start_chunked(&mut target, prompt, max_new, sampling, self.prefill_chunk)?;
         Ok(Box::new(ArRun { target, st }))
     }
 }

@@ -51,13 +51,22 @@ pub struct CascadeEngine<'rt> {
     k_pld: usize,
     /// inner PLD proposal size inside VC drafting
     inner_k: usize,
+    prefill_chunk: usize,
     name: &'static str,
 }
 
 impl<'rt> CascadeEngine<'rt> {
     /// Vertical cascade (`vc`).
-    pub fn new_vc(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
-        Ok(Self { rt, mode: Mode::Vc, k_model: 12, k_pld: 0, inner_k: 7, name: "vc" })
+    pub fn new_vc(rt: &'rt ScaleRuntime, opts: &EngineOpts) -> Result<Self> {
+        Ok(Self {
+            rt,
+            mode: Mode::Vc,
+            k_model: 12,
+            k_pld: 0,
+            inner_k: 7,
+            prefill_chunk: opts.prefill_chunk,
+            name: "vc",
+        })
     }
 
     /// Horizontal cascade (`hc`).
@@ -68,18 +77,35 @@ impl<'rt> CascadeEngine<'rt> {
             k_model: opts.draft_k.min(5),
             k_pld: 8,
             inner_k: 7,
+            prefill_chunk: opts.prefill_chunk,
             name: "hc",
         })
     }
 
     /// Vertical + horizontal cascade (`vchc`, full CS-Drafting).
-    pub fn new_vchc(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
-        Ok(Self { rt, mode: Mode::VcHc, k_model: 6, k_pld: 7, inner_k: 7, name: "vchc" })
+    pub fn new_vchc(rt: &'rt ScaleRuntime, opts: &EngineOpts) -> Result<Self> {
+        Ok(Self {
+            rt,
+            mode: Mode::VcHc,
+            k_model: 6,
+            k_pld: 7,
+            inner_k: 7,
+            prefill_chunk: opts.prefill_chunk,
+            name: "vchc",
+        })
     }
 
     /// Quantized vertical model cascade (`casc-aq`): ls60 → aq8 → target.
-    pub fn new_aq(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
-        Ok(Self { rt, mode: Mode::Aq, k_model: 12, k_pld: 0, inner_k: 7, name: "casc-aq" })
+    pub fn new_aq(rt: &'rt ScaleRuntime, opts: &EngineOpts) -> Result<Self> {
+        Ok(Self {
+            rt,
+            mode: Mode::Aq,
+            k_model: 12,
+            k_pld: 0,
+            inner_k: 7,
+            prefill_chunk: opts.prefill_chunk,
+            name: "casc-aq",
+        })
     }
 }
 
@@ -244,6 +270,30 @@ impl RoundStep for CascadeRun<'_> {
 
     target_plumbing!();
 
+    fn for_each_session(
+        &mut self,
+        f: &mut dyn FnMut(&mut VariantSession<'_>) -> Result<()>,
+    ) -> Result<()> {
+        f(&mut self.target)?;
+        f(&mut self.draft)?;
+        if let Some((b, _)) = &mut self.bottom {
+            f(b)?;
+        }
+        Ok(())
+    }
+
+    fn after_prefill(&mut self, prompt: &[u32]) -> Result<()> {
+        self.draft.feed(prompt)?;
+        self.st.stats.draft_calls += 1;
+        self.bc = BranchCache::new(self.draft.pos());
+        if let Some((b, bbc)) = &mut self.bottom {
+            b.feed(prompt)?;
+            self.st.stats.draft_calls += 1;
+            *bbc = BranchCache::new(b.pos());
+        }
+        Ok(())
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,
@@ -285,35 +335,37 @@ impl Engine for CascadeEngine<'_> {
             Mode::Aq => Variant::Aq8,
             _ => Variant::Ls40,
         };
-        let mut draft = VariantSession::new(self.rt, draft_variant)?;
-
-        let mut st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
-        let matcher = PldMatcher::new(prompt);
-        draft.feed(prompt)?;
-        st.stats.draft_calls += 1;
-        let bc = BranchCache::new(draft.pos());
+        // all draft sessions allocate NOW so the run's whole KV footprint
+        // is reserved at admission; their feeds may be deferred past a
+        // chunked prefill (after_prefill)
+        let draft = VariantSession::new(self.rt, draft_variant)?;
         let bottom = if self.mode == Mode::Aq {
-            let mut b = VariantSession::new(self.rt, Variant::Ls60)?;
-            b.feed(prompt)?;
-            st.stats.draft_calls += 1;
-            let bbc = BranchCache::new(b.pos());
-            Some((b, bbc))
+            let b = VariantSession::new(self.rt, Variant::Ls60)?;
+            Some((b, BranchCache::new(0)))
         } else {
             None
         };
 
-        Ok(Box::new(CascadeRun {
+        let st =
+            GenState::start_chunked(&mut target, prompt, max_new, sampling, self.prefill_chunk)?;
+        let matcher = PldMatcher::new(prompt);
+
+        let mut run = CascadeRun {
             target,
             draft,
             bottom,
             matcher,
-            bc,
+            bc: BranchCache::new(0),
             mode: self.mode,
             k_model: self.k_model,
             k_pld: self.k_pld,
             inner_k: self.inner_k,
             matcher_mark: 0,
             st,
-        }))
+        };
+        if run.st.prefill_pending.is_none() {
+            run.after_prefill(prompt)?;
+        }
+        Ok(Box::new(run))
     }
 }

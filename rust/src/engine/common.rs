@@ -8,7 +8,8 @@ use anyhow::Result;
 use crate::pld::PldMatcher;
 use crate::runtime::{argmax, softmax_prob, KvCache, StepOutput};
 use crate::spec::{
-    verify_greedy, verify_sampled, DraftTree, Sampler, SamplingParams, VariantSession,
+    verify_greedy, verify_sampled, DraftTree, Prefill, Sampler, SamplingParams,
+    VariantSession,
 };
 use crate::tokenizer::EOS;
 
@@ -41,6 +42,18 @@ pub struct InFlightRound {
     pub before: usize,
     /// Drafting wall-clock already accrued for this round.
     pub draft_wall: Duration,
+}
+
+/// A chunked prefill still in progress: the session-level cursor plus the
+/// per-round chunk size. Stashed in [`GenState`] by
+/// [`GenState::start_chunked`] and driven one chunk per
+/// `RequestRun::begin_round` call, so long prompts advance at scheduler
+/// round boundaries instead of stalling a whole admission cycle.
+pub struct PendingPrefill {
+    /// The resumable session-level prefill cursor.
+    pub cursor: Prefill,
+    /// Tokens to commit per round (> 0).
+    pub chunk: usize,
 }
 
 /// The per-engine half of a resumable generation.
@@ -96,6 +109,29 @@ pub trait RoundStep {
     /// its observability hub ([`crate::runtime::ScaleRuntime::obs`])
     /// through this to emit round events and fold round histograms.
     fn runtime(&self) -> &crate::runtime::ScaleRuntime;
+    /// Run `f` against the target session (dyn-callback because `&mut` is
+    /// invariant in the session's runtime lifetime, so the session cannot
+    /// be *returned* at the `&mut self` lifetime — but it can be lent to a
+    /// higher-ranked closure). The blanket driver uses this to drive
+    /// chunked prefill and retirement publication on the target.
+    fn with_target(
+        &mut self,
+        f: &mut dyn FnMut(&mut VariantSession<'_>) -> Result<()>,
+    ) -> Result<()>;
+    /// Run `f` over every session this run owns, target first. The
+    /// suspend/resume machinery swaps all of a run's KV through this.
+    fn for_each_session(
+        &mut self,
+        f: &mut dyn FnMut(&mut VariantSession<'_>) -> Result<()>,
+    ) -> Result<()>;
+    /// Engine hook run once when a *chunked* prefill completes: perform
+    /// whatever post-prefill setup `begin_sampled` does eagerly on the
+    /// monolithic path (feed draft sessions, reset branch caches). The
+    /// default is a no-op for engines with no eager draft state.
+    fn after_prefill(&mut self, prompt: &[u32]) -> Result<()> {
+        let _ = prompt;
+        Ok(())
+    }
 }
 
 /// Expands the target-session plumbing methods every [`RoundStep`]
@@ -127,6 +163,13 @@ macro_rules! target_plumbing {
         fn runtime(&self) -> &$crate::runtime::ScaleRuntime {
             self.target.runtime()
         }
+
+        fn with_target(
+            &mut self,
+            f: &mut dyn FnMut(&mut $crate::spec::VariantSession<'_>) -> ::anyhow::Result<()>,
+        ) -> ::anyhow::Result<()> {
+            f(&mut self.target)
+        }
     };
 }
 pub(crate) use target_plumbing;
@@ -154,6 +197,14 @@ pub struct GenState {
     /// Server-assigned request id for trace correlation (`None` outside
     /// the server; set via [`super::RequestRun::set_trace_id`]).
     pub trace_id: Option<u64>,
+    /// The request's prompt (retirement publication and deferred
+    /// post-prefill engine setup both need it).
+    pub prompt: Vec<u32>,
+    /// Whether the run's KV is currently swapped out to host memory.
+    pub suspended: bool,
+    /// A chunked prefill still in progress: the first token has not been
+    /// emitted yet; `begin_round` feeds one chunk per call until done.
+    pub prefill_pending: Option<PendingPrefill>,
 }
 
 impl GenState {
@@ -171,27 +222,64 @@ impl GenState {
         max_new: usize,
         sampling: Option<SamplingParams>,
     ) -> Result<Self> {
+        Self::start_chunked(target, prompt, max_new, sampling, 0)
+    }
+
+    /// [`GenState::start_with`] with a prefill chunk size: `0` feeds the
+    /// whole prompt monolithically (identical to `start_with`); otherwise
+    /// only the first `chunk` tokens are committed here and the rest are
+    /// left as a [`PendingPrefill`] that `RequestRun::begin_round` drives
+    /// one chunk per round. Chunking never changes a transcript — the
+    /// committed KV is a pure function of the token prefix — it only
+    /// bounds how much prefill work lands in any one scheduler round.
+    pub fn start_chunked(
+        target: &mut VariantSession,
+        prompt: &[u32],
+        max_new: usize,
+        sampling: Option<SamplingParams>,
+        chunk: usize,
+    ) -> Result<Self> {
         let sampler = sampling.and_then(|sp| sp.sampler());
         let t0 = std::time::Instant::now();
-        target.feed(prompt)?;
+        let mut cursor = target.prefill_begin(prompt)?;
+        let complete = target.prefill_step(&mut cursor, chunk)?;
         let prefill = t0.elapsed();
-        let row = target.last_logits().unwrap();
-        let first = match &sampler {
-            Some(s) => s.sample_token(row, 0),
-            None => argmax(row),
-        };
         let mut s = GenState {
-            out: vec![first],
-            root: first,
-            done: first == EOS || max_new <= 1,
+            out: Vec::new(),
+            root: 0, // placeholder until the first token emits
+            done: false,
             max_new,
             stats: GenStats { prefill, ..Default::default() },
             round_in_flight: None,
             sampler,
             trace_id: None,
+            prompt: prompt.to_vec(),
+            suspended: false,
+            prefill_pending: None,
         };
-        s.stats.target_calls = 0; // prefill counted separately
+        if complete {
+            let row = target.last_logits().expect("prefill computed logits");
+            s.emit_first_from_row(row);
+        } else {
+            s.prefill_pending = Some(PendingPrefill { cursor, chunk });
+        }
         Ok(s)
+    }
+
+    /// Emit the request's first token from the post-prefill logits row —
+    /// greedy, or the position-0 coupled sample. Shared by the monolithic
+    /// path ([`GenState::start_chunked`]) and the deferred final-chunk
+    /// path in `RequestRun::begin_round`, so both emit identically.
+    pub fn emit_first_from_row(&mut self, row: &[f32]) -> u32 {
+        debug_assert!(self.out.is_empty(), "first token already emitted");
+        let first = match &self.sampler {
+            Some(s) => s.sample_token(row, 0),
+            None => argmax(row),
+        };
+        self.out.push(first);
+        self.root = first;
+        self.done = first == EOS || self.max_new <= 1;
+        first
     }
 
     /// Emit verified tokens (accepted + bonus), respecting EOS and budget.

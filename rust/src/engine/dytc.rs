@@ -109,6 +109,7 @@ pub struct DytcEngine<'rt> {
     name: &'static str,
     with_ee: bool,
     with_quant: bool,
+    prefill_chunk: usize,
 }
 
 impl<'rt> DytcEngine<'rt> {
@@ -160,6 +161,7 @@ impl<'rt> DytcEngine<'rt> {
             },
             with_ee,
             with_quant,
+            prefill_chunk: opts.prefill_chunk,
         })
     }
 }
@@ -213,6 +215,7 @@ impl<'rt> DytcRun<'rt> {
         prompt: &[u32],
         max_new: usize,
         sampling: Option<SamplingParams>,
+        prefill_chunk: usize,
     ) -> Result<Self> {
         let mut target = VariantSession::new(rt, Variant::Target)?;
         let ls40 = VariantSession::new(rt, Variant::Ls40)?;
@@ -231,7 +234,7 @@ impl<'rt> DytcRun<'rt> {
             (None, None)
         };
 
-        let st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
+        let st = GenState::start_chunked(&mut target, prompt, max_new, sampling, prefill_chunk)?;
         let matcher = PldMatcher::new(prompt);
         // Draft sessions are prefilled lazily on first use: a request whose
         // scheduling never touches a DSIA variant (pure PLD rounds) pays
@@ -489,6 +492,25 @@ impl RoundStep for DytcRun<'_> {
 
     target_plumbing!();
 
+    fn for_each_session(
+        &mut self,
+        f: &mut dyn FnMut(&mut VariantSession<'_>) -> Result<()>,
+    ) -> Result<()> {
+        f(&mut self.target)?;
+        f(&mut self.ls40)?;
+        f(&mut self.ls60)?;
+        if let Some(s) = self.ee.as_mut() {
+            f(s)?;
+        }
+        if let Some(s) = self.aq8.as_mut() {
+            f(s)?;
+        }
+        if let Some(s) = self.aq8ls40.as_mut() {
+            f(s)?;
+        }
+        Ok(())
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,
@@ -580,6 +602,7 @@ impl Engine for DytcEngine<'_> {
             prompt,
             max_new,
             sampling,
+            self.prefill_chunk,
         )?))
     }
 }

@@ -36,12 +36,17 @@ const POOL_CTX: usize = 2;
 pub struct LookaheadEngine<'rt> {
     rt: &'rt ScaleRuntime,
     k: usize,
+    prefill_chunk: usize,
 }
 
 impl<'rt> LookaheadEngine<'rt> {
     /// Build the engine; `opts.draft_k` bounds the n-gram chain length.
     pub fn new(rt: &'rt ScaleRuntime, opts: &EngineOpts) -> Result<Self> {
-        Ok(LookaheadEngine { rt, k: opts.draft_k.max(5) })
+        Ok(LookaheadEngine {
+            rt,
+            k: opts.draft_k.max(5),
+            prefill_chunk: opts.prefill_chunk,
+        })
     }
 }
 
@@ -108,6 +113,13 @@ impl RoundStep for LookaheadRun<'_> {
 
     target_plumbing!();
 
+    fn for_each_session(
+        &mut self,
+        f: &mut dyn FnMut(&mut VariantSession<'_>) -> Result<()>,
+    ) -> Result<()> {
+        f(&mut self.target)
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,
@@ -159,7 +171,8 @@ impl Engine for LookaheadEngine<'_> {
         sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
+        let st =
+            GenState::start_chunked(&mut target, prompt, max_new, sampling, self.prefill_chunk)?;
 
         let mut pool = Pool::new();
         // seed the pool from the prompt's own n-grams

@@ -183,6 +183,33 @@ pub trait RequestRun {
     /// events can be correlated to one request. A no-op by default
     /// (harness/bench runs have no wire id).
     fn set_trace_id(&mut self, _id: u64) {}
+    /// Whether the run's KV is currently swapped out to host memory
+    /// ([`RequestRun::suspend`]). Always `false` by default.
+    fn is_suspended(&self) -> bool {
+        false
+    }
+    /// Swap every session's KV out to a host snapshot and release the
+    /// backend storage plus pool reservations — the scheduler's
+    /// preemption hook, legal only between rounds. Lossless: committed
+    /// rows round-trip bitwise through export/import, and `resume`
+    /// restores them exactly. Default: unsupported (only the blanket
+    /// [`common::RoundStep`] lift implements it).
+    fn suspend(&mut self) -> Result<()> {
+        Err(anyhow!("this run does not support suspension"))
+    }
+    /// Re-acquire KV caches from the pool and restore the swapped-out
+    /// rows ([`RequestRun::suspend`]'s inverse). Fails — retryably, with
+    /// the snapshot intact — while the pool cannot admit the bytes.
+    fn resume(&mut self) -> Result<()> {
+        Ok(())
+    }
+    /// Publish the request's committed prompt + decoded tokens to the
+    /// runtime's cross-request prefix cache — the retirement hook that
+    /// lets a follow-up turn embedding this reply prefill from cache.
+    /// No-op by default (and without a cache).
+    fn publish_kv(&mut self) -> Result<()> {
+        Ok(())
+    }
     /// Consume the run into its final [`Generation`].
     fn finish(self: Box<Self>) -> Generation;
 }
@@ -227,6 +254,54 @@ impl<T: common::RoundStep> RequestRun for T {
     fn begin_round(&mut self) -> Result<RoundPhase> {
         if self.state().done {
             return Ok(RoundPhase::Done(RoundOutcome { emitted: Vec::new(), done: true }));
+        }
+        debug_assert!(!self.state().suspended, "round on a suspended run");
+        // chunked prefill in progress: commit one more chunk instead of a
+        // speculation round. Identical tokens to monolithic prefill — the
+        // committed KV is a pure function of the token prefix — only the
+        // per-round work is bounded.
+        if let Some(mut pp) = self.state_mut().prefill_pending.take() {
+            let t0 = Instant::now();
+            let mut complete = false;
+            self.with_target(&mut |t| {
+                complete = t.prefill_step(&mut pp.cursor, pp.chunk)?;
+                Ok(())
+            })?;
+            let chunk_wall = t0.elapsed();
+            let (fed, total) = (pp.cursor.fed(), pp.cursor.total());
+            let st = self.state_mut();
+            st.stats.prefill += chunk_wall;
+            let trace_id = st.trace_id;
+            self.runtime().obs().record(|t_us| {
+                let id = trace_id.map_or("null".into(), |i| i.to_string());
+                format!(
+                    "{{\"t_us\":{t_us},\"ev\":\"prefill_chunk\",\"id\":{id},\"fed\":{fed},\"total\":{total},\"chunk_us\":{}}}",
+                    chunk_wall.as_micros()
+                )
+            });
+            if !complete {
+                self.state_mut().prefill_pending = Some(pp);
+                return Ok(RoundPhase::Done(RoundOutcome {
+                    emitted: Vec::new(),
+                    done: false,
+                }));
+            }
+            // prompt fully committed: run the deferred engine setup, then
+            // emit the first token exactly as the monolithic path does
+            let prompt = std::mem::take(&mut self.state_mut().prompt);
+            self.after_prefill(&prompt)?;
+            self.state_mut().prompt = prompt;
+            let mut row = Vec::new();
+            self.with_target(&mut |t| {
+                row = t.last_logits().expect("prefill computed logits").to_vec();
+                Ok(())
+            })?;
+            let st = self.state_mut();
+            let first = st.emit_first_from_row(&row);
+            return Ok(RoundPhase::Done(RoundOutcome {
+                emitted: vec![first],
+                done: st.done,
+            }));
         }
         if !self.capacity_ok() {
             self.state_mut().done = true;
@@ -333,6 +408,58 @@ impl<T: common::RoundStep> RequestRun for T {
         self.state_mut().trace_id = Some(id);
     }
 
+    fn is_suspended(&self) -> bool {
+        self.state().suspended
+    }
+
+    fn suspend(&mut self) -> Result<()> {
+        debug_assert!(
+            self.state().round_in_flight.is_none(),
+            "suspend with a round in flight"
+        );
+        if self.state().suspended {
+            return Ok(());
+        }
+        // idempotent per session, so a partially failed suspend can retry
+        self.for_each_session(&mut |s| {
+            if s.is_swapped() {
+                Ok(())
+            } else {
+                s.swap_out()
+            }
+        })?;
+        self.state_mut().suspended = true;
+        Ok(())
+    }
+
+    fn resume(&mut self) -> Result<()> {
+        if !self.state().suspended {
+            return Ok(());
+        }
+        self.for_each_session(&mut |s| {
+            if s.is_swapped() {
+                s.swap_in()
+            } else {
+                Ok(())
+            }
+        })?;
+        self.state_mut().suspended = false;
+        Ok(())
+    }
+
+    fn publish_kv(&mut self) -> Result<()> {
+        let full: Vec<u32> = {
+            let st = self.state();
+            st.prompt.iter().chain(st.out.iter()).copied().collect()
+        };
+        self.with_target(&mut |t| {
+            // the root's KV is not committed yet: publish what is
+            let n = full.len().min(t.pos());
+            t.publish(&full[..n]);
+            Ok(())
+        })
+    }
+
     fn finish(self: Box<Self>) -> Generation {
         Generation {
             tokens: self.state().out.clone(),
@@ -409,13 +536,23 @@ pub struct EngineOpts {
     /// Kangaroo-style early stop: stop drafting when the draft's confidence
     /// in its next token falls below this.
     pub conf_stop: f64,
+    /// Prefill chunk size in tokens: `0` (the default) feeds prompts
+    /// monolithically at `begin`; `> 0` commits at most this many prompt
+    /// tokens per scheduler round (chunked prefill — byte-identical
+    /// transcripts, bounded per-round prefill work).
+    pub prefill_chunk: usize,
     /// DyTC hyper-parameters.
     pub dytc: DytcParams,
 }
 
 impl Default for EngineOpts {
     fn default() -> Self {
-        EngineOpts { draft_k: 5, conf_stop: 0.4, dytc: DytcParams::default() }
+        EngineOpts {
+            draft_k: 5,
+            conf_stop: 0.4,
+            prefill_chunk: 0,
+            dytc: DytcParams::default(),
+        }
     }
 }
 
@@ -463,7 +600,7 @@ pub fn build_engine<'rt>(
     opts: &EngineOpts,
 ) -> Result<Box<dyn Engine + 'rt>> {
     Ok(match kind {
-        "ar" => Box::new(ar::ArEngine::new(rt)?),
+        "ar" => Box::new(ar::ArEngine::new(rt, opts)?),
         "pld" => Box::new(sd::SdEngine::new_pld(rt, opts)?),
         "swift" => Box::new(sd::SdEngine::new_model(rt, Variant::Ls40, false, opts)?),
         "kangaroo" => Box::new(sd::SdEngine::new_model(rt, Variant::Ee, true, opts)?),

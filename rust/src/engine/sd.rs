@@ -35,6 +35,7 @@ pub struct SdEngine<'rt> {
     draft_kind: DraftKind,
     conf_stop: Option<f64>,
     k: usize,
+    prefill_chunk: usize,
     name: String,
 }
 
@@ -46,13 +47,14 @@ enum DraftKind {
 
 impl<'rt> SdEngine<'rt> {
     /// PLD-drafted speculative decoding (the `pld` engine).
-    pub fn new_pld(rt: &'rt ScaleRuntime, _opts: &EngineOpts) -> Result<Self> {
+    pub fn new_pld(rt: &'rt ScaleRuntime, opts: &EngineOpts) -> Result<Self> {
         Ok(SdEngine {
             rt,
             draft_kind: DraftKind::Pld,
             conf_stop: None,
             // PLD costs nothing: give it the full verify width
             k: crate::runtime::VERIFY_T - 1,
+            prefill_chunk: opts.prefill_chunk,
             name: "pld".into(),
         })
     }
@@ -69,6 +71,7 @@ impl<'rt> SdEngine<'rt> {
             draft_kind: DraftKind::Model(variant),
             conf_stop: kangaroo_stop.then_some(opts.conf_stop),
             k: opts.draft_k,
+            prefill_chunk: opts.prefill_chunk,
             name: match (variant, kangaroo_stop) {
                 (Variant::Ee, _) => "kangaroo".into(),
                 (v, _) => format!("sd-{}", v.key()),
@@ -140,6 +143,26 @@ impl RoundStep for SdRun<'_> {
 
     target_plumbing!();
 
+    fn for_each_session(
+        &mut self,
+        f: &mut dyn FnMut(&mut VariantSession<'_>) -> Result<()>,
+    ) -> Result<()> {
+        f(&mut self.target)?;
+        if let Draft::Model { sess, .. } = &mut self.draft {
+            f(sess)?;
+        }
+        Ok(())
+    }
+
+    fn after_prefill(&mut self, prompt: &[u32]) -> Result<()> {
+        if let Draft::Model { sess, .. } = &mut self.draft {
+            sess.feed(prompt)?;
+            self.st.stats.draft_calls += 1;
+            self.bc = BranchCache::new(sess.pos());
+        }
+        Ok(())
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,
@@ -174,7 +197,9 @@ impl Engine for SdEngine<'_> {
         sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let mut draft: Draft = match self.draft_kind {
+        // the draft session allocates NOW so the run's whole KV footprint
+        // is reserved at admission, even though its feed may be deferred
+        let draft: Draft = match self.draft_kind {
             DraftKind::Pld => Draft::Pld,
             DraftKind::Model(v) => Draft::Model {
                 sess: VariantSession::new(self.rt, v)?,
@@ -182,17 +207,16 @@ impl Engine for SdEngine<'_> {
             },
         };
 
-        let mut st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
+        let st =
+            GenState::start_chunked(&mut target, prompt, max_new, sampling, self.prefill_chunk)?;
 
         // PLD corpus / draft cache both start at the committed prompt.
         let matcher = PldMatcher::new(prompt);
-        let mut bc = BranchCache::new(0);
-        if let Draft::Model { sess, .. } = &mut draft {
-            sess.feed(prompt)?;
-            st.stats.draft_calls += 1;
-            bc = BranchCache::new(sess.pos());
+        let mut run =
+            SdRun { target, draft, matcher, bc: BranchCache::new(0), k: self.k, st };
+        if run.st.prefill_pending.is_none() {
+            run.after_prefill(prompt)?;
         }
-
-        Ok(Box::new(SdRun { target, draft, matcher, bc, k: self.k, st }))
+        Ok(Box::new(run))
     }
 }

@@ -33,6 +33,7 @@ pub struct TreeEngine<'rt> {
     k_main: usize,
     k_sib: usize,
     inner_k: usize,
+    prefill_chunk: usize,
     name: &'static str,
 }
 
@@ -45,6 +46,7 @@ impl<'rt> TreeEngine<'rt> {
             k_main: opts.draft_k.max(4),
             k_sib: 2,
             inner_k: 7,
+            prefill_chunk: opts.prefill_chunk,
             name: if use_vc { "trvc" } else { "tr" },
         })
     }
@@ -162,6 +164,21 @@ impl RoundStep for TreeRun<'_> {
 
     target_plumbing!();
 
+    fn for_each_session(
+        &mut self,
+        f: &mut dyn FnMut(&mut VariantSession<'_>) -> Result<()>,
+    ) -> Result<()> {
+        f(&mut self.target)?;
+        f(&mut self.draft)
+    }
+
+    fn after_prefill(&mut self, prompt: &[u32]) -> Result<()> {
+        self.draft.feed(prompt)?;
+        self.st.stats.draft_calls += 1;
+        self.bc = BranchCache::new(self.draft.pos());
+        Ok(())
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,
@@ -198,25 +215,29 @@ impl Engine for TreeEngine<'_> {
         sampling: Option<SamplingParams>,
     ) -> Result<Box<dyn RequestRun + 'e>> {
         let mut target = VariantSession::new(self.rt, Variant::Target)?;
-        let mut draft = VariantSession::new(self.rt, Variant::Ls40)?;
+        // draft allocates NOW (full footprint reserved at admission); its
+        // feed may be deferred past a chunked prefill (after_prefill)
+        let draft = VariantSession::new(self.rt, Variant::Ls40)?;
 
-        let mut st = GenState::start_with(&mut target, prompt, max_new, sampling)?;
+        let st =
+            GenState::start_chunked(&mut target, prompt, max_new, sampling, self.prefill_chunk)?;
         let matcher = PldMatcher::new(prompt);
-        draft.feed(prompt)?;
-        st.stats.draft_calls += 1;
-        let bc = BranchCache::new(draft.pos());
 
-        Ok(Box::new(TreeRun {
+        let mut run = TreeRun {
             target,
             draft,
             matcher,
-            bc,
+            bc: BranchCache::new(0),
             use_vc: self.use_vc,
             k_main: self.k_main,
             k_sib: self.k_sib,
             inner_k: self.inner_k,
             matcher_mark: 0,
             st,
-        }))
+        };
+        if run.st.prefill_pending.is_none() {
+            run.after_prefill(prompt)?;
+        }
+        Ok(Box::new(run))
     }
 }

@@ -78,6 +78,15 @@ FLAGS
   --prefix-cache-mb N cross-request prefix/KV cache budget in MiB
                       (default: 0 = off; shared prompt prefixes are
                       reused bit-exactly across requests)
+  --kv-budget-mb N    global KV byte budget in MiB shared by live
+                      sessions and the prefix cache (default: 0 =
+                      unbounded; over budget the server swaps runs out
+                      to host memory and back — transcripts unchanged)
+  --max-queue N       serve: admission-queue bound (default: 0 =
+                      unbounded; over-limit requests get a
+                      {"error":"queue full"} reply, counted as shed)
+  --prefill-chunk N   feed prompts in chunks of N tokens (default: 0 =
+                      monolithic; chunking is byte-identical)
   --temperature T     sampled decoding temperature (default: 0 = greedy;
                       > 0 enables seeded rejection-sampling verification,
                       still token-identical to sampled AR)
@@ -110,6 +119,9 @@ fn info(args: &Args) -> Result<()> {
     println!("threads: {}", cfg.resolved_threads());
     println!("lockstep: {}", if cfg.lockstep { "on" } else { "off" });
     println!("prefix_cache_mb: {}", cfg.prefix_cache_mb);
+    println!("kv_budget_mb: {}", cfg.kv_budget_mb);
+    println!("max_queue: {}", cfg.max_queue);
+    println!("prefill_chunk: {}", cfg.opts.prefill_chunk);
     println!("lang_seed: {}  vocab: {}", m.lang_seed, m.vocab);
     println!("step shapes: {:?}  commit shapes: {:?}", m.step_shapes, m.commit_shapes);
     for (name, sc) in &m.scales {

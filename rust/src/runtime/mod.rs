@@ -74,7 +74,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::PrefixCache;
+use crate::cache::{KvLease, KvPool, PrefixCache};
 use crate::model::weights::Weights;
 use crate::model::{Manifest, ScaleInfo, Variant};
 use crate::obs::Obs;
@@ -143,6 +143,9 @@ pub struct KvCache {
     pub pos: usize,
     /// The DSIA variant this cache belongs to.
     pub variant: Variant,
+    /// Byte reservation against the runtime's [`KvPool`]; dropping the
+    /// cache (or swapping it out) returns the bytes to the pool.
+    pub(crate) lease: Option<KvLease>,
 }
 
 /// Result of one step call.
@@ -448,6 +451,7 @@ impl Runtime {
             info,
             backend,
             counters,
+            pool: KvPool::new(0),
             prefix_cache: None,
             threads: self.threads,
             obs: Obs::new(),
@@ -463,6 +467,10 @@ pub struct ScaleRuntime {
     pub info: ScaleInfo,
     backend: Box<dyn Backend>,
     counters: BTreeMap<Variant, RefCell<VariantCounters>>,
+    /// Global KV byte-budget pool: every session KV allocation reserves
+    /// from it and the prefix cache charges resident blocks against it.
+    /// Budget 0 (the default) is unbounded.
+    pool: KvPool,
     prefix_cache: Option<PrefixCache>,
     /// Worker-thread budget the backend was loaded with (stats/bench
     /// reporting; 1 = serial).
@@ -510,7 +518,32 @@ impl ScaleRuntime {
     /// engines; only immutable committed prefixes are ever shared, so
     /// per-request KV isolation — and greedy losslessness — is untouched.
     pub fn enable_prefix_cache(&mut self, budget_bytes: usize) {
-        self.prefix_cache = (budget_bytes > 0).then(|| PrefixCache::new(budget_bytes));
+        self.prefix_cache = (budget_bytes > 0)
+            .then(|| PrefixCache::with_pool(self.pool.clone(), budget_bytes));
+    }
+
+    /// Set the global KV byte budget shared by live sessions and the
+    /// prefix cache (`0` = unbounded, the default). Existing allocations
+    /// are never revoked; the serving scheduler resolves pressure through
+    /// cache eviction and session preemption.
+    pub fn set_kv_budget(&self, bytes: usize) {
+        self.pool.set_budget(bytes);
+    }
+
+    /// The global KV accounting pool (budget, usage, swap counters).
+    pub fn kv_pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// Bytes one full-length KV cache for `v` occupies (f32 elements of
+    /// the variant's `(nl, 2, H, s_max, dh)` shape). 0 for variants this
+    /// scale does not define.
+    pub fn kv_bytes_for(&self, v: Variant) -> usize {
+        self.info
+            .variants
+            .get(&v)
+            .map(|i| i.kv_shape.iter().product::<usize>() * std::mem::size_of::<f32>())
+            .unwrap_or(0)
     }
 
     /// The attached prefix cache, when one is enabled.
@@ -553,12 +586,56 @@ impl ScaleRuntime {
         Ok(())
     }
 
-    /// Fresh zeroed KV cache for a variant.
+    /// Fresh zeroed KV cache for a variant, reserved against the global
+    /// KV pool. Under a budget, prefix-cache blocks are shed first (they
+    /// are reclaimable); if the reservation still cannot fit, this fails
+    /// and the caller (the serving scheduler) queues or preempts.
     pub fn new_kv(&self, v: Variant) -> Result<KvCache> {
         if !self.counters.contains_key(&v) {
             return Err(anyhow!("variant {v:?} not loaded for scale {}", self.info.name));
         }
-        Ok(KvCache { state: self.backend.new_kv(v)?, pos: 0, variant: v })
+        let bytes = self.kv_bytes_for(v);
+        if !self.pool.can_fit(bytes) {
+            if let Some(pc) = &self.prefix_cache {
+                pc.shrink(self.pool.overage_with(bytes));
+            }
+        }
+        let lease = self.pool.reserve(bytes)?;
+        Ok(KvCache {
+            state: self.backend.new_kv(v)?,
+            pos: 0,
+            variant: v,
+            lease: Some(lease),
+        })
+    }
+
+    /// Release a cache's backend storage and pool reservation, leaving an
+    /// empty husk (`pos` 0, no lease). The swap-out path: the caller first
+    /// [`ScaleRuntime::export_rows`]s the committed rows to host memory,
+    /// then releases, and later rebuilds via [`ScaleRuntime::new_kv`] +
+    /// [`ScaleRuntime::restore_rows`] — bitwise-identical by the
+    /// determinism contract.
+    pub fn release_kv(&self, kv: &mut KvCache) {
+        kv.state = KvState::Host(Vec::new());
+        kv.pos = 0;
+        kv.lease = None;
+    }
+
+    /// Write `len` committed rows at the cache tail from `rows` (the
+    /// [`Backend::export_rows`] layout) and advance the committed length.
+    /// Identical to [`ScaleRuntime::import_rows`] except it counts as a
+    /// swap restore, not cross-request reuse — no `tokens_reused` credit.
+    pub fn restore_rows(&self, kv: &mut KvCache, len: usize, rows: &[f32]) -> Result<()> {
+        assert!(
+            kv.pos + len <= self.info.s_max,
+            "KV overflow: pos {} + restore {} > s_max {}",
+            kv.pos,
+            len,
+            self.info.s_max
+        );
+        self.backend.import_rows(kv.variant, &mut kv.state, kv.pos, len, rows)?;
+        kv.pos += len;
+        Ok(())
     }
 
     /// Execute one step of `t_shape` in-flight tokens, of which the first
@@ -903,5 +980,61 @@ mod tests {
         let rt = Runtime::open_with(Path::new("/nope"), BackendSelect::Ref).unwrap();
         let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
         assert!(srt.new_kv(Variant::Ls40).is_err());
+    }
+
+    #[test]
+    fn new_kv_reserves_from_pool_and_drop_releases() {
+        let rt = Runtime::open_with(Path::new("/nope"), BackendSelect::Ref).unwrap();
+        let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+        let bytes = srt.kv_bytes_for(Variant::Target);
+        assert_eq!(bytes, srt.info.kv_elems(Variant::Target) * 4);
+
+        srt.set_kv_budget(bytes); // exactly one session fits
+        let kv = srt.new_kv(Variant::Target).unwrap();
+        assert_eq!(srt.kv_pool().used(), bytes);
+        let err = srt.new_kv(Variant::Target).unwrap_err();
+        assert!(format!("{err:#}").contains("budget exceeded"));
+        drop(kv);
+        assert_eq!(srt.kv_pool().used(), 0, "lease drop returns the bytes");
+        assert!(srt.new_kv(Variant::Target).is_ok());
+    }
+
+    #[test]
+    fn release_kv_returns_bytes_without_dropping_the_handle() {
+        let rt = Runtime::open_with(Path::new("/nope"), BackendSelect::Ref).unwrap();
+        let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+        let bytes = srt.kv_bytes_for(Variant::Target);
+        srt.set_kv_budget(bytes);
+        let mut kv = srt.new_kv(Variant::Target).unwrap();
+        srt.release_kv(&mut kv);
+        assert_eq!(srt.kv_pool().used(), 0);
+        assert_eq!(kv.pos, 0);
+        // the freed bytes admit a fresh cache while the husk is alive
+        let _kv2 = srt.new_kv(Variant::Target).unwrap();
+    }
+
+    #[test]
+    fn budget_pressure_sheds_prefix_cache_for_sessions() {
+        let rt = Runtime::open_with(Path::new("/nope"), BackendSelect::Ref).unwrap();
+        let mut srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+        let bytes = srt.kv_bytes_for(Variant::Target);
+        srt.enable_prefix_cache(1 << 20);
+        srt.set_kv_budget(bytes + (1 << 20));
+
+        // fill some cache residency via a session's prefill publish, then
+        // tighten the budget so a second session only fits if the cache sheds
+        let prompt: Vec<u32> = (1..=64).collect();
+        let mut sess = crate::spec::VariantSession::new(&srt, Variant::Target).unwrap();
+        sess.feed(&prompt).unwrap();
+        let cached = srt.kv_pool().stats().cache_bytes;
+        assert!(cached > 0, "feed published prompt blocks");
+        srt.set_kv_budget(2 * bytes + cached / 2);
+        let kv2 = srt.new_kv(Variant::Target).unwrap();
+        assert!(
+            srt.kv_pool().stats().cache_bytes < cached,
+            "cache shed blocks to admit the session"
+        );
+        assert_eq!(srt.kv_pool().overage(), 0);
+        drop((sess, kv2));
     }
 }

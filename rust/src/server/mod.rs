@@ -65,13 +65,15 @@
 //!     "rounds": 17, "mean_accepted": 3.4,
 //!     "batch": 3, "engine": "cas-spec"}
 //! -> {"cmd": "stats"}
-//! <- {"served": 12, "errors": 0, "total_tokens": 768, "busy_secs": 1.9,
-//!     "uptime_secs": 4.2, "tok_s": 404.2, "sampled": 2,
-//!     "queue_depth": 0, "running": 3,
+//! <- {"served": 12, "errors": 0, "shed": 0, "total_tokens": 768,
+//!     "busy_secs": 1.9, "uptime_secs": 4.2, "tok_s": 404.2, "sampled": 2,
+//!     "queue_depth": 0, "running": 3, "suspended": 0,
 //!     "peak_batch": 4, "max_batch": 8, "threads": 8, "lockstep": true,
 //!     "fused_steps": 40, "fused_lanes": 118, "tokens_stepped": 3210,
 //!     "prefix_cache_mb": 32, "prefix_lookups": 24,
-//!     "prefix_hit_tokens": 512, "evictions": 0, "engine": "cas-spec",
+//!     "prefix_hit_tokens": 512, "evictions": 0,
+//!     "kv_bytes": 7077888, "kv_budget": 8388608, "swaps_out": 1,
+//!     "swaps_in": 1, "engine": "cas-spec",
 //!     "scale": "base", "backend": "ref"}
 //! -> {"cmd": "metrics"}
 //! <- {"metrics": "cas_spec_served_total 12\n...Prometheus text..."}
@@ -105,6 +107,30 @@
 //! per-request sessions; only immutable committed prefixes are shared).
 //! `stats` exposes `prefix_lookups` / `prefix_hit_tokens` / `evictions`
 //! plus `tokens_stepped`, so the skipped prefill work is observable.
+//! Retiring requests publish their committed prompt + decoded tokens back
+//! into the cache, so a follow-up turn that embeds a previous reply
+//! prefills from cache instead of recomputing it.
+//!
+//! # KV budget, preemption, and admission control
+//!
+//! With `--kv-budget-mb N` (config `kv_budget_mb`, default 0 = unbounded)
+//! every session KV allocation and every cached prefix block draws on one
+//! global [`crate::cache::KvPool`] byte budget. The scheduler admits a
+//! request only when its engine's whole KV footprint fits (cached blocks
+//! count as reclaimable — they are evicted to make room). When admission
+//! would stall while ≥ 2 requests are running, the most recently admitted
+//! run is **preempted**: its KV is exported bitwise to host memory
+//! (`swap_out` event), freeing its budget, and it is swapped back in —
+//! bit-identically — once a slot frees (`swap_in` event). Transcripts are
+//! byte-identical to unconstrained serving because committed KV is a pure
+//! function of the token prefix. `--max-queue N` (config `max_queue`,
+//! default 0 = unbounded) bounds the admission queue: over-limit requests
+//! are shed immediately with a `queue full` error reply, counted in
+//! `shed` (not `errors`) and traced as `shed` events — so the
+//! enqueue→admit→retire lifecycle invariant stays checkable per id.
+//! `--prefill-chunk N` bounds per-cycle prefill work: prompts commit at
+//! most N tokens per scheduler round (`prefill_chunk` events),
+//! byte-identical to monolithic prefill.
 
 #![warn(missing_docs)]
 
@@ -118,7 +144,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::CacheStats;
+use crate::cache::{CacheStats, PoolStats};
 use crate::config::RunConfig;
 use crate::engine::{build_engine, required_variants, Engine, RequestRun, RoundPhase};
 use crate::runtime::{BatchLane, Runtime, ScaleRuntime};
@@ -176,6 +202,11 @@ struct Active<'e> {
 struct SchedCounters {
     served: u64,
     errors: u64,
+    /// Requests rejected at admission by the `max_queue` bound. Kept
+    /// apart from `errors`: a shed request never started serving, so the
+    /// per-id lifecycle invariant (`enqueue` → `shed` OR `enqueue` →
+    /// `admit` → `retire`/`error`) stays checkable.
+    shed: u64,
     total_tokens: u64,
     /// Worker busy seconds: prompt prefill (inside `Engine::begin`) plus
     /// decode-round time. Aggregate throughput = total_tokens / busy_secs
@@ -216,7 +247,9 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
         let mut rt = Runtime::open_with(&wcfg.artifacts, wcfg.backend_select()?)?;
         rt.set_threads(wcfg.resolved_threads());
         let mut srt = rt.load_scale(&wcfg.scale, &required_variants(&engine_name))?;
-        // attach the cross-request prefix cache before any session opens
+        // set the global KV budget and attach the cross-request prefix
+        // cache (a client of the same pool) before any session opens
+        srt.set_kv_budget(wcfg.kv_budget_bytes());
         srt.enable_prefix_cache(wcfg.prefix_cache_bytes());
         // event tracing is opt-in; the JSONL stream is complete when
         // serve() returns because this worker thread is joined there
@@ -232,6 +265,7 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
             &engine_name,
             wcfg.max_batch.max(1),
             wcfg.lockstep,
+            wcfg.max_queue,
         )
     });
 
@@ -285,9 +319,19 @@ fn run_scheduler(
     engine_name: &str,
     max_batch: usize,
     lockstep: bool,
+    max_queue: usize,
 ) -> Result<()> {
     let mut queue: VecDeque<Queued> = VecDeque::new();
     let mut running: Vec<Active<'_>> = Vec::new();
+    // runs preempted under KV pressure: KV swapped out to host memory,
+    // waiting for budget to swap back in (oldest-preempted first)
+    let mut suspended: Vec<Active<'_>> = Vec::new();
+    // the engine's whole per-request KV footprint (every session it
+    // opens at admission) — the unit of admission control
+    let footprint: usize = required_variants(engine_name)
+        .iter()
+        .map(|v| srt.kv_bytes_for(*v))
+        .sum();
     let mut c = SchedCounters::default();
     // worker start: the monotonic basis for `uptime_secs` in stats
     let up0 = Instant::now();
@@ -301,7 +345,7 @@ fn run_scheduler(
     loop {
         // ---- drain the admission channel ----
         let mut jobs: Vec<Job> = Vec::new();
-        if running.is_empty() && queue.is_empty() {
+        if running.is_empty() && queue.is_empty() && suspended.is_empty() {
             // fully idle: block until something arrives
             match rx.recv() {
                 Ok(job) => jobs.push(job),
@@ -319,6 +363,7 @@ fn run_scheduler(
                     let view = StatsView {
                         queue_depth: queue.len(),
                         running: running.len(),
+                        suspended: suspended.len(),
                         max_batch,
                         tokens_stepped: srt
                             .loaded_variants()
@@ -332,6 +377,7 @@ fn run_scheduler(
                         threads: srt.threads(),
                         lockstep,
                         uptime_secs: up0.elapsed().as_secs_f64(),
+                        pool: srt.kv_pool().stats(),
                     };
                     let _ = reply.send(stats_json(&c, &view).to_string());
                 }
@@ -343,6 +389,17 @@ fn run_scheduler(
                     srt.obs().record(|t_us| {
                         format!("{{\"t_us\":{t_us},\"ev\":\"enqueue\",\"id\":{id}}}")
                     });
+                    // bounded admission queue: shed over-limit requests
+                    // immediately (distinct from `errors` — see
+                    // SchedCounters::shed)
+                    if max_queue > 0 && queue.len() >= max_queue {
+                        c.shed += 1;
+                        srt.obs().record(|t_us| {
+                            format!("{{\"t_us\":{t_us},\"ev\":\"shed\",\"id\":{id}}}")
+                        });
+                        let _ = reply.send(error_json(id, "queue full"));
+                        continue;
+                    }
                     queue.push_back(Queued { req, reply, enqueued: Instant::now() });
                 }
             }
@@ -356,7 +413,30 @@ fn run_scheduler(
             for a in running.drain(..) {
                 let _ = a.reply.send(error_json(a.id, "server shutting down"));
             }
+            for a in suspended.drain(..) {
+                let _ = a.reply.send(error_json(a.id, "server shutting down"));
+            }
             return Ok(());
+        }
+
+        // ---- resume: swapped-out runs return before any new admission
+        // (they were admitted first; resuming them preserves fairness and
+        // drains the swap area as soon as budget frees) ----
+        while !suspended.is_empty() && running.len() < max_batch {
+            if !srt.kv_pool().session_fit(footprint) && !running.is_empty() {
+                break; // budget returns when a running request retires
+            }
+            let mut a = suspended.remove(0); // oldest preempted first
+            match a.run.resume() {
+                Ok(()) => {
+                    let id = a.id;
+                    srt.obs().record(|t_us| {
+                        format!("{{\"t_us\":{t_us},\"ev\":\"swap_in\",\"id\":{id}}}")
+                    });
+                    running.push(a);
+                }
+                Err(e) => retire_err(a, srt, &mut c, &format!("swap in failed: {e:#}")),
+            }
         }
 
         // ---- admit: fill the running batch from the queue front ----
@@ -365,7 +445,56 @@ fn run_scheduler(
         // burst of admissions would stall every active request's next
         // round for the combined prefill time.
         let admit_cap = if running.is_empty() { max_batch } else { running.len() + 1 };
-        while running.len() < max_batch.min(admit_cap) {
+        while running.len() < max_batch.min(admit_cap) && !queue.is_empty() {
+            // KV admission control: the request's whole session footprint
+            // must fit the pool (cache bytes count as reclaimable — the
+            // allocation path evicts them).
+            if footprint > 0 && !srt.kv_pool().session_fit(footprint) {
+                if suspended.is_empty() && running.len() >= 2 {
+                    // Preempt the most recently admitted run: swap its KV
+                    // out to host memory, releasing its budget for the
+                    // queue front. One preemption wave at a time (the
+                    // suspended check) keeps the scheduler from
+                    // thrashing. Preempting the *newest* run keeps the
+                    // oldest — closest to retiring — running.
+                    let vi = running
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, a)| a.started)
+                        .map(|(i, _)| i)
+                        .expect("running.len() >= 2");
+                    let mut v = running.remove(vi);
+                    match v.run.suspend() {
+                        Ok(()) => {
+                            let id = v.id;
+                            srt.obs().record(|t_us| {
+                                format!("{{\"t_us\":{t_us},\"ev\":\"swap_out\",\"id\":{id}}}")
+                            });
+                            suspended.push(v);
+                        }
+                        Err(e) => {
+                            retire_err(v, srt, &mut c, &format!("swap out failed: {e:#}"))
+                        }
+                    }
+                    continue;
+                } else if running.is_empty() && suspended.is_empty() {
+                    // nothing left to preempt or wait for: the budget
+                    // cannot hold even one request of this engine
+                    let q = queue.pop_front().expect("queue non-empty");
+                    let id = q.req.id;
+                    c.errors += 1;
+                    srt.obs().record(|t_us| {
+                        format!("{{\"t_us\":{t_us},\"ev\":\"error\",\"id\":{id}}}")
+                    });
+                    let _ = q.reply.send(error_json(
+                        id,
+                        "kv budget too small for one request",
+                    ));
+                    continue;
+                } else {
+                    break; // budget frees when a run retires or resumes
+                }
+            }
             let Some(q) = queue.pop_front() else { break };
             let queued_ms = q.enqueued.elapsed().as_secs_f64() * 1e3;
             srt.obs().observe_queue_wait_us((queued_ms * 1e3) as u64);
@@ -430,12 +559,16 @@ fn run_scheduler(
 
 /// Retire a finished run: build its response line and count it.
 fn retire_done(
-    a: Active<'_>,
+    mut a: Active<'_>,
     srt: &ScaleRuntime,
     c: &mut SchedCounters,
     engine_name: &str,
     batch_now: usize,
 ) {
+    // publish the committed prompt + decoded tokens to the prefix cache
+    // (no-op without one) so a follow-up turn embedding this reply
+    // prefills from cache; failure to publish never fails the reply
+    let _ = a.run.publish_kv();
     let gen = a.run.finish();
     c.served += 1;
     c.total_tokens += gen.tokens.len() as u64;
@@ -522,9 +655,14 @@ fn advance_fused<'e>(
                 let a = running.remove(i);
                 retire_err(a, srt, c, &format!("{e:#}"));
             }
-            Ok(RoundPhase::Done(_)) => {
+            Ok(RoundPhase::Done(o)) if o.done => {
                 let a = running.remove(i);
                 retire_done(a, srt, c, engine_name, batch_now);
+            }
+            Ok(RoundPhase::Done(_)) => {
+                // not done, no pending step: a prefill chunk was
+                // consumed — the run stays for the next cycle
+                i += 1;
             }
             Ok(RoundPhase::Pending { t_shape }) => {
                 running[i].pending_shape = Some(t_shape);
@@ -627,6 +765,8 @@ fn advance_fused<'e>(
 struct StatsView<'a> {
     queue_depth: usize,
     running: usize,
+    /// Runs preempted under KV pressure, awaiting swap-in.
+    suspended: usize,
     max_batch: usize,
     /// Live tokens actually stepped by the backend, summed over variants
     /// — prefix-cache hits skip steps, so this drops when reuse works.
@@ -643,6 +783,8 @@ struct StatsView<'a> {
     /// Monotonic seconds since the worker started — the denominator that
     /// makes `busy_secs` a utilization (`busy_secs / uptime_secs`).
     uptime_secs: f64,
+    /// Global KV pool accounting (sessions + prefix cache + swap area).
+    pool: PoolStats,
 }
 
 fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
@@ -651,6 +793,7 @@ fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
     Json::obj(vec![
         ("served", Json::Num(c.served as f64)),
         ("errors", Json::Num(c.errors as f64)),
+        ("shed", Json::Num(c.shed as f64)),
         ("total_tokens", Json::Num(c.total_tokens as f64)),
         ("busy_secs", Json::Num(c.busy_secs)),
         ("uptime_secs", Json::Num(v.uptime_secs)),
@@ -658,6 +801,7 @@ fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
         ("sampled", Json::Num(c.sampled as f64)),
         ("queue_depth", Json::Num(v.queue_depth as f64)),
         ("running", Json::Num(v.running as f64)),
+        ("suspended", Json::Num(v.suspended as f64)),
         ("peak_batch", Json::Num(c.peak_batch as f64)),
         ("max_batch", Json::Num(v.max_batch as f64)),
         ("threads", Json::Num(v.threads as f64)),
@@ -669,6 +813,10 @@ fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
         ("prefix_lookups", Json::Num(cache.lookups as f64)),
         ("prefix_hit_tokens", Json::Num(cache.hit_tokens as f64)),
         ("evictions", Json::Num(cache.evicted_blocks as f64)),
+        ("kv_bytes", Json::Num(v.pool.used() as f64)),
+        ("kv_budget", Json::Num(v.pool.budget as f64)),
+        ("swaps_out", Json::Num(v.pool.swaps_out as f64)),
+        ("swaps_in", Json::Num(v.pool.swaps_in as f64)),
         ("engine", Json::Str(v.engine.to_string())),
         ("scale", Json::Str(v.scale.to_string())),
         ("backend", Json::Str(v.backend.to_string())),
@@ -691,6 +839,16 @@ fn metrics_json(c: &SchedCounters, srt: &ScaleRuntime, uptime_secs: f64) -> Stri
     text.push_str(&format!("cas_spec_fused_steps_total {}\n", c.fused_steps));
     text.push_str(&format!("cas_spec_fused_lanes_total {}\n", c.fused_lanes));
     text.push_str(&format!("cas_spec_sampled_total {}\n", c.sampled));
+    text.push_str(&format!("cas_spec_shed_total {}\n", c.shed));
+    {
+        let p = srt.kv_pool().stats();
+        text.push_str(&format!("cas_spec_kv_bytes {}\n", p.used()));
+        text.push_str(&format!("cas_spec_kv_budget_bytes {}\n", p.budget));
+        text.push_str(&format!("cas_spec_kv_peak_bytes {}\n", p.peak_bytes));
+        text.push_str(&format!("cas_spec_kv_swap_bytes {}\n", p.swap_bytes));
+        text.push_str(&format!("cas_spec_kv_swaps_out_total {}\n", p.swaps_out));
+        text.push_str(&format!("cas_spec_kv_swaps_in_total {}\n", p.swaps_in));
+    }
     if let Some(cache) = srt.prefix_cache() {
         let s = cache.stats();
         text.push_str(&format!("cas_spec_prefix_lookups_total {}\n", s.lookups));
@@ -994,6 +1152,7 @@ mod tests {
         let c = SchedCounters {
             served: 3,
             errors: 0,
+            shed: 5,
             total_tokens: 120,
             busy_secs: 0.5,
             peak_batch: 4,
@@ -1004,6 +1163,7 @@ mod tests {
         let v = StatsView {
             queue_depth: 2,
             running: 3,
+            suspended: 1,
             max_batch: 8,
             tokens_stepped: 900,
             cache: None,
@@ -1013,8 +1173,24 @@ mod tests {
             threads: 4,
             lockstep: true,
             uptime_secs: 2.0,
+            pool: PoolStats {
+                budget: 8 << 20,
+                session_bytes: 4 << 20,
+                cache_bytes: 1 << 20,
+                swap_bytes: 2 << 20,
+                peak_bytes: 6 << 20,
+                swaps_out: 7,
+                swaps_in: 6,
+            },
         };
         let j = stats_json(&c, &v);
+        // admission shedding and the KV pool ship in stats
+        assert_eq!(j.get("shed").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(j.get("suspended").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("kv_bytes").unwrap().as_usize().unwrap(), 5 << 20);
+        assert_eq!(j.get("kv_budget").unwrap().as_usize().unwrap(), 8 << 20);
+        assert_eq!(j.get("swaps_out").unwrap().as_u64().unwrap(), 7);
+        assert_eq!(j.get("swaps_in").unwrap().as_u64().unwrap(), 6);
         // utilization is computable from one reply: busy / uptime
         assert!((j.get("uptime_secs").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
         let busy = j.get("busy_secs").unwrap().as_f64().unwrap();
@@ -1049,6 +1225,7 @@ mod tests {
         let v = StatsView {
             queue_depth: 0,
             running: 0,
+            suspended: 0,
             max_batch: 8,
             tokens_stepped: 40,
             cache: Some(CacheStats {
@@ -1065,9 +1242,12 @@ mod tests {
             threads: 1,
             lockstep: false,
             uptime_secs: 0.0,
+            pool: PoolStats::default(),
         };
         let j = stats_json(&c, &v);
         assert_eq!(j.get("uptime_secs").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(j.get("kv_budget").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("shed").unwrap().as_u64().unwrap(), 0);
         assert_eq!(j.get("prefix_cache_mb").unwrap().as_usize().unwrap(), 32);
         assert!(!j.get("lockstep").unwrap().as_bool().unwrap());
         assert_eq!(j.get("prefix_lookups").unwrap().as_u64().unwrap(), 5);

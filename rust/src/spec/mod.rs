@@ -6,7 +6,7 @@ pub mod tree;
 pub mod verify;
 pub mod verify_sample;
 
-pub use session::VariantSession;
+pub use session::{Prefill, VariantSession};
 pub use tree::{DraftTree, ROOT_CONFIG};
 pub use verify::{verify_greedy, VerifyOutcome};
 pub use verify_sample::{verify_sampled, Sampler, SamplingParams};

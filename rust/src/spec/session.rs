@@ -36,6 +36,48 @@ use crate::spec::tree::DraftTree;
 /// Chunk shapes available for chain feeding, descending.
 const CHAIN_SHAPES: [usize; 4] = [64, 16, 8, 1];
 
+/// Host-resident snapshot of a swapped-out session's committed KV rows
+/// (the [`crate::runtime::Backend::export_rows`] layout).
+struct SwappedKv {
+    rows: Vec<f32>,
+    pos: usize,
+}
+
+/// A resumable prefill cursor: the prompt plus how much of it has been
+/// committed so far. Produced by [`VariantSession::prefill_begin`] and
+/// advanced by [`VariantSession::prefill_step`], so the serving scheduler
+/// can feed long prompts in bounded chunks at round boundaries. Chunking
+/// is byte-identical to a monolithic feed by the backend determinism
+/// contract (a committed token's KV rows are a pure function of its token
+/// prefix, regardless of step shapes).
+pub struct Prefill {
+    tokens: Vec<u32>,
+    fed: usize,
+    prefill: bool,
+}
+
+impl Prefill {
+    /// Tokens committed so far (cache hits count as fed).
+    pub fn fed(&self) -> usize {
+        self.fed
+    }
+
+    /// Total prompt length.
+    pub fn total(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// The full prompt this cursor is feeding.
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    /// Whether the whole prompt has been committed.
+    pub fn done(&self) -> bool {
+        self.fed >= self.tokens.len()
+    }
+}
+
 /// One DSIA variant's decoding state for one request: a KV cache plus the
 /// logits row after the most recently committed token.
 pub struct VariantSession<'rt> {
@@ -43,12 +85,14 @@ pub struct VariantSession<'rt> {
     kv: KvCache,
     /// Logits after the most recently committed token (None until first feed).
     last_logits: Option<Vec<f32>>,
+    /// Host snapshot while swapped out (the KV cache is an empty husk).
+    swapped: Option<SwappedKv>,
 }
 
 impl<'rt> VariantSession<'rt> {
     /// Open a session with a fresh zeroed KV cache for `variant`.
     pub fn new(rt: &'rt ScaleRuntime, variant: Variant) -> Result<Self> {
-        Ok(Self { rt, kv: rt.new_kv(variant)?, last_logits: None })
+        Ok(Self { rt, kv: rt.new_kv(variant)?, last_logits: None, swapped: None })
     }
 
     /// The DSIA variant this session steps.
@@ -86,15 +130,93 @@ impl<'rt> VariantSession<'rt> {
     /// prefix rows are imported instead of stepped, and the newly
     /// committed blocks are published for later requests.
     pub fn feed(&mut self, tokens: &[u32]) -> Result<()> {
+        // a monolithic feed is one whole-remainder prefill step
+        let mut pf = self.prefill_begin(tokens)?;
+        while !self.prefill_step(&mut pf, 0)? {}
+        Ok(())
+    }
+
+    /// Start a (possibly chunked) feed of `tokens`: consult the prefix
+    /// cache when this is the prefill feed (`pos == 0`), then return a
+    /// cursor positioned past any cache hit. Drive it with
+    /// [`Self::prefill_step`]; [`Self::feed`] is exactly one
+    /// whole-remainder step of this pair.
+    pub fn prefill_begin(&mut self, tokens: &[u32]) -> Result<Prefill> {
         // pos == 0 marks the prefill feed — the only point where a
         // cached prefix can be grafted in (it must start at position 0)
         let prefill = self.kv.pos == 0 && !tokens.is_empty();
         let reused = if prefill { self.seed_from_cache(tokens)? } else { 0 };
-        self.feed_steps(&tokens[reused..])?;
-        if prefill {
-            self.publish_prefix(tokens);
+        Ok(Prefill { tokens: tokens.to_vec(), fed: reused, prefill })
+    }
+
+    /// Commit up to `chunk` more tokens of the cursor's prompt (`0` = the
+    /// whole remainder). Returns `true` when the prompt is fully
+    /// committed — at which point a prefill feed publishes its
+    /// whole-block prefix to the cross-request cache, exactly as a
+    /// monolithic [`Self::feed`] would.
+    pub fn prefill_step(&mut self, pf: &mut Prefill, chunk: usize) -> Result<bool> {
+        let remaining = pf.tokens.len() - pf.fed;
+        let take = if chunk == 0 { remaining } else { chunk.min(remaining) };
+        self.feed_steps(&pf.tokens[pf.fed..pf.fed + take])?;
+        pf.fed += take;
+        if pf.done() {
+            if pf.prefill {
+                self.publish_prefix(&pf.tokens);
+            }
+            return Ok(true);
         }
+        Ok(false)
+    }
+
+    /// Whether this session's KV is currently swapped out to host memory.
+    pub fn is_swapped(&self) -> bool {
+        self.swapped.is_some()
+    }
+
+    /// Evict this session's KV to a host snapshot and release its backend
+    /// storage plus pool reservation. Bitwise-lossless round trip with
+    /// [`Self::swap_in`]: only committed rows exist at a round boundary,
+    /// and export/import move them verbatim. `last_logits` stays in place,
+    /// so decoding resumes exactly where it paused.
+    pub fn swap_out(&mut self) -> Result<()> {
+        assert!(self.swapped.is_none(), "session already swapped out");
+        let pos = self.kv.pos;
+        let rows = self.rt.export_rows(&self.kv, 0, pos)?;
+        self.rt.release_kv(&mut self.kv);
+        self.rt.kv_pool().note_swap_out(rows.len() * std::mem::size_of::<f32>());
+        self.swapped = Some(SwappedKv { rows, pos });
         Ok(())
+    }
+
+    /// Re-acquire a KV cache from the pool and restore the swapped-out
+    /// rows. Fails (leaving the snapshot intact for a later retry) when
+    /// the pool cannot admit the reservation yet.
+    pub fn swap_in(&mut self) -> Result<()> {
+        let sw = self.swapped.take().expect("swap_in without swap_out");
+        let mut kv = match self.rt.new_kv(self.kv.variant) {
+            Ok(kv) => kv,
+            Err(e) => {
+                self.swapped = Some(sw);
+                return Err(e);
+            }
+        };
+        self.rt.restore_rows(&mut kv, sw.pos, &sw.rows)?;
+        self.rt.kv_pool().note_swap_in(sw.rows.len() * std::mem::size_of::<f32>());
+        self.kv = kv;
+        Ok(())
+    }
+
+    /// Publish the whole-block prefix of `tokens` — all of which must
+    /// already be committed in this session's cache — to the
+    /// cross-request prefix cache. The retirement hook: a finished
+    /// request publishes prompt *plus decoded tokens*, so a follow-up
+    /// turn whose prompt embeds this reply hits the cache. No-op without
+    /// a cache, while swapped out, or when `tokens` outruns the cache.
+    pub fn publish(&self, tokens: &[u32]) {
+        if self.swapped.is_some() || tokens.len() > self.kv.pos {
+            return;
+        }
+        self.publish_prefix(tokens);
     }
 
     /// Import the longest cached prefix of `tokens` into this session's
@@ -155,6 +277,7 @@ impl<'rt> VariantSession<'rt> {
 
     /// Step-and-commit a chain of tokens in lowered chunk shapes.
     fn feed_steps(&mut self, tokens: &[u32]) -> Result<()> {
+        debug_assert!(self.swapped.is_none(), "stepping a swapped-out session");
         let vocab = self.rt.vocab();
         let mut rest = tokens;
         while !rest.is_empty() {
@@ -192,6 +315,7 @@ impl<'rt> VariantSession<'rt> {
     /// logits rows; slot i's KV sits uncommitted at cache slot pos+i until
     /// `commit_slots` (or is discarded by the next overwrite).
     pub fn verify_tree(&mut self, tree: &DraftTree, t_shape: usize) -> Result<StepOutput> {
+        debug_assert!(self.swapped.is_none(), "stepping a swapped-out session");
         let (toks, mask, depths) = tree.serialize(t_shape, 0);
         self.rt.step(&mut self.kv, t_shape, tree.len(), &toks, &mask, &depths)
     }

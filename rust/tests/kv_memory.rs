@@ -1,0 +1,171 @@
+//! Unified KV memory management invariants (the bit-determinism contract
+//! behind preemption and chunked prefill): committed KV rows are a pure
+//! function of the token prefix, so (a) feeding a prompt in chunks of any
+//! size yields byte-identical generations, and (b) swapping a run's KV
+//! out to host memory and back mid-generation changes nothing.
+//!
+//! Hermetic: runs on the pure-Rust reference backend when no artifacts
+//! exist, same as the other integration tests.
+
+use cas_spec::engine::{build_engine, EngineOpts, RoundPhase, ENGINES};
+use cas_spec::model::Variant;
+use cas_spec::runtime::Runtime;
+use cas_spec::spec::SamplingParams;
+use cas_spec::workload::{Language, Suite};
+
+fn open_runtime() -> Runtime {
+    Runtime::open(&Runtime::default_dir()).expect("runtime open")
+}
+
+fn bench_prompt(rt: &Runtime, max_new: usize) -> Vec<u32> {
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 7, 1, max_new);
+    suite.items[0].prompt.clone()
+}
+
+#[test]
+fn chunked_prefill_is_byte_identical_across_engines() {
+    // Every engine, monolithic vs chunk=3: same tokens, same stats-visible
+    // output. Chunk 3 never divides the prompt evenly, so the tail chunk
+    // and the "run is created but prefill is pending" states are exercised.
+    let rt = open_runtime();
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let prompt = bench_prompt(&rt, 20);
+    for name in ENGINES {
+        let mut mono = build_engine(name, &srt, &EngineOpts::default()).expect("engine");
+        let mut opts = EngineOpts::default();
+        opts.prefill_chunk = 3;
+        let mut chunked = build_engine(name, &srt, &opts).expect("engine");
+        let a = mono.generate(&prompt, 20).expect("monolithic generate");
+        let b = chunked.generate(&prompt, 20).expect("chunked generate");
+        assert_eq!(a.tokens, b.tokens, "{name}: chunked prefill changed the output");
+        assert!(!a.tokens.is_empty(), "{name}: empty generation");
+    }
+}
+
+#[test]
+fn chunk_size_sweep_is_byte_identical() {
+    // Representative engines (target-only, static cascade, adaptive DyTC)
+    // across chunk sizes: 1 (every token a chunk), a non-divisor, and one
+    // larger than the prompt (degenerates to monolithic). Greedy + sampled.
+    let rt = open_runtime();
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let prompt = bench_prompt(&rt, 16);
+    let sp = SamplingParams { temperature: 0.8, top_p: 0.9, seed: 77 };
+    for name in ["ar", "pld", "vchc", "cas-spec"] {
+        let mut mono = build_engine(name, &srt, &EngineOpts::default()).expect("engine");
+        let base_g = mono.generate(&prompt, 16).expect("generate").tokens;
+        let base_s =
+            mono.generate_sampled(&prompt, 16, Some(sp)).expect("generate").tokens;
+        for chunk in [1usize, 5, 4096] {
+            let mut opts = EngineOpts::default();
+            opts.prefill_chunk = chunk;
+            let mut eng = build_engine(name, &srt, &opts).expect("engine");
+            let g = eng.generate(&prompt, 16).expect("generate").tokens;
+            assert_eq!(base_g, g, "{name} chunk={chunk}: greedy output changed");
+            let s = eng.generate_sampled(&prompt, 16, Some(sp)).expect("generate").tokens;
+            assert_eq!(base_s, s, "{name} chunk={chunk}: sampled output changed");
+        }
+    }
+}
+
+#[test]
+fn suspend_resume_mid_generation_is_byte_identical() {
+    // Preemption losslessness at the engine layer: swap a run's KV out to
+    // host memory and back between rounds; the remaining rounds must emit
+    // exactly what an unpreempted run emits.
+    let rt = open_runtime();
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let prompt = bench_prompt(&rt, 24);
+    for name in ["pld", "swift", "cas-spec"] {
+        let mut eng = build_engine(name, &srt, &EngineOpts::default()).expect("engine");
+        let base = eng.generate(&prompt, 24).expect("generate").tokens;
+
+        let swaps_before = srt.kv_pool().stats().swaps_out;
+        let mut run = eng.begin(&prompt, 24).expect("begin");
+        let mut rounds = 0usize;
+        while !run.is_done() {
+            run.round().expect("round");
+            rounds += 1;
+            if !run.is_done() && (rounds == 2 || rounds == 4) {
+                run.suspend().unwrap_or_else(|e| panic!("{name}: suspend: {e:#}"));
+                assert!(run.is_suspended(), "{name}: not suspended after suspend");
+                // idempotent: a second suspend must not double-snapshot
+                run.suspend().expect("re-suspend");
+                run.resume().unwrap_or_else(|e| panic!("{name}: resume: {e:#}"));
+                assert!(!run.is_suspended(), "{name}: still suspended after resume");
+            }
+        }
+        let out = run.finish().tokens;
+        assert_eq!(base, out, "{name}: suspend/resume changed the output");
+        assert!(
+            srt.kv_pool().stats().swaps_out > swaps_before,
+            "{name}: no swap_out recorded on the pool"
+        );
+    }
+}
+
+#[test]
+fn suspend_releases_pool_bytes_and_resume_reacquires_them() {
+    let rt = open_runtime();
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let prompt = bench_prompt(&rt, 12);
+    let eng = build_engine("pld", &srt, &EngineOpts::default()).expect("engine");
+
+    let idle = srt.kv_pool().stats().used();
+    let mut run = eng.begin(&prompt, 12).expect("begin");
+    run.round().expect("round");
+    let live = srt.kv_pool().stats().used();
+    assert!(live > idle, "running session holds no pool bytes");
+
+    run.suspend().expect("suspend");
+    let parked = srt.kv_pool().stats();
+    assert_eq!(parked.used(), idle, "suspend did not release the session's bytes");
+    assert!(parked.swap_bytes > 0, "suspended KV not accounted as swap bytes");
+
+    run.resume().expect("resume");
+    let resumed = srt.kv_pool().stats();
+    assert_eq!(resumed.used(), live, "resume did not re-reserve the same bytes");
+    assert_eq!(resumed.swap_bytes, 0, "swap bytes not drained after resume");
+
+    while !run.is_done() {
+        run.round().expect("round");
+    }
+    drop(run.finish());
+    assert_eq!(srt.kv_pool().stats().used(), idle, "leases leaked after finish");
+}
+
+#[test]
+fn chunked_prefill_rounds_report_pending_phase() {
+    // The poll-style scheduler contract: while prefill is pending, each
+    // begin_round consumes one chunk, emits nothing, and keeps the run
+    // alive; the first emitted token appears only once the prompt is fed.
+    let rt = open_runtime();
+    let srt = rt.load_scale("small", &Variant::ALL).expect("load small");
+    let prompt = bench_prompt(&rt, 8);
+    let mut opts = EngineOpts::default();
+    opts.prefill_chunk = 2;
+    let eng = build_engine("pld", &srt, &opts).expect("engine");
+    let mut run = eng.begin(&prompt, 8).expect("begin");
+
+    // prompt.len() tokens at 2/chunk: the first ceil(len/2) - 1 polls feed
+    // chunks and emit nothing; the poll that feeds the last chunk emits
+    // the first decoded token.
+    let mut emitted_total = 0usize;
+    let mut chunk_polls = 0usize;
+    while emitted_total == 0 {
+        match run.begin_round().expect("begin_round") {
+            RoundPhase::Done(o) => {
+                assert!(!o.done, "run finished during prefill");
+                emitted_total += o.emitted.len();
+                if o.emitted.is_empty() {
+                    chunk_polls += 1;
+                }
+            }
+            RoundPhase::Pending { .. } => panic!("pending step during prefill"),
+        }
+        assert!(chunk_polls <= prompt.len(), "prefill never completed");
+    }
+    assert_eq!(chunk_polls, prompt.len().div_ceil(2) - 1, "wrong chunk count");
+    assert_eq!(emitted_total, 1, "prefill completion must emit exactly one token");
+}

@@ -23,6 +23,14 @@
 //! lossless end to end through the server, at `CAS_SPEC_THREADS=1` and
 //! at default threads. Every expected transcript is computed against AR
 //! or the direct engine, so any lossless engine must pass unchanged.
+//!
+//! Two more sweep knobs ride the same pattern: `CAS_SPEC_KV_BUDGET_MB`
+//! (CI runs the suite under a tiny global KV budget, forcing preemption
+//! swaps on every concurrent test) and `CAS_SPEC_PREFILL_CHUNK` (CI runs
+//! it with chunked prefill on). Both are lossless by construction, so no
+//! assertion anywhere changes; `preemption_under_tiny_budget_is_lossless`
+//! and `chunked_prefill_serving_is_lossless` additionally force each knob
+//! on and assert the swap/chunk machinery actually engaged.
 
 use std::thread;
 use std::time::Duration;
@@ -52,6 +60,35 @@ fn env_prefix_cache_mb() -> usize {
 /// engines exercise the int8 forward path end to end.
 fn env_engine() -> String {
     std::env::var("CAS_SPEC_SERVER_ENGINE").unwrap_or_else(|_| "pld".into())
+}
+
+/// Global KV byte budget for the suite: the CI matrix leg sets
+/// `CAS_SPEC_KV_BUDGET_MB` to a value small enough that the concurrent
+/// tests must preempt (swap runs out to host memory and back); locally it
+/// defaults to unbounded (0). Transcripts are identical either way.
+fn env_kv_budget_mb() -> usize {
+    std::env::var("CAS_SPEC_KV_BUDGET_MB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Prefill chunk size for the suite: the CI matrix leg sets
+/// `CAS_SPEC_PREFILL_CHUNK` to a small value so every prompt is committed
+/// in several bounded chunks; locally it defaults to monolithic (0).
+/// Transcripts are identical either way.
+fn env_prefill_chunk() -> usize {
+    std::env::var("CAS_SPEC_PREFILL_CHUNK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Apply the suite-wide env sweeps to a server config.
+fn apply_env_sweeps(cfg: &mut RunConfig) {
+    cfg.prefix_cache_mb = env_prefix_cache_mb();
+    cfg.kv_budget_mb = env_kv_budget_mb();
+    cfg.opts.prefill_chunk = env_prefill_chunk();
 }
 
 /// Wait until the server accepts connections AND its worker answers a
@@ -87,7 +124,7 @@ fn serve_generate_stats_shutdown() {
     cfg.scale = "small".into();
     cfg.engines = vec![env_engine()]; // lossless => same tokens as AR
     cfg.addr = "127.0.0.1:7531".into();
-    cfg.prefix_cache_mb = env_prefix_cache_mb();
+    apply_env_sweeps(&mut cfg);
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
 
@@ -178,7 +215,7 @@ fn continuous_batching_is_lossless_and_interleaves() {
     cfg.engines = vec![env_engine()]; // lossless => same tokens as AR
     cfg.addr = "127.0.0.1:7532".into();
     cfg.max_batch = 3;
-    cfg.prefix_cache_mb = env_prefix_cache_mb();
+    apply_env_sweeps(&mut cfg);
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
     let mut control = wait_ready(&addr);
@@ -261,7 +298,7 @@ fn serve_concurrent(
     cfg.addr = format!("127.0.0.1:{port}");
     cfg.max_batch = max_batch;
     cfg.lockstep = lockstep;
-    cfg.prefix_cache_mb = env_prefix_cache_mb();
+    apply_env_sweeps(&mut cfg);
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
     let mut control = wait_ready(&addr);
@@ -342,7 +379,8 @@ fn serve_suite(
     cfg.scale = "small".into();
     cfg.engines = vec![env_engine()];
     cfg.addr = format!("127.0.0.1:{port}");
-    cfg.prefix_cache_mb = prefix_cache_mb;
+    apply_env_sweeps(&mut cfg);
+    cfg.prefix_cache_mb = prefix_cache_mb; // explicit: this test A/Bs the cache
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
     let mut client = wait_ready(&addr);
@@ -383,7 +421,8 @@ fn serve_concurrent_sampled(
     cfg.addr = format!("127.0.0.1:{port}");
     cfg.max_batch = max_batch;
     cfg.lockstep = lockstep;
-    cfg.prefix_cache_mb = prefix_cache_mb;
+    apply_env_sweeps(&mut cfg);
+    cfg.prefix_cache_mb = prefix_cache_mb; // explicit: this helper A/Bs the cache
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
     let mut control = wait_ready(&addr);
@@ -549,7 +588,7 @@ fn trace_jsonl_stream_is_wellformed() {
     cfg.scale = "small".into();
     cfg.engines = vec![env_engine()];
     cfg.addr = "127.0.0.1:7541".into();
-    cfg.prefix_cache_mb = env_prefix_cache_mb();
+    apply_env_sweeps(&mut cfg);
     cfg.trace_file = Some(path.clone());
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
@@ -595,6 +634,7 @@ fn metrics_cmd_exposes_histograms_and_dytc() {
     cfg.scale = "small".into();
     cfg.engines = vec!["cas-spec".into()];
     cfg.addr = "127.0.0.1:7542".into();
+    apply_env_sweeps(&mut cfg);
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
     let mut client = wait_ready(&addr);
@@ -639,7 +679,7 @@ fn responses_carry_prefill_and_decode_ms() {
     cfg.scale = "small".into();
     cfg.engines = vec![env_engine()];
     cfg.addr = "127.0.0.1:7543".into();
-    cfg.prefix_cache_mb = env_prefix_cache_mb();
+    apply_env_sweeps(&mut cfg);
     let addr = cfg.addr.clone();
     let server = thread::spawn(move || serve(&cfg));
     let mut client = wait_ready(&addr);
@@ -658,6 +698,297 @@ fn responses_carry_prefill_and_decode_ms() {
     let busy = stats.req("busy_secs").unwrap().as_f64().unwrap();
     assert!(uptime > 0.0, "worker uptime must be positive");
     assert!(busy <= uptime + 0.5, "busy time cannot exceed uptime");
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn preemption_under_tiny_budget_is_lossless() {
+    // The preemption acceptance test: a KV budget that fits only 2 of 4
+    // concurrent pld sessions (2.25 MiB each at small scale, 5 MiB budget)
+    // forces the scheduler to swap runs out to host memory and back, and
+    // every transcript must still equal unconstrained solo serving.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 47, 1, 40);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(4).collect();
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected: Vec<Vec<u32>> = items
+        .iter()
+        .map(|it| ar.generate(&it.prompt, it.max_new).unwrap().tokens)
+        .collect();
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()]; // known footprint: target KV only
+    cfg.addr = "127.0.0.1:7544".into();
+    cfg.max_batch = 4;
+    cfg.kv_budget_mb = 5;
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut control = wait_ready(&addr);
+
+    let mut handles = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let addr = addr.clone();
+        let item = item.clone();
+        handles.push(thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = c.generate(i as u64, &item.prompt, item.max_new).unwrap();
+            assert!(resp.get("error").is_none(), "server error: {resp}");
+            let got: Vec<u32> = resp
+                .req("tokens")
+                .unwrap()
+                .usize_arr()
+                .unwrap()
+                .into_iter()
+                .map(|t| t as u32)
+                .collect();
+            (i, got)
+        }));
+    }
+    for h in handles {
+        let (i, got) = h.join().unwrap();
+        assert_eq!(got, expected[i], "request {i}: preemption changed the transcript");
+    }
+
+    let stats = control.stats().unwrap();
+    assert_eq!(stats.req("kv_budget").unwrap().as_u64().unwrap(), 5 << 20);
+    assert_eq!(stats.req("served").unwrap().as_u64().unwrap(), 4);
+    assert_eq!(stats.req("errors").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(stats.req("suspended").unwrap().as_usize().unwrap(), 0);
+    let swaps_out = stats.req("swaps_out").unwrap().as_u64().unwrap();
+    let swaps_in = stats.req("swaps_in").unwrap().as_u64().unwrap();
+    assert!(swaps_out >= 1, "4 sessions against a 2-session budget never swapped out");
+    assert_eq!(swaps_in, swaps_out, "every swapped-out run must be swapped back in");
+
+    control.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn chunked_prefill_serving_is_lossless() {
+    // Chunked prefill through the server: the same concurrent workload
+    // served monolithic and with --prefill-chunk 4 must return
+    // byte-identical transcripts, and the chunked run's trace must show
+    // the prompts actually being committed in chunks.
+    use cas_spec::util::json::Json;
+
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 61, 1, 24);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(4).collect();
+
+    let trace_path =
+        std::env::temp_dir().join(format!("cas_spec_chunk_trace_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&trace_path);
+
+    let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
+    for (port, chunk) in [(7545u16, 0usize), (7546, 4)] {
+        let mut cfg = RunConfig::default();
+        cfg.scale = "small".into();
+        cfg.engines = vec![env_engine()];
+        cfg.addr = format!("127.0.0.1:{port}");
+        cfg.max_batch = 3;
+        cfg.opts.prefill_chunk = chunk;
+        if chunk > 0 {
+            cfg.trace_file = Some(trace_path.clone());
+        }
+        let addr = cfg.addr.clone();
+        let server = thread::spawn(move || serve(&cfg));
+        let mut control = wait_ready(&addr);
+
+        let mut handles = Vec::new();
+        for (i, item) in items.iter().enumerate() {
+            let addr = addr.clone();
+            let item = item.clone();
+            handles.push(thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let resp = c.generate(i as u64, &item.prompt, item.max_new).unwrap();
+                assert!(resp.get("error").is_none(), "server error: {resp}");
+                let got: Vec<u32> = resp
+                    .req("tokens")
+                    .unwrap()
+                    .usize_arr()
+                    .unwrap()
+                    .into_iter()
+                    .map(|t| t as u32)
+                    .collect();
+                (i, got)
+            }));
+        }
+        let mut got = vec![Vec::new(); items.len()];
+        for h in handles {
+            let (i, toks) = h.join().unwrap();
+            got[i] = toks;
+        }
+        outputs.push(got);
+        control.shutdown().unwrap();
+        server.join().unwrap().unwrap();
+    }
+    assert_eq!(outputs[0], outputs[1], "chunked prefill changed served transcripts");
+
+    let text = std::fs::read_to_string(&trace_path).expect("trace file written");
+    let _ = std::fs::remove_file(&trace_path);
+    let chunks = text
+        .lines()
+        .filter(|l| {
+            Json::parse(l)
+                .ok()
+                .and_then(|j| j.get("ev").and_then(|e| e.as_str().map(String::from)))
+                .as_deref()
+                == Some("prefill_chunk")
+        })
+        .count();
+    assert!(chunks > 0, "chunked run traced no prefill_chunk events");
+}
+
+#[test]
+fn queue_full_requests_are_shed() {
+    // Admission-queue bound: with max_batch=1 and max_queue=1, at most two
+    // requests can be in the system; firing 6 concurrently must shed some
+    // with the exact {"id":N,"error":"queue full"} reply, the `shed`
+    // counter must equal the observed rejections, and sheds must NOT count
+    // as errors (they are load management, not failures).
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 83, 1, 120);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(6).collect();
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected: Vec<Vec<u32>> = items
+        .iter()
+        .map(|it| ar.generate(&it.prompt, it.max_new).unwrap().tokens)
+        .collect();
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()];
+    cfg.addr = "127.0.0.1:7547".into();
+    cfg.max_batch = 1;
+    cfg.max_queue = 1;
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut control = wait_ready(&addr);
+
+    let mut handles = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let addr = addr.clone();
+        let item = item.clone();
+        handles.push(thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = c.generate(i as u64, &item.prompt, item.max_new).unwrap();
+            if let Some(err) = resp.get("error") {
+                assert_eq!(
+                    err.as_str().unwrap(),
+                    "queue full",
+                    "unexpected error for request {i}: {resp}"
+                );
+                assert_eq!(
+                    resp.req("id").unwrap().as_u64().unwrap(),
+                    i as u64,
+                    "shed reply must echo the request id"
+                );
+                return (i, None);
+            }
+            let got: Vec<u32> = resp
+                .req("tokens")
+                .unwrap()
+                .usize_arr()
+                .unwrap()
+                .into_iter()
+                .map(|t| t as u32)
+                .collect();
+            (i, Some(got))
+        }));
+    }
+    let mut shed_seen = 0u64;
+    let mut served_seen = 0u64;
+    for h in handles {
+        let (i, got) = h.join().unwrap();
+        match got {
+            Some(toks) => {
+                served_seen += 1;
+                assert_eq!(toks, expected[i], "request {i}: shedding changed a transcript");
+            }
+            None => shed_seen += 1,
+        }
+    }
+    assert!(
+        shed_seen >= 1,
+        "6 concurrent requests against a 2-slot system never hit the queue bound"
+    );
+
+    let stats = control.stats().unwrap();
+    assert_eq!(stats.req("shed").unwrap().as_u64().unwrap(), shed_seen);
+    assert_eq!(stats.req("served").unwrap().as_u64().unwrap(), served_seen);
+    assert_eq!(
+        stats.req("errors").unwrap().as_u64().unwrap(),
+        0,
+        "sheds must not be counted as errors"
+    );
+
+    control.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn retired_decode_kv_is_published_to_prefix_cache() {
+    // Two-turn conversation reuse: turn 2's prompt extends turn 1's
+    // prompt + generated answer, so with retirement publication the
+    // prefix cache must cover turn 1's *decoded* tokens, not just its
+    // prompt. A 40-token prompt publishes 2 blocks (32 tokens) at
+    // prefill; only the decoded suffix can push the hit past that.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    // 1 request, 32-token shared prefix + 8-token suffix = 40-token prompt
+    let suite = Suite::shared_prefix(&lang, 13, 1, 32, 8, 16);
+    let item = suite.items[0].clone();
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let out1 = ar.generate(&item.prompt, 16).unwrap().tokens;
+    assert!(out1.len() >= 9, "turn 1 truncated too early for the block math below");
+    let mut prompt2 = item.prompt.clone();
+    prompt2.extend_from_slice(&out1);
+    let out2 = ar.generate(&prompt2, 8).unwrap().tokens;
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()];
+    cfg.addr = "127.0.0.1:7548".into();
+    cfg.prefix_cache_mb = 8;
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut client = wait_ready(&addr);
+
+    for (id, prompt, max_new, want) in
+        [(0u64, &item.prompt, 16usize, &out1), (1, &prompt2, 8, &out2)]
+    {
+        let resp = client.generate(id, prompt, max_new).unwrap();
+        assert!(resp.get("error").is_none(), "server error: {resp}");
+        let got: Vec<u32> = resp
+            .req("tokens")
+            .unwrap()
+            .usize_arr()
+            .unwrap()
+            .into_iter()
+            .map(|t| t as u32)
+            .collect();
+        assert_eq!(&got, want, "turn {id}: served tokens differ from direct engine");
+    }
+
+    let stats = client.stats().unwrap();
+    let hit_tokens = stats.req("prefix_hit_tokens").unwrap().as_u64().unwrap();
+    // committed rows at turn 1's retirement: 40 (prompt) + out1 - 1, i.e.
+    // >= 48 -> 3 whole blocks published; turn 2 must hit all of them
+    let published = ((40 + out1.len() as u64 - 1) / 16) * 16;
+    assert!(
+        hit_tokens >= published.min(48),
+        "turn 2 reused only {hit_tokens} tokens (prompt-only publication gives 32; \
+         retirement publication must give >= 48)"
+    );
 
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();
