@@ -26,6 +26,12 @@
 //!     and its p99 per-round decode wall must not regress (chunking
 //!     bounds how long a newly admitted prompt can stall everyone
 //!     else's round).
+//!   * `--workload overload` — degrade-don't-die A/B: the same
+//!     oversubscribed workload served without and with
+//!     `--fallback-engine` (default ar) at a small `--degrade-queue`.
+//!     The degraded run must admit some requests on the fallback
+//!     (`degraded > 0` in stats, `engine` field per reply) and — because
+//!     every engine is lossless — return byte-identical token streams.
 //!
 //! Any scenario also takes `--trace`: each server run streams its JSONL
 //! trace to a temp file, and after the run the driver replays the stream
@@ -68,9 +74,11 @@ fn main() -> Result<()> {
         "shared-prefix" => shared_prefix_scenario(&args, &scale, requests, clients),
         "lockstep" => lockstep_scenario(&args, &scale, requests, max_new),
         "longprompt" => longprompt_scenario(&args, &scale, requests, clients),
+        "overload" => overload_scenario(&args, &scale, requests, max_new),
         other => {
             anyhow::bail!(
-                "unknown --workload {other:?} (spec | shared-prefix | lockstep | longprompt)"
+                "unknown --workload {other:?} \
+                 (spec | shared-prefix | lockstep | longprompt | overload)"
             )
         }
     }
@@ -105,6 +113,8 @@ fn spec_scenario(
             max_batch: 8,
             lockstep: true,
             prefill_chunk: 0,
+            fallback: None,
+            degrade_queue: 0,
             trace: args.has("trace"),
         })?;
         threads = run.stats.get("threads").and_then(|v| v.as_u64()).unwrap_or(0);
@@ -158,6 +168,8 @@ fn shared_prefix_scenario(
             max_batch: 8,
             lockstep: true,
             prefill_chunk: 0,
+            fallback: None,
+            degrade_queue: 0,
             trace: args.has("trace"),
         })?;
         t.row(run.cache_row(mb));
@@ -227,6 +239,8 @@ fn lockstep_scenario(
             max_batch,
             lockstep,
             prefill_chunk: 0,
+            fallback: None,
+            degrade_queue: 0,
             trace: args.has("trace"),
         })?;
         let s = |k: &str| run.stats.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
@@ -322,6 +336,8 @@ fn longprompt_scenario(
             max_batch: 8,
             lockstep: true,
             prefill_chunk: pc,
+            fallback: None,
+            degrade_queue: 0,
             // the chunked run always traces: the chunk-event assertion
             // below needs the stream
             trace: pc > 0 || args.has("trace"),
@@ -360,6 +376,84 @@ fn longprompt_scenario(
     Ok(())
 }
 
+/// Degrade-don't-die A/B: an oversubscribed workload (more concurrent
+/// clients than batch slots, tiny degrade threshold) served without and
+/// with a fallback engine. Degradation must actually happen (`degraded >
+/// 0`) and must not change one token — every engine is lossless, so
+/// routing under pressure is output-invariant by construction.
+fn overload_scenario(
+    args: &Args,
+    scale: &str,
+    requests: usize,
+    max_new: usize,
+) -> Result<()> {
+    let engine = args.str_or("engine", "cas-spec").to_string();
+    let fallback = args.str_or("fallback-engine", "ar").to_string();
+    let degrade_queue = args.usize_or("degrade-queue", 1)?;
+    let max_batch = args.usize_or("max-batch", 2)?;
+    let requests = requests.max(8);
+    // oversubscribe: enough concurrent clients to keep the queue deeper
+    // than the degrade threshold while the batch is full
+    let clients = args.usize_or("clients", (max_batch + degrade_queue + 3).max(6))?;
+
+    let lang = Language::build(20250711);
+    let n_per = requests.div_ceil(6).max(1);
+    let suite = Suite::spec_bench(&lang, 7, n_per, max_new);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(requests).collect();
+
+    let mut t = Table::new(
+        &format!(
+            "serve_bench overload — scale={scale}, engine={engine}, fallback={fallback}, \
+             {requests} requests, max_batch={max_batch}, {clients} clients, \
+             degrade_queue={degrade_queue}"
+        ),
+        &["fallback", "wall (s)", "tok/s", "degraded", "served"],
+    );
+    let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut degraded: Vec<u64> = Vec::new();
+    for (i, fb) in [None, Some(fallback.as_str())].into_iter().enumerate() {
+        let run = run_one(&RunSpec {
+            scale,
+            engine: &engine,
+            items: &items,
+            n_clients: clients,
+            port: 7640 + i as u16,
+            prefix_cache_mb: 0,
+            max_batch,
+            lockstep: true,
+            prefill_chunk: 0,
+            fallback: fb,
+            degrade_queue: if fb.is_some() { degrade_queue } else { 0 },
+            trace: args.has("trace"),
+        })?;
+        let s = |k: &str| run.stats.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+        t.row(vec![
+            fb.unwrap_or("off").into(),
+            format!("{:.2}", run.wall.as_secs_f64()),
+            format!("{:.1}", run.total_tokens as f64 / run.wall.as_secs_f64()),
+            s("degraded").to_string(),
+            s("served").to_string(),
+        ]);
+        degraded.push(s("degraded"));
+        outputs.push(run.tokens);
+    }
+    println!("{}", t.to_text());
+
+    anyhow::ensure!(outputs[0] == outputs[1], "degraded serving changed generated tokens!");
+    anyhow::ensure!(degraded[0] == 0, "run without a fallback reported degraded admissions");
+    anyhow::ensure!(
+        degraded[1] > 0,
+        "overload never degraded (queue never exceeded {degrade_queue}? raise --clients)"
+    );
+    println!(
+        "(degrade-don't-die: {} of {} admissions served on {}, token streams identical)",
+        degraded[1],
+        requests,
+        fallback
+    );
+    Ok(())
+}
+
 /// p99 of a sample in milliseconds (nearest-rank; 0 for an empty sample).
 fn p99_ms(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -382,6 +476,11 @@ struct RunSpec<'a> {
     lockstep: bool,
     /// Prefill chunk size in tokens (0 = monolithic prefill).
     prefill_chunk: usize,
+    /// Degrade-don't-die: route new admissions to this engine under
+    /// queue/KV pressure (None = no fallback).
+    fallback: Option<&'a str>,
+    /// Queue depth beyond which admissions degrade (0 = off).
+    degrade_queue: usize,
     /// Stream the server's JSONL trace to a temp file and assert the
     /// lifecycle invariants after the run.
     trace: bool,
@@ -446,6 +545,11 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
     cfg.max_batch = spec.max_batch;
     cfg.lockstep = spec.lockstep;
     cfg.opts.prefill_chunk = spec.prefill_chunk;
+    cfg.fallback_engine = spec.fallback.map(|s| s.to_string());
+    cfg.degrade_queue = spec.degrade_queue;
+    // serve_bench runs are meant to be fault-free: force the empty plan
+    // so an ambient CAS_SPEC_FAULTS (e.g. the CI chaos leg) cannot leak in
+    cfg.faults = Some(String::new());
     let trace_path = spec.trace.then(|| {
         std::env::temp_dir()
             .join(format!("serve_bench_trace_{}_{}.jsonl", std::process::id(), spec.port))
@@ -545,9 +649,12 @@ fn run_one(spec: &RunSpec<'_>) -> Result<RunOutcome> {
 /// Replay a server's JSONL trace stream and assert the lifecycle
 /// invariants the scheduler promises: monotone timestamps, per request
 /// either `enqueue <= shed` (queue-full rejection, never admitted) or
-/// `enqueue <= admit <= retire|error`, and — for requests with round
-/// spans — `1 + sum(round.emitted) == retire.tokens` (the prefill token
-/// plus every round's accepted+bonus delta is exactly the emitted
+/// `enqueue <= admit <= <terminal>` where the terminal is exactly one of
+/// `retire` | `error` | `fault` | `deadline` | `cancelled` |
+/// `disconnect` (the failure-domain events; `retry` and `degrade` are
+/// non-terminal, `stall` carries no id), and — for retired requests with
+/// round spans — `1 + sum(round.emitted) == retire.tokens` (the prefill
+/// token plus every round's accepted+bonus delta is exactly the emitted
 /// stream). Returns (events checked, `prefill_chunk` events seen).
 fn validate_trace(path: &std::path::Path) -> Result<(usize, usize)> {
     use std::collections::BTreeMap;
@@ -559,6 +666,10 @@ fn validate_trace(path: &std::path::Path) -> Result<(usize, usize)> {
         retire: Option<u64>,
         shed: Option<u64>,
         error: Option<u64>,
+        /// Early terminal events: fault / deadline / cancelled /
+        /// disconnect — at most one, recorded with its timestamp.
+        early: Option<(&'static str, u64)>,
+        retries: u64,
         tokens: u64,
         round_emitted: u64,
         rounds: u64,
@@ -597,11 +708,19 @@ fn validate_trace(path: &std::path::Path) -> Result<(usize, usize)> {
                 r.retire = Some(t);
                 r.tokens = j.req("tokens")?.as_u64().unwrap_or(0);
             }
+            // failure-domain terminals: a faulted / expired / cancelled /
+            // vanished request ends here instead of retire
+            "fault" => r.early = Some(("fault", t)),
+            "deadline" => r.early = Some(("deadline", t)),
+            "cancelled" => r.early = Some(("cancelled", t)),
+            "disconnect" => r.early = Some(("disconnect", t)),
+            "retry" => r.retries += 1,
             "round" => {
                 r.rounds += 1;
                 r.round_emitted += j.req("emitted")?.as_u64().unwrap_or(0);
             }
             "prefill_chunk" => chunks += 1,
+            // non-terminal: degrade / swap_in / swap_out / prefill / spans
             _ => {}
         }
     }
@@ -619,6 +738,28 @@ fn validate_trace(path: &std::path::Path) -> Result<(usize, usize)> {
             anyhow::ensure!(
                 enq <= Some(shed),
                 "request {id}: shed before enqueue (enqueue={enq:?} shed={shed})"
+            );
+            continue;
+        }
+        if r.retries > 0 {
+            // retry is strictly non-terminal and only happens in flight
+            anyhow::ensure!(
+                adm.is_some(),
+                "request {id}: {} retry events before any admit",
+                r.retries
+            );
+        }
+        if let Some((kind, at)) = r.early {
+            // fault/deadline/cancelled/disconnect end the lifecycle early;
+            // no retire must follow (admit is optional — e.g. a deadline
+            // can expire while still queued, a fault can hit admission)
+            anyhow::ensure!(
+                ret.is_none(),
+                "request {id}: both {kind} and retire events"
+            );
+            anyhow::ensure!(
+                enq <= Some(at) && adm.map_or(true, |a| a <= at),
+                "request {id}: {kind} out of order (enqueue={enq:?} admit={adm:?} {kind}={at})"
             );
             continue;
         }

@@ -70,6 +70,35 @@ pub struct RunConfig {
     /// — no event timestamps are ever taken. See `obs` and
     /// docs/ARCHITECTURE.md §Observability for the event schema.
     pub trace_file: Option<PathBuf>,
+    /// Deterministic fault-injection plan for chaos testing, e.g.
+    /// `"step:0.02,lease:0.01,seed=7"` (see `fault`). `None` (the
+    /// default) defers to the `CAS_SPEC_FAULTS` environment variable;
+    /// an explicit empty string force-disables injection.
+    pub faults: Option<String>,
+    /// Cheaper engine the server degrades *new admissions* to under
+    /// pressure (deep queue / KV-budget pressure). `None` = never
+    /// degrade. Output bytes are unchanged — every engine is lossless —
+    /// only latency shifts; degraded admissions count in the `degraded`
+    /// stat.
+    pub fallback_engine: Option<String>,
+    /// Queue depth above which new admissions degrade to the fallback
+    /// engine (0 = degrade only on KV pressure). Ignored without
+    /// `fallback_engine`.
+    pub degrade_queue: usize,
+    /// Wire bound on per-request `max_new`; requests above it are
+    /// rejected with a clean error reply (0 = unbounded — not
+    /// recommended for exposed servers).
+    pub max_new_limit: usize,
+    /// Wire bound on prompt length in tokens; longer prompts are
+    /// rejected (0 = unbounded).
+    pub max_prompt: usize,
+    /// Round-wall watchdog in ms: a scheduler cycle exceeding this wall
+    /// emits an obs `stall` event and counts in the `stalls` stat
+    /// (0 = watchdog off).
+    pub round_wall_ms: u64,
+    /// Bounded retries for *transient* (injected) step faults before a
+    /// request is retired with an error.
+    pub fault_retries: usize,
     pub opts: EngineOpts,
 }
 
@@ -94,6 +123,13 @@ impl Default for RunConfig {
             top_p: 1.0,
             sample_seed: 0,
             trace_file: None,
+            faults: None,
+            fallback_engine: None,
+            degrade_queue: 0,
+            max_new_limit: 1024,
+            max_prompt: 4096,
+            round_wall_ms: 0,
+            fault_retries: 2,
             opts: EngineOpts::default(),
         }
     }
@@ -129,6 +165,23 @@ impl RunConfig {
                 "sample_seed" => self.sample_seed = v.as_u64().ok_or_else(bad(k))?,
                 "trace_file" => {
                     self.trace_file = Some(v.as_str().ok_or_else(bad(k))?.into())
+                }
+                "faults" => self.faults = Some(v.as_str().ok_or_else(bad(k))?.into()),
+                "fallback_engine" => {
+                    self.fallback_engine = Some(v.as_str().ok_or_else(bad(k))?.into())
+                }
+                "degrade_queue" => {
+                    self.degrade_queue = v.as_usize().ok_or_else(bad(k))?
+                }
+                "max_new_limit" => {
+                    self.max_new_limit = v.as_usize().ok_or_else(bad(k))?
+                }
+                "max_prompt" => self.max_prompt = v.as_usize().ok_or_else(bad(k))?,
+                "round_wall_ms" => {
+                    self.round_wall_ms = v.as_u64().ok_or_else(bad(k))?
+                }
+                "fault_retries" => {
+                    self.fault_retries = v.as_usize().ok_or_else(bad(k))?
                 }
                 "draft_k" => self.opts.draft_k = v.as_usize().ok_or_else(bad(k))?,
                 "conf_stop" => self.opts.conf_stop = v.as_f64().ok_or_else(bad(k))?,
@@ -181,6 +234,17 @@ impl RunConfig {
         if let Some(p) = a.str_opt("trace-file") {
             self.trace_file = Some(p.into());
         }
+        if let Some(f) = a.str_opt("faults") {
+            self.faults = Some(f.into());
+        }
+        if let Some(e) = a.str_opt("fallback-engine") {
+            self.fallback_engine = Some(e.into());
+        }
+        self.degrade_queue = a.usize_or("degrade-queue", self.degrade_queue)?;
+        self.max_new_limit = a.usize_or("max-new-limit", self.max_new_limit)?;
+        self.max_prompt = a.usize_or("max-prompt", self.max_prompt)?;
+        self.round_wall_ms = a.u64_or("round-wall-ms", self.round_wall_ms)?;
+        self.fault_retries = a.usize_or("fault-retries", self.fault_retries)?;
         self.opts.draft_k = a.usize_or("draft-k", self.opts.draft_k)?;
         self.opts.conf_stop = a.f64_or("conf-stop", self.opts.conf_stop)?;
         self.opts.dytc.k_max = a.usize_or("k-max", self.opts.dytc.k_max)?;
@@ -405,6 +469,76 @@ mod tests {
         assert!(cfg
             .apply_json(&Json::parse(r#"{"trace_file":7}"#).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn faults_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert!(cfg.faults.is_none(), "fault injection defaults to env/off");
+        let cfg = RunConfig::from_args(&args("--faults step:0.02,seed=7")).unwrap();
+        assert_eq!(cfg.faults.as_deref(), Some("step:0.02,seed=7"));
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"faults":"lease:0.1"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.faults.as_deref(), Some("lease:0.1"));
+        // an explicit empty spec is representable (force-disables env plans)
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"faults":""}"#).unwrap()).unwrap();
+        assert_eq!(cfg.faults.as_deref(), Some(""));
+    }
+
+    #[test]
+    fn fallback_engine_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert!(cfg.fallback_engine.is_none(), "degrade ladder defaults off");
+        assert_eq!(cfg.degrade_queue, 0, "queue threshold defaults to KV-only");
+        let cfg =
+            RunConfig::from_args(&args("--fallback-engine pld --degrade-queue 3")).unwrap();
+        assert_eq!(cfg.fallback_engine.as_deref(), Some("pld"));
+        assert_eq!(cfg.degrade_queue, 3);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"fallback_engine":"ar","degrade_queue":2}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.fallback_engine.as_deref(), Some("ar"));
+        assert_eq!(cfg.degrade_queue, 2);
+    }
+
+    #[test]
+    fn wire_limits_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert_eq!(cfg.max_new_limit, 1024, "max_new bound defaults to 1024");
+        assert_eq!(cfg.max_prompt, 4096, "prompt bound defaults to 4096");
+        let cfg =
+            RunConfig::from_args(&args("--max-new-limit 128 --max-prompt 256")).unwrap();
+        assert_eq!(cfg.max_new_limit, 128);
+        assert_eq!(cfg.max_prompt, 256);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"max_new_limit":64,"max_prompt":99}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.max_new_limit, 64);
+        assert_eq!(cfg.max_prompt, 99);
+        assert!(RunConfig::from_args(&args("--max-new-limit lots")).is_err());
+    }
+
+    #[test]
+    fn round_wall_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert_eq!(cfg.round_wall_ms, 0, "watchdog defaults off");
+        let cfg = RunConfig::from_args(&args("--round-wall-ms 250")).unwrap();
+        assert_eq!(cfg.round_wall_ms, 250);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"round_wall_ms":50}"#).unwrap()).unwrap();
+        assert_eq!(cfg.round_wall_ms, 50);
+    }
+
+    #[test]
+    fn fault_retries_flag_and_key() {
+        let cfg = RunConfig::from_args(&args("--scale small")).unwrap();
+        assert_eq!(cfg.fault_retries, 2, "transient faults retry twice by default");
+        let cfg = RunConfig::from_args(&args("--fault-retries 0")).unwrap();
+        assert_eq!(cfg.fault_retries, 0);
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"fault_retries":5}"#).unwrap()).unwrap();
+        assert_eq!(cfg.fault_retries, 5);
     }
 
     #[test]

@@ -294,6 +294,12 @@ impl RoundStep for CascadeRun<'_> {
         Ok(())
     }
 
+    fn on_abandon(&mut self) {
+        // undo the abandoned round's matcher extension; the draft (and
+        // bottom-tier) sessions reconcile lazily via their BranchCaches
+        self.matcher.truncate(self.matcher_mark);
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,

@@ -132,6 +132,17 @@ pub trait RoundStep {
         let _ = prompt;
         Ok(())
     }
+    /// Engine hook run when a drafted round is *abandoned* — dropped
+    /// without ever absorbing (a step fault, a failed fused group).
+    /// Implementations must roll back any engine-side state
+    /// `draft_round` mutated for the round (PLD matcher extensions,
+    /// lookahead history) so a retrying caller's next `draft_round`
+    /// sees exactly the pre-round state. KV needs no help here: the
+    /// target step never ran (or its speculative rows were never
+    /// committed), and draft sessions reconcile lazily against the
+    /// committed transcript ([`BranchCache::ensure`]). The default is a
+    /// no-op for engines whose drafting leaves no round-scoped state.
+    fn on_abandon(&mut self) {}
 }
 
 /// Expands the target-session plumbing methods every [`RoundStep`]

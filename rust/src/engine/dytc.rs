@@ -511,6 +511,14 @@ impl RoundStep for DytcRun<'_> {
         Ok(())
     }
 
+    fn on_abandon(&mut self) {
+        // undo the abandoned round's matcher extension (root + drafted
+        // tree); draft sessions reconcile lazily via their BranchCaches,
+        // and the DyTC scheduler state is cost-only — an abandoned
+        // round's trial simply never reports an outcome
+        self.matcher.truncate(self.matcher_mark);
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,

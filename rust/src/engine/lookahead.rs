@@ -120,6 +120,12 @@ impl RoundStep for LookaheadRun<'_> {
         f(&mut self.target)
     }
 
+    fn on_abandon(&mut self) {
+        // draft_round pushed exactly the root onto the history before the
+        // (infallible) pool lookup — pop it so a re-draft pushes it again
+        self.hist.pop();
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,

@@ -175,6 +175,13 @@ pub trait RequestRun {
     /// Phase 2: absorb the executed step (verify/commit/emit). `t_shape`
     /// must be the shape the lane was actually stepped at.
     fn finish_round(&mut self, out: StepOutput, t_shape: usize) -> Result<RoundOutcome>;
+    /// Drop the stashed in-flight round (if any) and roll back the
+    /// engine's round-scoped draft state — the scheduler's recovery hook
+    /// after a failed or faulted fused step. Losslessness is unaffected:
+    /// the round's target step never committed (`pos` unchanged) and the
+    /// next `begin_round` re-drafts against the same committed
+    /// transcript. No-op when no round is in flight.
+    fn abandon_round(&mut self) {}
     /// All tokens emitted so far (prompt excluded).
     fn tokens(&self) -> &[u32];
     /// Statistics accumulated so far.
@@ -244,8 +251,13 @@ impl<T: common::RoundStep> RequestRun for T {
                     }
                     // abandon the round (fl drops): restoring it would
                     // leave a stale pending step behind a caller that
-                    // treats the error as transient and re-drafts
-                    Err(e) => Err(e),
+                    // treats the error as transient and re-drafts.
+                    // on_abandon rolls back the engine's round-scoped
+                    // draft state so that re-draft starts clean.
+                    Err(e) => {
+                        self.on_abandon();
+                        Err(e)
+                    }
                 }
             }
         }
@@ -313,7 +325,16 @@ impl<T: common::RoundStep> RequestRun for T {
         );
         let before = self.state().out.len();
         let t0 = Instant::now();
-        let drafted = self.draft_round()?;
+        let drafted = match self.draft_round() {
+            Ok(d) => d,
+            Err(e) => {
+                // partial draft (e.g. an injected draft-chain step
+                // fault): roll back the round-scoped draft state so a
+                // retrying caller re-drafts from the pre-round state
+                self.on_abandon();
+                return Err(e);
+            }
+        };
         let draft_wall = t0.elapsed();
         let st = self.state_mut();
         match drafted {
@@ -329,6 +350,17 @@ impl<T: common::RoundStep> RequestRun for T {
                 st.done = true;
                 Ok(RoundPhase::Done(RoundOutcome { emitted: Vec::new(), done: true }))
             }
+        }
+    }
+
+    fn abandon_round(&mut self) {
+        // the pending step was never executed (or its output never
+        // absorbed): drop it and let the engine unwind its draft-side
+        // round state. Draft *sessions* need no unwinding — they
+        // reconcile lazily against the committed transcript on the next
+        // draft (`common::BranchCache::ensure`).
+        if self.state_mut().round_in_flight.take().is_some() {
+            self.on_abandon();
         }
     }
 

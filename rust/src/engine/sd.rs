@@ -88,6 +88,9 @@ pub struct SdRun<'rt> {
     matcher: PldMatcher,
     bc: BranchCache,
     k: usize,
+    /// Matcher length at the start of the in-flight round, so an
+    /// abandoned round's speculative extension can be rolled back.
+    matcher_mark: usize,
     st: GenState,
 }
 
@@ -112,7 +115,9 @@ impl RoundStep for SdRun<'_> {
         }
         let root = st.root;
         // The root is committed by this round unconditionally; the PLD
-        // corpus may condition on it right away.
+        // corpus may condition on it right away. (Mark first: an
+        // abandoned round truncates back to the pre-round history.)
+        self.matcher_mark = self.matcher.len();
         self.matcher.extend(&[root]);
 
         // ---- draft ----
@@ -161,6 +166,13 @@ impl RoundStep for SdRun<'_> {
             self.bc = BranchCache::new(sess.pos());
         }
         Ok(())
+    }
+
+    fn on_abandon(&mut self) {
+        // undo the abandoned round's matcher extension (root + drafted
+        // chain); the draft session needs no unwinding — BranchCache
+        // reconciles it lazily on the next draft
+        self.matcher.truncate(self.matcher_mark);
     }
 
     fn absorb_round(
@@ -213,7 +225,15 @@ impl Engine for SdEngine<'_> {
         // PLD corpus / draft cache both start at the committed prompt.
         let matcher = PldMatcher::new(prompt);
         let mut run =
-            SdRun { target, draft, matcher, bc: BranchCache::new(0), k: self.k, st };
+            SdRun {
+                target,
+                draft,
+                matcher,
+                bc: BranchCache::new(0),
+                k: self.k,
+                matcher_mark: 0,
+                st,
+            };
         if run.st.prefill_pending.is_none() {
             run.after_prefill(prompt)?;
         }

@@ -179,6 +179,13 @@ impl RoundStep for TreeRun<'_> {
         Ok(())
     }
 
+    fn on_abandon(&mut self) {
+        // undo the abandoned round's matcher extension so a re-draft
+        // extends from the pre-round history (absorb does the same
+        // truncate before appending the accepted tokens)
+        self.matcher.truncate(self.matcher_mark);
+    }
+
     fn absorb_round(
         &mut self,
         pending: PendingVerify,

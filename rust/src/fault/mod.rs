@@ -1,0 +1,343 @@
+//! Deterministic fault injection: a seeded plan of per-site error rates.
+//!
+//! A [`FaultPlan`] is parsed from `--faults` (config key `faults`), with
+//! the `CAS_SPEC_FAULTS` environment variable as a fallback, e.g.
+//!
+//! ```text
+//! step:0.02,lease:0.01,seed=7
+//! ```
+//!
+//! and injects `Err`s at named sites in the serving stack:
+//!
+//! | site    | where the draw happens                                      |
+//! |---------|-------------------------------------------------------------|
+//! | `step`  | `ScaleRuntime::step` (solo/draft/prefill steps), and one    |
+//! |         | draw per lane in the scheduler just before each fused       |
+//! |         | `step_batch` — so a fused-step fault hits exactly one       |
+//! |         | request and the failure domain stays per-request            |
+//! | `lease` | `ScaleRuntime::new_kv` (KV pool lease acquire)              |
+//! | `swap`  | `export_rows` / `import_rows` / `restore_rows` (suspend /   |
+//! |         | resume / prefix-cache row traffic)                          |
+//! | `conn`  | connection I/O: the reader thread drops the connection      |
+//! |         | right after enqueuing a request (a simulated client vanish) |
+//!
+//! Draws are a pure function of `(seed, site, per-site draw index)` — one
+//! `SplitMix64` value each — so a plan replays identically for the same
+//! sequence of events regardless of which thread draws. Injection is
+//! compiled in but **zero-cost when the plan is empty**: like
+//! [`crate::obs::Obs::record`], an inactive plan is a single branch on
+//! the hot path (`inner: None`), and the faults-off transcript is
+//! byte-identical to serving with no plan at all (pinned in
+//! `tests/server_integration.rs`).
+//!
+//! Injected errors carry the [`INJECTED_PREFIX`] marker so the scheduler
+//! can classify them as transient (bounded retry) while real errors
+//! retire the request immediately; per-site injection counters feed the
+//! `faults_injected` stats field the chaos suite reconciles against
+//! `retried + retired_fault`.
+
+#![warn(missing_docs)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::rng::{fnv1a64, SplitMix64};
+
+/// Marker every injected error message starts with; the scheduler keys
+/// transient-fault classification (retry vs retire) on it.
+pub const INJECTED_PREFIX: &str = "injected fault";
+
+/// Whether an error message came from fault injection (transient by
+/// construction — the underlying operation never ran).
+pub fn is_injected(msg: &str) -> bool {
+    msg.contains(INJECTED_PREFIX)
+}
+
+/// A named injection site (see the module table for where each draws).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FaultSite {
+    /// Backend step execution (solo steps and fused lanes).
+    Step,
+    /// KV pool lease acquisition (`new_kv`).
+    Lease,
+    /// KV row export/import (suspend/resume swap traffic).
+    Swap,
+    /// Connection I/O (simulated client disconnect).
+    Conn,
+}
+
+impl FaultSite {
+    /// Every site, in spec order.
+    pub const ALL: [FaultSite; 4] =
+        [FaultSite::Step, FaultSite::Lease, FaultSite::Swap, FaultSite::Conn];
+
+    /// The site's spec key (`step:0.02` etc.).
+    pub fn key(self) -> &'static str {
+        match self {
+            FaultSite::Step => "step",
+            FaultSite::Lease => "lease",
+            FaultSite::Swap => "swap",
+            FaultSite::Conn => "conn",
+        }
+    }
+}
+
+struct SiteState {
+    rate: f64,
+    draws: AtomicU64,
+    injected: AtomicU64,
+}
+
+struct PlanInner {
+    seed: u64,
+    sites: [SiteState; 4],
+}
+
+/// A seeded per-site fault-rate plan. Cloning shares the draw counters
+/// (`Arc`), so the worker's runtime and every connection thread draw
+/// from one plan and the injection counters aggregate globally.
+#[derive(Clone)]
+pub struct FaultPlan {
+    /// `None` = empty plan: every check is a single branch (zero-cost).
+    inner: Option<Arc<PlanInner>>,
+}
+
+impl FaultPlan {
+    /// The empty plan: never injects, one branch per check.
+    pub fn none() -> FaultPlan {
+        FaultPlan { inner: None }
+    }
+
+    /// Parse a spec like `"step:0.02,lease:0.01,seed=7"`. Sites are
+    /// [`FaultSite::key`]s with rates in `[0, 1]`; `seed=N` seeds the
+    /// draw streams (default 0). An empty/whitespace spec — or one whose
+    /// rates are all zero — yields the zero-cost empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut rates = [0.0f64; 4];
+        let mut seed = 0u64;
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            if let Some(v) = entry.strip_prefix("seed=") {
+                seed = v
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("faults: bad seed {v:?}"))?;
+                continue;
+            }
+            let (site, rate) = entry
+                .split_once(':')
+                .ok_or_else(|| anyhow!("faults: expected site:rate, got {entry:?}"))?;
+            let rate: f64 = rate
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("faults: bad rate for {site:?}"))?;
+            if !(rate.is_finite() && (0.0..=1.0).contains(&rate)) {
+                bail!("faults: rate for {site:?} must be in [0, 1]");
+            }
+            let idx = FaultSite::ALL
+                .iter()
+                .position(|s| s.key() == site.trim())
+                .ok_or_else(|| anyhow!("faults: unknown site {site:?}"))?;
+            rates[idx] = rate;
+        }
+        if rates.iter().all(|r| *r == 0.0) {
+            return Ok(FaultPlan::none());
+        }
+        let sites = rates.map(|rate| SiteState {
+            rate,
+            draws: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        });
+        Ok(FaultPlan { inner: Some(Arc::new(PlanInner { seed, sites })) })
+    }
+
+    /// Resolve the serving plan: an explicit spec (flag/config) wins —
+    /// including an explicit empty string, which force-disables — else
+    /// the `CAS_SPEC_FAULTS` environment variable, else the empty plan.
+    pub fn resolve(flag: Option<&str>) -> Result<FaultPlan> {
+        match flag {
+            Some(spec) => FaultPlan::parse(spec),
+            None => match std::env::var("CAS_SPEC_FAULTS") {
+                Ok(spec) => FaultPlan::parse(&spec),
+                Err(_) => Ok(FaultPlan::none()),
+            },
+        }
+    }
+
+    /// Whether any site has a non-zero rate.
+    pub fn is_active(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Draw the site's next value: `true` = inject a fault now. The
+    /// empty-plan fast path is a single branch; an active plan takes one
+    /// atomic increment and one `SplitMix64` value, deterministic in
+    /// `(seed, site, draw index)`.
+    #[inline]
+    pub fn draw(&self, site: FaultSite) -> bool {
+        let Some(inner) = &self.inner else { return false };
+        let s = &inner.sites[site as usize];
+        if s.rate <= 0.0 {
+            return false;
+        }
+        let n = s.draws.fetch_add(1, Ordering::Relaxed);
+        let mut rng = SplitMix64::new(
+            inner
+                .seed
+                .wrapping_add(fnv1a64(site.key()))
+                .wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        );
+        if rng.next_f64() < s.rate {
+            s.injected.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// [`FaultPlan::draw`] as a `Result`: `Err("injected fault: <site>")`
+    /// when the draw fires — the form the runtime's injection points use.
+    #[inline]
+    pub fn check(&self, site: FaultSite) -> Result<()> {
+        if self.draw(site) {
+            bail!("{INJECTED_PREFIX}: {}", site.key());
+        }
+        Ok(())
+    }
+
+    /// Faults injected at one site so far.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.inner
+            .as_ref()
+            .map_or(0, |p| p.sites[site as usize].injected.load(Ordering::Relaxed))
+    }
+
+    /// Faults injected at the scheduler-visible sites (`step` + `lease` +
+    /// `swap`) — the `faults_injected` stats field. Every such fault
+    /// surfaces to the scheduler as exactly one retry or one fault
+    /// retirement, so `faults_injected == retried + retired_fault` holds
+    /// (the chaos suite's reconciliation invariant). `conn` faults are
+    /// excluded: they surface as client disconnects, counted apart.
+    pub fn injected_server(&self) -> u64 {
+        self.injected(FaultSite::Step)
+            + self.injected(FaultSite::Lease)
+            + self.injected(FaultSite::Swap)
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    /// Renders the spec back (`step:0.02,lease:0.01,seed=7`) so the
+    /// serve-time log line shows exactly what is armed.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let Some(inner) = &self.inner else { return write!(f, "off") };
+        for (i, site) in FaultSite::ALL.iter().enumerate() {
+            let rate = inner.sites[i].rate;
+            if rate > 0.0 {
+                write!(f, "{}:{rate},", site.key())?;
+            }
+        }
+        write!(f, "seed={}", inner.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_zero_rate_plans_are_inactive() {
+        assert!(!FaultPlan::none().is_active());
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+        assert!(!FaultPlan::parse("  ").unwrap().is_active());
+        assert!(!FaultPlan::parse("seed=7").unwrap().is_active());
+        assert!(!FaultPlan::parse("step:0.0,lease:0").unwrap().is_active());
+        // inactive plans never draw and never count
+        let p = FaultPlan::parse("seed=9").unwrap();
+        for _ in 0..100 {
+            assert!(!p.draw(FaultSite::Step));
+        }
+        assert_eq!(p.injected_server(), 0);
+    }
+
+    #[test]
+    fn parse_rates_and_seed() {
+        let p = FaultPlan::parse("step:1.0, lease:0.5, seed=7").unwrap();
+        assert!(p.is_active());
+        assert!(p.draw(FaultSite::Step), "rate 1.0 always injects");
+        assert!(!p.draw(FaultSite::Swap), "unlisted site never injects");
+        assert!(is_injected(&format!(
+            "{:#}",
+            p.check(FaultSite::Step).unwrap_err()
+        )));
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("warp:0.5").is_err(), "unknown site");
+        assert!(FaultPlan::parse("step").is_err(), "missing rate");
+        assert!(FaultPlan::parse("step:fast").is_err(), "non-numeric rate");
+        assert!(FaultPlan::parse("step:1.5").is_err(), "rate > 1");
+        assert!(FaultPlan::parse("step:-0.1").is_err(), "negative rate");
+        assert!(FaultPlan::parse("seed=soon").is_err(), "non-numeric seed");
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_seed_and_site() {
+        let a = FaultPlan::parse("step:0.3,lease:0.3,seed=11").unwrap();
+        let b = FaultPlan::parse("step:0.3,lease:0.3,seed=11").unwrap();
+        let sa: Vec<bool> = (0..64).map(|_| a.draw(FaultSite::Step)).collect();
+        let sb: Vec<bool> = (0..64).map(|_| b.draw(FaultSite::Step)).collect();
+        assert_eq!(sa, sb, "same seed, same site, same draw sequence");
+        assert!(sa.iter().any(|f| *f), "rate 0.3 fires within 64 draws");
+        assert!(sa.iter().any(|f| !*f), "rate 0.3 passes within 64 draws");
+        // interleaving another site does not disturb the step stream
+        let c = FaultPlan::parse("step:0.3,lease:0.3,seed=11").unwrap();
+        let sc: Vec<bool> = (0..64)
+            .map(|_| {
+                c.draw(FaultSite::Lease);
+                c.draw(FaultSite::Step)
+            })
+            .collect();
+        assert_eq!(sa, sc, "per-site streams are independent");
+        // a different seed yields a different stream
+        let d = FaultPlan::parse("step:0.3,seed=12").unwrap();
+        let sd: Vec<bool> = (0..64).map(|_| d.draw(FaultSite::Step)).collect();
+        assert_ne!(sa, sd, "seed changes the stream");
+    }
+
+    #[test]
+    fn injection_counters_reconcile_with_draws() {
+        let p = FaultPlan::parse("step:0.5,conn:0.5,seed=3").unwrap();
+        let mut fired = 0u64;
+        for _ in 0..200 {
+            if p.draw(FaultSite::Step) {
+                fired += 1;
+            }
+            p.draw(FaultSite::Conn);
+        }
+        assert_eq!(p.injected(FaultSite::Step), fired);
+        // conn is excluded from the scheduler-facing total
+        assert_eq!(p.injected_server(), fired);
+        assert!(p.injected(FaultSite::Conn) > 0);
+    }
+
+    #[test]
+    fn clones_share_counters() {
+        let p = FaultPlan::parse("step:1.0").unwrap();
+        let q = p.clone();
+        assert!(q.draw(FaultSite::Step));
+        assert_eq!(p.injected(FaultSite::Step), 1, "clone draws count globally");
+    }
+
+    #[test]
+    fn resolve_explicit_spec_wins() {
+        assert!(FaultPlan::resolve(Some("step:0.1")).unwrap().is_active());
+        // an explicit empty spec force-disables (overrides any env plan)
+        assert!(!FaultPlan::resolve(Some("")).unwrap().is_active());
+        assert!(FaultPlan::resolve(Some("nope:1")).is_err());
+    }
+}

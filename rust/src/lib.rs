@@ -20,7 +20,8 @@
 //!   analytic EWIF machinery ([`analytic`]), the synthetic Spec-Bench
 //!   workload ([`workload`]), a continuous-batching serving front-end
 //!   ([`server`]) with a cross-request prefix/KV cache ([`cache`]),
-//!   a structured tracing + metrics layer ([`obs`]) and the bench
+//!   a structured tracing + metrics layer ([`obs`]), deterministic
+//!   fault injection for chaos testing ([`fault`]) and the bench
 //!   harness ([`harness`]).
 //!
 //! See docs/ARCHITECTURE.md for the paper-to-code map, the `Backend`
@@ -36,6 +37,7 @@ pub mod cache;
 pub mod config;
 pub mod dytc;
 pub mod engine;
+pub mod fault;
 pub mod harness;
 pub mod metrics;
 pub mod model;

@@ -96,6 +96,25 @@ FLAGS
                       one event per line) to PATH; default off.
                       Read-only on the decode path — transcripts are
                       byte-identical with tracing on or off
+  --faults SPEC       serve: deterministic fault injection, e.g.
+                      "step:0.02,lease:0.01,seed=7" (sites: step lease
+                      swap conn; also via CAS_SPEC_FAULTS — the flag
+                      wins, "" force-disables; default off = zero cost)
+  --fault-retries N   serve: bounded retries for injected transient step
+                      faults (default: 2; real errors never retry)
+  --fallback-engine E serve: degrade-don't-die — admit on this cheaper
+                      engine under queue/KV pressure instead of
+                      rejecting (lossless, so transcripts are unchanged)
+  --degrade-queue N   serve: queue depth beyond which new admissions
+                      degrade to the fallback engine (default: 0 = only
+                      KV pressure degrades)
+  --max-new-limit N   serve: reject requests with max_new above N
+                      (default: 1024)
+  --max-prompt N      serve: reject prompts longer than N tokens
+                      (default: 4096)
+  --round-wall-ms N   serve: watchdog — count + trace a `stall` event
+                      when one scheduler cycle exceeds N ms (default:
+                      0 = off)
   --config FILE       JSON config (see config/mod.rs)
   --markdown          emit tables as markdown
   --verbose           per-request progress lines
@@ -103,6 +122,7 @@ FLAGS
 ENV
   CAS_SPEC_LOG        stderr log level: error | warn | info | debug
                       (default: info)
+  CAS_SPEC_FAULTS     fault-injection spec for serve (see --faults)
 
 ENGINES
   ar lade pld swift kangaroo vc hc vchc casc-aq tr trvc

@@ -75,6 +75,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::cache::{KvLease, KvPool, PrefixCache};
+use crate::fault::{FaultPlan, FaultSite};
 use crate::model::weights::Weights;
 use crate::model::{Manifest, ScaleInfo, Variant};
 use crate::obs::Obs;
@@ -455,6 +456,7 @@ impl Runtime {
             prefix_cache: None,
             threads: self.threads,
             obs: Obs::new(),
+            faults: FaultPlan::none(),
         })
     }
 }
@@ -478,6 +480,10 @@ pub struct ScaleRuntime {
     /// Observability hub: trace sink + histograms + DyTC accounting.
     /// Always present; tracing itself is off until enabled.
     obs: Obs,
+    /// Deterministic fault-injection plan ([`crate::fault`]). Empty by
+    /// default — a single never-taken branch per injection site — so the
+    /// chaos machinery is compiled in at zero cost to normal serving.
+    faults: FaultPlan,
 }
 
 /// One lane of a [`ScaleRuntime::step_batch`] call. The cache handle
@@ -559,11 +565,27 @@ impl ScaleRuntime {
         &self.obs
     }
 
+    /// Install a fault-injection plan (chaos testing; see
+    /// [`crate::fault`]). The default is the empty plan, which costs one
+    /// never-taken branch per site.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults = plan;
+    }
+
+    /// The active fault-injection plan. The serving scheduler draws the
+    /// per-lane `step` faults for fused `step_batch` calls from here
+    /// (one draw per lane, so a fused fault is attributed to exactly one
+    /// request), and reads the injection counters for `stats`.
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.faults
+    }
+
     /// Copy committed KV rows `start .. start + len` out of a cache
     /// (plane-major, see [`Backend::export_rows`]). Only committed rows
     /// may leave a cache — speculative tree slots never do.
     pub fn export_rows(&self, kv: &KvCache, start: usize, len: usize) -> Result<Vec<f32>> {
         assert!(start + len <= kv.pos, "exporting uncommitted rows");
+        self.faults.check(FaultSite::Swap)?;
         self.backend.export_rows(kv.variant, &kv.state, start, len)
     }
 
@@ -578,6 +600,7 @@ impl ScaleRuntime {
             len,
             self.info.s_max
         );
+        self.faults.check(FaultSite::Swap)?;
         self.backend.import_rows(kv.variant, &mut kv.state, kv.pos, len, rows)?;
         kv.pos += len;
         if let Some(c) = self.counters.get(&kv.variant) {
@@ -594,6 +617,7 @@ impl ScaleRuntime {
         if !self.counters.contains_key(&v) {
             return Err(anyhow!("variant {v:?} not loaded for scale {}", self.info.name));
         }
+        self.faults.check(FaultSite::Lease)?;
         let bytes = self.kv_bytes_for(v);
         if !self.pool.can_fit(bytes) {
             if let Some(pc) = &self.prefix_cache {
@@ -633,6 +657,7 @@ impl ScaleRuntime {
             len,
             self.info.s_max
         );
+        self.faults.check(FaultSite::Swap)?;
         self.backend.import_rows(kv.variant, &mut kv.state, kv.pos, len, rows)?;
         kv.pos += len;
         Ok(())
@@ -666,6 +691,10 @@ impl ScaleRuntime {
             t_shape,
             self.info.s_max
         );
+        // chaos: a `step` fault fires before the backend runs, so an
+        // injected failure never leaves partial KV writes behind — the
+        // scheduler can re-draft against unchanged committed state
+        self.faults.check(FaultSite::Step)?;
 
         let start = Instant::now();
         let variant = kv.variant;
@@ -694,6 +723,11 @@ impl ScaleRuntime {
     /// split evenly across the lanes' variants (per-lane cost is not
     /// separable inside a fused batch); every [`StepOutput::elapsed`]
     /// reports the whole batch's elapsed time.
+    ///
+    /// Fault injection note: `step` faults for fused calls are drawn by
+    /// the *scheduler*, one draw per lane before the lanes are built, so
+    /// each injected fault fails exactly one request instead of the
+    /// whole group — this method itself has no injection site.
     pub fn step_batch(
         &self,
         t_shape: usize,

@@ -77,8 +77,16 @@
 //!     "scale": "base", "backend": "ref"}
 //! -> {"cmd": "metrics"}
 //! <- {"metrics": "cas_spec_served_total 12\n...Prometheus text..."}
+//! -> {"cmd": "cancel", "id": 1}   <- {"ok": true, "id": 1}
 //! -> {"cmd": "shutdown"}   <- {"ok": true}
 //! ```
+//!
+//! A request may add `"deadline_ms": N` (soft deadline from enqueue); an
+//! expired or cancelled run replies with its partial transcript plus
+//! `"partial": "deadline" | "cancelled"` instead of an `error`. `max_new`
+//! is bounded by `--max-new-limit` and the prompt length by
+//! `--max-prompt`; out-of-bounds requests get an error reply that still
+//! echoes their id.
 //!
 //! `uptime_secs` is monotonic seconds since the worker started, so one
 //! stats reply yields utilization as `busy_secs / uptime_secs`. The
@@ -131,28 +139,74 @@
 //! `--prefill-chunk N` bounds per-cycle prefill work: prompts commit at
 //! most N tokens per scheduler round (`prefill_chunk` events),
 //! byte-identical to monolithic prefill.
+//!
+//! # Failure domains, deadlines, and degrade-don't-die
+//!
+//! The failure domain is **one request**, never the worker
+//! (docs/ARCHITECTURE.md §Failure domains & fault injection):
+//!
+//! * Every run's draft/absorb polls and the fused verify step execute
+//!   under `catch_unwind` + error handling. An error or panic retires
+//!   only that request (`{"id":…,"error":…}`; its sessions and KV
+//!   leases release via RAII, so pool accounting returns to baseline),
+//!   while the other lanes keep serving and the worker thread never
+//!   dies. *Transient* step faults (the marker errors `--faults`
+//!   injects — see [`crate::fault`]) are retried up to
+//!   `--fault-retries` times (default 2) with a per-request cycle
+//!   backoff: the abandoned round re-drafts against unchanged committed
+//!   state, so a retried request's transcript is byte-identical to an
+//!   undisturbed one. Panics never retry.
+//! * Requests may carry `deadline_ms` (measured from enqueue) and may
+//!   be cancelled with `{"cmd":"cancel","id":…}`. Both are honored at
+//!   round boundaries: the run retires with its **partial transcript**
+//!   plus a `"partial":"deadline"|"cancelled"` marker — the emitted
+//!   prefix is byte-identical to AR because losslessness is per-token.
+//!   A vanished client (reply channel closed) is detected at the next
+//!   round boundary too, and the run is abandoned (`disconnects` stat)
+//!   instead of decoded to completion.
+//! * `--fallback-engine NAME` arms the overload ladder: when the queue
+//!   is deeper than `--degrade-queue`, or the primary engine's KV
+//!   footprint cannot fit the pool while the fallback's can, new
+//!   admissions route to the cheaper engine (counted in `degraded`,
+//!   reported per reply in `engine`). Because every engine is lossless,
+//!   degradation changes latency — never a single output byte.
+//! * `--round-wall-ms N` arms a watchdog: a scheduler cycle exceeding
+//!   the wall emits an obs `stall` event and counts in `stalls`.
+//! * Wire hygiene: `max_new` above `--max-new-limit` and prompts longer
+//!   than `--max-prompt` are rejected with clean error replies, and
+//!   accepted sockets get a read timeout so a stalled client cannot pin
+//!   its reader thread forever.
 
 #![warn(missing_docs)]
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::cache::{CacheStats, PoolStats};
 use crate::config::RunConfig;
 use crate::engine::{build_engine, required_variants, Engine, RequestRun, RoundPhase};
+use crate::fault::{is_injected, FaultPlan, FaultSite, INJECTED_PREFIX};
 use crate::runtime::{BatchLane, Runtime, ScaleRuntime};
 use crate::spec::SamplingParams;
 use crate::util::json::Json;
 use crate::util::log;
 
+/// Read timeout on accepted sockets: a client that connects and then
+/// goes silent forever releases its reader thread instead of pinning it.
+/// Long enough that a legitimately slow generation (the client blocks
+/// reading, not writing) is unaffected — the timeout only bounds reads.
+const READ_TIMEOUT: Duration = Duration::from_secs(120);
+
 /// One parsed generate request.
+#[derive(Debug)]
 pub struct Request {
     /// Client-chosen request id, echoed back in the response.
     pub id: u64,
@@ -163,10 +217,49 @@ pub struct Request {
     /// Sampled-decoding parameters (`None` = greedy; built from the
     /// request's `temperature` / `top_p` / `seed` fields).
     pub sampling: Option<SamplingParams>,
+    /// Soft deadline in milliseconds, measured from enqueue. Checked at
+    /// round boundaries; an expired run retires with its partial
+    /// transcript and a `"partial":"deadline"` marker.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Per-request limits enforced at parse time (satellite: wire bounds).
+#[derive(Clone, Copy)]
+struct WireLimits {
+    /// Largest accepted `max_new` (`--max-new-limit`).
+    max_new: usize,
+    /// Longest accepted prompt, in tokens (`--max-prompt`).
+    max_prompt: usize,
+}
+
+impl Default for WireLimits {
+    fn default() -> Self {
+        WireLimits { max_new: 1024, max_prompt: 4096 }
+    }
+}
+
+/// A parse rejection that still carries the request id when one was
+/// readable, so the error reply routes back to the right caller.
+#[derive(Debug)]
+struct ParseErr {
+    id: Option<u64>,
+    msg: String,
+}
+
+impl ParseErr {
+    fn new(id: Option<u64>, msg: impl Into<String>) -> Self {
+        ParseErr { id, msg: msg.into() }
+    }
 }
 
 enum Job {
-    Generate(Request, mpsc::Sender<String>),
+    /// A generate request, its reply channel, and the connection's
+    /// liveness flag (cleared when the client vanishes — the scheduler
+    /// culls dead runs at round boundaries instead of decoding for
+    /// nobody).
+    Generate(Request, mpsc::Sender<String>, Arc<AtomicBool>),
+    /// Cancel the request with this id (queued or in flight).
+    Cancel(u64),
     Stats(mpsc::Sender<String>),
     Metrics(mpsc::Sender<String>),
     Shutdown,
@@ -177,6 +270,7 @@ struct Queued {
     req: Request,
     reply: mpsc::Sender<String>,
     enqueued: Instant,
+    alive: Arc<AtomicBool>,
 }
 
 /// A request admitted into the running batch.
@@ -184,10 +278,25 @@ struct Active<'e> {
     id: u64,
     reply: mpsc::Sender<String>,
     run: Box<dyn RequestRun + 'e>,
+    /// Engine this run was admitted on (primary or fallback) — echoed in
+    /// the reply so degraded service is observable per request.
+    engine: String,
     /// Milliseconds spent waiting in the admission queue.
     queued_ms: f64,
     /// Admission time (service time = now - started at completion).
     started: Instant,
+    /// Absolute deadline (enqueue + `deadline_ms`), if the request set one.
+    deadline: Option<Instant>,
+    /// Connection liveness flag; false = the client vanished.
+    alive: Arc<AtomicBool>,
+    /// Set by `{"cmd":"cancel"}`; honored at the next round boundary.
+    cancelled: bool,
+    /// Transient-fault retries consumed so far (bounded by
+    /// `--fault-retries`).
+    retries: usize,
+    /// Scheduler cycles to skip before the next attempt (retry backoff —
+    /// non-blocking: other lanes keep advancing while this one waits).
+    backoff: usize,
     /// Step shape of this run's pending verify lane within the current
     /// lock-step cycle (None outside a cycle / after absorbing).
     pending_shape: Option<usize>,
@@ -223,12 +332,53 @@ struct SchedCounters {
     fused_lanes: u64,
     /// Requests admitted with sampling enabled (`temperature > 0`).
     sampled: u64,
+    /// Clients that vanished mid-request (reply channel closed or reply
+    /// write failed). Distinct from `errors`: the request didn't fail —
+    /// its caller left.
+    disconnects: u64,
+    /// Requests admitted on the fallback engine under overload.
+    degraded: u64,
+    /// Transient injected step faults absorbed by retry (the request
+    /// went on to finish normally).
+    retried: u64,
+    /// Requests retired by an injected fault after exhausting retries
+    /// (or on a non-retryable site). With a step+lease fault plan,
+    /// `faults_injected == retried + retired_fault` (conn faults surface
+    /// as `disconnects`; see `crate::fault::FaultPlan::injected_server`).
+    retired_fault: u64,
+    /// Scheduler cycles that exceeded `--round-wall-ms`.
+    stalls: u64,
+    /// Runs retired at their deadline with a partial transcript.
+    deadlines: u64,
+    /// Runs cancelled by `{"cmd":"cancel"}` (queued or in flight).
+    cancelled: u64,
+}
+
+/// Scheduler knobs that ride along as one bundle (they all come from
+/// `RunConfig` and only the scheduler reads them).
+struct SchedOpts {
+    max_batch: usize,
+    lockstep: bool,
+    max_queue: usize,
+    /// Queue depth beyond which new admissions degrade to the fallback
+    /// engine (0 = queue pressure never degrades).
+    degrade_queue: usize,
+    /// Watchdog wall for one scheduler cycle, in ms (0 = off).
+    round_wall_ms: u64,
+    /// Bounded retries for transient (injected) step faults.
+    fault_retries: usize,
 }
 
 /// Serve until a shutdown command arrives. Blocks the calling thread.
 pub fn serve(cfg: &RunConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
+    // resolve the fault plan up front so a malformed `--faults` spec (or
+    // CAS_SPEC_FAULTS env) fails serve() instead of killing the worker
+    let plan = FaultPlan::resolve(cfg.faults.as_deref())?;
+    if plan.is_active() {
+        log::info("fault injection armed", &[("plan", format!("{plan:?}"))]);
+    }
     log::info(
         "cas-spec server up",
         &[
@@ -242,15 +392,28 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
 
     // ---- worker: owns the runtime + engine, runs the scheduler ----
     let wcfg = cfg.clone();
+    let wplan = plan.clone();
     let worker = thread::spawn(move || -> Result<()> {
         let engine_name = wcfg.engines[0].clone();
+        let fallback_name = wcfg.fallback_engine.clone();
         let mut rt = Runtime::open_with(&wcfg.artifacts, wcfg.backend_select()?)?;
         rt.set_threads(wcfg.resolved_threads());
-        let mut srt = rt.load_scale(&wcfg.scale, &required_variants(&engine_name))?;
+        // load the union of the primary and fallback engines' variants so
+        // degraded admissions never hit a missing-variant error mid-flight
+        let mut variants = required_variants(&engine_name);
+        if let Some(fb) = &fallback_name {
+            for v in required_variants(fb) {
+                if !variants.contains(&v) {
+                    variants.push(v);
+                }
+            }
+        }
+        let mut srt = rt.load_scale(&wcfg.scale, &variants)?;
         // set the global KV budget and attach the cross-request prefix
         // cache (a client of the same pool) before any session opens
         srt.set_kv_budget(wcfg.kv_budget_bytes());
         srt.enable_prefix_cache(wcfg.prefix_cache_bytes());
+        srt.set_fault_plan(wplan);
         // event tracing is opt-in; the JSONL stream is complete when
         // serve() returns because this worker thread is joined there
         if let Some(path) = &wcfg.trace_file {
@@ -258,18 +421,26 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
             log::info("trace stream enabled", &[("file", path.display().to_string())]);
         }
         let eng = build_engine(&engine_name, &srt, &wcfg.opts)?;
-        run_scheduler(
-            &rx,
-            &srt,
-            eng.as_ref(),
-            &engine_name,
-            wcfg.max_batch.max(1),
-            wcfg.lockstep,
-            wcfg.max_queue,
-        )
+        let fb_eng = match &fallback_name {
+            Some(fb) => Some(build_engine(fb, &srt, &wcfg.opts)?),
+            None => None,
+        };
+        let fallback = fallback_name
+            .as_deref()
+            .zip(fb_eng.as_deref().map(|e| e as &dyn Engine));
+        let sched = SchedOpts {
+            max_batch: wcfg.max_batch.max(1),
+            lockstep: wcfg.lockstep,
+            max_queue: wcfg.max_queue,
+            degrade_queue: wcfg.degrade_queue,
+            round_wall_ms: wcfg.round_wall_ms,
+            fault_retries: wcfg.fault_retries,
+        };
+        run_scheduler(&rx, &srt, eng.as_ref(), &engine_name, fallback, &sched)
     });
 
     // ---- acceptor: one reader thread per connection ----
+    let lim = WireLimits { max_new: cfg.max_new_limit, max_prompt: cfg.max_prompt };
     let shutting_down = Arc::new(AtomicBool::new(false));
     for stream in listener.incoming() {
         if shutting_down.load(Ordering::SeqCst) {
@@ -282,8 +453,9 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
         let tx = tx.clone();
         let flag = shutting_down.clone();
         let addr = cfg.addr.clone();
+        let cplan = plan.clone();
         thread::spawn(move || {
-            if handle_connection(stream, tx) {
+            if handle_connection(stream, tx, lim, cplan) {
                 flag.store(true, Ordering::SeqCst);
                 // wake the acceptor so it observes the flag
                 let _ = TcpStream::connect(&addr);
@@ -312,26 +484,39 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
 ///
 /// The loop blocks on the channel only when fully idle, so it neither
 /// spins while empty nor delays rounds while busy.
-fn run_scheduler(
+///
+/// Failure-domain boundaries (tested by the chaos suite): every per-run
+/// poll and the fused step run under `catch_unwind`, injected transient
+/// step faults retry with backoff, deadlines/cancellation/disconnects are
+/// honored at round boundaries, and admissions degrade to `fallback`
+/// under queue or KV pressure. See the module header.
+fn run_scheduler<'e>(
     rx: &mpsc::Receiver<Job>,
     srt: &ScaleRuntime,
-    eng: &dyn Engine,
+    eng: &'e dyn Engine,
     engine_name: &str,
-    max_batch: usize,
-    lockstep: bool,
-    max_queue: usize,
+    fallback: Option<(&str, &'e dyn Engine)>,
+    sched: &SchedOpts,
 ) -> Result<()> {
+    let max_batch = sched.max_batch;
     let mut queue: VecDeque<Queued> = VecDeque::new();
-    let mut running: Vec<Active<'_>> = Vec::new();
+    let mut running: Vec<Active<'e>> = Vec::new();
     // runs preempted under KV pressure: KV swapped out to host memory,
     // waiting for budget to swap back in (oldest-preempted first)
-    let mut suspended: Vec<Active<'_>> = Vec::new();
+    let mut suspended: Vec<Active<'e>> = Vec::new();
     // the engine's whole per-request KV footprint (every session it
     // opens at admission) — the unit of admission control
     let footprint: usize = required_variants(engine_name)
         .iter()
         .map(|v| srt.kv_bytes_for(*v))
         .sum();
+    // the fallback engine's (smaller) footprint: under KV pressure a
+    // request that cannot fit the primary may still fit degraded
+    let fb_footprint: usize = fallback
+        .map(|(name, _)| {
+            required_variants(name).iter().map(|v| srt.kv_bytes_for(*v)).sum()
+        })
+        .unwrap_or(0);
     let mut c = SchedCounters::default();
     // worker start: the monotonic basis for `uptime_secs` in stats
     let up0 = Instant::now();
@@ -365,6 +550,7 @@ fn run_scheduler(
                         running: running.len(),
                         suspended: suspended.len(),
                         max_batch,
+                        faults_injected: srt.fault_plan().injected_server(),
                         tokens_stepped: srt
                             .loaded_variants()
                             .iter()
@@ -375,7 +561,7 @@ fn run_scheduler(
                         scale: &srt.info.name,
                         backend: srt.backend_name(),
                         threads: srt.threads(),
-                        lockstep,
+                        lockstep: sched.lockstep,
                         uptime_secs: up0.elapsed().as_secs_f64(),
                         pool: srt.kv_pool().stats(),
                     };
@@ -384,7 +570,7 @@ fn run_scheduler(
                 Job::Metrics(reply) => {
                     let _ = reply.send(metrics_json(&c, srt, up0.elapsed().as_secs_f64()));
                 }
-                Job::Generate(req, reply) => {
+                Job::Generate(req, reply, alive) => {
                     let id = req.id;
                     srt.obs().record(|t_us| {
                         format!("{{\"t_us\":{t_us},\"ev\":\"enqueue\",\"id\":{id}}}")
@@ -392,7 +578,7 @@ fn run_scheduler(
                     // bounded admission queue: shed over-limit requests
                     // immediately (distinct from `errors` — see
                     // SchedCounters::shed)
-                    if max_queue > 0 && queue.len() >= max_queue {
+                    if sched.max_queue > 0 && queue.len() >= sched.max_queue {
                         c.shed += 1;
                         srt.obs().record(|t_us| {
                             format!("{{\"t_us\":{t_us},\"ev\":\"shed\",\"id\":{id}}}")
@@ -400,7 +586,33 @@ fn run_scheduler(
                         let _ = reply.send(error_json(id, "queue full"));
                         continue;
                     }
-                    queue.push_back(Queued { req, reply, enqueued: Instant::now() });
+                    queue.push_back(Queued { req, reply, enqueued: Instant::now(), alive });
+                }
+                Job::Cancel(id) => {
+                    // queued: retire immediately with an empty partial
+                    // reply; in flight: flag it — the next round boundary
+                    // retires it with whatever prefix it has emitted
+                    if let Some(i) = queue.iter().position(|q| q.req.id == id) {
+                        let q = queue.remove(i).expect("index from position");
+                        c.cancelled += 1;
+                        srt.obs().record(|t_us| {
+                            format!("{{\"t_us\":{t_us},\"ev\":\"cancelled\",\"id\":{id}}}")
+                        });
+                        let _ = q.reply.send(partial_json(
+                            id,
+                            &[],
+                            "cancelled",
+                            0.0,
+                            q.enqueued.elapsed().as_secs_f64() * 1e3,
+                            0,
+                            engine_name,
+                        ));
+                    }
+                    for a in running.iter_mut().chain(suspended.iter_mut()) {
+                        if a.id == id {
+                            a.cancelled = true;
+                        }
+                    }
                 }
             }
         }
@@ -418,6 +630,12 @@ fn run_scheduler(
             }
             return Ok(());
         }
+
+        // ---- reap: honor cancellation, deadlines, and vanished clients
+        // at the round boundary (both running and swapped-out runs —
+        // a suspended run past its deadline must not wait for budget) ----
+        reap(&mut running, srt, &mut c);
+        reap(&mut suspended, srt, &mut c);
 
         // ---- resume: swapped-out runs return before any new admission
         // (they were admitted first; resuming them preserves fairness and
@@ -446,10 +664,62 @@ fn run_scheduler(
         // round for the combined prefill time.
         let admit_cap = if running.is_empty() { max_batch } else { running.len() + 1 };
         while running.len() < max_batch.min(admit_cap) && !queue.is_empty() {
+            // ---- queue-front hygiene: drop vanished clients and expired
+            // deadlines before spending prefill on them ----
+            {
+                let q0 = queue.front().expect("loop guard: queue non-empty");
+                if !q0.alive.load(Ordering::SeqCst) {
+                    let q = queue.pop_front().expect("front exists");
+                    let id = q.req.id;
+                    c.disconnects += 1;
+                    srt.obs().record(|t_us| {
+                        format!("{{\"t_us\":{t_us},\"ev\":\"disconnect\",\"id\":{id}}}")
+                    });
+                    continue;
+                }
+                let expired = q0
+                    .req
+                    .deadline_ms
+                    .map_or(false, |ms| q0.enqueued.elapsed() >= Duration::from_millis(ms));
+                if expired {
+                    let q = queue.pop_front().expect("front exists");
+                    let id = q.req.id;
+                    c.deadlines += 1;
+                    srt.obs().record(|t_us| {
+                        format!("{{\"t_us\":{t_us},\"ev\":\"deadline\",\"id\":{id}}}")
+                    });
+                    let _ = q.reply.send(partial_json(
+                        id,
+                        &[],
+                        "deadline",
+                        0.0,
+                        q.enqueued.elapsed().as_secs_f64() * 1e3,
+                        0,
+                        engine_name,
+                    ));
+                    continue;
+                }
+            }
+            // ---- degrade-don't-die: under queue or KV pressure, admit on
+            // the cheaper fallback engine instead of rejecting. Safe by
+            // construction: every engine is lossless, so the transcript is
+            // byte-identical either way — only latency changes. ----
+            let q_pressure = fallback.is_some()
+                && sched.degrade_queue > 0
+                && queue.len() > sched.degrade_queue;
+            let kv_pressure = fallback.is_some()
+                && footprint > fb_footprint
+                && !srt.kv_pool().session_fit(footprint)
+                && srt.kv_pool().session_fit(fb_footprint);
+            let degrade = q_pressure || kv_pressure;
+            let (adm_name, adm_eng, adm_fp) = match fallback {
+                Some((name, fb)) if degrade => (name, fb, fb_footprint),
+                _ => (engine_name, eng, footprint),
+            };
             // KV admission control: the request's whole session footprint
             // must fit the pool (cache bytes count as reclaimable — the
             // allocation path evicts them).
-            if footprint > 0 && !srt.kv_pool().session_fit(footprint) {
+            if adm_fp > 0 && !srt.kv_pool().session_fit(adm_fp) {
                 if suspended.is_empty() && running.len() >= 2 {
                     // Preempt the most recently admitted run: swap its KV
                     // out to host memory, releasing its budget for the
@@ -509,7 +779,12 @@ fn run_scheduler(
             // the most expensive per-request step would vanish between
             // queued_ms and ms and inflate tok_s
             let started = Instant::now();
-            let admitted = eng.begin_sampled(&q.req.prompt, q.req.max_new, q.req.sampling);
+            // prefill runs inside begin(); catch panics so a poisoned
+            // prompt retires one request, not the worker thread
+            let admitted = catch_unwind(AssertUnwindSafe(|| {
+                adm_eng.begin_sampled(&q.req.prompt, q.req.max_new, q.req.sampling)
+            }))
+            .unwrap_or_else(|p| Err(anyhow!("prefill panicked: {}", panic_msg(&p))));
             c.busy_secs += started.elapsed().as_secs_f64();
             if q.req.sampling.is_some() {
                 c.sampled += 1;
@@ -517,6 +792,15 @@ fn run_scheduler(
             match admitted {
                 Ok(mut run) => {
                     run.set_trace_id(q.req.id);
+                    if degrade {
+                        c.degraded += 1;
+                        let id = q.req.id;
+                        srt.obs().record(|t_us| {
+                            format!(
+                                "{{\"t_us\":{t_us},\"ev\":\"degrade\",\"id\":{id},\"engine\":\"{adm_name}\"}}"
+                            )
+                        });
+                    }
                     srt.obs().record(|t_us| {
                         format!(
                             "{{\"t_us\":{t_us},\"ev\":\"prefill\",\"id\":{},\"ms\":{}}}",
@@ -528,15 +812,36 @@ fn run_scheduler(
                         id: q.req.id,
                         reply: q.reply,
                         run,
+                        engine: adm_name.to_string(),
                         queued_ms,
                         started,
+                        deadline: q
+                            .req
+                            .deadline_ms
+                            .map(|ms| q.enqueued + Duration::from_millis(ms)),
+                        alive: q.alive,
+                        cancelled: false,
+                        retries: 0,
+                        backoff: 0,
                         pending_shape: None,
                         pending_err: None,
                     });
                 }
                 Err(e) => {
+                    let msg = format!("{e:#}");
+                    // an injected lease/step fault during admission counts
+                    // toward the reconciliation invariant like any other
+                    // surfaced fault (prefill is not retried: the partially
+                    // fed prompt state is not failure-safe to rewind)
                     c.errors += 1;
-                    let _ = q.reply.send(error_json(q.req.id, &format!("{e:#}")));
+                    if is_injected(&msg) {
+                        c.retired_fault += 1;
+                        let id = q.req.id;
+                        srt.obs().record(|t_us| {
+                            format!("{{\"t_us\":{t_us},\"ev\":\"fault\",\"id\":{id}}}")
+                        });
+                    }
+                    let _ = q.reply.send(error_json(q.req.id, &msg));
                 }
             }
         }
@@ -548,23 +853,153 @@ fn run_scheduler(
         }
         let batch_now = running.len();
         let t0 = Instant::now();
-        if lockstep {
-            advance_fused(&mut running, srt, &mut c, engine_name, batch_now);
+        if sched.lockstep {
+            advance_fused(&mut running, srt, &mut c, batch_now, sched.fault_retries);
         } else {
-            advance_per_lane(&mut running, srt, &mut c, engine_name, batch_now);
+            advance_per_lane(&mut running, srt, &mut c, batch_now, sched.fault_retries);
         }
-        c.busy_secs += t0.elapsed().as_secs_f64();
+        let cycle = t0.elapsed();
+        c.busy_secs += cycle.as_secs_f64();
+        // ---- round-wall watchdog: a cycle that blew the wall is the
+        // "stuck round" smoke signal — count it and leave a trace event
+        // (the worker itself keeps going; the wall is observability,
+        // not a kill switch) ----
+        if sched.round_wall_ms > 0 && cycle.as_millis() as u64 > sched.round_wall_ms {
+            c.stalls += 1;
+            let ms = cycle.as_secs_f64() * 1e3;
+            srt.obs().record(|t_us| {
+                format!("{{\"t_us\":{t_us},\"ev\":\"stall\",\"ms\":{ms}}}")
+            });
+        }
     }
 }
 
+/// Sweep one run list for cancellation, expired deadlines, and vanished
+/// clients. Called at every round boundary on both the running batch and
+/// the suspended (swapped-out) set.
+fn reap(list: &mut Vec<Active<'_>>, srt: &ScaleRuntime, c: &mut SchedCounters) {
+    let mut i = 0;
+    while i < list.len() {
+        if !list[i].alive.load(Ordering::SeqCst) {
+            let a = list.remove(i);
+            retire_disconnect(a, srt, c);
+        } else if list[i].cancelled {
+            let a = list.remove(i);
+            retire_partial(a, srt, c, "cancelled");
+        } else if list[i].deadline.map_or(false, |d| Instant::now() >= d) {
+            let a = list.remove(i);
+            retire_partial(a, srt, c, "deadline");
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Retire a run whose client vanished: nobody is listening, so no reply
+/// is built — the run (and its KV leases) just drop, and the event
+/// stream records why.
+fn retire_disconnect(mut a: Active<'_>, srt: &ScaleRuntime, c: &mut SchedCounters) {
+    a.run.abandon_round();
+    c.disconnects += 1;
+    srt.obs().record(|t_us| {
+        format!("{{\"t_us\":{t_us},\"ev\":\"disconnect\",\"id\":{}}}", a.id)
+    });
+}
+
+/// Retire a run early (deadline / cancellation) with its partial
+/// transcript. The emitted prefix is byte-identical to an undisturbed
+/// run — losslessness is per-token — so clients can trust partial output.
+/// The prefix cache does NOT get the partial KV (publish requires a
+/// clean, fully-committed run; an early retirement skips it).
+fn retire_partial(mut a: Active<'_>, srt: &ScaleRuntime, c: &mut SchedCounters, marker: &str) {
+    a.run.abandon_round();
+    let gen = a.run.finish();
+    match marker {
+        "deadline" => c.deadlines += 1,
+        _ => c.cancelled += 1,
+    }
+    c.total_tokens += gen.tokens.len() as u64;
+    let id = a.id;
+    srt.obs().record(|t_us| {
+        format!(
+            "{{\"t_us\":{t_us},\"ev\":\"{marker}\",\"id\":{id},\"tokens\":{}}}",
+            gen.tokens.len()
+        )
+    });
+    let ms = a.started.elapsed().as_secs_f64() * 1e3;
+    let sent = a.reply.send(partial_json(
+        id,
+        &gen.tokens,
+        marker,
+        ms,
+        a.queued_ms,
+        gen.stats.rounds as u64,
+        &a.engine,
+    ));
+    if sent.is_err() {
+        c.disconnects += 1;
+    }
+}
+
+/// Build a partial-completion reply: the same shape as a success reply
+/// but with a `"partial":"deadline"|"cancelled"` marker and only the
+/// prefix decoded so far.
+fn partial_json(
+    id: u64,
+    tokens: &[u32],
+    marker: &str,
+    ms: f64,
+    queued_ms: f64,
+    rounds: u64,
+    engine: &str,
+) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("tokens", Json::arr_u32(tokens)),
+        ("text", Json::Str(crate::tokenizer::render(tokens))),
+        ("partial", Json::Str(marker.to_string())),
+        ("ms", Json::Num(ms)),
+        ("queued_ms", Json::Num(queued_ms)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("engine", Json::Str(engine.to_string())),
+    ])
+    .to_string()
+}
+
+/// Extract a human-readable message from a `catch_unwind` payload.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Should this failed round be retried in place? Only *injected* faults
+/// are transient by construction; real errors and panics retire the run.
+/// Prefill-phase runs (no tokens yet) retire too: the partially fed
+/// prompt state is not failure-safe to rewind.
+fn retryable(a: &Active<'_>, msg: &str, fault_retries: usize) -> bool {
+    is_injected(msg) && a.retries < fault_retries && !a.run.tokens().is_empty()
+}
+
+/// Arrange a retry: roll back the abandoned round's draft state and
+/// charge one backoff cycle per attempt (attempt N waits N cycles).
+fn arm_retry(a: &mut Active<'_>, srt: &ScaleRuntime, c: &mut SchedCounters) {
+    a.run.abandon_round();
+    a.retries += 1;
+    a.backoff = a.retries;
+    c.retried += 1;
+    let (id, n) = (a.id, a.retries);
+    srt.obs().record(|t_us| {
+        format!("{{\"t_us\":{t_us},\"ev\":\"retry\",\"id\":{id},\"attempt\":{n}}}")
+    });
+}
+
 /// Retire a finished run: build its response line and count it.
-fn retire_done(
-    mut a: Active<'_>,
-    srt: &ScaleRuntime,
-    c: &mut SchedCounters,
-    engine_name: &str,
-    batch_now: usize,
-) {
+fn retire_done(mut a: Active<'_>, srt: &ScaleRuntime, c: &mut SchedCounters, batch_now: usize) {
     // publish the committed prompt + decoded tokens to the prefix cache
     // (no-op without one) so a follow-up turn embedding this reply
     // prefills from cache; failure to publish never fails the reply
@@ -594,41 +1029,77 @@ fn retire_done(
         ("rounds", Json::Num(gen.stats.rounds as f64)),
         ("mean_accepted", Json::Num(gen.stats.mean_accepted())),
         ("batch", Json::Num(batch_now as f64)),
-        ("engine", Json::Str(engine_name.to_string())),
+        ("engine", Json::Str(a.engine.clone())),
     ]);
-    let _ = a.reply.send(resp.to_string());
+    if a.reply.send(resp.to_string()).is_err() {
+        // the client vanished between its last round and retirement: the
+        // work completed but nobody read it — count it apart from errors
+        c.disconnects += 1;
+    }
 }
 
-/// Retire a failed run with an error reply.
+/// Retire a failed run with an error reply. Injected faults (retries
+/// exhausted, or a non-retryable site like swap) are counted in
+/// `retired_fault` and traced as `fault` so the chaos suite can
+/// reconcile `faults_injected == retried + retired_fault`.
 fn retire_err(a: Active<'_>, srt: &ScaleRuntime, c: &mut SchedCounters, msg: &str) {
     c.errors += 1;
+    let ev = if is_injected(msg) {
+        c.retired_fault += 1;
+        "fault"
+    } else {
+        "error"
+    };
     srt.obs()
-        .record(|t_us| format!("{{\"t_us\":{t_us},\"ev\":\"error\",\"id\":{}}}", a.id));
-    let _ = a.reply.send(error_json(a.id, msg));
+        .record(|t_us| format!("{{\"t_us\":{t_us},\"ev\":\"{ev}\",\"id\":{}}}", a.id));
+    if a.reply.send(error_json(a.id, msg)).is_err() {
+        c.disconnects += 1;
+    }
 }
 
 /// The pre-fusion advance: every active run drafts AND executes its own
 /// target-verify step (`RequestRun::round`). Kept behind `--lockstep off`
 /// as the per-lane baseline the fused path is benchmarked against.
+///
+/// Each poll runs under `catch_unwind`: an error or panic is confined to
+/// its own lane. Transient injected faults retry in place (bounded);
+/// everything else retires the run with an error reply.
 fn advance_per_lane(
     running: &mut Vec<Active<'_>>,
     srt: &ScaleRuntime,
     c: &mut SchedCounters,
-    engine_name: &str,
     batch_now: usize,
+    fault_retries: usize,
 ) {
     let mut i = 0;
     while i < running.len() {
-        match running[i].run.round() {
-            Err(e) => {
+        if running[i].backoff > 0 {
+            running[i].backoff -= 1; // retry backoff: sit this cycle out
+            i += 1;
+            continue;
+        }
+        let polled = catch_unwind(AssertUnwindSafe(|| running[i].run.round()));
+        match polled {
+            Err(p) => {
+                // a panic is never transient: no retry, just isolation
                 let a = running.remove(i);
-                retire_err(a, srt, c, &format!("{e:#}"));
+                retire_err(a, srt, c, &format!("round panicked: {}", panic_msg(&*p)));
             }
-            Ok(o) if o.done => {
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
+                if retryable(&running[i], &msg, fault_retries) {
+                    arm_retry(&mut running[i], srt, c);
+                    i += 1;
+                } else {
+                    let a = running.remove(i);
+                    retire_err(a, srt, c, &msg);
+                }
+            }
+            Ok(Ok(o)) if o.done => {
                 let a = running.remove(i);
-                retire_done(a, srt, c, engine_name, batch_now);
+                retire_done(a, srt, c, batch_now);
             }
-            Ok(_) => i += 1,
+            Ok(Ok(_)) => i += 1,
         }
     }
 }
@@ -639,38 +1110,72 @@ fn advance_per_lane(
 /// and every run absorbs its own logits (`finish_round`). Bit-identical
 /// to [`advance_per_lane`] because the engines' drafting/verification
 /// code is shared; only the step execution is fused.
+///
+/// Failure isolation mirrors the per-lane path: drafting and absorbing
+/// run under per-lane `catch_unwind`, and because `ScaleRuntime::
+/// step_batch` carries no injection site, the scheduler draws each
+/// lane's share of the `step` fault *before* the fused call — one fault
+/// maps to one request, never the whole group. A real fused-step error
+/// or panic still retires the whole group (all lanes consumed the same
+/// broken forward).
 fn advance_fused<'e>(
     running: &mut Vec<Active<'e>>,
     srt: &ScaleRuntime,
     c: &mut SchedCounters,
-    engine_name: &str,
     batch_now: usize,
+    fault_retries: usize,
 ) {
     // ---- phase 1: gate + draft; retire early finishers ----
     let mut group_t = 0usize;
     let mut i = 0;
     while i < running.len() {
-        match running[i].run.begin_round() {
-            Err(e) => {
+        if running[i].backoff > 0 {
+            running[i].backoff -= 1; // retry backoff: skip this cycle
+            i += 1;
+            continue;
+        }
+        let polled = catch_unwind(AssertUnwindSafe(|| running[i].run.begin_round()));
+        match polled {
+            Err(p) => {
                 let a = running.remove(i);
-                retire_err(a, srt, c, &format!("{e:#}"));
+                retire_err(a, srt, c, &format!("round panicked: {}", panic_msg(&*p)));
             }
-            Ok(RoundPhase::Done(o)) if o.done => {
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
+                if retryable(&running[i], &msg, fault_retries) {
+                    arm_retry(&mut running[i], srt, c);
+                    i += 1;
+                } else {
+                    let a = running.remove(i);
+                    retire_err(a, srt, c, &msg);
+                }
+            }
+            Ok(Ok(RoundPhase::Done(o))) if o.done => {
                 let a = running.remove(i);
-                retire_done(a, srt, c, engine_name, batch_now);
+                retire_done(a, srt, c, batch_now);
             }
-            Ok(RoundPhase::Done(_)) => {
+            Ok(Ok(RoundPhase::Done(_))) => {
                 // not done, no pending step: a prefill chunk was
                 // consumed — the run stays for the next cycle
                 i += 1;
             }
-            Ok(RoundPhase::Pending { t_shape }) => {
-                running[i].pending_shape = Some(t_shape);
-                group_t = group_t.max(t_shape);
+            Ok(Ok(RoundPhase::Pending { t_shape })) => {
+                // chaos: draw this lane's share of the fused step fault
+                // up front (step_batch itself has no injection site) so
+                // an injected failure hits exactly one request
+                if srt.fault_plan().draw(FaultSite::Step) {
+                    running[i].pending_err = Some(format!("{INJECTED_PREFIX}: step"));
+                } else {
+                    running[i].pending_shape = Some(t_shape);
+                    group_t = group_t.max(t_shape);
+                }
                 i += 1;
             }
         }
     }
+    // faulted lanes leave the cycle here whether or not a fused step
+    // remains to run (retry keeps the run; exhausted retries retire it)
+    sweep_pending_errs(running, srt, c, fault_retries);
     if group_t == 0 {
         return;
     }
@@ -705,17 +1210,12 @@ fn advance_fused<'e>(
                 }
             }
         }
-        let stepped = srt.step_batch(shape, &mut lanes);
+        let stepped = catch_unwind(AssertUnwindSafe(|| srt.step_batch(shape, &mut lanes)))
+            .unwrap_or_else(|p| Err(anyhow!("fused step panicked: {}", panic_msg(&*p))));
         drop(lanes);
-        let mut i = 0;
-        while i < running.len() {
-            if let Some(msg) = running[i].pending_err.take() {
-                let a = running.remove(i);
-                retire_err(a, srt, c, &msg);
-            } else {
-                i += 1;
-            }
-        }
+        // lanes whose take_lane broke an invariant retire here (a lane
+        // build error is never an injected fault, so no retry)
+        sweep_pending_errs(running, srt, c, fault_retries);
         match stepped {
             Err(e) => {
                 // the whole group failed: retire its members with errors
@@ -744,19 +1244,57 @@ fn advance_fused<'e>(
                     }
                     running[i].pending_shape = None;
                     let out = outs.next().expect("one StepOutput per group lane");
-                    match running[i].run.finish_round(out, shape) {
-                        Err(e) => {
+                    // absorb errors never retry: the fused target step
+                    // already committed, so re-drafting would double-step
+                    let fin = catch_unwind(AssertUnwindSafe(|| {
+                        running[i].run.finish_round(out, shape)
+                    }));
+                    match fin {
+                        Err(p) => {
+                            let a = running.remove(i);
+                            retire_err(
+                                a,
+                                srt,
+                                c,
+                                &format!("absorb panicked: {}", panic_msg(&*p)),
+                            );
+                        }
+                        Ok(Err(e)) => {
                             let a = running.remove(i);
                             retire_err(a, srt, c, &format!("{e:#}"));
                         }
-                        Ok(o) if o.done => {
+                        Ok(Ok(o)) if o.done => {
                             let a = running.remove(i);
-                            retire_done(a, srt, c, engine_name, batch_now);
+                            retire_done(a, srt, c, batch_now);
                         }
-                        Ok(_) => i += 1,
+                        Ok(Ok(_)) => i += 1,
                     }
                 }
             }
+        }
+    }
+}
+
+/// Retire — or arm a retry for — every lane whose `pending_err` was set
+/// this cycle (injected per-lane step faults, lane-build failures).
+fn sweep_pending_errs(
+    running: &mut Vec<Active<'_>>,
+    srt: &ScaleRuntime,
+    c: &mut SchedCounters,
+    fault_retries: usize,
+) {
+    let mut i = 0;
+    while i < running.len() {
+        if let Some(msg) = running[i].pending_err.take() {
+            if retryable(&running[i], &msg, fault_retries) {
+                arm_retry(&mut running[i], srt, c);
+                i += 1;
+            } else {
+                let a = running.remove(i);
+                retire_err(a, srt, c, &msg);
+            }
+        } else {
+            i += 1;
         }
     }
 }
@@ -768,6 +1306,10 @@ struct StatsView<'a> {
     /// Runs preempted under KV pressure, awaiting swap-in.
     suspended: usize,
     max_batch: usize,
+    /// Total faults injected at server-surfaced sites (step + lease +
+    /// swap) — the left side of the chaos reconciliation invariant
+    /// `faults_injected == retried + retired_fault`.
+    faults_injected: u64,
     /// Live tokens actually stepped by the backend, summed over variants
     /// — prefix-cache hits skip steps, so this drops when reuse works.
     tokens_stepped: u64,
@@ -799,6 +1341,14 @@ fn stats_json(c: &SchedCounters, v: &StatsView<'_>) -> Json {
         ("uptime_secs", Json::Num(v.uptime_secs)),
         ("tok_s", Json::Num(tok_s)),
         ("sampled", Json::Num(c.sampled as f64)),
+        ("disconnects", Json::Num(c.disconnects as f64)),
+        ("degraded", Json::Num(c.degraded as f64)),
+        ("retried", Json::Num(c.retried as f64)),
+        ("retired_fault", Json::Num(c.retired_fault as f64)),
+        ("faults_injected", Json::Num(v.faults_injected as f64)),
+        ("stalls", Json::Num(c.stalls as f64)),
+        ("deadlines", Json::Num(c.deadlines as f64)),
+        ("cancelled", Json::Num(c.cancelled as f64)),
         ("queue_depth", Json::Num(v.queue_depth as f64)),
         ("running", Json::Num(v.running as f64)),
         ("suspended", Json::Num(v.suspended as f64)),
@@ -840,6 +1390,17 @@ fn metrics_json(c: &SchedCounters, srt: &ScaleRuntime, uptime_secs: f64) -> Stri
     text.push_str(&format!("cas_spec_fused_lanes_total {}\n", c.fused_lanes));
     text.push_str(&format!("cas_spec_sampled_total {}\n", c.sampled));
     text.push_str(&format!("cas_spec_shed_total {}\n", c.shed));
+    text.push_str(&format!("cas_spec_disconnects_total {}\n", c.disconnects));
+    text.push_str(&format!("cas_spec_degraded_total {}\n", c.degraded));
+    text.push_str(&format!("cas_spec_retried_total {}\n", c.retried));
+    text.push_str(&format!("cas_spec_retired_fault_total {}\n", c.retired_fault));
+    text.push_str(&format!(
+        "cas_spec_faults_injected_total {}\n",
+        srt.fault_plan().injected_server()
+    ));
+    text.push_str(&format!("cas_spec_stalls_total {}\n", c.stalls));
+    text.push_str(&format!("cas_spec_deadlines_total {}\n", c.deadlines));
+    text.push_str(&format!("cas_spec_cancelled_total {}\n", c.cancelled));
     {
         let p = srt.kv_pool().stats();
         text.push_str(&format!("cas_spec_kv_bytes {}\n", p.used()));
@@ -869,8 +1430,20 @@ fn error_json(id: u64, msg: &str) -> String {
 
 /// Reads requests from one connection; returns true when a shutdown command
 /// was received (the caller then stops accepting).
-fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Job>) -> bool {
+///
+/// Fault injection: with a `conn` rate armed, the handler drops the
+/// connection right after dispatching a request — simulating a client
+/// that vanished mid-generation. The liveness flag it clears is how the
+/// scheduler finds out (at the next round boundary).
+fn handle_connection(
+    stream: TcpStream,
+    tx: mpsc::Sender<Job>,
+    lim: WireLimits,
+    plan: FaultPlan,
+) -> bool {
     let peer = stream.peer_addr().ok();
+    // a silent client cannot pin this thread forever (satellite: hygiene)
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return false,
@@ -880,12 +1453,12 @@ fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Job>) -> bool {
     for line in reader.lines() {
         let line = match line {
             Ok(l) => l,
-            Err(_) => break,
+            Err(_) => break, // read error or timeout: drop the connection
         };
         if line.trim().is_empty() {
             continue;
         }
-        match parse_line(&line) {
+        match parse_line(&line, &lim) {
             Ok(ParsedLine::Shutdown) => {
                 let _ = writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]));
                 shutdown = true;
@@ -907,14 +1480,37 @@ fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Job>) -> bool {
                     }
                 }
             }
+            Ok(ParsedLine::Cancel(id)) => {
+                if tx.send(Job::Cancel(id)).is_err() {
+                    break;
+                }
+                // ack immediately: the cancel takes effect at the next
+                // round boundary; the *generate* connection gets the
+                // partial reply
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("id", Json::Num(id as f64)),
+                    ])
+                );
+            }
             Ok(ParsedLine::Request(req)) => {
+                let alive = Arc::new(AtomicBool::new(true));
                 let (rtx, rrx) = mpsc::channel();
-                if tx.send(Job::Generate(req, rtx)).is_err() {
+                if tx.send(Job::Generate(req, rtx, alive.clone())).is_err() {
+                    break;
+                }
+                if plan.draw(FaultSite::Conn) {
+                    // injected disconnect: vanish without reading the reply
+                    alive.store(false, Ordering::SeqCst);
                     break;
                 }
                 match rrx.recv() {
                     Ok(resp) => {
                         if writeln!(writer, "{resp}").is_err() {
+                            alive.store(false, Ordering::SeqCst);
                             break;
                         }
                     }
@@ -922,14 +1518,19 @@ fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Job>) -> bool {
                 }
             }
             Err(e) => {
-                // null id: the request's own id (if any) was unusable, and
-                // echoing a defaulted one would misroute the error.
+                // echo the request's own id when it was readable so the
+                // client can route the rejection; null otherwise (a
+                // defaulted id would misroute the error).
+                let id = match e.id {
+                    Some(id) => Json::Num(id as f64),
+                    None => Json::Null,
+                };
                 let _ = writeln!(
                     writer,
                     "{}",
                     Json::obj(vec![
-                        ("id", Json::Null),
-                        ("error", Json::Str(format!("{e} (from {peer:?})"))),
+                        ("id", id),
+                        ("error", Json::Str(format!("{} (from {peer:?})", e.msg))),
                     ])
                 );
             }
@@ -938,60 +1539,94 @@ fn handle_connection(stream: TcpStream, tx: mpsc::Sender<Job>) -> bool {
     shutdown
 }
 
+#[derive(Debug)]
 enum ParsedLine {
     Request(Request),
+    /// `{"cmd":"cancel","id":N}` — cancel a queued or in-flight request.
+    Cancel(u64),
     Stats,
     Metrics,
     Shutdown,
 }
 
-fn parse_line(line: &str) -> Result<ParsedLine> {
-    let j = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+fn parse_line(line: &str, lim: &WireLimits) -> std::result::Result<ParsedLine, ParseErr> {
+    let j = Json::parse(line).map_err(|e| ParseErr::new(None, format!("bad json: {e}")))?;
     if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
             "shutdown" => Ok(ParsedLine::Shutdown),
             "stats" => Ok(ParsedLine::Stats),
             "metrics" => Ok(ParsedLine::Metrics),
-            other => Err(anyhow!("unknown cmd {other:?}")),
+            "cancel" => {
+                let id = j
+                    .get("id")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| ParseErr::new(None, "cancel needs a request id"))?;
+                Ok(ParsedLine::Cancel(id))
+            }
+            other => Err(ParseErr::new(None, format!("unknown cmd {other:?}"))),
         };
     }
     // a request without a usable id cannot have its reply routed; reject
     // it instead of silently defaulting (two such clients would collide).
+    // The id is parsed FIRST so every later rejection can carry it.
     let id = j
         .get("id")
         .and_then(|v| v.as_u64())
-        .ok_or_else(|| anyhow!("missing or malformed request id"))?;
+        .ok_or_else(|| ParseErr::new(None, "missing or malformed request id"))?;
+    let bad = |msg: String| ParseErr::new(Some(id), msg);
     let prompt: Vec<u32> = j
-        .req("prompt")?
+        .get("prompt")
+        .ok_or_else(|| bad("missing field prompt".to_string()))?
         .usize_arr()
-        .map_err(|_| anyhow!("prompt must be an int array"))?
+        .map_err(|_| bad("prompt must be an int array".to_string()))?
         .into_iter()
         .map(|t| t as u32)
         .collect();
     if prompt.is_empty() {
-        return Err(anyhow!("empty prompt"));
+        return Err(bad("empty prompt".to_string()));
+    }
+    if prompt.len() > lim.max_prompt {
+        return Err(bad(format!(
+            "prompt too long: {} tokens (limit {})",
+            prompt.len(),
+            lim.max_prompt
+        )));
     }
     let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(64);
+    if max_new > lim.max_new {
+        return Err(bad(format!("max_new {max_new} above limit {}", lim.max_new)));
+    }
     let temperature = match j.get("temperature") {
         None => 0.0,
-        Some(v) => v.as_f64().ok_or_else(|| anyhow!("temperature must be a number"))?,
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| bad("temperature must be a number".to_string()))?,
     };
     if !temperature.is_finite() || temperature < 0.0 {
-        return Err(anyhow!("temperature must be finite and >= 0"));
+        return Err(bad("temperature must be finite and >= 0".to_string()));
     }
     let top_p = match j.get("top_p") {
         None => 1.0,
-        Some(v) => v.as_f64().ok_or_else(|| anyhow!("top_p must be a number"))?,
+        Some(v) => v.as_f64().ok_or_else(|| bad("top_p must be a number".to_string()))?,
     };
     if !(top_p > 0.0 && top_p <= 1.0) {
-        return Err(anyhow!("top_p must be in (0, 1]"));
+        return Err(bad("top_p must be in (0, 1]".to_string()));
     }
     let seed = match j.get("seed") {
         None => id,
-        Some(v) => v.as_u64().ok_or_else(|| anyhow!("seed must be a non-negative integer"))?,
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| bad("seed must be a non-negative integer".to_string()))?,
+    };
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => Some(
+            v.as_u64()
+                .ok_or_else(|| bad("deadline_ms must be a non-negative integer".to_string()))?,
+        ),
     };
     let sampling = (temperature > 0.0).then_some(SamplingParams { temperature, top_p, seed });
-    Ok(ParsedLine::Request(Request { id, prompt, max_new, sampling }))
+    Ok(ParsedLine::Request(Request { id, prompt, max_new, sampling, deadline_ms }))
 }
 
 /// Minimal blocking client used by examples and tests. One request may be
@@ -1051,6 +1686,36 @@ impl Client {
         self.request_raw(&req.to_string())
     }
 
+    /// Like [`Client::generate`] but with a soft deadline: after
+    /// `deadline_ms` (measured from enqueue) the server retires the run
+    /// with whatever prefix it decoded, marked `"partial":"deadline"`.
+    pub fn generate_with_deadline(
+        &mut self,
+        id: u64,
+        prompt: &[u32],
+        max_new: usize,
+        deadline_ms: u64,
+    ) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("prompt", Json::arr_u32(prompt)),
+            ("max_new", Json::Num(max_new as f64)),
+            ("deadline_ms", Json::Num(deadline_ms as f64)),
+        ]);
+        self.request_raw(&req.to_string())
+    }
+
+    /// Cancel a queued or in-flight request by id. The ack arrives on
+    /// THIS connection immediately; the generate connection receives a
+    /// `"partial":"cancelled"` reply at the next round boundary.
+    pub fn cancel(&mut self, id: u64) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("cmd", Json::Str("cancel".to_string())),
+            ("id", Json::Num(id as f64)),
+        ]);
+        self.request_raw(&req.to_string())
+    }
+
     /// Fetch the server's aggregate serving counters.
     pub fn stats(&mut self) -> Result<Json> {
         self.request_raw(r#"{"cmd":"stats"}"#)
@@ -1079,14 +1744,18 @@ impl Client {
 mod tests {
     use super::*;
 
+    /// Default wire limits used by the parser tests.
+    const LIM: WireLimits = WireLimits { max_new: 1024, max_prompt: 4096 };
+
     #[test]
     fn parse_request_line() {
-        match parse_line(r#"{"id": 3, "prompt": [1,2,3], "max_new": 8}"#).unwrap() {
+        match parse_line(r#"{"id": 3, "prompt": [1,2,3], "max_new": 8}"#, &LIM).unwrap() {
             ParsedLine::Request(r) => {
                 assert_eq!(r.id, 3);
                 assert_eq!(r.prompt, vec![1, 2, 3]);
                 assert_eq!(r.max_new, 8);
                 assert!(r.sampling.is_none(), "no temperature field means greedy");
+                assert!(r.deadline_ms.is_none(), "no deadline by default");
             }
             _ => panic!("expected request"),
         }
@@ -1095,7 +1764,7 @@ mod tests {
     #[test]
     fn parse_sampled_request_fields() {
         let line = r#"{"id": 9, "prompt": [1], "max_new": 4, "temperature": 0.7, "top_p": 0.9}"#;
-        match parse_line(line).unwrap() {
+        match parse_line(line, &LIM).unwrap() {
             ParsedLine::Request(r) => {
                 let s = r.sampling.expect("temperature > 0 enables sampling");
                 assert!((s.temperature - 0.7).abs() < 1e-12);
@@ -1105,46 +1774,95 @@ mod tests {
             _ => panic!("expected request"),
         }
         // an explicit seed wins over the id default
-        match parse_line(r#"{"id": 9, "prompt": [1], "temperature": 1.0, "seed": 42}"#).unwrap() {
+        let line = r#"{"id": 9, "prompt": [1], "temperature": 1.0, "seed": 42}"#;
+        match parse_line(line, &LIM).unwrap() {
             ParsedLine::Request(r) => assert_eq!(r.sampling.unwrap().seed, 42),
             _ => panic!("expected request"),
         }
         // temperature 0 stays greedy even with a seed present
-        match parse_line(r#"{"id": 9, "prompt": [1], "temperature": 0.0, "seed": 42}"#).unwrap() {
+        let line = r#"{"id": 9, "prompt": [1], "temperature": 0.0, "seed": 42}"#;
+        match parse_line(line, &LIM).unwrap() {
             ParsedLine::Request(r) => assert!(r.sampling.is_none()),
             _ => panic!("expected request"),
         }
     }
 
     #[test]
-    fn parse_commands() {
-        assert!(matches!(parse_line(r#"{"cmd":"stats"}"#).unwrap(), ParsedLine::Stats));
+    fn parse_deadline_and_cancel() {
+        match parse_line(r#"{"id": 2, "prompt": [1], "deadline_ms": 250}"#, &LIM).unwrap() {
+            ParsedLine::Request(r) => assert_eq!(r.deadline_ms, Some(250)),
+            _ => panic!("expected request"),
+        }
         assert!(matches!(
-            parse_line(r#"{"cmd":"metrics"}"#).unwrap(),
+            parse_line(r#"{"cmd":"cancel","id":7}"#, &LIM).unwrap(),
+            ParsedLine::Cancel(7)
+        ));
+        // a cancel without an id cannot be routed
+        assert!(parse_line(r#"{"cmd":"cancel"}"#, &LIM).is_err());
+        // a malformed deadline is rejected, carrying the request id
+        let e = parse_line(r#"{"id": 2, "prompt": [1], "deadline_ms": -4}"#, &LIM).unwrap_err();
+        assert_eq!(e.id, Some(2));
+    }
+
+    #[test]
+    fn parse_commands() {
+        assert!(matches!(parse_line(r#"{"cmd":"stats"}"#, &LIM).unwrap(), ParsedLine::Stats));
+        assert!(matches!(
+            parse_line(r#"{"cmd":"metrics"}"#, &LIM).unwrap(),
             ParsedLine::Metrics
         ));
         assert!(matches!(
-            parse_line(r#"{"cmd":"shutdown"}"#).unwrap(),
+            parse_line(r#"{"cmd":"shutdown"}"#, &LIM).unwrap(),
             ParsedLine::Shutdown
         ));
-        assert!(parse_line(r#"{"cmd":"nope"}"#).is_err());
+        assert!(parse_line(r#"{"cmd":"nope"}"#, &LIM).is_err());
     }
 
     #[test]
     fn rejects_bad_requests() {
-        assert!(parse_line("not json").is_err());
-        assert!(parse_line(r#"{"id": 1, "prompt": []}"#).is_err());
-        assert!(parse_line(r#"{"id": 1, "max_new": 4}"#).is_err());
+        assert!(parse_line("not json", &LIM).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": []}"#, &LIM).is_err());
+        assert!(parse_line(r#"{"id": 1, "max_new": 4}"#, &LIM).is_err());
         // a missing or malformed id is an error, not a silent id-0 default
-        assert!(parse_line(r#"{"prompt": [1, 2]}"#).is_err());
-        assert!(parse_line(r#"{"id": "seven", "prompt": [1]}"#).is_err());
-        assert!(parse_line(r#"{"id": 1.5, "prompt": [1]}"#).is_err());
+        assert!(parse_line(r#"{"prompt": [1, 2]}"#, &LIM).is_err());
+        assert!(parse_line(r#"{"id": "seven", "prompt": [1]}"#, &LIM).is_err());
+        assert!(parse_line(r#"{"id": 1.5, "prompt": [1]}"#, &LIM).is_err());
         // malformed sampling fields are rejected up front
-        assert!(parse_line(r#"{"id": 1, "prompt": [1], "temperature": "warm"}"#).is_err());
-        assert!(parse_line(r#"{"id": 1, "prompt": [1], "temperature": -0.5}"#).is_err());
-        assert!(parse_line(r#"{"id": 1, "prompt": [1], "top_p": 0.0}"#).is_err());
-        assert!(parse_line(r#"{"id": 1, "prompt": [1], "top_p": 1.5}"#).is_err());
-        assert!(parse_line(r#"{"id": 1, "prompt": [1], "seed": "abc"}"#).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "temperature": "warm"}"#, &LIM).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "temperature": -0.5}"#, &LIM).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "top_p": 0.0}"#, &LIM).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "top_p": 1.5}"#, &LIM).is_err());
+        assert!(parse_line(r#"{"id": 1, "prompt": [1], "seed": "abc"}"#, &LIM).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_requests() {
+        // max_new above the limit: rejected, and the error carries the id
+        let e = parse_line(r#"{"id": 11, "prompt": [1], "max_new": 2048}"#, &LIM).unwrap_err();
+        assert_eq!(e.id, Some(11), "bound rejections echo the request id");
+        assert!(e.msg.contains("max_new"), "message names the offending field: {}", e.msg);
+        // a prompt longer than max_prompt: rejected with the id
+        let lim = WireLimits { max_new: 1024, max_prompt: 4 };
+        let e = parse_line(r#"{"id": 12, "prompt": [1,2,3,4,5]}"#, &lim).unwrap_err();
+        assert_eq!(e.id, Some(12));
+        assert!(e.msg.contains("prompt too long"), "{}", e.msg);
+        // at the limit is fine
+        assert!(parse_line(r#"{"id": 13, "prompt": [1,2,3,4]}"#, &lim).is_ok());
+        assert!(parse_line(r#"{"id": 13, "prompt": [1], "max_new": 1024}"#, &LIM).is_ok());
+        // unusable id: the rejection cannot carry one
+        let e = parse_line(r#"{"prompt": [1], "max_new": 2048}"#, &LIM).unwrap_err();
+        assert_eq!(e.id, None);
+    }
+
+    #[test]
+    fn partial_json_shape() {
+        let line = partial_json(5, &[2, 3], "deadline", 12.5, 1.5, 3, "cas-spec");
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(j.get("partial").unwrap().as_str().unwrap(), "deadline");
+        assert_eq!(j.get("tokens").unwrap().usize_arr().unwrap(), vec![2, 3]);
+        assert_eq!(j.get("engine").unwrap().as_str().unwrap(), "cas-spec");
+        assert!(j.get("error").is_none(), "a partial reply is not an error");
     }
 
     #[test]
@@ -1159,12 +1877,20 @@ mod tests {
             fused_steps: 10,
             fused_lanes: 25,
             sampled: 2,
+            disconnects: 1,
+            degraded: 2,
+            retried: 4,
+            retired_fault: 3,
+            stalls: 1,
+            deadlines: 2,
+            cancelled: 1,
         };
         let v = StatsView {
             queue_depth: 2,
             running: 3,
             suspended: 1,
             max_batch: 8,
+            faults_injected: 7,
             tokens_stepped: 900,
             cache: None,
             engine: "pld",
@@ -1210,6 +1936,16 @@ mod tests {
         assert!((j.get("busy_secs").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
         assert!(j.get("total_secs").is_none(), "stats key renamed to busy_secs");
         assert_eq!(j.get("sampled").unwrap().as_u64().unwrap(), 2);
+        // failure-domain counters all ship in one stats reply, including
+        // the chaos reconciliation triple (faults / retried / retired)
+        assert_eq!(j.get("disconnects").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("degraded").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(j.get("retried").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(j.get("retired_fault").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(j.get("faults_injected").unwrap().as_u64().unwrap(), 7);
+        assert_eq!(j.get("stalls").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("deadlines").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(j.get("cancelled").unwrap().as_u64().unwrap(), 1);
         assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "ref");
         assert_eq!(j.get("tokens_stepped").unwrap().as_u64().unwrap(), 900);
         // cache disabled: prefix fields present and zeroed
@@ -1227,6 +1963,7 @@ mod tests {
             running: 0,
             suspended: 0,
             max_batch: 8,
+            faults_injected: 0,
             tokens_stepped: 40,
             cache: Some(CacheStats {
                 lookups: 5,

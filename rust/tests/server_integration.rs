@@ -31,6 +31,19 @@
 //! assertion anywhere changes; `preemption_under_tiny_budget_is_lossless`
 //! and `chunked_prefill_serving_is_lossless` additionally force each knob
 //! on and assert the swap/chunk machinery actually engaged.
+//!
+//! The `chaos_*` tests are the failure-domain suite: seeded fault plans
+//! (`--faults`, honoring `CAS_SPEC_FAULTS` for the CI chaos leg),
+//! injected disconnects, deadlines, cancellation, wire bounds, and the
+//! degrade ladder. Every chaos test pins the same invariants: the worker
+//! never dies (the final stats/shutdown round-trip proves it), completed
+//! transcripts stay byte-identical to direct AR, faulted/expired requests
+//! get error or partial replies, KV leases fully release (`kv_bytes`
+//! returns to 0), and the fault ledger reconciles
+//! (`faults_injected == retried + retired_fault`). These tests set
+//! `cfg.faults` explicitly, so the rest of the suite — whose servers
+//! would otherwise inherit an ambient `CAS_SPEC_FAULTS` — must be run
+//! without that variable (the CI chaos leg filters to `chaos_`).
 
 use std::thread;
 use std::time::Duration;
@@ -991,5 +1004,529 @@ fn retired_decode_kv_is_published_to_prefix_cache() {
     );
 
     client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Chaos suite: failure domains, fault injection, deadlines, cancellation,
+// wire bounds, and the degrade ladder (see the module header).
+// ---------------------------------------------------------------------------
+
+/// Default seeded chaos plan for the fault-storm test; the CI chaos leg
+/// overrides it via `CAS_SPEC_FAULTS` (mixed step + lease + conn plans).
+const DEFAULT_CHAOS_PLAN: &str = "step:0.08,lease:0.03,seed=7";
+
+/// Fault plan for the chaos storm: `CAS_SPEC_FAULTS` when set (the CI
+/// chaos leg sweeps plans the same way the other env knobs sweep), else
+/// the default seeded plan.
+fn env_faults() -> String {
+    std::env::var("CAS_SPEC_FAULTS").unwrap_or_else(|_| DEFAULT_CHAOS_PLAN.into())
+}
+
+/// What one chaos-workload request looked like from its client.
+enum ChaosOutcome {
+    /// Completed normally with these tokens.
+    Done(Vec<u32>),
+    /// Error reply with this message.
+    Errored(String),
+    /// The connection died before a reply arrived (injected conn fault).
+    Dropped,
+}
+
+/// Serve `items` from concurrent clients on a fresh server with an
+/// explicit fault plan (empty string = force-disabled), classify each
+/// client's outcome, wait for the scheduler to fully drain (dropped
+/// clients' runs retire at round boundaries, after the clients return),
+/// and hand back the final stats. The stats + shutdown round-trip at the
+/// end is itself an assertion: a dead worker answers neither.
+fn serve_with_faults(
+    items: &[WorkItem],
+    port: u16,
+    engine: &str,
+    faults: &str,
+    max_batch: usize,
+) -> (Vec<ChaosOutcome>, cas_spec::util::json::Json) {
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec![engine.into()];
+    cfg.addr = format!("127.0.0.1:{port}");
+    cfg.max_batch = max_batch;
+    cfg.faults = Some(faults.into());
+    // chaos runs keep the cache off and the pool unbounded so the
+    // end-state KV baseline is exactly zero (every lease released)
+    cfg.prefix_cache_mb = 0;
+    cfg.kv_budget_mb = 0;
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut control = wait_ready(&addr);
+
+    let mut handles = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let addr = addr.clone();
+        let item = item.clone();
+        handles.push(thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = match c.generate(i as u64, &item.prompt, item.max_new) {
+                Ok(r) => r,
+                Err(_) => return (i, ChaosOutcome::Dropped),
+            };
+            assert!(
+                resp.get("partial").is_none(),
+                "no deadline/cancel in this workload, yet got {resp}"
+            );
+            if let Some(err) = resp.get("error") {
+                return (i, ChaosOutcome::Errored(err.as_str().unwrap().to_string()));
+            }
+            let got: Vec<u32> = resp
+                .req("tokens")
+                .unwrap()
+                .usize_arr()
+                .unwrap()
+                .into_iter()
+                .map(|t| t as u32)
+                .collect();
+            (i, ChaosOutcome::Done(got))
+        }));
+    }
+    let mut outcomes: Vec<ChaosOutcome> =
+        (0..items.len()).map(|_| ChaosOutcome::Dropped).collect();
+    for h in handles {
+        let (i, o) = h.join().unwrap();
+        outcomes[i] = o;
+    }
+    let stats = wait_drained(&mut control);
+    control.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    (outcomes, stats)
+}
+
+/// Poll stats until the scheduler holds no work (dropped clients leave
+/// runs behind that retire at the next round boundaries).
+fn wait_drained(control: &mut Client) -> cas_spec::util::json::Json {
+    for _ in 0..1000 {
+        let s = control.stats().unwrap();
+        if s.req("queue_depth").unwrap().as_usize().unwrap() == 0
+            && s.req("running").unwrap().as_usize().unwrap() == 0
+            && s.req("suspended").unwrap().as_usize().unwrap() == 0
+        {
+            return s;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    panic!("scheduler did not drain");
+}
+
+#[test]
+fn chaos_step_faults_isolate_retry_and_reconcile() {
+    // The chaos acceptance test, across three engines including the
+    // cascade: a concurrent workload under a seeded fault plan must leave
+    // the worker alive, return byte-identical-to-AR transcripts for every
+    // request that completed, reply with a marked error for every request
+    // a fault retired, release every KV lease, and reconcile the fault
+    // ledger exactly: faults_injected == retried + retired_fault.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 101, 1, 40);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(6).collect();
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected: Vec<Vec<u32>> = items
+        .iter()
+        .map(|it| ar.generate(&it.prompt, it.max_new).unwrap().tokens)
+        .collect();
+
+    let spec = env_faults();
+    let mut total_injected = 0u64;
+    for (engine, port) in [("ar", 7549u16), ("pld", 7550), ("cas-spec", 7551)] {
+        let (outcomes, stats) = serve_with_faults(&items, port, engine, &spec, 3);
+        let mut completed = 0u64;
+        let mut errored = 0u64;
+        for (i, o) in outcomes.iter().enumerate() {
+            match o {
+                ChaosOutcome::Done(toks) => {
+                    assert_eq!(
+                        toks, &expected[i],
+                        "engine {engine}, request {i}: a transcript that survived \
+                         the fault storm must be byte-identical to AR"
+                    );
+                    completed += 1;
+                }
+                ChaosOutcome::Errored(msg) => {
+                    assert!(
+                        msg.contains("injected fault"),
+                        "engine {engine}, request {i}: only injected faults may \
+                         fail requests in this workload, got {msg:?}"
+                    );
+                    errored += 1;
+                }
+                ChaosOutcome::Dropped => {} // injected conn fault (env plans)
+            }
+        }
+        let injected = stats.req("faults_injected").unwrap().as_u64().unwrap();
+        let retried = stats.req("retried").unwrap().as_u64().unwrap();
+        let retired = stats.req("retired_fault").unwrap().as_u64().unwrap();
+        assert_eq!(
+            injected,
+            retried + retired,
+            "engine {engine}: every injected server-side fault must surface as \
+             exactly one retry or one fault retirement"
+        );
+        total_injected += injected;
+        // a retire_done whose client vanished counts served but not
+        // completed, hence >= rather than ==
+        assert!(stats.req("served").unwrap().as_u64().unwrap() >= completed);
+        assert!(stats.req("errors").unwrap().as_u64().unwrap() >= errored);
+        assert_eq!(
+            stats.req("kv_bytes").unwrap().as_u64().unwrap(),
+            0,
+            "engine {engine}: KV leases must be fully released after the storm"
+        );
+    }
+    if spec == DEFAULT_CHAOS_PLAN {
+        // hundreds of step draws across the three engines at rate 0.08:
+        // the seeded plan must actually have fired (env plans may differ)
+        assert!(total_injected > 0, "the default chaos plan never injected");
+    }
+}
+
+#[test]
+fn chaos_faults_off_is_byte_identical_to_no_plan() {
+    // Zero-overhead-when-disabled, pinned the same way tracing is: an
+    // explicitly disabled plan ("") and a parsed-but-inactive plan
+    // ("seed=7" — no site rates) must serve byte-identical transcripts,
+    // equal to direct AR, with a zeroed fault ledger.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 103, 1, 32);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(4).collect();
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected: Vec<Vec<u32>> = items
+        .iter()
+        .map(|it| ar.generate(&it.prompt, it.max_new).unwrap().tokens)
+        .collect();
+
+    let mut transcripts: Vec<Vec<Vec<u32>>> = Vec::new();
+    for (port, faults) in [(7552u16, ""), (7553, "seed=7")] {
+        let (outcomes, stats) = serve_with_faults(&items, port, "cas-spec", faults, 3);
+        let toks: Vec<Vec<u32>> = outcomes
+            .into_iter()
+            .map(|o| match o {
+                ChaosOutcome::Done(t) => t,
+                _ => panic!("faults-off serving must complete every request"),
+            })
+            .collect();
+        assert_eq!(stats.req("faults_injected").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(stats.req("retried").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(stats.req("retired_fault").unwrap().as_u64().unwrap(), 0);
+        transcripts.push(toks);
+    }
+    assert_eq!(transcripts[0], expected, "faults-off serving diverged from AR");
+    assert_eq!(
+        transcripts[0], transcripts[1],
+        "an inactive fault plan changed the transcripts"
+    );
+}
+
+#[test]
+fn chaos_injected_disconnects_are_isolated_and_counted() {
+    // conn:1.0 — every generate connection vanishes right after
+    // dispatching its request. The scheduler must notice at a round
+    // boundary, abandon each run exactly once (disconnects == N, not
+    // errors), release all KV, and keep serving the control plane.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 107, 1, 40);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(3).collect();
+
+    let (outcomes, stats) = serve_with_faults(&items, 7554, "pld", "conn:1.0,seed=3", 2);
+    for (i, o) in outcomes.iter().enumerate() {
+        assert!(
+            matches!(o, ChaosOutcome::Dropped),
+            "request {i}: conn:1.0 must drop every generate connection"
+        );
+    }
+    assert_eq!(stats.req("disconnects").unwrap().as_u64().unwrap(), 3);
+    assert_eq!(stats.req("served").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(
+        stats.req("errors").unwrap().as_u64().unwrap(),
+        0,
+        "a vanished client is not a request failure"
+    );
+    assert_eq!(stats.req("kv_bytes").unwrap().as_u64().unwrap(), 0);
+}
+
+#[test]
+fn chaos_deadline_partials_are_ar_prefixes() {
+    // Deadlines at three scales: an already-expired deadline (0 ms) must
+    // return an empty partial from the queue front; a tight mid-flight
+    // deadline must return a strict AR prefix; a generous one must not
+    // fire at all. Every partial is trustworthy because losslessness is
+    // per-token.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 109, 1, 300);
+    let item = suite.items[0].clone();
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected = ar.generate(&item.prompt, item.max_new).unwrap().tokens;
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()];
+    cfg.addr = "127.0.0.1:7555".into();
+    cfg.faults = Some(String::new());
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut client = wait_ready(&addr);
+
+    // 0 ms: expired before admission — deterministic empty partial
+    let resp = client.generate_with_deadline(0, &item.prompt, item.max_new, 0).unwrap();
+    assert_eq!(resp.req("partial").unwrap().as_str().unwrap(), "deadline");
+    assert!(resp.req("tokens").unwrap().usize_arr().unwrap().is_empty());
+    assert!(resp.get("error").is_none(), "a deadline partial is not an error");
+
+    // tight: whatever came back must be a byte-identical AR prefix
+    let resp = client.generate_with_deadline(1, &item.prompt, item.max_new, 40).unwrap();
+    let got: Vec<u32> = resp
+        .req("tokens")
+        .unwrap()
+        .usize_arr()
+        .unwrap()
+        .into_iter()
+        .map(|t| t as u32)
+        .collect();
+    assert_eq!(
+        &got[..],
+        &expected[..got.len()],
+        "a deadline partial must be an exact prefix of the AR transcript"
+    );
+    let tight_fired = match resp.get("partial") {
+        Some(p) => {
+            assert_eq!(p.as_str().unwrap(), "deadline");
+            assert!(got.len() < expected.len(), "partial yet complete?");
+            true
+        }
+        None => {
+            assert_eq!(got, expected, "no deadline, so the reply must be complete");
+            false
+        }
+    };
+
+    // generous: completes normally
+    let resp =
+        client.generate_with_deadline(2, &item.prompt, item.max_new, 60_000).unwrap();
+    assert!(resp.get("partial").is_none(), "a 60 s deadline must not fire: {resp}");
+    let got: Vec<u32> = resp
+        .req("tokens")
+        .unwrap()
+        .usize_arr()
+        .unwrap()
+        .into_iter()
+        .map(|t| t as u32)
+        .collect();
+    assert_eq!(got, expected);
+
+    let stats = client.stats().unwrap();
+    let want_deadlines = 1 + u64::from(tight_fired);
+    assert_eq!(stats.req("deadlines").unwrap().as_u64().unwrap(), want_deadlines);
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn chaos_cancel_returns_partial_prefix_and_acks() {
+    // {"cmd":"cancel"} from a second connection: the control connection
+    // gets an immediate ack; the generate connection gets a
+    // "partial":"cancelled" reply whose tokens are an exact AR prefix.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 113, 1, 400);
+    let item = suite.items[0].clone();
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected = ar.generate(&item.prompt, item.max_new).unwrap().tokens;
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()];
+    cfg.addr = "127.0.0.1:7556".into();
+    cfg.faults = Some(String::new());
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut control = wait_ready(&addr);
+
+    let gaddr = addr.clone();
+    let gitem = item.clone();
+    let gen = thread::spawn(move || {
+        let mut c = Client::connect(&gaddr).unwrap();
+        c.generate(7, &gitem.prompt, gitem.max_new).unwrap()
+    });
+    thread::sleep(Duration::from_millis(30));
+    let ack = control.cancel(7).unwrap();
+    assert!(ack.req("ok").unwrap().as_bool().unwrap());
+    assert_eq!(ack.req("id").unwrap().as_u64().unwrap(), 7);
+    // cancelling an unknown id still acks (idempotent control plane)
+    assert!(control.cancel(999).unwrap().req("ok").unwrap().as_bool().unwrap());
+
+    let resp = gen.join().unwrap();
+    let got: Vec<u32> = resp
+        .req("tokens")
+        .unwrap()
+        .usize_arr()
+        .unwrap()
+        .into_iter()
+        .map(|t| t as u32)
+        .collect();
+    assert_eq!(
+        &got[..],
+        &expected[..got.len()],
+        "a cancelled partial must be an exact prefix of the AR transcript"
+    );
+    let fired = match resp.get("partial") {
+        Some(p) => {
+            assert_eq!(p.as_str().unwrap(), "cancelled");
+            true
+        }
+        None => {
+            // the run finished before the cancel landed — legal race
+            assert_eq!(got, expected);
+            false
+        }
+    };
+    let stats = control.stats().unwrap();
+    assert_eq!(stats.req("cancelled").unwrap().as_u64().unwrap(), u64::from(fired));
+    control.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn chaos_wire_bounds_reject_on_the_wire() {
+    // --max-prompt / --max-new-limit end to end: out-of-bounds requests
+    // are rejected in the connection thread with id-carrying errors and
+    // never reach the scheduler (errors stays 0), while in-bounds
+    // requests keep serving losslessly.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 127, 1, 8);
+    let prompt8: Vec<u32> = suite.items[0].prompt.iter().copied().take(8).collect();
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected = ar.generate(&prompt8, 8).unwrap().tokens;
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["pld".into()];
+    cfg.addr = "127.0.0.1:7557".into();
+    cfg.faults = Some(String::new());
+    cfg.max_prompt = 8;
+    cfg.max_new_limit = 16;
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut client = wait_ready(&addr);
+
+    let long: Vec<u32> = suite.items[0].prompt.iter().copied().cycle().take(9).collect();
+    let resp = client.generate(1, &long, 4).unwrap();
+    assert_eq!(resp.req("id").unwrap().as_u64().unwrap(), 1);
+    assert!(resp.req("error").unwrap().as_str().unwrap().contains("prompt too long"));
+
+    let resp = client.generate(2, &prompt8, 64).unwrap();
+    assert_eq!(resp.req("id").unwrap().as_u64().unwrap(), 2);
+    assert!(resp.req("error").unwrap().as_str().unwrap().contains("max_new"));
+
+    let resp = client.generate(3, &prompt8, 8).unwrap();
+    assert!(resp.get("error").is_none(), "in-bounds request must serve: {resp}");
+    let got: Vec<u32> = resp
+        .req("tokens")
+        .unwrap()
+        .usize_arr()
+        .unwrap()
+        .into_iter()
+        .map(|t| t as u32)
+        .collect();
+    assert_eq!(got, expected);
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.req("served").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(
+        stats.req("errors").unwrap().as_u64().unwrap(),
+        0,
+        "wire rejections never reach the scheduler"
+    );
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn chaos_degrade_routes_overload_to_fallback_losslessly() {
+    // Degrade-don't-die end to end: cas-spec primary with an AR fallback,
+    // max_batch 1 and degrade_queue 1 — a 6-request burst must push some
+    // admissions onto the fallback (degraded > 0, per-reply engine field
+    // says which), and every transcript stays byte-identical to AR
+    // because both engines are lossless.
+    let rt = Runtime::open(&Runtime::default_dir()).expect("runtime open");
+    let srt = rt.load_scale("small", &[Variant::Target]).unwrap();
+    let lang = Language::build(rt.manifest.lang_seed);
+    let suite = Suite::spec_bench(&lang, 131, 1, 40);
+    let items: Vec<WorkItem> = suite.items.into_iter().take(6).collect();
+    let mut ar = build_engine("ar", &srt, &EngineOpts::default()).unwrap();
+    let expected: Vec<Vec<u32>> = items
+        .iter()
+        .map(|it| ar.generate(&it.prompt, it.max_new).unwrap().tokens)
+        .collect();
+
+    let mut cfg = RunConfig::default();
+    cfg.scale = "small".into();
+    cfg.engines = vec!["cas-spec".into()];
+    cfg.fallback_engine = Some("ar".into());
+    cfg.degrade_queue = 1;
+    cfg.max_batch = 1;
+    cfg.addr = "127.0.0.1:7558".into();
+    cfg.faults = Some(String::new());
+    let addr = cfg.addr.clone();
+    let server = thread::spawn(move || serve(&cfg));
+    let mut control = wait_ready(&addr);
+
+    let mut handles = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let addr = addr.clone();
+        let item = item.clone();
+        handles.push(thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = c.generate(i as u64, &item.prompt, item.max_new).unwrap();
+            assert!(resp.get("error").is_none(), "server error: {resp}");
+            let engine = resp.req("engine").unwrap().as_str().unwrap().to_string();
+            let got: Vec<u32> = resp
+                .req("tokens")
+                .unwrap()
+                .usize_arr()
+                .unwrap()
+                .into_iter()
+                .map(|t| t as u32)
+                .collect();
+            (i, engine, got)
+        }));
+    }
+    let mut fallback_served = 0u64;
+    for h in handles {
+        let (i, engine, got) = h.join().unwrap();
+        assert!(
+            engine == "cas-spec" || engine == "ar",
+            "request {i}: unexpected serving engine {engine:?}"
+        );
+        if engine == "ar" {
+            fallback_served += 1;
+        }
+        assert_eq!(got, expected[i], "request {i}: degradation changed the transcript");
+    }
+    let stats = control.stats().unwrap();
+    let degraded = stats.req("degraded").unwrap().as_u64().unwrap();
+    assert_eq!(degraded, fallback_served, "degraded counter vs per-reply engine fields");
+    assert!(
+        degraded >= 1,
+        "a 6-request burst against max_batch=1, degrade_queue=1 never degraded"
+    );
+    assert_eq!(stats.req("errors").unwrap().as_u64().unwrap(), 0);
+    control.shutdown().unwrap();
     server.join().unwrap().unwrap();
 }
